@@ -1,0 +1,67 @@
+//! Distributed (DAP) inference vs single-device — the paper's §V.C
+//! long-sequence scenario at executable scale: run the same model under
+//! DAP degrees 1/2/4, verify numerics against single-device, and report
+//! wall time, per-rank simulated time (the 1-core stand-in for N devices),
+//! and the Duality-Async overlap ablation.
+//!
+//! ```sh
+//! cargo run --release --example distributed_inference -- [preset]
+//! ```
+
+use fastfold::dap::DapCoordinator;
+use fastfold::metrics::{fmt_secs, Table};
+use fastfold::runtime::Runtime;
+use fastfold::train::DataGen;
+
+fn main() -> fastfold::Result<()> {
+    let preset = std::env::args().nth(1).unwrap_or_else(|| "small".into());
+    let rt = Runtime::new("artifacts")?;
+    let params = rt.manifest.load_params(&preset)?;
+    let cfg = fastfold::config::ModelConfig::preset(&preset)?;
+    let mut gen = DataGen::new(cfg.clone(), 31);
+    let batch = gen.next_batch();
+
+    println!("[distributed_inference] preset '{preset}' (N_res={}, N_seq={}, {} blocks)",
+             cfg.n_res, cfg.n_seq, cfg.n_blocks);
+
+    // reference single-device
+    let t0 = std::time::Instant::now();
+    let (m_ref, z_ref) = fastfold::inference::single_device_forward(
+        &rt, &preset, &params, &batch.msa_tokens, false)?;
+    let t_single = t0.elapsed().as_secs_f64();
+    println!("single device: {}", fmt_secs(t_single));
+
+    let mut table = Table::new(&[
+        "DAP", "wall (1 core)", "sim step (overlap)", "sim step (sync)",
+        "exposed comm", "max|Δ| vs single",
+    ]);
+    for n in [1usize, 2, 4] {
+        if cfg.n_seq % n != 0 || cfg.n_res % n != 0 {
+            continue;
+        }
+        let run = |overlap: bool| -> fastfold::Result<(f64, f64, f64, f64)> {
+            let co = DapCoordinator::new(&rt, &preset, n, overlap)?;
+            let t0 = std::time::Instant::now();
+            let (m_d, z_d) = co.model_forward(&params, &batch.msa_tokens)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let tl = co.timeline.borrow();
+            let diff = m_d.max_abs_diff(&m_ref).max(z_d.max_abs_diff(&z_ref));
+            Ok((wall, tl.elapsed(), tl.exposed_comm_seconds, diff as f64))
+        };
+        let (wall, sim_on, exposed, diff) = run(true)?;
+        let (_, sim_off, _, _) = run(false)?;
+        table.row(&[
+            n.to_string(),
+            fmt_secs(wall),
+            fmt_secs(sim_on),
+            fmt_secs(sim_off),
+            fmt_secs(exposed),
+            format!("{diff:.2e}"),
+        ]);
+    }
+    table.print();
+    println!("\n(sim step = dual-stream timeline: per-rank compute ‖ comm stream —");
+    println!(" the Duality-Async model of paper Fig 7; wall = all ranks serialized");
+    println!(" on this 1-core testbed.)");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: load the AOT artifacts, run one Evoformer block and a full
+//! mini-AlphaFold forward on synthetic data, single device.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use fastfold::config::ModelConfig;
+use fastfold::inference::single_device_forward;
+use fastfold::metrics::fmt_secs;
+use fastfold::runtime::Runtime;
+use fastfold::train::DataGen;
+
+fn main() -> fastfold::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let preset = "tiny";
+    let cfg = ModelConfig::preset(preset)?;
+    println!(
+        "preset '{preset}': N_res={} N_seq={} d_msa={} d_pair={} blocks={} ({} params)",
+        cfg.n_res,
+        cfg.n_seq,
+        cfg.d_msa,
+        cfg.d_pair,
+        cfg.n_blocks,
+        cfg.param_count()
+    );
+
+    // load parameters exported by the python compile path
+    let params = rt.manifest.load_params(preset)?;
+
+    // synthetic co-evolution batch (DESIGN.md §2 data substitution)
+    let mut gen = DataGen::new(cfg.clone(), 42);
+    let batch = gen.next_batch();
+
+    // one Evoformer block, standalone
+    let block = rt.load(&format!("{preset}/block_fwd"))?;
+    let idx = rt.manifest.block_leaf_indices(preset, 0)?;
+    let mut args: Vec<_> = idx.iter().map(|&i| params[i].clone()).collect();
+    args.push(fastfold::HostTensor::zeros(&[cfg.n_seq, cfg.n_res, cfg.d_msa]));
+    args.push(fastfold::HostTensor::zeros(&[cfg.n_res, cfg.n_res, cfg.d_pair]));
+    let t0 = std::time::Instant::now();
+    let out = block.run_f32(&args)?;
+    println!(
+        "block_fwd: m{:?} z{:?} in {}",
+        out[0].shape,
+        out[1].shape,
+        fmt_secs(t0.elapsed().as_secs_f64())
+    );
+
+    // full model: embed -> blocks -> heads
+    let t0 = std::time::Instant::now();
+    let (msa_logits, dist_logits) =
+        single_device_forward(&rt, preset, &params, &batch.msa_tokens, false)?;
+    println!(
+        "model forward: msa_logits{:?} dist_logits{:?} in {}",
+        msa_logits.shape,
+        dist_logits.shape,
+        fmt_secs(t0.elapsed().as_secs_f64())
+    );
+    println!(
+        "compiled {} executables in {:.2}s total",
+        rt.cached(),
+        rt.compile_seconds.borrow()
+    );
+    Ok(())
+}

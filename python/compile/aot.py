@@ -1,0 +1,366 @@
+"""AOT exporter: lower every L2 computation to HLO *text* + manifest.json.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax
+≥0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md). Lowering uses ``return_tuple=True``; the rust
+side unwraps the tuple.
+
+Exported artifact families (→ DESIGN.md §5):
+  model_fwd / embed / heads / block_fwd     single-device inference pieces
+  grad_step / adam_update / train_step      training (DP splits grad+adam
+                                            around the host all-reduce)
+  dap{N}/<segment>[, _bwd]                  DAP coordinator executables
+  fig8_* / fig9_*                           kernel microbench pairs
+All artifact input/output names+shapes+dtypes, the canonical parameter
+flatten order, initial params binary, and the DAP schedule are recorded in
+artifacts/manifest.json — the single contract the rust runtime consumes.
+
+Python runs ONCE (`make artifacts`); nothing here is on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dap, model
+from .configs import PRESETS, config_dict
+from .kernels import fused_layernorm, fused_softmax2d
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------- lowering
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _spec_of(x):
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+class Exporter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": {}, "configs": {}, "params": {},
+                         "batch_spec": {}, "dap_schedule": dap.SCHEDULE}
+        os.makedirs(out_dir, exist_ok=True)
+        # incremental export: merge onto an existing manifest so partial
+        # re-exports (--only / --configs) do not drop other entries
+        prev = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(prev):
+            with open(prev) as f:
+                old = json.load(f)
+            for key in ("artifacts", "configs", "params", "batch_spec"):
+                merged = old.get(key, {})
+                merged.update(self.manifest[key])
+                self.manifest[key] = merged
+
+    def export(self, name, fn, example_args):
+        """Lower fn(*example_args) (arbitrary pytrees of ShapeDtypeStructs)
+        to <name>.hlo.txt; record flat input/output specs in the manifest."""
+        flat, treedef = jax.tree_util.tree_flatten(example_args)
+
+        def flat_fn(*leaves):
+            args = jax.tree_util.tree_unflatten(treedef, leaves)
+            out = fn(*args)
+            return tuple(jax.tree_util.tree_flatten(out)[0])
+
+        path_leaves = jax.tree_util.tree_flatten_with_path(example_args)[0]
+        in_specs = [
+            {"name": _path_str(p), **_spec_of(l)} for p, l in path_leaves
+        ]
+        out_shape = jax.eval_shape(fn, *example_args)
+        out_leaves = jax.tree_util.tree_flatten_with_path(out_shape)[0]
+        out_specs = [
+            {"name": _path_str(p), **_spec_of(l)} for p, l in out_leaves
+        ]
+        specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in flat]
+        # keep_unused: segments receive the FULL block-param leaf list
+        # (uniform calling convention for the rust coordinator) even when
+        # a segment touches only a few leaves
+        text = to_hlo_text(jax.jit(flat_fn, keep_unused=True).lower(*specs))
+        fname = f"{name}.hlo.txt"
+        fpath = os.path.join(self.out_dir, fname)
+        os.makedirs(os.path.dirname(fpath), exist_ok=True)
+        with open(fpath, "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][name] = {
+            "file": fname, "inputs": in_specs, "outputs": out_specs,
+        }
+        print(f"  exported {name}  ({len(in_specs)} in, {len(out_specs)} out,"
+              f" {len(text) // 1024} KiB)")
+
+    def save_manifest(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+
+
+# ------------------------------------------------------------ adam optimizer
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """Adam on a params pytree; step is the 1-based f32 step counter."""
+    def upd(p, g, m_, v_):
+        m2 = b1 * m_ + (1 - b1) * g
+        v2 = b2 * v_ + (1 - b2) * jnp.square(g)
+        mhat = m2 / (1 - b1 ** step)
+        vhat = v2 / (1 - b2 ** step)
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps), m2, v2
+
+    flat_p, td = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(m)[0]
+    flat_v = jax.tree_util.tree_flatten(v)[0]
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(td, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(td, [o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+# ------------------------------------------------------------ batch specs
+
+
+def batch_spec(cfg):
+    return {
+        "msa_tokens": jax.ShapeDtypeStruct((cfg.n_seq, cfg.n_res), jnp.int32),
+        "msa_labels": jax.ShapeDtypeStruct((cfg.n_seq, cfg.n_res), jnp.int32),
+        "msa_mask": jax.ShapeDtypeStruct((cfg.n_seq, cfg.n_res), jnp.float32),
+        "dist_bins": jax.ShapeDtypeStruct((cfg.n_res, cfg.n_res), jnp.int32),
+    }
+
+
+def params_spec(cfg):
+    return jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0), cfg)
+    )
+
+
+def _f32_like(tree):
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), tree
+    )
+
+
+# ------------------------------------------------------------ export drivers
+
+
+def export_core(ex: Exporter, cfg, train=True):
+    """Single-device model + training artifacts for one config preset."""
+    name = cfg.name
+    pspec = params_spec(cfg)
+    bspec = batch_spec(cfg)
+    tok = bspec["msa_tokens"]
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    ex.manifest["configs"][name] = config_dict(cfg)
+    ex.manifest["batch_spec"][name] = {
+        k: _spec_of(v) for k, v in bspec.items()
+    }
+
+    ex.export(f"{name}/model_fwd",
+              lambda p, t: model.forward(p, cfg, t), (pspec, tok))
+    ex.export(f"{name}/model_fwd_naive",
+              lambda p, t: model.forward(p, cfg, t, use_kernels=False),
+              (pspec, tok))
+    ex.export(f"{name}/embed",
+              lambda p, t: model.embedder(p, cfg, t),
+              (pspec["embedder"], tok))
+    m_spec = jax.ShapeDtypeStruct((cfg.n_seq, cfg.n_res, cfg.d_msa),
+                                  jnp.float32)
+    z_spec = jax.ShapeDtypeStruct((cfg.n_res, cfg.n_res, cfg.d_pair),
+                                  jnp.float32)
+    ex.export(f"{name}/heads",
+              lambda p, m, z: model.heads(p, m, z),
+              (pspec["heads"], m_spec, z_spec))
+    ex.export(f"{name}/block_fwd",
+              lambda p, m, z: model.evoformer_block(p, m, z, cfg),
+              (pspec["blocks"][0], m_spec, z_spec))
+    ex.export(f"{name}/block_fwd_naive",
+              lambda p, m, z: model.evoformer_block(p, m, z, cfg,
+                                                    use_kernels=False),
+              (pspec["blocks"][0], m_spec, z_spec))
+
+    def block_grad(p, m, z, ct_m, ct_z):
+        # reference VJP of one block: validates the rust DAP backward tape
+        def f(p_, m_, z_):
+            return model.evoformer_block(p_, m_, z_, cfg)
+
+        _, pullback = jax.vjp(f, p, m, z)
+        dp, dm, dz = pullback((ct_m, ct_z))
+        return dp, dm, dz
+
+    ex.export(f"{name}/block_grad", block_grad,
+              (pspec["blocks"][0], m_spec, z_spec, m_spec, z_spec))
+    if train:
+        ex.export(f"{name}/grad_step",
+                  lambda p, b: jax.value_and_grad(
+                      lambda p_: model.loss_fn(p_, cfg, b))(p),
+                  (pspec, bspec))
+        ex.export(f"{name}/adam_update", adam_update,
+                  (pspec, _f32_like(pspec), _f32_like(pspec),
+                   _f32_like(pspec), scalar, scalar))
+
+        def train_step(p, m, v, step, lr, b):
+            loss, g = jax.value_and_grad(
+                lambda p_: model.loss_fn(p_, cfg, b))(p)
+            p2, m2, v2 = adam_update(p, g, m, v, step, lr)
+            return loss, p2, m2, v2
+
+        ex.export(f"{name}/train_step", train_step,
+                  (pspec, _f32_like(pspec), _f32_like(pspec), scalar,
+                   scalar, bspec))
+
+    # initial params binary (canonical jax tree_flatten order)
+    params = model.init_params(jax.random.PRNGKey(42), cfg)
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    offset = 0
+    entries = []
+    with open(os.path.join(ex.out_dir, f"{name}_params.bin"), "wb") as f:
+        for path, leaf in leaves:
+            arr = np.asarray(leaf, np.float32)
+            f.write(arr.tobytes())
+            entries.append({"name": _path_str(path),
+                            "shape": list(arr.shape), "offset": offset})
+            offset += arr.size
+    ex.manifest["params"][name] = {
+        "file": f"{name}_params.bin",
+        "total": offset, "leaves": entries,
+        "count": model.count_params(params),
+    }
+
+
+# segment input slot → shape builder, given cfg and dap size n
+def _seg_specs(cfg, n):
+    s, r = cfg.n_seq, cfg.n_res
+    sl, rl = s // n, r // n
+    dm, dz = cfg.d_msa, cfg.d_pair
+    hm, hp, dh, do = (cfg.n_heads_msa, cfg.n_heads_pair, cfg.d_head,
+                      cfg.d_opm)
+    f = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.float32)
+    return {
+        "row_bias": [f(rl, r, dz)],
+        "msa_row_proj": [f(sl, r, dm)],
+        "msa_row_core": [f(sl, r, dm), f(sl, r, 4 * hm * dh), f(r, r, hm)],
+        "msa_col": [f(s, rl, dm)],
+        "msa_trans": [f(s, rl, dm)],
+        "opm_pre": [f(s, rl, dm)],
+        "opm_post": [f(rl, r, dz), f(s, rl, do), f(s, r, do)],
+        "tri_out_pre": [f(rl, r, dz)],
+        "tri_out_post": [f(rl, r, dz), f(rl, r, dz), f(rl, r, dz),
+                         f(r, r, dz)],
+        "tri_in_pre": [f(rl, r, dz)],
+        "tri_in_post": [f(rl, r, dz), f(rl, r, dz), f(rl, r, dz)],
+        "tri_start_bias": [f(rl, r, dz)],
+        "tri_start_proj": [f(rl, r, dz)],
+        "tri_start_core": [f(rl, r, dz), f(rl, r, 4 * hp * dh), f(r, r, hp)],
+        "tri_end_bias": [f(r, rl, dz)],
+        "tri_end_proj": [f(r, rl, dz)],
+        "tri_end_core": [f(r, rl, dz), f(rl, r, 4 * hp * dh), f(r, r, hp)],
+        "pair_trans": [f(rl, r, dz)],
+    }
+
+
+def export_dap(ex: Exporter, cfg, n, backward=True):
+    """All DAP segment executables (fwd + vjp) for dap_size n."""
+    pspec = params_spec(cfg)["blocks"][0]
+    specs = _seg_specs(cfg, n)
+    for seg_name, in_specs in specs.items():
+        fn = dap.SEGMENTS[seg_name]
+        ex.export(f"{cfg.name}/dap{n}/{seg_name}",
+                  lambda p, *t, _fn=fn: _fn(p, cfg, *t),
+                  (pspec, *in_specs))
+        if backward:
+            out_shape = jax.eval_shape(
+                lambda p, *t, _fn=fn: _fn(p, cfg, *t), pspec, *in_specs)
+            ct_specs = tuple(jax.tree_util.tree_flatten(out_shape)[0])
+            vjp_fn = dap.make_segment_vjp(seg_name)
+            ex.export(
+                f"{cfg.name}/dap{n}/{seg_name}_bwd",
+                lambda p, ins, cts, _v=vjp_fn: _v(p, cfg, ins, cts),
+                (pspec, tuple(in_specs), ct_specs),
+            )
+
+
+def export_kernel_benches(ex: Exporter):
+    """Fig 8 / Fig 9 microbench pairs: fused kernel vs deliberately-unfused
+    baseline vs (LN only) an 'apex-like' single-fusion baseline — identical
+    math, same backend, so the delta isolates kernel structure."""
+    f32 = jnp.float32
+    for rows, cols in [(1024, 32), (1024, 64), (1024, 128), (1024, 256),
+                       (4096, 64), (4096, 128)]:
+        x = jax.ShapeDtypeStruct((rows, cols), f32)
+        # §Perf-L1 iteration 1: block_rows=1024 (vs default 128) — fewer,
+        # fatter grid programs amortize the interpret-mode grid loop and
+        # map to better VMEM streaming on TPU (rows*cols*4B <= 1 MiB/blk).
+        ex.export(f"bench/fig8_fused_{rows}x{cols}",
+                  lambda x: fused_softmax2d(x, 0.125, block_rows=1024), (x,))
+        ex.export(f"bench/fig8_naive_{rows}x{cols}",
+                  lambda x: kref.naive_softmax_unfused(x, scale=0.125), (x,))
+        g = jax.ShapeDtypeStruct((cols,), f32)
+        ex.export(f"bench/fig9_fused_{rows}x{cols}",
+                  lambda x, g, b: fused_layernorm(x, g, b), (x, g, g))
+        ex.export(f"bench/fig9_naive_{rows}x{cols}",
+                  lambda x, g, b: kref.naive_layernorm_twopass(x, g, b),
+                  (x, g, g))
+        ex.export(f"bench/fig9_apexlike_{rows}x{cols}",
+                  lambda x, g, b: kref.layernorm_ref(x, g, b), (x, g, g))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small")
+    ap.add_argument("--dap", default="1,2,4")
+    ap.add_argument("--only", default=None,
+                    help="comma list: core,dap,bench (default all)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else {"core", "dap", "bench"}
+    ex = Exporter(args.out)
+    for cname in args.configs.split(","):
+        cfg = PRESETS[cname]
+        if "core" in only:
+            print(f"[aot] core artifacts for '{cname}'")
+            export_core(ex, cfg)
+        if "dap" in only:
+            for n in (int(x) for x in args.dap.split(",")):
+                if cfg.n_seq % n or cfg.n_res % n:
+                    print(f"  skip dap{n} for {cname} (indivisible)")
+                    continue
+                print(f"[aot] dap{n} segments for '{cname}' "
+                      f"(bwd={cname == 'tiny'})")
+                export_dap(ex, cfg, n, backward=(cname == "tiny"))
+    if "bench" in only:
+        print("[aot] kernel bench artifacts")
+        export_kernel_benches(ex)
+    ex.save_manifest()
+    print(f"[aot] manifest with {len(ex.manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,56 @@
+"""Model configuration presets (mirrors rust/src/config presets 1:1).
+
+`initial_training` / `finetune` are the exact paper Table I settings and
+feed the analytic perf/memory models; `tiny` drives the test suite and
+`small` the end-to-end CPU training example (the 1-core substitute for the
+~100 M-param run — see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_res: int          # N_r — residues (second MSA axis, both pair axes)
+    n_seq: int          # N_s — sequences in the MSA stack
+    d_msa: int = 256    # H_m
+    d_pair: int = 128   # H_z
+    n_heads_msa: int = 8
+    n_heads_pair: int = 4
+    d_head: int = 32    # per-head hidden
+    d_opm: int = 32     # outer-product-mean projection dim
+    n_blocks: int = 48
+    transition_factor: int = 4
+    msa_vocab: int = 23       # 20 aa + X + gap + mask token
+    n_dist_bins: int = 64
+    relpos_clip: int = 32
+
+    @property
+    def mask_token(self) -> int:
+        return self.msa_vocab - 1
+
+
+TINY = ModelConfig(
+    name="tiny", n_res=16, n_seq=8, d_msa=32, d_pair=16,
+    n_heads_msa=4, n_heads_pair=2, d_head=8, d_opm=8, n_blocks=2,
+    transition_factor=2, n_dist_bins=16, relpos_clip=8,
+)
+
+SMALL = ModelConfig(
+    name="small", n_res=64, n_seq=16, d_msa=64, d_pair=32,
+    n_heads_msa=4, n_heads_pair=4, d_head=16, d_opm=16, n_blocks=4,
+    transition_factor=4, n_dist_bins=32, relpos_clip=16,
+)
+
+# paper Table I — exact AlphaFold settings (analytic models only)
+INITIAL_TRAINING = ModelConfig(name="initial_training", n_res=256, n_seq=128)
+FINETUNE = ModelConfig(name="finetune", n_res=384, n_seq=512)
+
+PRESETS = {c.name: c for c in (TINY, SMALL, INITIAL_TRAINING, FINETUNE)}
+
+
+def config_dict(cfg: ModelConfig) -> dict:
+    return dataclasses.asdict(cfg)

@@ -1,0 +1,369 @@
+"""Dynamic Axial Parallelism: the Evoformer block decomposed into
+communication-separated segments (paper §IV.B.2, Fig 6, Table III).
+
+Sharding convention for N ranks (DESIGN.md §3):
+    m  s-sharded: (s/N, r, d_msa)     axis 0        (row-attention phase)
+    m  r-sharded: (s, r/N, d_msa)     axis 1        (col-attn/transition/OPM)
+    z  i-sharded: (r/N, r, d_pair)    axis 0        (canonical)
+    z  j-sharded: (r, r/N, d_pair)    axis 1        (triangle-attn ending)
+
+Each *segment* is a pure JAX function ``seg(p_block, cfg, *tensors)`` whose
+inputs/outputs are rank-local shards or gathered full tensors. The rust
+coordinator executes the AOT-compiled segments and performs the collectives
+between them; `SCHEDULE` below is the exact op list it follows (exported
+verbatim into manifest.json), including the Duality-Async ``trigger`` /
+``wait`` pairs that expose computation–communication overlap: a collective
+is launched, independent segments run, then the consumer waits.
+
+`simulate_dap` emulates the whole thing in-process with jnp collectives —
+pytest asserts it reproduces `model.evoformer_block` bit-for-bit-ish
+(float-associativity tolerance), which is the paper's §V.D validation at
+block level.
+
+Backward: every segment also exports a VJP twin (aot.py) computing
+``(dparams, dinputs) = vjp(seg)(cotangents)`` with forward rematerialized
+inside — gradient checkpointing at segment granularity, matching the
+paper's use of activation checkpointing. The rust tape replays SCHEDULE in
+reverse with transposed collectives (all_gather ↔ reduce_scatter,
+all_to_all ↔ inverse all_to_all).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .configs import ModelConfig
+from .kernels import outer_product_mean, triangle_mult
+
+# --------------------------------------------------------------------------
+# segments
+# --------------------------------------------------------------------------
+
+
+def seg_row_bias(p, cfg, z_loc):
+    """(z i-shard) → pair-bias shard (i_loc, r, h_msa)."""
+    act = model.layer_norm(p["row_bias"]["ln"], z_loc)
+    return (model.linear_nobias(p["row_bias"]["proj"], act),)
+
+
+def seg_msa_row_proj(p, cfg, m_loc):
+    """(m s-shard) → merged QKV+gate projection (s_loc, r, 4·h·d)."""
+    act = model.layer_norm(p["row_attn"]["ln"], m_loc)
+    return (model.linear_nobias(p["row_attn"]["qkvg"], act),)
+
+
+def seg_msa_row_core(p, cfg, m_loc, qkvg, bias_full):
+    """(m s-shard, qkvg, gathered bias (r,r,h)) → updated m s-shard."""
+    h = cfg.n_heads_msa
+    bias = jnp.transpose(bias_full, (2, 0, 1))
+    q, k, v, g = jnp.split(qkvg, 4, axis=-1)
+    q, k, v, g = (model._split_heads(t, h) for t in (q, k, v, g))
+    o = model._attention(q, k, v, g, bias, True)
+    return (m_loc + model.linear(p["row_attn"]["out"], model._merge_heads(o)),)
+
+
+def seg_msa_col(p, cfg, m_loc):
+    """(m r-shard) → updated m r-shard; attention along s is rank-local."""
+    return (m_loc + model.msa_col_attention(
+        p["col_attn"], m_loc, cfg.n_heads_msa),)
+
+
+def seg_msa_trans(p, cfg, m_loc):
+    return (m_loc + model.transition(p["msa_trans"], m_loc),)
+
+
+def seg_opm_pre(p, cfg, m_loc):
+    """(m r-shard) → OPM left/right projections (s, r_loc, d_opm) each."""
+    act = model.layer_norm(p["opm"]["ln"], m_loc)
+    ab = model.linear_nobias(p["opm"]["ab"], act)
+    a, b = jnp.split(ab, 2, axis=-1)
+    return a, b
+
+
+def seg_opm_post(p, cfg, z_loc, a_loc, b_full):
+    """(z i-shard, local left, gathered right) → updated z i-shard.
+
+    out[i_loc, j] = mean_s a[s, i_loc] ⊗ b[s, j]  (1 AllGather total)."""
+    o = outer_product_mean(a_loc, b_full)
+    return (z_loc + model.linear(p["opm"]["out"], o),)
+
+
+def _tri_projections(p, act):
+    pg = model.linear_nobias(p["pg"], act)
+    a, b, ga, gb = jnp.split(pg, 4, axis=-1)
+    return a * jax.nn.sigmoid(ga), b * jax.nn.sigmoid(gb)
+
+
+def seg_tri_out_pre(p, cfg, z_loc):
+    """(z i-shard) → (ln(z) shard, gated left a, gated right b)."""
+    act = model.layer_norm(p["tri_out"]["ln"], z_loc)
+    a, b = _tri_projections(p["tri_out"], act)
+    return act, a, b
+
+
+def seg_tri_out_post(p, cfg, z_loc, act, a_loc, b_full):
+    """out[i_loc, j] = Σ_k a[i_loc,k]·b_full[j,k]  (1 AllGather)."""
+    o = triangle_mult(a_loc, b_full, True)
+    o = model.layer_norm(p["tri_out"]["ln_out"], o)
+    g = jax.nn.sigmoid(model.linear_nobias(p["tri_out"]["gate"], act))
+    return (z_loc + g * model.linear(p["tri_out"]["out"], o),)
+
+
+def seg_tri_in_pre(p, cfg, z_loc):
+    """(z i-shard) → (ln(z) shard, FULL partial sum over local k).
+
+    partial[i,j] = Σ_{k∈local} a[k,i]·b[k,j] — reduce-scattered along i
+    (avoids the double gather; 1 ReduceScatter, DESIGN.md §3)."""
+    act = model.layer_norm(p["tri_in"]["ln"], z_loc)
+    a, b = _tri_projections(p["tri_in"], act)
+    partial = triangle_mult(a, b, False)
+    return act, partial
+
+
+def seg_tri_in_post(p, cfg, z_loc, act, part_loc):
+    o = model.layer_norm(p["tri_in"]["ln_out"], part_loc)
+    g = jax.nn.sigmoid(model.linear_nobias(p["tri_in"]["gate"], act))
+    return (z_loc + g * model.linear(p["tri_in"]["out"], o),)
+
+
+def seg_tri_start_bias(p, cfg, z_loc):
+    act = model.layer_norm(p["start_bias"]["ln"], z_loc)
+    return (model.linear_nobias(p["start_bias"]["proj"], act),)
+
+
+def seg_tri_start_proj(p, cfg, z_loc):
+    act = model.layer_norm(p["tri_start"]["ln"], z_loc)
+    return (model.linear_nobias(p["tri_start"]["qkvg"], act),)
+
+
+def seg_tri_start_core(p, cfg, z_loc, qkvg, bias_full):
+    h = cfg.n_heads_pair
+    bias = jnp.transpose(bias_full, (2, 0, 1))
+    q, k, v, g = jnp.split(qkvg, 4, axis=-1)
+    q, k, v, g = (model._split_heads(t, h) for t in (q, k, v, g))
+    o = model._attention(q, k, v, g, bias, True)
+    return (z_loc + model.linear(p["tri_start"]["out"], model._merge_heads(o)),)
+
+
+def seg_tri_end_bias(p, cfg, z_loc):
+    """z is j-sharded (r, j_loc, c); ending-node = starting-node on z^T."""
+    zt = jnp.transpose(z_loc, (1, 0, 2))  # (j_loc, r, c)
+    act = model.layer_norm(p["end_bias"]["ln"], zt)
+    return (model.linear_nobias(p["end_bias"]["proj"], act),)
+
+
+def seg_tri_end_proj(p, cfg, z_loc):
+    zt = jnp.transpose(z_loc, (1, 0, 2))
+    act = model.layer_norm(p["tri_end"]["ln"], zt)
+    return (model.linear_nobias(p["tri_end"]["qkvg"], act),)
+
+
+def seg_tri_end_core(p, cfg, z_loc, qkvg, bias_full):
+    h = cfg.n_heads_pair
+    bias = jnp.transpose(bias_full, (2, 0, 1))
+    q, k, v, g = jnp.split(qkvg, 4, axis=-1)
+    q, k, v, g = (model._split_heads(t, h) for t in (q, k, v, g))
+    o = model._attention(q, k, v, g, bias, True)
+    o = model.linear(p["tri_end"]["out"], model._merge_heads(o))
+    return (z_loc + jnp.transpose(o, (1, 0, 2)),)
+
+
+def seg_pair_trans(p, cfg, z_loc):
+    return (z_loc + model.transition(p["pair_trans"], z_loc),)
+
+
+SEGMENTS = {
+    "row_bias": seg_row_bias,
+    "msa_row_proj": seg_msa_row_proj,
+    "msa_row_core": seg_msa_row_core,
+    "msa_col": seg_msa_col,
+    "msa_trans": seg_msa_trans,
+    "opm_pre": seg_opm_pre,
+    "opm_post": seg_opm_post,
+    "tri_out_pre": seg_tri_out_pre,
+    "tri_out_post": seg_tri_out_post,
+    "tri_in_pre": seg_tri_in_pre,
+    "tri_in_post": seg_tri_in_post,
+    "tri_start_bias": seg_tri_start_bias,
+    "tri_start_proj": seg_tri_start_proj,
+    "tri_start_core": seg_tri_start_core,
+    "tri_end_bias": seg_tri_end_bias,
+    "tri_end_proj": seg_tri_end_proj,
+    "tri_end_core": seg_tri_end_core,
+    "pair_trans": seg_pair_trans,
+}
+
+# --------------------------------------------------------------------------
+# schedule: the exact op sequence the rust DAP coordinator runs per block.
+# ops:
+#   exec:     run segment, reading/writing named state slots
+#   gather:   all_gather IN along AXIS -> OUT          (async-capable)
+#   scatter:  reduce_scatter IN along AXIS -> OUT (sum)
+#   a2a:      all_to_all IN (split SPLIT, concat CONCAT) -> OUT
+# async collectives carry an "id"; "wait" joins them. A collective without
+# trigger/wait semantics is synchronous. Comm-op counts per fwd block:
+# 5 gather + 1 scatter + 4 a2a (vs paper Table III: 3 AllGather + 6 A2A —
+# delta documented in DESIGN.md §3).
+# --------------------------------------------------------------------------
+
+SCHEDULE = [
+    {"op": "exec", "seg": "row_bias", "in": ["z"], "out": ["t_bias"]},
+    {"op": "gather", "in": "t_bias", "out": "t_bias_f", "axis": 0,
+     "id": "ag_bias"},
+    {"op": "exec", "seg": "msa_row_proj", "in": ["m"], "out": ["t_qkvg"]},
+    {"op": "wait", "id": "ag_bias"},
+    {"op": "exec", "seg": "msa_row_core",
+     "in": ["m", "t_qkvg", "t_bias_f"], "out": ["m"]},
+    {"op": "a2a", "in": "m", "out": "m", "split": 1, "concat": 0},
+    {"op": "exec", "seg": "msa_col", "in": ["m"], "out": ["m"]},
+    {"op": "exec", "seg": "msa_trans", "in": ["m"], "out": ["m"]},
+    {"op": "exec", "seg": "opm_pre", "in": ["m"], "out": ["t_a", "t_b"]},
+    {"op": "gather", "in": "t_b", "out": "t_b_f", "axis": 1, "id": "ag_opm"},
+    # m returns to s-shard for the NEXT block; overlaps the entire pair stack
+    {"op": "a2a", "in": "m", "out": "m", "split": 0, "concat": 1,
+     "id": "a2a_m"},
+    {"op": "wait", "id": "ag_opm"},
+    {"op": "exec", "seg": "opm_post", "in": ["z", "t_a", "t_b_f"],
+     "out": ["z"]},
+    {"op": "exec", "seg": "tri_out_pre", "in": ["z"],
+     "out": ["t_act", "t_ta", "t_tb"]},
+    {"op": "gather", "in": "t_tb", "out": "t_tb_f", "axis": 0,
+     "id": "ag_tri"},
+    {"op": "wait", "id": "ag_tri"},
+    {"op": "exec", "seg": "tri_out_post",
+     "in": ["z", "t_act", "t_ta", "t_tb_f"], "out": ["z"]},
+    {"op": "exec", "seg": "tri_in_pre", "in": ["z"],
+     "out": ["t_act2", "t_part"]},
+    {"op": "scatter", "in": "t_part", "out": "t_part_l", "axis": 0,
+     "id": "rs_tri"},
+    {"op": "wait", "id": "rs_tri"},
+    {"op": "exec", "seg": "tri_in_post", "in": ["z", "t_act2", "t_part_l"],
+     "out": ["z"]},
+    {"op": "exec", "seg": "tri_start_bias", "in": ["z"], "out": ["t_sb"]},
+    {"op": "gather", "in": "t_sb", "out": "t_sb_f", "axis": 0,
+     "id": "ag_sb"},
+    {"op": "exec", "seg": "tri_start_proj", "in": ["z"], "out": ["t_sq"]},
+    {"op": "wait", "id": "ag_sb"},
+    {"op": "exec", "seg": "tri_start_core", "in": ["z", "t_sq", "t_sb_f"],
+     "out": ["z"]},
+    {"op": "a2a", "in": "z", "out": "z", "split": 1, "concat": 0},
+    {"op": "exec", "seg": "tri_end_bias", "in": ["z"], "out": ["t_eb"]},
+    {"op": "gather", "in": "t_eb", "out": "t_eb_f", "axis": 0,
+     "id": "ag_eb"},
+    {"op": "exec", "seg": "tri_end_proj", "in": ["z"], "out": ["t_eq"]},
+    {"op": "wait", "id": "ag_eb"},
+    {"op": "exec", "seg": "tri_end_core", "in": ["z", "t_eq", "t_eb_f"],
+     "out": ["z"]},
+    {"op": "a2a", "in": "z", "out": "z", "split": 0, "concat": 1},
+    {"op": "exec", "seg": "pair_trans", "in": ["z"], "out": ["z"]},
+    {"op": "wait", "id": "a2a_m"},
+]
+
+
+def comm_counts(schedule=SCHEDULE):
+    """Measured per-block-forward collective counts — the Table III repro."""
+    out = {"gather": 0, "scatter": 0, "a2a": 0}
+    for op in schedule:
+        if op["op"] in out:
+            out[op["op"]] += 1
+    return out
+
+
+# --------------------------------------------------------------------------
+# in-python DAP simulator (jnp collectives) — the correctness oracle the
+# rust coordinator is validated against, and itself validated against
+# model.evoformer_block.
+# --------------------------------------------------------------------------
+
+
+def shard(x, n, axis):
+    return [jnp.take(x, jnp.arange(i * (x.shape[axis] // n),
+                                   (i + 1) * (x.shape[axis] // n)), axis=axis)
+            for i in range(n)]
+
+
+def _all_gather(xs, axis):
+    full = jnp.concatenate(xs, axis=axis)
+    return [full for _ in xs]
+
+
+def _reduce_scatter(xs, axis):
+    total = sum(xs[1:], xs[0])
+    return shard(total, len(xs), axis)
+
+
+def _all_to_all(xs, split, concat):
+    n = len(xs)
+    parts = [jnp.split(x, n, axis=split) for x in xs]  # parts[src][dst]
+    return [jnp.concatenate([parts[src][dst] for src in range(n)],
+                            axis=concat) for dst in range(n)]
+
+
+def simulate_dap_block(p_block, cfg: ModelConfig, m, z, n):
+    """Run one Evoformer block under N-way DAP, emulating collectives.
+
+    m: (s, r, d_msa), z: (r, r, d_pair) full tensors. Returns full (m', z').
+    """
+    state = {
+        "m": shard(m, n, 0),   # s-sharded at block entry
+        "z": shard(z, n, 0),   # i-sharded at block entry
+    }
+    pending = {}
+    for op in SCHEDULE:
+        kind = op["op"]
+        if kind == "exec":
+            fn = SEGMENTS[op["seg"]]
+            outs = [fn(p_block, cfg, *[state[s][r] for s in op["in"]])
+                    for r in range(n)]
+            for k, slot in enumerate(op["out"]):
+                state[slot] = [outs[r][k] for r in range(n)]
+        elif kind == "gather":
+            pending[op.get("id", "_sync")] = (
+                op["out"], _all_gather(state[op["in"]], op["axis"]))
+            if "id" not in op:
+                slot, val = pending.pop("_sync")
+                state[slot] = val
+        elif kind == "scatter":
+            pending[op.get("id", "_sync")] = (
+                op["out"], _reduce_scatter(state[op["in"]], op["axis"]))
+            if "id" not in op:
+                slot, val = pending.pop("_sync")
+                state[slot] = val
+        elif kind == "a2a":
+            res = _all_to_all(state[op["in"]], op["split"], op["concat"])
+            if "id" in op:
+                pending[op["id"]] = (op["out"], res)
+            else:
+                state[op["out"]] = res
+        elif kind == "wait":
+            slot, val = pending.pop(op["id"])
+            state[slot] = val
+        else:  # pragma: no cover
+            raise ValueError(f"unknown op {kind}")
+    assert not pending, f"unjoined collectives: {list(pending)}"
+    m_out = jnp.concatenate(state["m"], axis=0)
+    z_out = jnp.concatenate(state["z"], axis=0)
+    return m_out, z_out
+
+
+# --------------------------------------------------------------------------
+# backward twins: for each segment S, vjp_S(p, *inputs, *cotangents) →
+# (flat param-grads for the block params S touches, *input-cotangents).
+# Forward is rematerialized inside (segment-level checkpointing).
+# --------------------------------------------------------------------------
+
+
+def make_segment_vjp(name):
+    fn = SEGMENTS[name]
+
+    def vjp_fn(p, cfg, inputs, cotangents):
+        def wrapped(p_, *ins):
+            return fn(p_, cfg, *ins)
+
+        _, pullback = jax.vjp(wrapped, p, *inputs)
+        grads = pullback(tuple(cotangents))
+        return grads[0], grads[1:]  # (dparams pytree, dinput tuple)
+
+    return vjp_fn

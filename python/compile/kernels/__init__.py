@@ -1,0 +1,25 @@
+"""FastFold L1 Pallas kernels (interpret=True — CPU-PJRT runnable HLO).
+
+Public surface:
+    fused_softmax, fused_softmax2d   — §IV.A.2
+    fused_layernorm                  — §IV.A.3 (chunked Welford)
+    gated_attention                  — Fig 3 fused attention core
+    triangle_mult                    — Fig 4 triangular update core
+    outer_product_mean               — MSA→pair communication core
+plus the pure-jnp oracles in kernels.ref.
+"""
+
+from .attention import gated_attention
+from .fused_layernorm import fused_layernorm
+from .fused_softmax import fused_softmax, fused_softmax2d
+from .opm import outer_product_mean
+from .triangle import triangle_mult
+
+__all__ = [
+    "gated_attention",
+    "fused_layernorm",
+    "fused_softmax",
+    "fused_softmax2d",
+    "outer_product_mean",
+    "triangle_mult",
+]

@@ -1,0 +1,136 @@
+"""Fused gated attention core as a Pallas kernel (paper Fig 3).
+
+Evoformer attention differs from vanilla attention in two ways the kernel
+fuses end-to-end:
+  1. *pair bias* added to the attention score before softmax;
+  2. a *gating* branch: sigmoid(gate) elementwise-multiplies the context.
+
+One grid program per (batch, head): Q/K/V/gate tiles for that head sit in
+VMEM; scores → stable softmax → context → gate happen without touching HBM
+in between. The QK^T and PV products are MXU-shaped matmuls (D = 32 lanes,
+bf16-friendly); the merge-GEMM producing QKV+gate in a single projection
+lives one level up in model.py (paper §IV.A.1 "Merge GEMM").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_core(q, k, v, g, scale):
+    s = jnp.einsum("qd,kd->qk", q, k) * scale
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    ctx = jnp.einsum("qk,kd->qd", p, v)
+    return jax.nn.sigmoid(g) * ctx
+
+
+def _kernel(q_ref, k_ref, v_ref, g_ref, o_ref, *, scale):
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    g = g_ref[0, 0].astype(jnp.float32)
+    o_ref[0, 0] = _attn_core(q, k, v, g, scale).astype(o_ref.dtype)
+
+
+def _kernel_bias(q_ref, k_ref, v_ref, g_ref, b_ref, o_ref, *, scale):
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    g = g_ref[0, 0].astype(jnp.float32)
+    s = jnp.einsum("qd,kd->qk", q, k) * scale + b_ref[0].astype(jnp.float32)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    ctx = jnp.einsum("qk,kd->qd", p, v)
+    o_ref[0, 0] = (jax.nn.sigmoid(g) * ctx).astype(o_ref.dtype)
+
+
+def _gated_attention_raw(q, k, v, gate, bias=None):
+    """sigmoid(gate) * softmax(q k^T / sqrt(D) + bias) v.
+
+    q, gate: (B, H, Q, D); k, v: (B, H, K, D); bias: (H, Q, K) or None.
+    """
+    b, h, nq, d = q.shape
+    nk = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    grid = (b, h)
+    spec_q = pl.BlockSpec((1, 1, nq, d), lambda i, j: (i, j, 0, 0))
+    spec_k = pl.BlockSpec((1, 1, nk, d), lambda i, j: (i, j, 0, 0))
+    out_shape = jax.ShapeDtypeStruct(q.shape, q.dtype)
+    if bias is None:
+        return pl.pallas_call(
+            functools.partial(_kernel, scale=scale),
+            grid=grid,
+            in_specs=[spec_q, spec_k, spec_k, spec_q],
+            out_specs=spec_q,
+            out_shape=out_shape,
+            interpret=True,
+        )(q, k, v, gate)
+    spec_b = pl.BlockSpec((1, nq, nk), lambda i, j: (j, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel_bias, scale=scale),
+        grid=grid,
+        in_specs=[spec_q, spec_k, spec_k, spec_q, spec_b],
+        out_specs=spec_q,
+        out_shape=out_shape,
+        interpret=True,
+    )(q, k, v, gate, bias)
+
+
+# --------------------------------------------------------------------------
+# custom_vjp: backward replays the reference attention under jax.vjp — this
+# is exactly the *gradient checkpointing* the paper applies to attention
+# (§III.B): the O(Q·K) probability tensor is never saved, only the O(Q·D)
+# inputs, and is rematerialized in backward.
+# --------------------------------------------------------------------------
+
+from . import ref as _ref  # noqa: E402  (import after kernel defs)
+
+
+@jax.custom_vjp
+def _ga_nobias(q, k, v, gate):
+    return _gated_attention_raw(q, k, v, gate, None)
+
+
+def _ga_nobias_fwd(q, k, v, gate):
+    return _gated_attention_raw(q, k, v, gate, None), (q, k, v, gate)
+
+
+def _ga_nobias_bwd(res, ct):
+    _, vjp = jax.vjp(lambda q, k, v, g: _ref.gated_attention_ref(q, k, v, g), *res)
+    return vjp(ct)
+
+
+_ga_nobias.defvjp(_ga_nobias_fwd, _ga_nobias_bwd)
+
+
+@jax.custom_vjp
+def _ga_bias(q, k, v, gate, bias):
+    return _gated_attention_raw(q, k, v, gate, bias)
+
+
+def _ga_bias_fwd(q, k, v, gate, bias):
+    return _gated_attention_raw(q, k, v, gate, bias), (q, k, v, gate, bias)
+
+
+def _ga_bias_bwd(res, ct):
+    _, vjp = jax.vjp(
+        lambda q, k, v, g, b: _ref.gated_attention_ref(q, k, v, g, b), *res
+    )
+    return vjp(ct)
+
+
+_ga_bias.defvjp(_ga_bias_fwd, _ga_bias_bwd)
+
+
+def gated_attention(q, k, v, gate, bias=None):
+    """Differentiable fused gated attention (see _gated_attention_raw)."""
+    if bias is None:
+        return _ga_nobias(q, k, v, gate)
+    return _ga_bias(q, k, v, gate, bias)

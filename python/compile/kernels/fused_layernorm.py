@@ -1,0 +1,133 @@
+"""Fused LayerNorm as a Pallas kernel with chunked-Welford statistics
+(paper §IV.A.3).
+
+The paper's CUDA kernel assigns one warp per row and computes mean/variance
+with the *Welford* single-pass update, merged across threads via
+WarpAllReduce. TPU adaptation: one grid program per row block; the row is
+tiled into column chunks, per-chunk (count, mean, M2) are computed
+vectorized, then merged with the Chan/Welford parallel-merge formula — a
+single pass over HBM, numerically stable, and shaped exactly like the
+warp-tree merge the paper implements.
+
+scale (gamma) and bias (beta) application is fused into the same kernel —
+the whole LayerNorm is one HBM read + one HBM write.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _welford_merge(count_a, mean_a, m2_a, count_b, mean_b, m2_b):
+    """Chan parallel-variance merge of two (count, mean, M2) partials."""
+    count = count_a + count_b
+    delta = mean_b - mean_a
+    mean = mean_a + delta * (count_b / count)
+    m2 = m2_a + m2_b + jnp.square(delta) * (count_a * count_b / count)
+    return count, mean, m2
+
+
+def _kernel(x_ref, g_ref, b_ref, o_ref, *, eps, chunks):
+    x = x_ref[...].astype(jnp.float32)  # (rows, C)
+    rows, c = x.shape
+    cs = c // chunks  # chunk size (c padded to a multiple by caller)
+
+    # per-chunk partials, vectorized over rows: shapes (rows, chunks)
+    xc = x.reshape(rows, chunks, cs)
+    cnt = jnp.full((rows, chunks), float(cs), jnp.float32)
+    mean = jnp.mean(xc, axis=-1)
+    m2 = jnp.sum(jnp.square(xc - mean[..., None]), axis=-1)
+
+    # sequential Welford merge across chunks (the warp-reduce analogue)
+    def merge(i, carry):
+        ca, ma, m2a = carry
+        return _welford_merge(ca, ma, m2a, cnt[:, i], mean[:, i], m2[:, i])
+
+    carry = (cnt[:, 0], mean[:, 0], m2[:, 0])
+    ca, ma, m2a = jax.lax.fori_loop(1, chunks, merge, carry)
+
+    var = m2a / ca
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - ma[:, None]) * inv[:, None]
+    y = y * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _fused_layernorm_raw(x, gamma, beta, eps=1e-5, block_rows=128, chunks=None):
+    """LayerNorm over the last axis of x (any leading shape).
+
+    gamma, beta: (C,). Rows are flattened, processed ``block_rows`` per grid
+    program; the feature axis is split into ``chunks`` Welford partials
+    (default: one 128-lane chunk per 128 features, min 1).
+    """
+    orig_shape = x.shape
+    c = orig_shape[-1]
+    x2 = x.reshape(-1, c)
+    r = x2.shape[0]
+    if chunks is None:
+        chunks = max(1, c // 128)
+    while c % chunks != 0:
+        chunks -= 1
+    br = min(block_rows, r)
+    pad = (-r) % br
+    xp = jnp.pad(x2, ((0, pad), (0, 0))) if pad else x2
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps, chunks=chunks),
+        grid=((r + pad) // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp, gamma, beta)
+    if pad:
+        out = out[:r]
+    return out.reshape(orig_shape)
+
+
+# --------------------------------------------------------------------------
+# custom_vjp: the analytic fused LayerNorm backward (the paper ships a fused
+# bwd kernel too). Residuals are (x, gamma); mean/inv-std are recomputed in
+# f32 — one pass, same cost class as the CUDA bwd which re-reads x anyway.
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def fused_layernorm(x, gamma, beta, eps=1e-5, block_rows=128, chunks=None):
+    """Differentiable fused LayerNorm over the last axis (see module doc)."""
+    return _fused_layernorm_raw(x, gamma, beta, eps, block_rows, chunks)
+
+
+def _ln_fwd(x, gamma, beta, eps, block_rows, chunks):
+    out = _fused_layernorm_raw(x, gamma, beta, eps, block_rows, chunks)
+    return out, (x, gamma)
+
+
+def _ln_bwd(eps, block_rows, chunks, res, ct):
+    x, gamma = res
+    xf = x.astype(jnp.float32)
+    gf = gamma.astype(jnp.float32)
+    ctf = ct.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = (xf - mean) * inv
+    dbeta = jnp.sum(ctf, axis=tuple(range(ct.ndim - 1)))
+    dgamma = jnp.sum(ctf * xhat, axis=tuple(range(ct.ndim - 1)))
+    dxhat = ctf * gf
+    dx = inv * (
+        dxhat
+        - jnp.mean(dxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    )
+    return dx.astype(x.dtype), dgamma.astype(gamma.dtype), dbeta.astype(x.dtype)
+
+
+fused_layernorm.defvjp(_ln_fwd, _ln_bwd)

@@ -1,0 +1,222 @@
+"""Fused scaled/biased/masked softmax as a Pallas kernel (paper §IV.A.2).
+
+GPU→TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper assigns one
+CUDA *warp* per softmax row and reduces with ``__shfl_xor_sync``. On TPU the
+analogue is one *grid program* per (batch, head) tile: the whole row block
+lives in VMEM and the max/sum reductions are VPU vector reduces. Scaling,
+pair-bias add and mask add are fused into the same kernel — one HBM pass —
+exactly the fusion the CUDA kernel performs.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+under the rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_body(s):
+    """Numerically-stable softmax over the last axis of an f32 block."""
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _kernel_plain(x_ref, o_ref, *, scale):
+    s = x_ref[...].astype(jnp.float32) * scale
+    o_ref[...] = _softmax_body(s).astype(o_ref.dtype)
+
+
+def _kernel_bias(x_ref, b_ref, o_ref, *, scale):
+    s = x_ref[...].astype(jnp.float32) * scale
+    s = s + b_ref[...].astype(jnp.float32)
+    o_ref[...] = _softmax_body(s).astype(o_ref.dtype)
+
+
+def _kernel_bias_mask(x_ref, b_ref, m_ref, o_ref, *, scale):
+    s = x_ref[...].astype(jnp.float32) * scale
+    s = s + b_ref[...].astype(jnp.float32)
+    s = s + m_ref[...].astype(jnp.float32)[:, None, :]
+    o_ref[...] = _softmax_body(s).astype(o_ref.dtype)
+
+
+def _fused_softmax_raw(x, bias=None, mask=None, scale=1.0):
+    """softmax(x*scale + bias + mask) over the last axis.
+
+    x:    (B, H, Q, K); bias: (H, Q, K) or None; mask: (B, K) or None.
+    The (B, H) grid expresses the bias broadcast through BlockSpec index
+    maps instead of materializing the broadcast in HBM.
+    """
+    b, h, q, k = x.shape
+    grid = (b, h)
+    x_spec = pl.BlockSpec((1, 1, q, k), lambda i, j: (i, j, 0, 0))
+    out_spec = pl.BlockSpec((1, 1, q, k), lambda i, j: (i, j, 0, 0))
+    out_shape = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    if bias is None and mask is None:
+        return pl.pallas_call(
+            functools.partial(_kernel_plain, scale=scale),
+            grid=grid,
+            in_specs=[x_spec],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(x)
+    if bias is None:
+        bias = jnp.zeros((h, q, k), x.dtype)
+    b_spec = pl.BlockSpec((1, q, k), lambda i, j: (j, 0, 0))
+    if mask is None:
+        return pl.pallas_call(
+            functools.partial(_kernel_bias, scale=scale),
+            grid=grid,
+            in_specs=[x_spec, b_spec],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(x, bias)
+    m_spec = pl.BlockSpec((1, k), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel_bias_mask, scale=scale),
+        grid=grid,
+        in_specs=[x_spec, b_spec, m_spec],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=True,
+    )(x, bias, mask)
+
+
+# --------------------------------------------------------------------------
+# custom_vjp wrappers: pallas_call has no built-in reverse-mode rule, and the
+# paper ships *fused backward kernels* anyway. The backward below is the
+# analytic fused-softmax gradient (ds = p ⊙ (ct − ⟨ct, p⟩)), computed from the
+# saved probabilities — one fused elementwise+reduce chain, no forward replay.
+# --------------------------------------------------------------------------
+
+
+def _softmax_grad(p, ct):
+    pf = p.astype(jnp.float32)
+    ctf = ct.astype(jnp.float32)
+    return pf * (ctf - jnp.sum(ctf * pf, axis=-1, keepdims=True))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sm_plain(scale, x):
+    return _fused_softmax_raw(x, None, None, scale)
+
+
+def _sm_plain_fwd(scale, x):
+    out = _fused_softmax_raw(x, None, None, scale)
+    return out, out
+
+
+def _sm_plain_bwd(scale, p, ct):
+    return (( _softmax_grad(p, ct) * scale).astype(p.dtype),)
+
+
+_sm_plain.defvjp(_sm_plain_fwd, _sm_plain_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sm_bias(scale, x, bias):
+    return _fused_softmax_raw(x, bias, None, scale)
+
+
+def _sm_bias_fwd(scale, x, bias):
+    out = _fused_softmax_raw(x, bias, None, scale)
+    return out, out
+
+
+def _sm_bias_bwd(scale, p, ct):
+    ds = _softmax_grad(p, ct)
+    return (ds * scale).astype(p.dtype), jnp.sum(ds, axis=0).astype(p.dtype)
+
+
+_sm_bias.defvjp(_sm_bias_fwd, _sm_bias_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sm_bias_mask(scale, x, bias, mask):
+    return _fused_softmax_raw(x, bias, mask, scale)
+
+
+def _sm_bias_mask_fwd(scale, x, bias, mask):
+    out = _fused_softmax_raw(x, bias, mask, scale)
+    return out, out
+
+
+def _sm_bias_mask_bwd(scale, p, ct):
+    ds = _softmax_grad(p, ct)
+    return (
+        (ds * scale).astype(p.dtype),
+        jnp.sum(ds, axis=0).astype(p.dtype),
+        jnp.sum(ds, axis=(1, 2)).astype(p.dtype),
+    )
+
+
+_sm_bias_mask.defvjp(_sm_bias_mask_fwd, _sm_bias_mask_bwd)
+
+
+def fused_softmax(x, bias=None, mask=None, scale=1.0):
+    """Differentiable fused softmax (see _fused_softmax_raw for semantics)."""
+    if bias is None and mask is None:
+        return _sm_plain(scale, x)
+    if bias is None:
+        bias = jnp.zeros((x.shape[1], x.shape[2], x.shape[3]), x.dtype)
+    if mask is None:
+        return _sm_bias(scale, x, bias)
+    return _sm_bias_mask(scale, x, bias, mask)
+
+
+def _kernel_rows(x_ref, o_ref, *, scale):
+    s = x_ref[...].astype(jnp.float32) * scale
+    o_ref[...] = _softmax_body(s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _sm2d(scale, block_rows, x):
+    return _fused_softmax2d_raw(x, scale, block_rows)
+
+
+def _sm2d_fwd(scale, block_rows, x):
+    out = _fused_softmax2d_raw(x, scale, block_rows)
+    return out, out
+
+
+def _sm2d_bwd(scale, block_rows, p, ct):
+    return ((_softmax_grad(p, ct) * scale).astype(p.dtype),)
+
+
+_sm2d.defvjp(_sm2d_fwd, _sm2d_bwd)
+
+
+def fused_softmax2d(x, scale=1.0, block_rows=128):
+    """Differentiable 2-D row softmax (Fig 8 microbenchmark shape)."""
+    return _sm2d(scale, block_rows, x)
+
+
+def _fused_softmax2d_raw(x, scale=1.0, block_rows=128):
+    """Row softmax for 2-D (rows, cols): the Fig 8 microbenchmark shape.
+
+    One grid program handles ``block_rows`` rows — the TPU analogue of the
+    paper's one-warp-per-row mapping for many-small-rows inputs.
+    """
+    r, c = x.shape
+    br = min(block_rows, r)
+    # pad rows so the grid divides evenly (masked rows are pure garbage-in/
+    # garbage-out and sliced off — softmax rows are independent).
+    pad = (-r) % br
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    out = pl.pallas_call(
+        functools.partial(_kernel_rows, scale=scale),
+        grid=((r + pad) // br,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:r] if pad else out

@@ -1,0 +1,79 @@
+"""Outer Product Mean core as a Pallas kernel (paper §III.A item 3).
+
+einsum(sid, sje -> ijde) / S, flattened to (I, J, D*E): the MSA→pair
+communication op. TPU mapping: 2-D grid over (i-block, j-block); each
+program holds the (S, BI, D) left and (S, BJ, E) right tiles in VMEM and
+contracts over the sequence axis s — the reduction the paper averages over
+sequences. The projection GEMMs producing left/right live in model.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)  # (S, BI, D)
+    b = b_ref[...].astype(jnp.float32)  # (S, BJ, E)
+    s = a.shape[0]
+    out = jnp.einsum("sid,sje->ijde", a, b) / s
+    bi, bj, d, e = out.shape
+    o_ref[...] = out.reshape(bi, bj, d * e).astype(o_ref.dtype)
+
+
+def _outer_product_mean_raw(a, b, block=64):
+    """a: (S, I, D), b: (S, J, E) -> (I, J, D*E), mean over S."""
+    s, i, d = a.shape
+    _, j, e = b.shape
+    bi, bj = min(block, i), min(block, j)
+    while i % bi:
+        bi -= 1
+    while j % bj:
+        bj -= 1
+    return pl.pallas_call(
+        _kernel,
+        grid=(i // bi, j // bj),
+        in_specs=[
+            pl.BlockSpec((s, bi, d), lambda x, y: (0, x, 0)),
+            pl.BlockSpec((s, bj, e), lambda x, y: (0, y, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj, d * e), lambda x, y: (x, y, 0)),
+        out_shape=jax.ShapeDtypeStruct((i, j, d * e), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+# --------------------------------------------------------------------------
+# custom_vjp: analytic OPM backward.
+#   out[i,j,(d,e)] = (1/S) Σ_s a[s,i,d] b[s,j,e]
+#   da[s,i,d] = (1/S) Σ_{j,e} ct[i,j,(d,e)] b[s,j,e]
+#   db[s,j,e] = (1/S) Σ_{i,d} ct[i,j,(d,e)] a[s,i,d]
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def outer_product_mean(a, b, block=64):
+    """Differentiable outer-product-mean contraction."""
+    return _outer_product_mean_raw(a, b, block)
+
+
+def _opm_fwd(a, b, block):
+    return _outer_product_mean_raw(a, b, block), (a, b)
+
+
+def _opm_bwd(block, res, ct):
+    a, b = res
+    s, i, d = a.shape
+    _, j, e = b.shape
+    ct4 = ct.astype(jnp.float32).reshape(i, j, d, e)
+    af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
+    da = jnp.einsum("ijde,sje->sid", ct4, bf) / s
+    db = jnp.einsum("ijde,sid->sje", ct4, af) / s
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+outer_product_mean.defvjp(_opm_fwd, _opm_bwd)

@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for the FastFold Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written as straight-line jnp with NO fusion tricks. pytest asserts
+allclose(kernel, ref) across shape/dtype sweeps — this is the core L1
+correctness signal (paper §IV.A kernels: fused softmax, fused LayerNorm,
+gated attention, triangle multiplicative update, outer product mean).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_softmax_ref(x, bias=None, mask=None, scale=1.0):
+    """Scaled, biased, masked softmax over the last axis.
+
+    x:    (B, H, Q, K) attention scores (or any (..., K))
+    bias: (H, Q, K) pair bias, broadcast over batch (optional)
+    mask: (B, K) additive mask (0 / -inf style), broadcast over H, Q (optional)
+    """
+    s = x.astype(jnp.float32) * scale
+    if bias is not None:
+        s = s + bias.astype(jnp.float32)[None]
+    if mask is not None:
+        s = s + mask.astype(jnp.float32)[:, None, None, :]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    out = e / jnp.sum(e, axis=-1, keepdims=True)
+    return out.astype(x.dtype)
+
+
+def softmax2d_ref(x, scale=1.0):
+    """Plain row softmax for 2-D (rows, cols) inputs (no bias/mask)."""
+    s = x.astype(jnp.float32) * scale
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis (the paper's 12-per-block op)."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) / jnp.sqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def gated_attention_ref(q, k, v, gate, bias=None, mask=None):
+    """Evoformer attention core (paper Fig 3).
+
+    q,k,v: (B, H, Q, D) / (B, H, K, D);  gate: (B, H, Q, D) pre-sigmoid
+    bias:  (H, Q, K) optional pair bias; mask: (B, K) optional additive.
+    Returns sigmoid(gate) * (softmax(qk^T/sqrt(D) + bias + mask) @ v).
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    )
+    p = fused_softmax_ref(scores, bias=bias, mask=mask, scale=1.0 / jnp.sqrt(d))
+    ctx = jnp.einsum(
+        "bhqk,bhkd->bhqd", p.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    out = jax.nn.sigmoid(gate.astype(jnp.float32)) * ctx
+    return out.astype(q.dtype)
+
+
+def triangle_mult_ref(a, b, outgoing=True):
+    """Triangular multiplicative update core (paper Fig 4 MatMul part).
+
+    a, b: (R, R, C) gated projections of the pair representation.
+    outgoing: out[i,j] = sum_k a[i,k] * b[j,k]
+    incoming: out[i,j] = sum_k a[k,i] * b[k,j]
+    """
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    if outgoing:
+        out = jnp.einsum("ikc,jkc->ijc", af, bf)
+    else:
+        out = jnp.einsum("kic,kjc->ijc", af, bf)
+    return out.astype(a.dtype)
+
+
+def outer_product_mean_ref(a, b):
+    """Outer Product Mean core: einsum(sid,sje->ijde) averaged over s.
+
+    a: (S, I, D), b: (S, J, E)  ->  (I, J, D*E)
+    """
+    s = a.shape[0]
+    out = jnp.einsum(
+        "sid,sje->ijde", a.astype(jnp.float32), b.astype(jnp.float32)
+    ) / s
+    i, j, d, e = out.shape
+    return out.reshape(i, j, d * e).astype(a.dtype)
+
+
+def naive_softmax_unfused(x, bias=None, mask=None, scale=1.0):
+    """Deliberately UNFUSED softmax chain — the 'PyTorch native' baseline of
+    Fig 8: separate scale, bias-add, mask-add, max, sub, exp, sum, div ops
+    kept as distinct HLO-visible steps (optimization barriers stop XLA from
+    collapsing the chain, mimicking eager-mode kernel-per-op execution)."""
+    opt = jax.lax.optimization_barrier
+    s = opt(x.astype(jnp.float32))
+    s = opt(s * scale)
+    if bias is not None:
+        s = opt(s + bias.astype(jnp.float32)[None])
+    if mask is not None:
+        s = opt(s + mask.astype(jnp.float32)[:, None, None, :])
+    m = opt(jnp.max(s, axis=-1, keepdims=True))
+    s = opt(s - m)
+    e = opt(jnp.exp(s))
+    z = opt(jnp.sum(e, axis=-1, keepdims=True))
+    return (e / z).astype(x.dtype)
+
+
+def naive_layernorm_twopass(x, gamma, beta, eps=1e-5):
+    """Deliberately UNFUSED two-pass LayerNorm — the Fig 9 baseline."""
+    opt = jax.lax.optimization_barrier
+    xf = opt(x.astype(jnp.float32))
+    mean = opt(jnp.mean(xf, axis=-1, keepdims=True))
+    centered = opt(xf - mean)
+    var = opt(jnp.mean(jnp.square(centered), axis=-1, keepdims=True))
+    inv = opt(1.0 / jnp.sqrt(var + eps))
+    y = opt(centered * inv)
+    y = opt(y * gamma.astype(jnp.float32))
+    return (y + beta.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,112 @@
+"""Triangular multiplicative update MatMul core as a Pallas kernel
+(paper Fig 4).
+
+out[i,j,c] = sum_k a[i,k,c] * b[j,k,c]   (outgoing edges)
+out[i,j,c] = sum_k a[k,i,c] * b[k,j,c]   (incoming edges)
+
+This is a batch of per-channel rank-R updates. TPU mapping: 2-D grid over
+(i-block, j-block); each program keeps an (BI, K, C) a-tile and (BJ, K, C)
+b-tile in VMEM and contracts over k with an MXU-shaped einsum. The left/right
+projection + gating merge-GEMM feeding this kernel lives in model.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel_out(a_ref, b_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)  # (BI, K, C)
+    b = b_ref[...].astype(jnp.float32)  # (BJ, K, C)
+    o_ref[...] = jnp.einsum("ikc,jkc->ijc", a, b).astype(o_ref.dtype)
+
+
+def _kernel_in(a_ref, b_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)  # (K, BI, C)
+    b = b_ref[...].astype(jnp.float32)  # (K, BJ, C)
+    o_ref[...] = jnp.einsum("kic,kjc->ijc", a, b).astype(o_ref.dtype)
+
+
+def _triangle_mult_raw(a, b, outgoing=True, block=64):
+    """Triangle multiplicative-update contraction.
+
+    a, b: (R, R, C) — already layer-normed, projected and gated.
+    Returns (R, R, C). a and b may have different leading/contraction sizes
+    only through R; C is the pair channel dim.
+    """
+    r1, r2, c = a.shape
+    bi = min(block, r1 if outgoing else r2)
+    bj = min(block, b.shape[0] if outgoing else b.shape[1])
+    if outgoing:
+        ni, nj = a.shape[0], b.shape[0]
+        while ni % bi:
+            bi -= 1
+        while nj % bj:
+            bj -= 1
+        return pl.pallas_call(
+            _kernel_out,
+            grid=(ni // bi, nj // bj),
+            in_specs=[
+                pl.BlockSpec((bi, r2, c), lambda i, j: (i, 0, 0)),
+                pl.BlockSpec((bj, r2, c), lambda i, j: (j, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bi, bj, c), lambda i, j: (i, j, 0)),
+            out_shape=jax.ShapeDtypeStruct((ni, nj, c), a.dtype),
+            interpret=True,
+        )(a, b)
+    ni, nj = a.shape[1], b.shape[1]
+    while ni % bi:
+        bi -= 1
+    while nj % bj:
+        bj -= 1
+    return pl.pallas_call(
+        _kernel_in,
+        grid=(ni // bi, nj // bj),
+        in_specs=[
+            pl.BlockSpec((r1, bi, c), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((r1, bj, c), lambda i, j: (0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj, c), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((ni, nj, c), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+# --------------------------------------------------------------------------
+# custom_vjp: analytic triangle-update backward (two einsums per operand),
+# the fused-bwd-kernel analogue.
+#   outgoing: out[i,j] = Σ_k a[i,k] b[j,k]
+#     da[i,k] = Σ_j ct[i,j] b[j,k];  db[j,k] = Σ_i ct[i,j] a[i,k]
+#   incoming: out[i,j] = Σ_k a[k,i] b[k,j]
+#     da[k,i] = Σ_j ct[i,j] b[k,j];  db[k,j] = Σ_i ct[i,j] a[k,i]
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def triangle_mult(a, b, outgoing=True, block=64):
+    """Differentiable triangle multiplicative-update contraction."""
+    return _triangle_mult_raw(a, b, outgoing, block)
+
+
+def _tri_fwd(a, b, outgoing, block):
+    return _triangle_mult_raw(a, b, outgoing, block), (a, b)
+
+
+def _tri_bwd(outgoing, block, res, ct):
+    a, b = res
+    af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
+    ctf = ct.astype(jnp.float32)
+    if outgoing:
+        da = jnp.einsum("ijc,jkc->ikc", ctf, bf)
+        db = jnp.einsum("ijc,ikc->jkc", ctf, af)
+    else:
+        da = jnp.einsum("ijc,kjc->kic", ctf, bf)
+        db = jnp.einsum("ijc,kic->kjc", ctf, af)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+triangle_mult.defvjp(_tri_fwd, _tri_bwd)

@@ -1,0 +1,421 @@
+"""L2: the FastFold Evoformer / mini-AlphaFold model in JAX.
+
+Faithful to the paper's description of AlphaFold's trunk (Fig 1, §II–III):
+
+  Embedding  →  N × Evoformer block  →  heads (masked-MSA + distogram)
+
+Each Evoformer block (AlphaFold2 ordering):
+  MSA stack:    row-attention (pair bias, gated) → column-attention (gated)
+                → transition
+  Communication: outer product mean (MSA → pair)
+  Pair stack:   triangle-mult outgoing → triangle-mult incoming
+                → triangle-attention starting → triangle-attention ending
+                → transition
+
+Every hot op calls the L1 Pallas kernels (``use_kernels=True``) or the
+unfused reference chain (``use_kernels=False`` — the Fig 8/9/12 baseline).
+The Merge-GEMM optimization of §IV.A.1 is structural here: Q,K,V and the
+gate are produced by ONE projection matrix, and the triangle left/right
+projections + gates by one matrix.
+
+Params are nested dicts of jnp arrays; ``init_params`` builds them,
+``param_spec``/``flatten_params`` define the canonical flatten order that
+the rust runtime relies on (manifest.json).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import (
+    fused_layernorm,
+    gated_attention,
+    outer_product_mean,
+    triangle_mult,
+)
+from .kernels import ref as kref
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+
+def layer_norm(p, x, use_kernels=True):
+    if use_kernels:
+        return fused_layernorm(x, p["g"], p["b"])
+    return kref.naive_layernorm_twopass(x, p["g"], p["b"])
+
+
+def linear(p, x):
+    return jnp.einsum("...i,io->...o", x, p["w"]) + p["b"]
+
+
+def linear_nobias(p, x):
+    return jnp.einsum("...i,io->...o", x, p["w"])
+
+
+def _attention(q, k, v, gate, bias, use_kernels):
+    """(B,H,Q,D) gated attention, fused or reference path."""
+    if use_kernels:
+        return gated_attention(q, k, v, gate, bias)
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k)
+    p = kref.naive_softmax_unfused(s, bias=bias, scale=1.0 / np.sqrt(d))
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    return jax.nn.sigmoid(gate) * ctx
+
+
+def _split_heads(x, h):
+    """(..., L, H*D) -> (..., H, L, D)"""
+    *lead, l, hd = x.shape
+    x = x.reshape(*lead, l, h, hd // h)
+    return jnp.moveaxis(x, -2, -3)
+
+
+def _merge_heads(x):
+    """(..., H, L, D) -> (..., L, H*D)"""
+    x = jnp.moveaxis(x, -3, -2)
+    *lead, l, h, d = x.shape
+    return x.reshape(*lead, l, h * d)
+
+
+# --------------------------------------------------------------------------
+# Evoformer sub-modules. Shapes: m (s, r, d_msa); z (r, r, d_pair).
+# --------------------------------------------------------------------------
+
+
+def pair_bias(p, z, use_kernels=True):
+    """Project LayerNormed pair rep to per-head attention bias (h, r, r)."""
+    act = layer_norm(p["ln"], z, use_kernels)
+    return jnp.transpose(linear_nobias(p["proj"], act), (2, 0, 1))
+
+
+def msa_row_attention(p, m, bias, h, use_kernels=True):
+    """MSA row-wise gated self-attention with pair bias (batch axis = s)."""
+    act = layer_norm(p["ln"], m, use_kernels)
+    qkvg = linear_nobias(p["qkvg"], act)  # merge-GEMM: (s, r, 4*h*d)
+    q, k, v, g = jnp.split(qkvg, 4, axis=-1)
+    q, k, v, g = (_split_heads(t, h) for t in (q, k, v, g))
+    o = _attention(q, k, v, g, bias, use_kernels)
+    return linear(p["out"], _merge_heads(o))
+
+
+def msa_col_attention(p, m, h, use_kernels=True):
+    """MSA column-wise gated self-attention (no bias; batch axis = r)."""
+    act = layer_norm(p["ln"], m, use_kernels)
+    act_t = jnp.swapaxes(act, 0, 1)  # (r, s, d)
+    qkvg = linear_nobias(p["qkvg"], act_t)
+    q, k, v, g = jnp.split(qkvg, 4, axis=-1)
+    q, k, v, g = (_split_heads(t, h) for t in (q, k, v, g))
+    o = _attention(q, k, v, g, None, use_kernels)
+    return jnp.swapaxes(linear(p["out"], _merge_heads(o)), 0, 1)
+
+
+def transition(p, x, use_kernels=True):
+    """2-layer MLP (paper: Transition = 2 MLP layers, ×4 widening)."""
+    act = layer_norm(p["ln"], x, use_kernels)
+    return linear(p["l2"], jax.nn.relu(linear(p["l1"], act)))
+
+
+def outer_product_mean_module(p, m, use_kernels=True):
+    """MSA → pair communication: einsum(bsid,bsje->bijde) mean over s."""
+    act = layer_norm(p["ln"], m, use_kernels)
+    ab = linear_nobias(p["ab"], act)  # merge-GEMM: (s, r, 2*d_opm)
+    a, b = jnp.split(ab, 2, axis=-1)
+    if use_kernels:
+        o = outer_product_mean(a, b)
+    else:
+        o = kref.outer_product_mean_ref(a, b)
+    return linear(p["out"], o)
+
+
+def triangle_mult_module(p, z, outgoing, use_kernels=True):
+    """Triangular multiplicative update (Fig 4), merge-GEMM proj+gates."""
+    act = layer_norm(p["ln"], z, use_kernels)
+    pg = linear_nobias(p["pg"], act)  # (r, r, 4*c): a, b, gate_a, gate_b
+    a, b, ga, gb = jnp.split(pg, 4, axis=-1)
+    a = a * jax.nn.sigmoid(ga)
+    b = b * jax.nn.sigmoid(gb)
+    if use_kernels:
+        o = triangle_mult(a, b, outgoing)
+    else:
+        o = kref.triangle_mult_ref(a, b, outgoing)
+    o = layer_norm(p["ln_out"], o, use_kernels)
+    g = jax.nn.sigmoid(linear_nobias(p["gate"], act))
+    return g * linear(p["out"], o)
+
+
+def triangle_attention_module(p, z, bias, starting, h, use_kernels=True):
+    """Triangle self-attention (start/end node). Ending-node attention is
+    starting-node attention on the transposed pair rep (OpenFold trick)."""
+    zt = z if starting else jnp.swapaxes(z, 0, 1)
+    act = layer_norm(p["ln"], zt, use_kernels)
+    qkvg = linear_nobias(p["qkvg"], act)
+    q, k, v, g = jnp.split(qkvg, 4, axis=-1)
+    q, k, v, g = (_split_heads(t, h) for t in (q, k, v, g))
+    o = _attention(q, k, v, g, bias, use_kernels)
+    o = linear(p["out"], _merge_heads(o))
+    return o if starting else jnp.swapaxes(o, 0, 1)
+
+
+def tri_attn_bias(p, z, starting, use_kernels=True):
+    """Bias for triangle attention: (h, r, r) from the (maybe transposed) z."""
+    zt = z if starting else jnp.swapaxes(z, 0, 1)
+    act = layer_norm(p["ln"], zt, use_kernels)
+    return jnp.transpose(linear_nobias(p["proj"], act), (2, 0, 1))
+
+
+# --------------------------------------------------------------------------
+# Evoformer block + full model
+# --------------------------------------------------------------------------
+
+
+def evoformer_block(p, m, z, cfg: ModelConfig, use_kernels=True):
+    hm, hp = cfg.n_heads_msa, cfg.n_heads_pair
+    bias = pair_bias(p["row_bias"], z, use_kernels)
+    m = m + msa_row_attention(p["row_attn"], m, bias, hm, use_kernels)
+    m = m + msa_col_attention(p["col_attn"], m, hm, use_kernels)
+    m = m + transition(p["msa_trans"], m, use_kernels)
+    z = z + outer_product_mean_module(p["opm"], m, use_kernels)
+    z = z + triangle_mult_module(p["tri_out"], z, True, use_kernels)
+    z = z + triangle_mult_module(p["tri_in"], z, False, use_kernels)
+    b_start = tri_attn_bias(p["start_bias"], z, True, use_kernels)
+    z = z + triangle_attention_module(p["tri_start"], z, b_start, True, hp, use_kernels)
+    b_end = tri_attn_bias(p["end_bias"], z, False, use_kernels)
+    z = z + triangle_attention_module(p["tri_end"], z, b_end, False, hp, use_kernels)
+    z = z + transition(p["pair_trans"], z, use_kernels)
+    return m, z
+
+
+def embedder(p, cfg: ModelConfig, msa_tokens, use_kernels=True):
+    """Input embedding (paper Fig 1 'Embedding'):
+
+    msa_tokens: (s, r) int32 (already masked for the BERT-style objective).
+    target = first MSA row. Pair init = outer sum of target projections +
+    clipped relative-position embedding.
+    """
+    msa_feat = jax.nn.one_hot(msa_tokens, cfg.msa_vocab, dtype=jnp.float32)
+    target_feat = msa_feat[0]  # (r, vocab)
+    m = linear(p["msa_proj"], msa_feat) + linear(p["target_m"], target_feat)[None]
+    zi = linear(p["target_zi"], target_feat)
+    zj = linear(p["target_zj"], target_feat)
+    z = zi[:, None, :] + zj[None, :, :]
+    # relative position: clip(i-j, ±clip) one-hot → linear
+    pos = jnp.arange(cfg.n_res)
+    rel = jnp.clip(pos[:, None] - pos[None, :], -cfg.relpos_clip, cfg.relpos_clip)
+    rel_oh = jax.nn.one_hot(rel + cfg.relpos_clip, 2 * cfg.relpos_clip + 1,
+                            dtype=jnp.float32)
+    z = z + linear(p["relpos"], rel_oh)
+    return m, z
+
+
+def heads(p, m, z, use_kernels=True):
+    """Masked-MSA logits (s,r,vocab) and symmetrized distogram logits
+    (r,r,bins)."""
+    msa_logits = linear(p["masked_msa"], layer_norm(p["ln_m"], m, use_kernels))
+    zs = z + jnp.swapaxes(z, 0, 1)  # symmetrize
+    dist_logits = linear(p["distogram"], layer_norm(p["ln_z"], zs, use_kernels))
+    return msa_logits, dist_logits
+
+
+def forward(params, cfg: ModelConfig, msa_tokens, use_kernels=True):
+    m, z = embedder(params["embedder"], cfg, msa_tokens, use_kernels)
+    for bp in params["blocks"]:
+        m, z = evoformer_block(bp, m, z, cfg, use_kernels)
+    return heads(params["heads"], m, z, use_kernels)
+
+
+def _xent(logits, labels, mask):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / (jnp.sum(mask) + 1e-8)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, use_kernels=True):
+    """BERT-style masked-MSA loss + distogram loss (the trunk losses the
+    paper's training pipeline optimizes; structure-module FAPE is out of
+    the Evoformer scope this paper targets)."""
+    msa_logits, dist_logits = forward(
+        params, cfg, batch["msa_tokens"], use_kernels
+    )
+    msa_loss = _xent(msa_logits, batch["msa_labels"], batch["msa_mask"])
+    dist_loss = _xent(
+        dist_logits, batch["dist_bins"],
+        jnp.ones_like(batch["dist_bins"], jnp.float32),
+    )
+    return msa_loss + 0.3 * dist_loss
+
+
+# --------------------------------------------------------------------------
+# init + canonical flatten order
+# --------------------------------------------------------------------------
+
+
+def _lin_init(key, d_in, d_out, scale=1.0):
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32)
+    return {"w": w * (scale / np.sqrt(d_in)), "b": jnp.zeros((d_out,))}
+
+
+def _lin_nb_init(key, d_in, d_out, scale=1.0):
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32)
+    return {"w": w * (scale / np.sqrt(d_in))}
+
+
+def _ln_init(d):
+    return {"g": jnp.ones((d,)), "b": jnp.zeros((d,))}
+
+
+def _attn_init(key, d_model, heads, d_head, d_bias=None):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": _ln_init(d_model),
+        "qkvg": _lin_nb_init(ks[0], d_model, 4 * heads * d_head),
+        "out": _lin_init(ks[1], heads * d_head, d_model, scale=0.5),
+    }
+
+
+def _bias_init(key, d_pair, heads):
+    return {"ln": _ln_init(d_pair), "proj": _lin_nb_init(key, d_pair, heads)}
+
+
+def _trans_init(key, d, factor):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln": _ln_init(d),
+        "l1": _lin_init(k1, d, factor * d),
+        "l2": _lin_init(k2, factor * d, d, scale=0.5),
+    }
+
+
+def _tri_mult_init(key, d_pair):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln": _ln_init(d_pair),
+        "pg": _lin_nb_init(k1, d_pair, 4 * d_pair),
+        "ln_out": _ln_init(d_pair),
+        "gate": _lin_nb_init(k2, d_pair, d_pair),
+        "out": _lin_init(k3, d_pair, d_pair, scale=0.5),
+    }
+
+
+def _opm_init(key, d_msa, d_opm, d_pair):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln": _ln_init(d_msa),
+        "ab": _lin_nb_init(k1, d_msa, 2 * d_opm),
+        "out": _lin_init(k2, d_opm * d_opm, d_pair, scale=0.5),
+    }
+
+
+def init_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 11)
+    return {
+        "row_bias": _bias_init(ks[0], cfg.d_pair, cfg.n_heads_msa),
+        "row_attn": _attn_init(ks[1], cfg.d_msa, cfg.n_heads_msa, cfg.d_head),
+        "col_attn": _attn_init(ks[2], cfg.d_msa, cfg.n_heads_msa, cfg.d_head),
+        "msa_trans": _trans_init(ks[3], cfg.d_msa, cfg.transition_factor),
+        "opm": _opm_init(ks[4], cfg.d_msa, cfg.d_opm, cfg.d_pair),
+        "tri_out": _tri_mult_init(ks[5], cfg.d_pair),
+        "tri_in": _tri_mult_init(ks[6], cfg.d_pair),
+        "start_bias": _bias_init(ks[7], cfg.d_pair, cfg.n_heads_pair),
+        "tri_start": _attn_init(ks[8], cfg.d_pair, cfg.n_heads_pair, cfg.d_head),
+        "end_bias": _bias_init(ks[9], cfg.d_pair, cfg.n_heads_pair),
+        "tri_end": _attn_init(ks[10], cfg.d_pair, cfg.n_heads_pair, cfg.d_head),
+        "pair_trans": _trans_init(
+            jax.random.fold_in(key, 99), cfg.d_pair, cfg.transition_factor
+        ),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, kh, *kb = jax.random.split(key, 2 + cfg.n_blocks)
+    kes = jax.random.split(ke, 6)
+    nrel = 2 * cfg.relpos_clip + 1
+    embed = {
+        "msa_proj": _lin_init(kes[0], cfg.msa_vocab, cfg.d_msa),
+        "target_m": _lin_init(kes[1], cfg.msa_vocab, cfg.d_msa),
+        "target_zi": _lin_init(kes[2], cfg.msa_vocab, cfg.d_pair),
+        "target_zj": _lin_init(kes[3], cfg.msa_vocab, cfg.d_pair),
+        "relpos": _lin_init(kes[4], nrel, cfg.d_pair),
+    }
+    khs = jax.random.split(kh, 2)
+    head = {
+        "ln_m": _ln_init(cfg.d_msa),
+        "masked_msa": _lin_init(khs[0], cfg.d_msa, cfg.msa_vocab),
+        "ln_z": _ln_init(cfg.d_pair),
+        "distogram": _lin_init(khs[1], cfg.d_pair, cfg.n_dist_bins),
+    }
+    return {
+        "embedder": embed,
+        "blocks": [init_block(k, cfg) for k in kb],
+        "heads": head,
+    }
+
+
+def flatten_params(params):
+    """Canonical (path, leaf) list — the order manifest.json / params.bin
+    use. jax's own tree flatten order (sorted dict keys) is the contract."""
+    leaves = []
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node.keys()):
+                walk(f"{prefix}/{k}" if prefix else k, node[k])
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}", v)
+        else:
+            leaves.append((prefix, node))
+
+    walk("", params)
+    return leaves
+
+
+def count_params(params):
+    return int(sum(np.prod(leaf.shape) for _, leaf in flatten_params(params)))
+
+
+# --------------------------------------------------------------------------
+# synthetic data (mirrors rust/src/train/data.rs — same recipe, both sides
+# produce structurally identical batches; seeds differ)
+# --------------------------------------------------------------------------
+
+
+def make_synthetic_batch(key, cfg: ModelConfig, mask_frac=0.15):
+    """Synthetic co-evolution batch: a random 'ancestral' sequence, MSA rows
+    are noisy copies (mutations), distance bins from a toy 1-D chain fold so
+    the distogram target correlates with |i-j| and sequence content."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    aa = 20
+    ancestor = jax.random.randint(k1, (cfg.n_res,), 0, aa)
+    mut = jax.random.bernoulli(k2, 0.15, (cfg.n_seq, cfg.n_res))
+    rand_aa = jax.random.randint(k3, (cfg.n_seq, cfg.n_res), 0, aa)
+    msa = jnp.where(mut, rand_aa, ancestor[None, :])
+    msa = msa.at[0].set(ancestor)  # row 0 is the target sequence
+    # toy fold: positions on a noisy helix; distance -> bins
+    t = jnp.arange(cfg.n_res, dtype=jnp.float32)
+    coords = jnp.stack(
+        [jnp.cos(t * 0.6) * 4, jnp.sin(t * 0.6) * 4, t * 1.5], axis=-1
+    )
+    coords = coords + 0.3 * jax.random.normal(k4, coords.shape)
+    d = jnp.linalg.norm(coords[:, None] - coords[None, :], axis=-1)
+    dist_bins = jnp.clip(
+        (d / (d.max() / cfg.n_dist_bins)).astype(jnp.int32),
+        0, cfg.n_dist_bins - 1,
+    )
+    # BERT masking
+    kmask = jax.random.fold_in(key, 7)
+    mask = jax.random.bernoulli(kmask, mask_frac, (cfg.n_seq, cfg.n_res))
+    tokens = jnp.where(mask, cfg.mask_token, msa)
+    return {
+        "msa_tokens": tokens.astype(jnp.int32),
+        "msa_labels": msa.astype(jnp.int32),
+        "msa_mask": mask.astype(jnp.float32),
+        "dist_bins": dist_bins.astype(jnp.int32),
+    }
+
+
+BATCH_KEYS = ["msa_tokens", "msa_labels", "msa_mask", "dist_bins"]

@@ -1,0 +1,407 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes and dtypes (f32 + bf16) per the paper's problem
+ranges (small hidden dims, many rows — §III.B). Tolerances are dtype-aware:
+bf16 has ~8 mantissa bits so comparisons happen against the f32 oracle
+output downcast to bf16.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fused_layernorm,
+    fused_softmax,
+    fused_softmax2d,
+    gated_attention,
+    outer_product_mean,
+    triangle_mult,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5
+    )
+
+
+def rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------- softmax
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 8),
+    q=st.integers(1, 33),
+    k=st.integers(1, 65),
+    dt=st.sampled_from(DTYPES),
+    scale=st.floats(0.1, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_softmax_bias_mask(b, h, q, k, dt, scale, seed):
+    k1, k2, k3 = keys(seed, 3)
+    x = rand(k1, (b, h, q, k), dt, 3.0)
+    bias = rand(k2, (h, q, k), dt)
+    mask = jnp.where(
+        jax.random.bernoulli(k3, 0.9, (b, k)), 0.0, -1e9
+    ).astype(dt)
+    # guarantee at least one unmasked col per row so softmax is well defined
+    mask = mask.at[:, 0].set(0.0)
+    got = fused_softmax(x, bias, mask, scale)
+    want = ref.fused_softmax_ref(x, bias, mask, scale)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dt)
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    q=st.integers(1, 17),
+    k=st.integers(1, 40),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_softmax_plain(b, h, q, k, dt, seed):
+    (k1,) = keys(seed, 1)
+    x = rand(k1, (b, h, q, k), dt, 2.0)
+    got = fused_softmax(x)
+    want = ref.fused_softmax_ref(x)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dt)
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    r=st.integers(1, 300),
+    c=st.integers(1, 130),
+    br=st.sampled_from([1, 7, 32, 128]),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_softmax2d(r, c, br, dt, seed):
+    (k1,) = keys(seed, 1)
+    x = rand(k1, (r, c), dt, 2.0)
+    got = fused_softmax2d(x, 0.7, block_rows=br)
+    want = ref.softmax2d_ref(x, 0.7)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dt)
+    )
+
+
+def test_softmax_rows_sum_to_one():
+    x = rand(jax.random.PRNGKey(0), (4, 2, 9, 31), jnp.float32, 5.0)
+    got = np.asarray(fused_softmax(x, scale=0.3), np.float32)
+    np.testing.assert_allclose(got.sum(-1), np.ones(got.shape[:-1]), rtol=1e-5)
+
+
+def test_softmax_translation_invariance():
+    # softmax(x + c) == softmax(x): the max-subtraction stability property
+    x = rand(jax.random.PRNGKey(1), (2, 2, 4, 16), jnp.float32)
+    a = fused_softmax(x)
+    b = fused_softmax(x + 100.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_extreme_values_stable():
+    x = jnp.full((1, 1, 2, 8), 1e4, jnp.float32)
+    got = np.asarray(fused_softmax(x))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got.sum(-1), 1.0, rtol=1e-5)
+
+
+# --------------------------------------------------------------- layernorm
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(1, 200),
+    c=st.sampled_from([8, 32, 64, 128, 129, 256, 384]),
+    br=st.sampled_from([1, 16, 128]),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+    shift=st.floats(-50.0, 50.0),
+)
+def test_fused_layernorm(rows, c, br, dt, seed, shift):
+    k1, k2, k3 = keys(seed, 3)
+    x = rand(k1, (rows, c), dt, 2.0) + jnp.asarray(shift, dt)
+    g = rand(k2, (c,), dt)
+    b = rand(k3, (c,), dt)
+    got = fused_layernorm(x, g, b, block_rows=br)
+    want = ref.layernorm_ref(x, g, b)
+    # chunked-Welford and two-pass differ in summation order; shifted
+    # inputs amplify the f32 difference slightly (both are valid LNs)
+    t = tol(dt)
+    t["atol"] = max(t["atol"], 2e-4 * (1.0 + abs(shift) / 10.0))
+    t["rtol"] = max(t["rtol"], 1e-4)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **t
+    )
+
+
+def test_layernorm_nd_leading_shape():
+    k1, k2, k3 = keys(0, 3)
+    x = rand(k1, (3, 5, 7, 64), jnp.float32)
+    g, b = rand(k2, (64,), jnp.float32), rand(k3, (64,), jnp.float32)
+    got = fused_layernorm(x, g, b)
+    want = ref.layernorm_ref(x, g, b)
+    assert got.shape == x.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_layernorm_welford_large_mean_stability():
+    # one-pass mean(x^2)-mean(x)^2 catastrophically cancels at mean≫std;
+    # the Welford merge must not (paper §IV.A.3 rationale).
+    c = 256
+    x = rand(jax.random.PRNGKey(9), (64, c), jnp.float32, 1.0) + 1e4
+    g = jnp.ones((c,), jnp.float32)
+    b = jnp.zeros((c,), jnp.float32)
+    got = np.asarray(fused_layernorm(x, g, b))
+    assert np.isfinite(got).all()
+    # compare against float64 ground truth: the chunked-Welford kernel must
+    # be at least as accurate as the two-pass f32 reference at huge means.
+    x64 = np.asarray(x, np.float64)
+    m = x64.mean(-1, keepdims=True)
+    v = ((x64 - m) ** 2).mean(-1, keepdims=True)
+    truth = (x64 - m) / np.sqrt(v + 1e-5)
+    ref_err = np.abs(np.asarray(ref.layernorm_ref(x, g, b)) - truth).max()
+    ker_err = np.abs(got - truth).max()
+    assert ker_err <= max(ref_err * 1.5, 1e-3), (ker_err, ref_err)
+
+
+def test_layernorm_output_statistics():
+    c = 128
+    x = rand(jax.random.PRNGKey(3), (32, c), jnp.float32, 4.0)
+    got = np.asarray(
+        fused_layernorm(x, jnp.ones((c,)), jnp.zeros((c,)))
+    )
+    np.testing.assert_allclose(got.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(got.std(-1), 1.0, atol=1e-2)
+
+
+# --------------------------------------------------------------- attention
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 4, 8]),
+    q=st.integers(1, 24),
+    k=st.integers(1, 24),
+    d=st.sampled_from([8, 16, 32]),
+    with_bias=st.booleans(),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gated_attention(b, h, q, k, d, with_bias, dt, seed):
+    k1, k2, k3, k4, k5 = keys(seed, 5)
+    qq = rand(k1, (b, h, q, d), dt)
+    kk = rand(k2, (b, h, k, d), dt)
+    vv = rand(k3, (b, h, k, d), dt)
+    gg = rand(k4, (b, h, q, d), dt)
+    bias = rand(k5, (h, q, k), dt) if with_bias else None
+    got = gated_attention(qq, kk, vv, gg, bias)
+    want = ref.gated_attention_ref(qq, kk, vv, gg, bias)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dt)
+    )
+
+
+def test_gated_attention_zero_gate_zeroes_output():
+    k1, k2 = keys(11, 2)
+    q = rand(k1, (1, 2, 4, 8), jnp.float32)
+    kv = rand(k2, (1, 2, 4, 8), jnp.float32)
+    gate = jnp.full((1, 2, 4, 8), -1e9, jnp.float32)  # sigmoid -> 0
+    got = np.asarray(gated_attention(q, kv, kv, gate))
+    np.testing.assert_allclose(got, 0.0, atol=1e-30)
+
+
+# ---------------------------------------------------------------- triangle
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    r=st.integers(2, 48),
+    c=st.sampled_from([4, 16, 32]),
+    outgoing=st.booleans(),
+    block=st.sampled_from([1, 8, 64]),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_triangle_mult(r, c, outgoing, block, dt, seed):
+    k1, k2 = keys(seed, 2)
+    a = rand(k1, (r, r, c), dt)
+    b = rand(k2, (r, r, c), dt)
+    got = triangle_mult(a, b, outgoing, block=block)
+    want = ref.triangle_mult_ref(a, b, outgoing)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=3e-2 if dt == jnp.bfloat16 else 1e-4,
+        atol=3e-1 if dt == jnp.bfloat16 else 1e-4,
+    )
+
+
+def test_triangle_outgoing_incoming_transpose_relation():
+    # out_outgoing(a, b) == out_incoming(a^T, b^T) where ^T swaps (i,j)
+    k1, k2 = keys(21, 2)
+    a = rand(k1, (12, 12, 8), jnp.float32)
+    b = rand(k2, (12, 12, 8), jnp.float32)
+    out1 = np.asarray(triangle_mult(a, b, outgoing=True))
+    out2 = np.asarray(
+        triangle_mult(a.transpose(1, 0, 2), b.transpose(1, 0, 2), outgoing=False)
+    )
+    np.testing.assert_allclose(out1, out2, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------- OPM
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.integers(1, 24),
+    i=st.integers(1, 24),
+    j=st.integers(1, 24),
+    d=st.sampled_from([4, 8, 16]),
+    e=st.sampled_from([4, 8, 16]),
+    block=st.sampled_from([1, 8, 64]),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_outer_product_mean(s, i, j, d, e, block, dt, seed):
+    k1, k2 = keys(seed, 2)
+    a = rand(k1, (s, i, d), dt)
+    b = rand(k2, (s, j, e), dt)
+    got = outer_product_mean(a, b, block=block)
+    want = ref.outer_product_mean_ref(a, b)
+    assert got.shape == (i, j, d * e)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=3e-2 if dt == jnp.bfloat16 else 1e-4,
+        atol=3e-2 if dt == jnp.bfloat16 else 1e-5,
+    )
+
+
+def test_opm_mean_property():
+    # identical rows along s: mean over s equals the single-row outer product
+    k1, k2 = keys(31, 2)
+    a1 = rand(k1, (1, 6, 4), jnp.float32)
+    b1 = rand(k2, (1, 7, 5), jnp.float32)
+    a = jnp.tile(a1, (9, 1, 1))
+    b = jnp.tile(b1, (9, 1, 1))
+    got = np.asarray(outer_product_mean(a, b))
+    want = np.asarray(outer_product_mean(a1, b1))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------- naive baselines agree
+
+
+def test_naive_baselines_match_refs():
+    # Fig 8/9 baselines must compute the same math, just unfused.
+    k1, k2, k3 = keys(41, 3)
+    x = rand(k1, (2, 3, 5, 33), jnp.float32, 2.0)
+    bias = rand(k2, (3, 5, 33), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ref.naive_softmax_unfused(x, bias, scale=0.5)),
+        np.asarray(ref.fused_softmax_ref(x, bias, scale=0.5)),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+    xl = rand(k1, (16, 128), jnp.float32, 3.0)
+    g, b = rand(k2, (128,), jnp.float32), rand(k3, (128,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ref.naive_layernorm_twopass(xl, g, b)),
+        np.asarray(ref.layernorm_ref(xl, g, b)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+# --------------------------------------------------------- differentiability
+
+
+def _grads_match(f_kernel, f_ref, args, argnums, rtol=1e-4, atol=1e-5):
+    gk = jax.grad(lambda *a: jnp.sum(jnp.sin(f_kernel(*a))), argnums)(*args)
+    gr = jax.grad(lambda *a: jnp.sum(jnp.sin(f_ref(*a))), argnums)(*args)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+def test_softmax_grads_match_ref():
+    k1, k2, k3 = keys(51, 3)
+    x = rand(k1, (2, 3, 4, 9), jnp.float32, 2.0)
+    bias = rand(k2, (3, 4, 9), jnp.float32)
+    mask = jnp.zeros((2, 9), jnp.float32)
+    _grads_match(
+        lambda x, b, m: fused_softmax(x, b, m, 0.6),
+        lambda x, b, m: ref.fused_softmax_ref(x, b, m, 0.6),
+        (x, bias, mask), (0, 1, 2),
+    )
+    x2 = rand(k3, (11, 17), jnp.float32)
+    _grads_match(
+        lambda x: fused_softmax2d(x, 0.8, block_rows=4),
+        lambda x: ref.softmax2d_ref(x, 0.8),
+        (x2,), (0,),
+    )
+
+
+def test_layernorm_grads_match_ref():
+    k1, k2, k3 = keys(52, 3)
+    x = rand(k1, (3, 5, 64), jnp.float32, 2.0)
+    g, b = rand(k2, (64,), jnp.float32), rand(k3, (64,), jnp.float32)
+    _grads_match(fused_layernorm, ref.layernorm_ref, (x, g, b), (0, 1, 2))
+
+
+def test_attention_grads_match_ref():
+    k1, k2, k3, k4, k5 = keys(53, 5)
+    q = rand(k1, (1, 2, 4, 8), jnp.float32)
+    kk = rand(k2, (1, 2, 6, 8), jnp.float32)
+    v = rand(k3, (1, 2, 6, 8), jnp.float32)
+    gate = rand(k4, (1, 2, 4, 8), jnp.float32)
+    bias = rand(k5, (2, 4, 6), jnp.float32)
+    _grads_match(
+        gated_attention, ref.gated_attention_ref, (q, kk, v, gate, bias),
+        (0, 1, 2, 3, 4),
+    )
+    _grads_match(
+        gated_attention, ref.gated_attention_ref, (q, kk, v, gate), (0, 1, 2, 3)
+    )
+
+
+def test_triangle_grads_match_ref():
+    k1, k2 = keys(54, 2)
+    a = rand(k1, (8, 8, 4), jnp.float32)
+    b = rand(k2, (8, 8, 4), jnp.float32)
+    for og in (True, False):
+        _grads_match(
+            lambda a, b: triangle_mult(a, b, og),
+            lambda a, b: ref.triangle_mult_ref(a, b, og),
+            (a, b), (0, 1), rtol=1e-4, atol=1e-4,
+        )
+
+
+def test_opm_grads_match_ref():
+    k1, k2 = keys(55, 2)
+    a = rand(k1, (5, 6, 4), jnp.float32)
+    b = rand(k2, (5, 7, 3), jnp.float32)
+    _grads_match(outer_product_mean, ref.outer_product_mean_ref, (a, b), (0, 1))

@@ -1,0 +1,64 @@
+//! Fig 8 reproduction: fused softmax kernel vs the unfused "native" chain.
+//!
+//! Both variants are AOT HLO artifacts executing identical math on the same
+//! PJRT CPU backend — the measured delta isolates the kernel *structure*
+//! (one fused pass vs an 8-op chain with optimization barriers), which is
+//! exactly what the paper's CUDA comparison isolates. Paper: 1.77–3.32×.
+
+use fastfold::metrics::{median, Table};
+use fastfold::rng::Rng;
+use fastfold::runtime::Runtime;
+use fastfold::tensor::HostTensor;
+
+const SIZES: [(usize, usize); 6] =
+    [(1024, 32), (1024, 64), (1024, 128), (1024, 256), (4096, 64), (4096, 128)];
+const ITERS: usize = 30;
+
+fn bench_exe(rt: &Runtime, name: &str, inputs: &[HostTensor]) -> f64 {
+    let exe = rt.load(name).expect(name);
+    for _ in 0..3 {
+        exe.run_f32(inputs).unwrap();
+    }
+    let times: Vec<f64> = (0..ITERS)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            exe.run_f32(inputs).unwrap();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    median(times)
+}
+
+fn main() {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let mut rng = Rng::new(8);
+    println!("\nFig 8 — Fused Softmax (paper speedup band: 1.77–3.32x)\n");
+    let mut t = Table::new(&[
+        "size (rows x cols)", "naive (µs)", "fused (µs)", "cpu ratio",
+        "HBM-pass model",
+    ]);
+    for (rows, cols) in SIZES {
+        let x = HostTensor::new(vec![rows, cols], rng.normal_vec(rows * cols, 2.0)).unwrap();
+        let naive = bench_exe(&rt, &format!("bench/fig8_naive_{rows}x{cols}"), &[x.clone()]);
+        let fused = bench_exe(&rt, &format!("bench/fig8_fused_{rows}x{cols}"), &[x]);
+        // bandwidth-bound model: the unfused chain makes 8 read+write passes
+        // over the tensor (scale, max, sub, exp, sum, div + barriers); the
+        // fused kernel makes 1 read + 1 write. On an HBM-bound GPU the
+        // speedup approaches this ratio derated by launch overheads — the
+        // paper measures 1.77–3.32x inside this envelope.
+        let model = 8.0f64 / 2.0;
+        t.row(&[
+            format!("{rows} x {cols}"),
+            format!("{:.1}", naive * 1e6),
+            format!("{:.1}", fused * 1e6),
+            format!("{:.2}x", naive / fused),
+            format!("{model:.1}x bound"),
+        ]);
+    }
+    t.print();
+    println!();
+    println!("NOTE: cpu ratio is interpret-mode Pallas vs vectorized XLA on one");
+    println!("CPU core — NOT a TPU/GPU wallclock proxy (grid loop overhead");
+    println!("dominates). The kernel's fusion structure (1 HBM pass vs 8) is the");
+    println!("quantity that transfers; see EXPERIMENTS.md §Fig8 and DESIGN.md §6.");
+}

@@ -1,0 +1,63 @@
+//! Fig 9 reproduction: fused (chunked-Welford) LayerNorm vs the unfused
+//! two-pass chain vs an "Apex-like" single-fusion baseline (XLA-fused
+//! reference LN — the analogue of NVIDIA Apex's hand-fused kernel).
+//! Paper: 5.53–8.65× vs PyTorch-native, 1.20–1.62× vs Apex.
+
+use fastfold::metrics::{median, Table};
+use fastfold::rng::Rng;
+use fastfold::runtime::Runtime;
+use fastfold::tensor::HostTensor;
+
+const SIZES: [(usize, usize); 6] =
+    [(1024, 32), (1024, 64), (1024, 128), (1024, 256), (4096, 64), (4096, 128)];
+const ITERS: usize = 30;
+
+fn bench_exe(rt: &Runtime, name: &str, inputs: &[HostTensor]) -> f64 {
+    let exe = rt.load(name).expect(name);
+    for _ in 0..3 {
+        exe.run_f32(inputs).unwrap();
+    }
+    let times: Vec<f64> = (0..ITERS)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            exe.run_f32(inputs).unwrap();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    median(times)
+}
+
+fn main() {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let mut rng = Rng::new(9);
+    println!("\nFig 9 — Fused LayerNorm (paper: 5.53–8.65x vs native, 1.20–1.62x vs Apex)\n");
+    let mut t = Table::new(&[
+        "size", "naive 2-pass (µs)", "apex-like (µs)", "fused (µs)",
+        "vs naive", "vs apex",
+    ]);
+    for (rows, cols) in SIZES {
+        let x = HostTensor::new(vec![rows, cols], rng.normal_vec(rows * cols, 2.0)).unwrap();
+        let g = HostTensor::new(vec![cols], rng.normal_vec(cols, 1.0)).unwrap();
+        let b = HostTensor::new(vec![cols], rng.normal_vec(cols, 1.0)).unwrap();
+        let args = [x, g, b];
+        let naive = bench_exe(&rt, &format!("bench/fig9_naive_{rows}x{cols}"), &args);
+        let apex = bench_exe(&rt, &format!("bench/fig9_apexlike_{rows}x{cols}"), &args);
+        let fused = bench_exe(&rt, &format!("bench/fig9_fused_{rows}x{cols}"), &args);
+        t.row(&[
+            format!("{rows} x {cols}"),
+            format!("{:.1}", naive * 1e6),
+            format!("{:.1}", apex * 1e6),
+            format!("{:.1}", fused * 1e6),
+            format!("{:.2}x", naive / fused),
+            format!("{:.2}x", apex / fused),
+        ]);
+    }
+    t.print();
+    println!();
+    println!("HBM-pass model: naive two-pass chain = 7 read+write passes; apex-like");
+    println!("single-fusion = 3 (two reduce passes + apply); chunked-Welford fused =");
+    println!("2 (one read, one write). Bound: 3.5x vs native, 1.5x vs apex — the");
+    println!("paper measures 5.53–8.65x / 1.20–1.62x (their native baseline also");
+    println!("pays per-op launch overhead). CPU wallclock above is interpret-mode");
+    println!("Pallas — not a device proxy; see EXPERIMENTS.md §Fig9.");
+}

@@ -1,0 +1,89 @@
+//! Communication log: every collective issued by any coordinator is
+//! recorded here (kind, per-rank wire bytes, logical tensor bytes). The
+//! Table III reproduction and the α–β timing model both read this.
+
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CommKind {
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+    AllReduce,
+    Broadcast,
+}
+
+impl CommKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommKind::AllGather => "AllGather",
+            CommKind::ReduceScatter => "ReduceScatter",
+            CommKind::AllToAll => "All_to_All",
+            CommKind::AllReduce => "AllReduce",
+            CommKind::Broadcast => "Broadcast",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CommRecord {
+    pub kind: CommKind,
+    /// bytes crossing the wire per rank (ring-algorithm accounting)
+    pub wire_bytes: usize,
+    /// logical size of the full tensor being communicated
+    pub tensor_bytes: usize,
+}
+
+#[derive(Default, Clone, Debug)]
+pub struct CommLog {
+    pub records: Vec<CommRecord>,
+}
+
+impl CommLog {
+    pub fn record(&mut self, kind: CommKind, wire_bytes: usize, tensor_bytes: usize) {
+        self.records.push(CommRecord { kind, wire_bytes, tensor_bytes });
+    }
+
+    pub fn count(&self, kind: CommKind) -> usize {
+        self.records.iter().filter(|r| r.kind == kind).count()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.records.iter().map(|r| r.wire_bytes).sum()
+    }
+
+    pub fn bytes_of(&self, kind: CommKind) -> usize {
+        self.records
+            .iter()
+            .filter(|r| r.kind == kind)
+            .map(|r| r.wire_bytes)
+            .sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.records.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// "12 × AllReduce (3.2 MiB)"-style summary lines, sorted by kind.
+    pub fn summary(&self) -> Vec<String> {
+        use CommKind::*;
+        [AllGather, ReduceScatter, AllToAll, AllReduce, Broadcast]
+            .iter()
+            .filter(|k| self.count(**k) > 0)
+            .map(|k| {
+                format!(
+                    "{:3} x {:<14} {:>10.2} KiB wire/rank",
+                    self.count(*k),
+                    k.name(),
+                    self.bytes_of(*k) as f64 / 1024.0
+                )
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,204 @@
+//! Collective communication substrate.
+//!
+//! The paper's testbed runs NCCL over NVLink/IB; here N ranks are *logical
+//! devices* of a single-process simulation (DESIGN.md §2 substitution), so
+//! collectives are exact host-tensor operations over `Vec<HostTensor>`
+//! (index = rank). Every call is logged with op kind + per-rank byte volume
+//! so (a) Table III comm counts are measured, not asserted, and (b) the
+//! α–β performance model can price any recorded timeline.
+//!
+//! `ring` contains a real ring all-reduce (2(N−1) chunk steps) — the
+//! algorithm the DP gradient reduction models — validated against the
+//! naive sum.
+
+pub mod log;
+pub mod ring;
+
+use crate::error::{Error, Result};
+use crate::tensor::HostTensor;
+pub use log::{CommKind, CommLog, CommRecord};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Collective engine over logical ranks. Cheap to clone (shared log).
+#[derive(Clone)]
+pub struct Collectives {
+    pub n: usize,
+    pub log: Rc<RefCell<CommLog>>,
+}
+
+impl Collectives {
+    pub fn new(n: usize) -> Self {
+        Collectives { n, log: Rc::new(RefCell::new(CommLog::default())) }
+    }
+
+    fn check(&self, parts: &[HostTensor], what: &str) -> Result<()> {
+        if parts.len() != self.n {
+            return Err(Error::Comm(format!(
+                "{what}: {} shards for {} ranks",
+                parts.len(),
+                self.n
+            )));
+        }
+        Ok(())
+    }
+
+    /// Each rank contributes its shard; all ranks receive the concatenation
+    /// along `axis`. Per-rank send volume: own shard to N−1 peers (ring:
+    /// (N−1)/N of the full tensor transits each link).
+    pub fn all_gather(&self, parts: &[HostTensor], axis: usize) -> Result<Vec<HostTensor>> {
+        self.check(parts, "all_gather")?;
+        let full = HostTensor::concat(parts, axis)?;
+        let bytes = full.size_bytes() * (self.n - 1) / self.n.max(1);
+        self.log.borrow_mut().record(CommKind::AllGather, bytes, full.size_bytes());
+        Ok(vec![full; self.n])
+    }
+
+    /// Each rank contributes a FULL partial tensor; rank k receives the
+    /// k-th slice (along `axis`) of the elementwise sum.
+    pub fn reduce_scatter(&self, parts: &[HostTensor], axis: usize) -> Result<Vec<HostTensor>> {
+        self.check(parts, "reduce_scatter")?;
+        let mut total = parts[0].clone();
+        for p in &parts[1..] {
+            total.add_assign(p)?;
+        }
+        let bytes = total.size_bytes() * (self.n - 1) / self.n.max(1);
+        self.log.borrow_mut().record(CommKind::ReduceScatter, bytes, total.size_bytes());
+        total.split_axis(axis, self.n)
+    }
+
+    /// Each rank splits its local tensor along `split`, sends part p to
+    /// rank p, and concatenates what it receives along `concat`.
+    pub fn all_to_all(
+        &self,
+        parts: &[HostTensor],
+        split: usize,
+        concat: usize,
+    ) -> Result<Vec<HostTensor>> {
+        self.check(parts, "all_to_all")?;
+        let mut split_parts: Vec<Vec<HostTensor>> = Vec::with_capacity(self.n);
+        for p in parts {
+            split_parts.push(p.split_axis(split, self.n)?);
+        }
+        let mut out = Vec::with_capacity(self.n);
+        for dst in 0..self.n {
+            let recv: Vec<HostTensor> =
+                (0..self.n).map(|src| split_parts[src][dst].clone()).collect();
+            out.push(HostTensor::concat(&recv, concat)?);
+        }
+        // per-rank volume: local tensor minus the self-part stays put
+        let local = parts[0].size_bytes();
+        let bytes = local * (self.n - 1) / self.n.max(1);
+        self.log.borrow_mut().record(CommKind::AllToAll, bytes, local);
+        Ok(out)
+    }
+
+    /// Sum across ranks; every rank receives the full sum (ring volume:
+    /// 2(N−1)/N of the tensor per rank).
+    pub fn all_reduce(&self, parts: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check(parts, "all_reduce")?;
+        let mut total = parts[0].clone();
+        for p in &parts[1..] {
+            total.add_assign(p)?;
+        }
+        let bytes = total.size_bytes() * 2 * (self.n - 1) / self.n.max(1);
+        self.log.borrow_mut().record(CommKind::AllReduce, bytes, total.size_bytes());
+        Ok(vec![total; self.n])
+    }
+
+    /// Rank `root`'s tensor to everyone.
+    pub fn broadcast(&self, parts: &[HostTensor], root: usize) -> Result<Vec<HostTensor>> {
+        self.check(parts, "broadcast")?;
+        let t = parts[root].clone();
+        let bytes = t.size_bytes();
+        self.log.borrow_mut().record(CommKind::Broadcast, bytes, bytes);
+        Ok(vec![t; self.n])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shards(n: usize, per: usize) -> Vec<HostTensor> {
+        (0..n)
+            .map(|r| {
+                HostTensor::new(
+                    vec![per, 2],
+                    (0..per * 2).map(|i| (r * 100 + i) as f32).collect(),
+                )
+                .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_gather_concats() {
+        let c = Collectives::new(3);
+        let out = c.all_gather(&shards(3, 2), 0).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].shape, vec![6, 2]);
+        assert_eq!(out[0], out[2]);
+        assert_eq!(out[0].data[0], 0.0);
+        assert_eq!(out[0].data[4], 100.0);
+    }
+
+    #[test]
+    fn reduce_scatter_sums_and_splits() {
+        let c = Collectives::new(2);
+        let full: Vec<HostTensor> = (0..2)
+            .map(|r| HostTensor::full(&[4, 2], (r + 1) as f32))
+            .collect();
+        let out = c.reduce_scatter(&full, 0).unwrap();
+        assert_eq!(out[0].shape, vec![2, 2]);
+        assert!(out.iter().all(|t| t.data.iter().all(|&x| x == 3.0)));
+    }
+
+    #[test]
+    fn all_to_all_inverse() {
+        let c = Collectives::new(4);
+        let parts: Vec<HostTensor> = (0..4)
+            .map(|r| {
+                HostTensor::new(
+                    vec![2, 8],
+                    (0..16).map(|i| (r * 16 + i) as f32).collect(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let fwd = c.all_to_all(&parts, 1, 0).unwrap(); // (2,8)->(8,2)
+        assert_eq!(fwd[0].shape, vec![8, 2]);
+        let back = c.all_to_all(&fwd, 0, 1).unwrap();
+        for (a, b) in back.iter().zip(parts.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn all_reduce_matches_sum() {
+        let c = Collectives::new(3);
+        let parts = shards(3, 2);
+        let out = c.all_reduce(&parts).unwrap();
+        let want: Vec<f32> = (0..4)
+            .map(|i| (0..3).map(|r| (r * 100 + i) as f32).sum())
+            .collect();
+        assert_eq!(out[1].data, want);
+    }
+
+    #[test]
+    fn log_records_volume() {
+        let c = Collectives::new(2);
+        c.all_gather(&shards(2, 2), 0).unwrap();
+        c.all_reduce(&shards(2, 2)).unwrap();
+        let log = c.log.borrow();
+        assert_eq!(log.count(CommKind::AllGather), 1);
+        assert_eq!(log.count(CommKind::AllReduce), 1);
+        assert!(log.total_bytes() > 0);
+    }
+
+    #[test]
+    fn rank_count_enforced() {
+        let c = Collectives::new(3);
+        assert!(c.all_gather(&shards(2, 2), 0).is_err());
+    }
+}

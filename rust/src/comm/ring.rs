@@ -1,0 +1,119 @@
+//! Explicit ring all-reduce: the algorithm behind the data-parallel
+//! gradient reduction whose cost model drives Fig 11.
+//!
+//! Phase 1 (reduce-scatter): N−1 steps; in step s, rank r sends chunk
+//! (r−s) mod N to rank r+1 and accumulates what it receives.
+//! Phase 2 (all-gather): N−1 steps circulating the finished chunks.
+//! Per-rank wire volume: 2(N−1)/N × size — the constant the α–β model uses.
+
+use crate::error::{Error, Result};
+
+/// Run ring all-reduce over per-rank flat vectors (in place, returns sums).
+/// Also returns the per-rank wire bytes actually moved, so tests can verify
+/// the 2(N−1)/N volume formula the perf model assumes.
+pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, usize)> {
+    let n = ranks.len();
+    if n == 0 {
+        return Err(Error::Comm("ring over 0 ranks".into()));
+    }
+    let len = ranks[0].len();
+    if ranks.iter().any(|r| r.len() != len) {
+        return Err(Error::Comm("ring shards differ in length".into()));
+    }
+    if n == 1 {
+        return Ok((ranks, 0));
+    }
+    // chunk boundaries (last chunk absorbs the remainder)
+    let base = len / n;
+    let bounds: Vec<(usize, usize)> = (0..n)
+        .map(|c| (c * base, if c == n - 1 { len } else { (c + 1) * base }))
+        .collect();
+    let mut wire = 0usize;
+
+    // phase 1: reduce-scatter
+    for s in 0..n - 1 {
+        // snapshot the chunks being sent this step (simultaneous exchange)
+        let sends: Vec<(usize, Vec<f32>)> = (0..n)
+            .map(|r| {
+                let c = (r + n - s) % n;
+                let (lo, hi) = bounds[c];
+                (c, ranks[r][lo..hi].to_vec())
+            })
+            .collect();
+        for r in 0..n {
+            let dst = (r + 1) % n;
+            let (c, ref chunk) = sends[r];
+            let (lo, _hi) = bounds[c];
+            for (i, v) in chunk.iter().enumerate() {
+                ranks[dst][lo + i] += v;
+            }
+            wire += chunk.len() * 4;
+        }
+    }
+    // phase 2: all-gather of finished chunks
+    for s in 0..n - 1 {
+        let sends: Vec<(usize, Vec<f32>)> = (0..n)
+            .map(|r| {
+                let c = (r + 1 + n - s) % n;
+                let (lo, hi) = bounds[c];
+                (c, ranks[r][lo..hi].to_vec())
+            })
+            .collect();
+        for r in 0..n {
+            let dst = (r + 1) % n;
+            let (c, ref chunk) = sends[r];
+            let (lo, _hi) = bounds[c];
+            ranks[dst][lo..lo + chunk.len()].copy_from_slice(chunk);
+            wire += chunk.len() * 4;
+        }
+    }
+    Ok((ranks, wire / n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matches_naive_sum() {
+        let mut rng = Rng::new(5);
+        for &(n, len) in &[(2usize, 8usize), (3, 10), (4, 64), (5, 7), (8, 33)] {
+            let ranks: Vec<Vec<f32>> = (0..n)
+                .map(|_| rng.normal_vec(len, 1.0))
+                .collect();
+            let want: Vec<f32> = (0..len)
+                .map(|i| ranks.iter().map(|r| r[i]).sum::<f32>())
+                .collect();
+            let (got, _) = ring_all_reduce(ranks).unwrap();
+            for r in &got {
+                for (a, b) in r.iter().zip(want.iter()) {
+                    assert!((a - b).abs() < 1e-4, "n={n} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wire_volume_formula() {
+        // per-rank wire bytes ≈ 2(N−1)/N × size_bytes
+        let n = 4;
+        let len = 1024;
+        let ranks: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0; len]).collect();
+        let (_, wire) = ring_all_reduce(ranks).unwrap();
+        let expect = 2 * (n - 1) * len * 4 / n;
+        assert_eq!(wire, expect);
+    }
+
+    #[test]
+    fn single_rank_noop() {
+        let (out, wire) = ring_all_reduce(vec![vec![3.0, 4.0]]).unwrap();
+        assert_eq!(out[0], vec![3.0, 4.0]);
+        assert_eq!(wire, 0);
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        assert!(ring_all_reduce(vec![vec![1.0], vec![1.0, 2.0]]).is_err());
+    }
+}

@@ -1,0 +1,432 @@
+//! Configuration system: model presets mirroring `python/compile/configs.py`
+//! 1:1, parallelism/training/inference settings, and a minimal TOML-subset
+//! loader so deployments can override presets from a file
+//! (`fastfold train --config path.toml`).
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string /
+//! int / float / bool values and `#` comments — exactly what launcher
+//! configs need, nothing more (offline build: no toml crate).
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+// ------------------------------------------------------------- model config
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_res: usize,
+    pub n_seq: usize,
+    pub d_msa: usize,
+    pub d_pair: usize,
+    pub n_heads_msa: usize,
+    pub n_heads_pair: usize,
+    pub d_head: usize,
+    pub d_opm: usize,
+    pub n_blocks: usize,
+    pub transition_factor: usize,
+    pub msa_vocab: usize,
+    pub n_dist_bins: usize,
+    pub relpos_clip: usize,
+}
+
+impl ModelConfig {
+    fn base(name: &str, n_res: usize, n_seq: usize) -> Self {
+        ModelConfig {
+            name: name.into(),
+            n_res,
+            n_seq,
+            d_msa: 256,
+            d_pair: 128,
+            n_heads_msa: 8,
+            n_heads_pair: 4,
+            d_head: 32,
+            d_opm: 32,
+            n_blocks: 48,
+            transition_factor: 4,
+            msa_vocab: 23,
+            n_dist_bins: 64,
+            relpos_clip: 32,
+        }
+    }
+
+    pub fn tiny() -> Self {
+        ModelConfig {
+            d_msa: 32,
+            d_pair: 16,
+            n_heads_msa: 4,
+            n_heads_pair: 2,
+            d_head: 8,
+            d_opm: 8,
+            n_blocks: 2,
+            transition_factor: 2,
+            n_dist_bins: 16,
+            relpos_clip: 8,
+            ..Self::base("tiny", 16, 8)
+        }
+    }
+
+    pub fn small() -> Self {
+        ModelConfig {
+            d_msa: 64,
+            d_pair: 32,
+            n_heads_msa: 4,
+            n_heads_pair: 4,
+            d_head: 16,
+            d_opm: 16,
+            n_blocks: 4,
+            transition_factor: 4,
+            n_dist_bins: 32,
+            relpos_clip: 16,
+            ..Self::base("small", 64, 16)
+        }
+    }
+
+    /// Paper Table I — Initial Training (N_r=256, N_s=128).
+    pub fn initial_training() -> Self {
+        Self::base("initial_training", 256, 128)
+    }
+
+    /// Paper Table I — Fine-tuning (N_r=384, N_s=512).
+    pub fn finetune() -> Self {
+        Self::base("finetune", 384, 512)
+    }
+
+    /// An inference-shaped config for a given sequence length (paper §V.C
+    /// long-sequence scenarios; N_s = 256 MSA clusters, the AlphaFold
+    /// inference default scale).
+    pub fn inference(n_res: usize) -> Self {
+        Self::base(&format!("infer_{n_res}"), n_res, 256)
+    }
+
+    pub fn preset(name: &str) -> Result<Self> {
+        match name {
+            "tiny" => Ok(Self::tiny()),
+            "small" => Ok(Self::small()),
+            "initial_training" => Ok(Self::initial_training()),
+            "finetune" => Ok(Self::finetune()),
+            _ => Err(Error::Config(format!("unknown preset '{name}'"))),
+        }
+    }
+
+    /// Exact parameter count (closed form, mirrors model.py init).
+    /// Verified against the manifest's recorded count in tests.
+    pub fn param_count(&self) -> usize {
+        let (dm, dz) = (self.d_msa, self.d_pair);
+        let (hm, hp, dh) = (self.n_heads_msa, self.n_heads_pair, self.d_head);
+        let t = self.transition_factor;
+        let ln = |d: usize| 2 * d;
+        let lin = |i: usize, o: usize| i * o + o;
+        let lin_nb = |i: usize, o: usize| i * o;
+        let attn = |d: usize, h: usize| ln(d) + lin_nb(d, 4 * h * dh) + lin(h * dh, d);
+        let bias = |h: usize| ln(dz) + lin_nb(dz, h);
+        let trans = |d: usize| ln(d) + lin(d, t * d) + lin(t * d, d);
+        let tri_mult = ln(dz) + lin_nb(dz, 4 * dz) + ln(dz) + lin_nb(dz, dz) + lin(dz, dz);
+        let opm = ln(dm) + lin_nb(dm, 2 * self.d_opm)
+            + lin(self.d_opm * self.d_opm, dz);
+        let block = bias(hm)
+            + attn(dm, hm)          // row
+            + attn(dm, hm)          // col
+            + trans(dm)
+            + opm
+            + 2 * tri_mult
+            + 2 * bias(hp)
+            + 2 * attn(dz, hp)
+            + trans(dz);
+        let v = self.msa_vocab;
+        let nrel = 2 * self.relpos_clip + 1;
+        let embed = lin(v, dm) + lin(v, dm) + 2 * lin(v, dz) + lin(nrel, dz);
+        let heads = ln(dm) + lin(dm, v) + ln(dz) + lin(dz, self.n_dist_bins);
+        embed + self.n_blocks * block + heads
+    }
+}
+
+// -------------------------------------------------------- parallel / train
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParallelConfig {
+    /// Dynamic Axial Parallelism degree (simulated ranks).
+    pub dap_size: usize,
+    /// Tensor Parallelism degree (baseline; ≤ n_heads_pair per the paper).
+    pub tp_size: usize,
+    /// Data-parallel replicas.
+    pub dp_size: usize,
+    /// Duality Async Operation (computation–communication overlap) on/off.
+    pub overlap: bool,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig { dap_size: 1, tp_size: 1, dp_size: 1, overlap: true }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup_steps: usize,
+    pub log_every: usize,
+    pub checkpoint_every: usize,
+    pub checkpoint_dir: Option<String>,
+    pub seed: u64,
+    pub grad_clip: Option<f32>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            lr: 1e-3,
+            warmup_steps: 20,
+            log_every: 10,
+            checkpoint_every: 100,
+            checkpoint_dir: None,
+            seed: 42,
+            grad_clip: Some(1.0),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub preset: String,
+    pub artifacts_dir: String,
+    pub parallel: ParallelConfig,
+    pub train: TrainConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            preset: "tiny".into(),
+            artifacts_dir: "artifacts".into(),
+            parallel: ParallelConfig::default(),
+            train: TrainConfig::default(),
+        }
+    }
+}
+
+// ------------------------------------------------------------- TOML subset
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => Err(Error::Config(format!("expected non-negative int, got {self:?}"))),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32> {
+        match self {
+            TomlValue::Float(f) => Ok(*f as f32),
+            TomlValue::Int(i) => Ok(*i as f32),
+            _ => Err(Error::Config(format!("expected float, got {self:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => Err(Error::Config(format!("expected bool, got {self:?}"))),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => Err(Error::Config(format!("expected string, got {self:?}"))),
+        }
+    }
+}
+
+/// section -> key -> value
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+pub fn parse_toml(src: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.insert(String::new(), BTreeMap::new());
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = match raw.find('#') {
+            // naive comment strip is fine: our strings never contain '#'
+            Some(i) if !raw[..i].contains('"') || raw[..i].matches('"').count() % 2 == 0 => {
+                &raw[..i]
+            }
+            _ => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| Error::Config(format!("line {}: bad section", lineno + 1)))?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| Error::Config(format!("line {}: expected key = value", lineno + 1)))?;
+        let key = line[..eq].trim().to_string();
+        let val_src = line[eq + 1..].trim();
+        let val = parse_toml_value(val_src)
+            .ok_or_else(|| Error::Config(format!("line {}: bad value '{val_src}'", lineno + 1)))?;
+        doc.entry(section.clone()).or_default().insert(key, val);
+    }
+    Ok(doc)
+}
+
+fn parse_toml_value(s: &str) -> Option<TomlValue> {
+    if let Some(body) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Some(TomlValue::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(TomlValue::Float(f));
+    }
+    None
+}
+
+impl RunConfig {
+    /// Load a RunConfig from a TOML file, starting from defaults.
+    pub fn from_toml_file(path: &str) -> Result<Self> {
+        let src = std::fs::read_to_string(path)?;
+        Self::from_toml(&src)
+    }
+
+    pub fn from_toml(src: &str) -> Result<Self> {
+        let doc = parse_toml(src)?;
+        let mut cfg = RunConfig::default();
+        if let Some(root) = doc.get("") {
+            if let Some(v) = root.get("preset") {
+                cfg.preset = v.as_str()?.to_string();
+            }
+            if let Some(v) = root.get("artifacts_dir") {
+                cfg.artifacts_dir = v.as_str()?.to_string();
+            }
+        }
+        if let Some(p) = doc.get("parallel") {
+            if let Some(v) = p.get("dap_size") {
+                cfg.parallel.dap_size = v.as_usize()?;
+            }
+            if let Some(v) = p.get("tp_size") {
+                cfg.parallel.tp_size = v.as_usize()?;
+            }
+            if let Some(v) = p.get("dp_size") {
+                cfg.parallel.dp_size = v.as_usize()?;
+            }
+            if let Some(v) = p.get("overlap") {
+                cfg.parallel.overlap = v.as_bool()?;
+            }
+        }
+        if let Some(t) = doc.get("train") {
+            if let Some(v) = t.get("steps") {
+                cfg.train.steps = v.as_usize()?;
+            }
+            if let Some(v) = t.get("lr") {
+                cfg.train.lr = v.as_f32()?;
+            }
+            if let Some(v) = t.get("warmup_steps") {
+                cfg.train.warmup_steps = v.as_usize()?;
+            }
+            if let Some(v) = t.get("log_every") {
+                cfg.train.log_every = v.as_usize()?;
+            }
+            if let Some(v) = t.get("checkpoint_every") {
+                cfg.train.checkpoint_every = v.as_usize()?;
+            }
+            if let Some(v) = t.get("checkpoint_dir") {
+                cfg.train.checkpoint_dir = Some(v.as_str()?.to_string());
+            }
+            if let Some(v) = t.get("seed") {
+                cfg.train.seed = v.as_usize()? as u64;
+            }
+            if let Some(v) = t.get("grad_clip") {
+                cfg.train.grad_clip = Some(v.as_f32()?);
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_table1() {
+        let it = ModelConfig::initial_training();
+        assert_eq!((it.n_res, it.n_seq), (256, 128));
+        let ft = ModelConfig::finetune();
+        assert_eq!((ft.n_res, ft.n_seq), (384, 512));
+        assert_eq!(it.n_blocks, 48);
+        assert_eq!(it.d_msa, 256);
+        assert_eq!(it.d_pair, 128);
+    }
+
+    #[test]
+    fn param_count_matches_paper_table2() {
+        // paper Table II: ~1.8M params per Evoformer layer
+        let cfg = ModelConfig::initial_training();
+        let per_block = (cfg.param_count()
+            - ModelConfig { n_blocks: 0, ..cfg.clone() }.param_count())
+            / cfg.n_blocks;
+        assert!(
+            (1_700_000..1_950_000).contains(&per_block),
+            "per-block {per_block}"
+        );
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let src = r#"
+# launcher config
+preset = "small"
+artifacts_dir = "artifacts"
+
+[parallel]
+dap_size = 4
+overlap = false
+
+[train]
+steps = 50
+lr = 0.0005
+"#;
+        let cfg = RunConfig::from_toml(src).unwrap();
+        assert_eq!(cfg.preset, "small");
+        assert_eq!(cfg.parallel.dap_size, 4);
+        assert!(!cfg.parallel.overlap);
+        assert_eq!(cfg.train.steps, 50);
+        assert!((cfg.train.lr - 5e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn toml_errors() {
+        assert!(parse_toml("[unclosed").is_err());
+        assert!(parse_toml("novalue").is_err());
+        assert!(RunConfig::from_toml("preset = 5").is_err());
+    }
+
+    #[test]
+    fn unknown_preset_rejected() {
+        assert!(ModelConfig::preset("nope").is_err());
+    }
+}

@@ -1,0 +1,303 @@
+//! The DAP executor: runs the manifest schedule per Evoformer block across
+//! N logical ranks, records the tape for backward, drives the timeline.
+
+use super::tape::{Tape, TapeOp};
+use super::timeline::{CommCost, Timeline};
+use crate::comm::Collectives;
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::manifest::ScheduleOp;
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::{HostTensor, IntTensor};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Per-slot, per-rank tensor state threaded through the schedule.
+pub type State = BTreeMap<String, Vec<HostTensor>>;
+
+pub struct DapCoordinator<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: ModelConfig,
+    pub preset: String,
+    pub n: usize,
+    pub comm: Collectives,
+    pub timeline: RefCell<Timeline>,
+    segs: BTreeMap<String, Rc<Executable>>,
+    segs_bwd: BTreeMap<String, Rc<Executable>>,
+    /// record a tape during forward (enable for training)
+    pub record: RefCell<bool>,
+    pub tape: RefCell<Tape>,
+}
+
+impl<'rt> DapCoordinator<'rt> {
+    /// Load all fwd (and, if exported, bwd) segment executables for
+    /// `preset` at DAP degree `n`.
+    pub fn new(rt: &'rt Runtime, preset: &str, n: usize, overlap: bool) -> Result<Self> {
+        let cfg = ModelConfig::preset(preset)?;
+        if cfg.n_seq % n != 0 || cfg.n_res % n != 0 {
+            return Err(Error::Schedule(format!(
+                "dap_size {n} does not divide (n_seq={}, n_res={})",
+                cfg.n_seq, cfg.n_res
+            )));
+        }
+        let mut segs = BTreeMap::new();
+        let mut segs_bwd = BTreeMap::new();
+        let seg_names: Vec<String> = rt
+            .manifest
+            .schedule
+            .iter()
+            .filter_map(|op| match op {
+                ScheduleOp::Exec { seg, .. } => Some(seg.clone()),
+                _ => None,
+            })
+            .collect();
+        for seg in &seg_names {
+            let key = format!("{preset}/dap{n}/{seg}");
+            segs.insert(seg.clone(), rt.load(&key)?);
+            let bwd_key = format!("{preset}/dap{n}/{seg}_bwd");
+            if rt.manifest.artifacts.contains_key(&bwd_key) {
+                segs_bwd.insert(seg.clone(), rt.load(&bwd_key)?);
+            }
+        }
+        Ok(DapCoordinator {
+            rt,
+            cfg,
+            preset: preset.to_string(),
+            n,
+            comm: Collectives::new(n),
+            timeline: RefCell::new(Timeline::new(n, CommCost::cpu_calibrated(), overlap)),
+            segs,
+            segs_bwd,
+            record: RefCell::new(false),
+            tape: RefCell::new(Tape::default()),
+        })
+    }
+
+    pub fn has_backward(&self) -> bool {
+        !self.segs_bwd.is_empty()
+    }
+
+    /// Shard full (m, z) into the canonical block-entry layout
+    /// (m s-sharded, z i-sharded).
+    pub fn shard_inputs(&self, m: &HostTensor, z: &HostTensor) -> Result<State> {
+        let mut state = State::new();
+        state.insert("m".into(), m.split_axis(0, self.n)?);
+        state.insert("z".into(), z.split_axis(0, self.n)?);
+        Ok(state)
+    }
+
+    /// Reassemble full (m, z) from block-exit state.
+    pub fn unshard(&self, state: &State) -> Result<(HostTensor, HostTensor)> {
+        let m = HostTensor::concat(&state["m"], 0)?;
+        let z = HostTensor::concat(&state["z"], 0)?;
+        Ok((m, z))
+    }
+
+    /// Run one Evoformer block forward under the DAP schedule.
+    /// `block_params`: the block's 63 parameter leaves in canonical order
+    /// (identical on every rank — DAP replicates parameters).
+    pub fn block_forward(&self, block_params: &[HostTensor], state: &mut State) -> Result<()> {
+        // §Perf-L3: convert parameter leaves to literals ONCE per block —
+        // they are reused by all 18 segment executions × N ranks.
+        // (FASTFOLD_NO_LITCACHE=1 restores the naive per-exec conversion,
+        // kept for the EXPERIMENTS.md §Perf A/B measurement.)
+        let lit_cache = std::env::var_os("FASTFOLD_NO_LITCACHE").is_none();
+        let param_lits: Vec<xla::Literal> = if lit_cache {
+            block_params.iter().map(|t| t.to_literal()).collect::<Result<_>>()?
+        } else {
+            Vec::new()
+        };
+        let schedule = self.rt.manifest.schedule.clone();
+        // async collectives whose results are not yet visible in `state`
+        let mut inflight: BTreeMap<String, (String, Vec<HostTensor>)> = BTreeMap::new();
+        let recording = *self.record.borrow();
+
+        for op in &schedule {
+            match op {
+                ScheduleOp::Exec { seg, inputs, outputs } => {
+                    let exe = self
+                        .segs
+                        .get(seg)
+                        .ok_or_else(|| Error::Schedule(format!("no segment '{seg}'")))?;
+                    let mut per_rank_outs: Vec<Vec<HostTensor>> = Vec::with_capacity(self.n);
+                    let t0 = Instant::now();
+                    for r in 0..self.n {
+                        let mut rest: Vec<HostTensor> = Vec::with_capacity(inputs.len());
+                        for slot in inputs {
+                            let shards = state.get(slot).ok_or_else(|| {
+                                Error::Schedule(format!("slot '{slot}' unset for '{seg}'"))
+                            })?;
+                            rest.push(shards[r].clone());
+                        }
+                        if lit_cache {
+                            per_rank_outs.push(exe.run_with_params(&param_lits, &rest)?);
+                        } else {
+                            let mut args = block_params.to_vec();
+                            args.extend(rest);
+                            per_rank_outs.push(exe.run_f32(&args)?);
+                        }
+                    }
+                    let secs = t0.elapsed().as_secs_f64() / self.n as f64;
+                    self.timeline.borrow_mut().exec(secs);
+                    if recording {
+                        let snap: Vec<Vec<HostTensor>> = inputs
+                            .iter()
+                            .map(|slot| state[slot].clone())
+                            .collect();
+                        self.tape.borrow_mut().push(TapeOp::Exec {
+                            seg: seg.clone(),
+                            in_slots: inputs.clone(),
+                            out_slots: outputs.clone(),
+                            inputs: snap,
+                        });
+                    }
+                    for (k, slot) in outputs.iter().enumerate() {
+                        let shards: Vec<HostTensor> =
+                            (0..self.n).map(|r| per_rank_outs[r][k].clone()).collect();
+                        state.insert(slot.clone(), shards);
+                    }
+                }
+                ScheduleOp::Gather { input, output, axis, id } => {
+                    let parts = &state[input];
+                    let bytes = parts[0].size_bytes() * (self.n - 1);
+                    let res = self.comm.all_gather(parts, *axis)?;
+                    if recording {
+                        self.tape.borrow_mut().push(TapeOp::Gather {
+                            in_slot: input.clone(), out_slot: output.clone(), axis: *axis });
+                    }
+                    self.land(state, &mut inflight, id, output, res, bytes);
+                }
+                ScheduleOp::Scatter { input, output, axis, id } => {
+                    let parts = &state[input];
+                    let bytes = parts[0].size_bytes() * (self.n - 1) / self.n;
+                    let res = self.comm.reduce_scatter(parts, *axis)?;
+                    if recording {
+                        self.tape.borrow_mut().push(TapeOp::Scatter {
+                            in_slot: input.clone(), out_slot: output.clone(), axis: *axis });
+                    }
+                    self.land(state, &mut inflight, id, output, res, bytes);
+                }
+                ScheduleOp::AllToAll { input, output, split, concat, id } => {
+                    let parts = &state[input];
+                    let bytes = parts[0].size_bytes() * (self.n - 1) / self.n;
+                    let res = self.comm.all_to_all(parts, *split, *concat)?;
+                    if recording {
+                        self.tape.borrow_mut().push(TapeOp::AllToAll {
+                            in_slot: input.clone(), out_slot: output.clone(),
+                            split: *split, concat: *concat });
+                    }
+                    self.land(state, &mut inflight, id, output, res, bytes);
+                }
+                ScheduleOp::Wait { id } => {
+                    self.timeline.borrow_mut().wait(id);
+                    if let Some((slot, val)) = inflight.remove(id) {
+                        state.insert(slot, val);
+                    }
+                }
+            }
+        }
+        if !inflight.is_empty() {
+            return Err(Error::Schedule(format!(
+                "unjoined collectives at block end: {:?}",
+                inflight.keys().collect::<Vec<_>>()
+            )));
+        }
+        Ok(())
+    }
+
+    fn land(
+        &self,
+        state: &mut State,
+        inflight: &mut BTreeMap<String, (String, Vec<HostTensor>)>,
+        id: &Option<String>,
+        output: &str,
+        res: Vec<HostTensor>,
+        bytes: usize,
+    ) {
+        match id {
+            Some(id) => {
+                self.timeline.borrow_mut().collective_async(id, bytes);
+                inflight.insert(id.clone(), (output.to_string(), res));
+            }
+            None => {
+                self.timeline.borrow_mut().collective_sync(bytes);
+                state.insert(output.to_string(), res);
+            }
+        }
+    }
+
+    /// Backward through one recorded block: consumes the tape, returns
+    /// (param grads, d_m shards, d_z shards). `d_state` carries the
+    /// cotangents of the block outputs and is updated in place to the
+    /// cotangents of the block inputs.
+    pub fn block_backward(&self, block_params: &[HostTensor], d_state: &mut State) -> Result<super::tape::BlockGrads> {
+        let tape = std::mem::take(&mut *self.tape.borrow_mut());
+        super::tape::run_backward(self, block_params, tape, d_state)
+    }
+
+    pub(crate) fn bwd_exe(&self, seg: &str) -> Result<&Rc<Executable>> {
+        self.segs_bwd
+            .get(seg)
+            .ok_or_else(|| Error::Schedule(format!("no backward executable for '{seg}' (export with aot --configs tiny)")))
+    }
+
+    pub(crate) fn fwd_exe(&self, seg: &str) -> Result<&Rc<Executable>> {
+        self.segs
+            .get(seg)
+            .ok_or_else(|| Error::Schedule(format!("no segment '{seg}'")))
+    }
+
+    /// Full-trunk forward for inference: embed (replicated on rank 0) →
+    /// shard → N_blocks × DAP block → unshard → heads. `all_params` are the
+    /// full model leaves in canonical order.
+    pub fn model_forward(
+        &self,
+        all_params: &[HostTensor],
+        tokens: &IntTensor,
+    ) -> Result<(HostTensor, HostTensor)> {
+        let man = &self.rt.manifest;
+        let embed = self.rt.load(&format!("{}/embed", self.preset))?;
+        let heads = self.rt.load(&format!("{}/heads", self.preset))?;
+        let ps = man
+            .params
+            .get(&self.preset)
+            .ok_or_else(|| Error::Manifest(format!("no params for '{}'", self.preset)))?;
+
+        let pick = |prefix: &str| -> Vec<HostTensor> {
+            ps.leaves
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.name.starts_with(prefix))
+                .map(|(i, _)| all_params[i].clone())
+                .collect()
+        };
+
+        // embed
+        let mut embed_in: Vec<crate::runtime::executable::Value> = pick("embedder/")
+            .into_iter()
+            .map(Into::into)
+            .collect();
+        embed_in.push(tokens.clone().into());
+        let embed_out = embed.run(&embed_in)?;
+        let (m0, z0) = (embed_out[0].clone(), embed_out[1].clone());
+
+        // trunk under DAP
+        let mut state = self.shard_inputs(&m0, &z0)?;
+        for b in 0..self.cfg.n_blocks {
+            let idx = man.block_leaf_indices(&self.preset, b)?;
+            let bp: Vec<HostTensor> = idx.iter().map(|&i| all_params[i].clone()).collect();
+            self.block_forward(&bp, &mut state)?;
+        }
+        let (m, z) = self.unshard(&state)?;
+
+        // heads
+        let mut head_in: Vec<crate::runtime::executable::Value> =
+            pick("heads/").into_iter().map(Into::into).collect();
+        head_in.push(m.into());
+        head_in.push(z.into());
+        let out = heads.run(&head_in)?;
+        Ok((out[0].clone(), out[1].clone()))
+    }
+}

@@ -1,0 +1,23 @@
+//! Dynamic Axial Parallelism coordinator (paper §IV.B.2) + Duality-Async
+//! overlap (§IV.C).
+//!
+//! Executes the segment schedule exported in `manifest.json` across N
+//! logical ranks: PJRT segment executions interleaved with host-tensor
+//! collectives. A [`timeline::Timeline`] prices the run on a dual-stream
+//! (compute + communication) simulated clock — the Duality Async Operation
+//! trigger/wait pairs map to comm-stream launches that overlap compute,
+//! exactly the paper's Fig 7 semantics (see DESIGN.md §2 for why simulated
+//! streams replace CUDA streams on this testbed).
+//!
+//! Backward ([`tape`]) replays the schedule in reverse with transposed
+//! collectives (all_gather ↔ reduce_scatter, all_to_all ↔ inverse
+//! all_to_all) and per-segment VJP executables that rematerialize forward
+//! internally — segment-granular gradient checkpointing, as the paper uses.
+
+mod coordinator;
+mod tape;
+mod timeline;
+
+pub use coordinator::{DapCoordinator, State};
+pub use tape::BlockGrads;
+pub use timeline::{CommCost, Timeline};

@@ -1,0 +1,226 @@
+//! Reverse-mode replay of the DAP schedule.
+//!
+//! Forward records a [`Tape`] of dataflow ops with per-slot *versions*
+//! (slots like `z` are read by several segments before being overwritten —
+//! cotangents must accumulate per version, not per name). Backward walks
+//! the tape in reverse:
+//!
+//! * `Exec` → the segment's VJP executable (rematerializes forward inside;
+//!   segment-granular activation checkpointing). Parameter gradients sum
+//!   over ranks — DAP replicates parameters, so the true gradient is the
+//!   sum of every rank's contribution.
+//! * `Gather(axis)`   → `reduce_scatter(d_out, axis)`
+//! * `Scatter(axis)`  → `all_gather(d_out, axis)`
+//! * `AllToAll(s, c)` → `all_to_all(d_out, split=c, concat=s)` (inverse)
+
+use super::coordinator::{DapCoordinator, State};
+use crate::error::{Error, Result};
+use crate::tensor::HostTensor;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub enum TapeOp {
+    Exec {
+        seg: String,
+        in_slots: Vec<String>,
+        out_slots: Vec<String>,
+        /// forward input shards, per input per rank (VJP rematerializes
+        /// forward from these)
+        inputs: Vec<Vec<HostTensor>>,
+    },
+    Gather { in_slot: String, out_slot: String, axis: usize },
+    Scatter { in_slot: String, out_slot: String, axis: usize },
+    AllToAll { in_slot: String, out_slot: String, split: usize, concat: usize },
+}
+
+#[derive(Default, Debug)]
+pub struct Tape {
+    pub ops: Vec<TapeOp>,
+}
+
+impl Tape {
+    pub fn push(&mut self, op: TapeOp) {
+        self.ops.push(op);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+/// Accumulated parameter gradients for one block (canonical leaf order).
+pub type BlockGrads = Vec<HostTensor>;
+
+type Key = (String, usize);
+
+/// version bookkeeping: assign (slot, version) keys to every tape op's
+/// reads and writes by replaying the dataflow forward.
+fn assign_versions(tape: &Tape) -> Vec<(Vec<Key>, Vec<Key>)> {
+    let mut cur: BTreeMap<String, usize> = BTreeMap::new();
+    let mut out = Vec::with_capacity(tape.ops.len());
+    let mut read = |cur: &BTreeMap<String, usize>, s: &str| -> Key {
+        (s.to_string(), *cur.get(s).unwrap_or(&0))
+    };
+    for op in &tape.ops {
+        let (ins, outs): (Vec<&str>, Vec<&str>) = match op {
+            TapeOp::Exec { in_slots, out_slots, .. } => (
+                in_slots.iter().map(|s| s.as_str()).collect(),
+                out_slots.iter().map(|s| s.as_str()).collect(),
+            ),
+            TapeOp::Gather { in_slot, out_slot, .. }
+            | TapeOp::Scatter { in_slot, out_slot, .. }
+            | TapeOp::AllToAll { in_slot, out_slot, .. } => {
+                (vec![in_slot.as_str()], vec![out_slot.as_str()])
+            }
+        };
+        let in_keys: Vec<Key> = ins.iter().map(|s| read(&cur, s)).collect();
+        let out_keys: Vec<Key> = outs
+            .iter()
+            .map(|s| {
+                let v = cur.get(*s).copied().unwrap_or(0) + 1;
+                cur.insert((*s).to_string(), v);
+                ((*s).to_string(), v)
+            })
+            .collect();
+        out.push((in_keys, out_keys));
+    }
+    out
+}
+
+pub fn run_backward(
+    co: &DapCoordinator,
+    block_params: &[HostTensor],
+    tape: Tape,
+    d_state: &mut State,
+) -> Result<BlockGrads> {
+    let n = co.n;
+    let versions = assign_versions(&tape);
+
+    // final versions of m and z carry the incoming output cotangents
+    let mut final_v: BTreeMap<String, usize> = BTreeMap::new();
+    for (_, outs) in &versions {
+        for (s, v) in outs {
+            final_v.insert(s.clone(), *v);
+        }
+    }
+    let mut cts: BTreeMap<Key, Vec<HostTensor>> = BTreeMap::new();
+    for slot in ["m", "z"] {
+        let v = *final_v
+            .get(slot)
+            .ok_or_else(|| Error::Schedule(format!("tape never wrote '{slot}'")))?;
+        let d = d_state
+            .get(slot)
+            .ok_or_else(|| Error::Schedule(format!("missing d_state['{slot}']")))?;
+        cts.insert((slot.to_string(), v), d.clone());
+    }
+
+    let mut param_grads: Option<BlockGrads> = None;
+    // §Perf-L3: one literal conversion for the whole backward pass
+    let param_lits: Vec<xla::Literal> = block_params
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+
+    let add_ct = |cts: &mut BTreeMap<Key, Vec<HostTensor>>,
+                  key: Key,
+                  val: Vec<HostTensor>|
+     -> Result<()> {
+        match cts.get_mut(&key) {
+            Some(existing) => {
+                for (e, v) in existing.iter_mut().zip(val.iter()) {
+                    e.add_assign(v)?;
+                }
+            }
+            None => {
+                cts.insert(key, val);
+            }
+        }
+        Ok(())
+    };
+
+    for (op, (in_keys, out_keys)) in
+        tape.ops.iter().rev().zip(versions.iter().rev())
+    {
+        match op {
+            TapeOp::Exec { seg, inputs, .. } => {
+                let fwd = co.fwd_exe(seg)?;
+                let bwd = co.bwd_exe(seg)?;
+                // cotangents of outputs (zero if this output never fed
+                // anything downstream — allowed, e.g. unused residuals)
+                let out_specs = &fwd.spec.outputs;
+                let mut ct_per_out: Vec<Vec<HostTensor>> = Vec::new();
+                for (k, key) in out_keys.iter().enumerate() {
+                    let shards = match cts.remove(key) {
+                        Some(s) => s,
+                        None => (0..n)
+                            .map(|_| HostTensor::zeros(&out_specs[k].shape))
+                            .collect(),
+                    };
+                    ct_per_out.push(shards);
+                }
+                // run VJP per rank; param grads sum over ranks
+                let n_params = block_params.len();
+                let mut d_ins: Vec<Vec<HostTensor>> =
+                    vec![Vec::with_capacity(n); in_keys.len()];
+                for r in 0..n {
+                    let mut rest: Vec<HostTensor> = Vec::new();
+                    for inp in inputs {
+                        rest.push(inp[r].clone());
+                    }
+                    for ct in &ct_per_out {
+                        rest.push(ct[r].clone());
+                    }
+                    let outs = bwd.run_with_params(&param_lits, &rest)?;
+                    let (pg, di) = outs.split_at(n_params);
+                    match &mut param_grads {
+                        Some(acc) => {
+                            for (a, g) in acc.iter_mut().zip(pg.iter()) {
+                                a.add_assign(g)?;
+                            }
+                        }
+                        None => param_grads = Some(pg.to_vec()),
+                    }
+                    for (slot_i, d) in di.iter().enumerate() {
+                        d_ins[slot_i].push(d.clone());
+                    }
+                }
+                for (key, d) in in_keys.iter().zip(d_ins.into_iter()) {
+                    add_ct(&mut cts, key.clone(), d)?;
+                }
+            }
+            TapeOp::Gather { axis, .. } => {
+                if let Some(d_out) = cts.remove(&out_keys[0]) {
+                    let d_in = co.comm.reduce_scatter(&d_out, *axis)?;
+                    add_ct(&mut cts, in_keys[0].clone(), d_in)?;
+                }
+            }
+            TapeOp::Scatter { axis, .. } => {
+                if let Some(d_out) = cts.remove(&out_keys[0]) {
+                    let d_in = co.comm.all_gather(&d_out, *axis)?;
+                    add_ct(&mut cts, in_keys[0].clone(), d_in)?;
+                }
+            }
+            TapeOp::AllToAll { split, concat, .. } => {
+                if let Some(d_out) = cts.remove(&out_keys[0]) {
+                    let d_in = co.comm.all_to_all(&d_out, *concat, *split)?;
+                    add_ct(&mut cts, in_keys[0].clone(), d_in)?;
+                }
+            }
+        }
+    }
+
+    // cotangents of the block inputs live at version 0
+    for slot in ["m", "z"] {
+        let key = (slot.to_string(), 0usize);
+        let d = cts.remove(&key).ok_or_else(|| {
+            Error::Schedule(format!("backward produced no d{slot}"))
+        })?;
+        d_state.insert(slot.to_string(), d);
+    }
+
+    param_grads.ok_or_else(|| Error::Schedule("empty tape".into()))
+}

@@ -1,0 +1,203 @@
+//! Dual-stream simulated clock: per-rank *compute stream* plus a shared
+//! *communication stream*, the substitution for CUDA streams on this
+//! testbed (DESIGN.md §2).
+//!
+//! * `exec(secs)` advances every rank's compute stream (ranks execute the
+//!   same segment on equal shards — SPMD).
+//! * `collective_sync(bytes)` synchronizes ranks, then blocks compute for
+//!   the collective's duration.
+//! * `collective_async(id, bytes)` is the *Duality Async* trigger: the
+//!   collective runs on the comm stream starting when all ranks arrive;
+//!   `wait(id)` joins — compute done in between is overlapped for free.
+//!
+//! Durations come from [`CommCost`], an α–β (latency + bytes/bandwidth)
+//! model with presets for NVLink-class and IB-class links and a CPU-
+//! calibrated preset used when mixing with measured CPU compute times.
+
+use std::collections::BTreeMap;
+
+/// α–β communication cost model: time = α + bytes / β.
+#[derive(Clone, Copy, Debug)]
+pub struct CommCost {
+    /// per-collective launch latency (seconds)
+    pub alpha: f64,
+    /// link bandwidth (bytes/second)
+    pub beta: f64,
+}
+
+impl CommCost {
+    /// NVLink 3 (A100 intra-node): 600 GB/s nominal; *effective* collective
+    /// bandwidth for ring/gather patterns at Evoformer message sizes is far
+    /// lower (NCCL achieves ~80 GB/s busbw here), 15 µs launch latency.
+    pub fn nvlink() -> Self {
+        CommCost { alpha: 15e-6, beta: 80e9 }
+    }
+
+    /// HDR InfiniBand (inter-node): 25 GB/s, 12 µs latency.
+    pub fn infiniband() -> Self {
+        CommCost { alpha: 12e-6, beta: 25e9 }
+    }
+
+    /// CPU-testbed calibration: host memcpy-class bandwidth so that
+    /// comm:compute ratios on the 1-core simulator resemble the
+    /// NVLink:A100 ratio (both ~2 orders below compute throughput).
+    pub fn cpu_calibrated() -> Self {
+        CommCost { alpha: 5e-6, beta: 4e9 }
+    }
+
+    pub fn time(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.alpha + bytes as f64 / self.beta
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    /// per-rank compute-stream clock (seconds)
+    pub compute: Vec<f64>,
+    /// comm stream is busy until this instant
+    comm_free: f64,
+    /// in-flight async collectives: id -> completion time
+    pending: BTreeMap<String, f64>,
+    pub cost: CommCost,
+    /// Duality Async on/off (off = every collective is synchronous)
+    pub overlap: bool,
+    /// accounting
+    pub comm_seconds: f64,
+    pub exposed_comm_seconds: f64,
+}
+
+impl Timeline {
+    pub fn new(n: usize, cost: CommCost, overlap: bool) -> Self {
+        Timeline {
+            compute: vec![0.0; n],
+            comm_free: 0.0,
+            pending: BTreeMap::new(),
+            cost,
+            overlap,
+            comm_seconds: 0.0,
+            exposed_comm_seconds: 0.0,
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.compute.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// All ranks run a segment taking `secs` of compute.
+    pub fn exec(&mut self, secs: f64) {
+        for c in self.compute.iter_mut() {
+            *c += secs;
+        }
+    }
+
+    /// Synchronous collective: ranks align, then block for the duration.
+    pub fn collective_sync(&mut self, bytes: usize) {
+        let arrive = self.now().max(self.comm_free);
+        let d = self.cost.time(bytes);
+        self.comm_seconds += d;
+        self.exposed_comm_seconds += d;
+        let done = arrive + d;
+        self.comm_free = done;
+        for c in self.compute.iter_mut() {
+            *c = done;
+        }
+    }
+
+    /// Duality Async trigger: launch on the comm stream, don't block.
+    pub fn collective_async(&mut self, id: &str, bytes: usize) {
+        if !self.overlap {
+            self.collective_sync(bytes);
+            self.pending.insert(id.to_string(), self.now());
+            return;
+        }
+        let start = self.now().max(self.comm_free);
+        let d = self.cost.time(bytes);
+        self.comm_seconds += d;
+        let done = start + d;
+        self.comm_free = done;
+        self.pending.insert(id.to_string(), done);
+    }
+
+    /// Duality Async wait: join the collective; any time the compute
+    /// stream still has to wait is *exposed* (non-overlapped) comm.
+    pub fn wait(&mut self, id: &str) {
+        if let Some(done) = self.pending.remove(id) {
+            let now = self.now();
+            if done > now {
+                self.exposed_comm_seconds += done - now;
+                for c in self.compute.iter_mut() {
+                    *c = (*c).max(done);
+                }
+            }
+        }
+    }
+
+    /// Simulated elapsed wall time.
+    pub fn elapsed(&self) -> f64 {
+        self.now().max(self.comm_free.min(self.now())) // comm past last wait is moot
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_hides_comm() {
+        let cost = CommCost { alpha: 0.0, beta: 1e6 }; // 1 MB/s
+        // overlapped: 1s compute || 0.5s comm -> 2s total with 1s more compute
+        let mut t = Timeline::new(2, cost, true);
+        t.exec(1.0);
+        t.collective_async("x", 500_000); // 0.5 s
+        t.exec(1.0); // overlaps
+        t.wait("x");
+        assert!((t.elapsed() - 2.0).abs() < 1e-9, "{}", t.elapsed());
+        assert!(t.exposed_comm_seconds < 1e-9);
+
+        // sync: same ops cost 2.5s
+        let mut t = Timeline::new(2, cost, false);
+        t.exec(1.0);
+        t.collective_async("x", 500_000);
+        t.exec(1.0);
+        t.wait("x");
+        assert!((t.elapsed() - 2.5).abs() < 1e-9, "{}", t.elapsed());
+        assert!((t.exposed_comm_seconds - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partially_exposed_comm() {
+        let cost = CommCost { alpha: 0.0, beta: 1e6 };
+        let mut t = Timeline::new(1, cost, true);
+        t.collective_async("x", 1_000_000); // 1 s
+        t.exec(0.25); // only 0.25 s to hide behind
+        t.wait("x");
+        assert!((t.elapsed() - 1.0).abs() < 1e-9);
+        assert!((t.exposed_comm_seconds - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_stream_serializes() {
+        let cost = CommCost { alpha: 0.0, beta: 1e6 };
+        let mut t = Timeline::new(1, cost, true);
+        t.collective_async("a", 1_000_000);
+        t.collective_async("b", 1_000_000); // queues behind a
+        t.wait("a");
+        t.wait("b");
+        assert!((t.elapsed() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alpha_beta_model() {
+        let c = CommCost { alpha: 1e-5, beta: 1e9 };
+        assert_eq!(c.time(0), 0.0);
+        assert!((c.time(1_000_000) - (1e-5 + 1e-3)).abs() < 1e-12);
+    }
+}

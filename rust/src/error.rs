@@ -1,0 +1,45 @@
+//! Crate-wide error type. Everything funnels into [`Error`]; `Result<T>` is
+//! the crate-default result alias.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("json parse error: {0}")]
+    Json(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("communicator error: {0}")]
+    Comm(String),
+
+    #[error("scheduler error: {0}")]
+    Schedule(String),
+
+    #[error("out of (simulated) device memory: need {need_gib:.2} GiB, capacity {cap_gib:.2} GiB")]
+    SimOom { need_gib: f64, cap_gib: f64 },
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

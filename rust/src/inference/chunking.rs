@@ -1,0 +1,107 @@
+//! Chunked inference — the baselines' long-sequence strategy (paper §V.C):
+//! split the attention batch axis into chunks computed sequentially,
+//! trading latency for peak-transient memory. Chunking does NOT shrink the
+//! resident representations, which is why single-device inference still
+//! OOMs past ~3k residues (Table V) while DAP keeps scaling.
+//!
+//! In this runtime, executed chunking reuses the DAP segment decomposition
+//! with the shards run *sequentially on one device* (sum of shard times,
+//! not max) — the same compute decomposition, minus the parallelism.
+
+use crate::config::ModelConfig;
+use crate::error::Result;
+use crate::perfmodel::{GpuSpec, MemoryModel};
+
+/// A chunking plan: how finely the attention batch axis must be split for
+/// the working set to fit device capacity.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChunkPlan {
+    pub chunks: usize,
+    pub peak_bytes: f64,
+    /// latency multiplier vs unchunked (launch + re-read overhead per
+    /// chunk; calibrated to the paper's "to a certain extent reduces
+    /// performance" ≈ 1.2–1.4× at deep chunking)
+    pub latency_factor: f64,
+}
+
+/// Find the smallest power-of-two chunk count that fits `gpu` memory, or
+/// None if even the deepest chunking cannot fit (resident reps too large —
+/// the paper's OOM rows).
+pub fn plan_chunks(cfg: &ModelConfig, mem: &MemoryModel, gpu: &GpuSpec) -> Option<ChunkPlan> {
+    let mut chunks = 1usize;
+    while chunks <= 256 {
+        let peak = mem.inference_peak(cfg, 1, chunks);
+        if peak <= gpu.memory {
+            let latency_factor = 1.0 + 0.02 * (chunks as f64).log2().max(0.0) * 2.0;
+            return Some(ChunkPlan { chunks, peak_bytes: peak, latency_factor });
+        }
+        chunks *= 2;
+    }
+    None
+}
+
+/// Chunked-vs-DAP memory check used by Table V: returns per-configuration
+/// verdicts (Ok(peak) or SimOom).
+pub fn memory_verdict(
+    n_res: usize,
+    dap: usize,
+    chunks: usize,
+    mem: &MemoryModel,
+    gpu: &GpuSpec,
+) -> Result<f64> {
+    let cfg = ModelConfig::inference(n_res);
+    mem.check(&cfg, dap, chunks, gpu.memory)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_sequences_need_no_chunking() {
+        let plan = plan_chunks(
+            &ModelConfig::inference(512),
+            &MemoryModel::default(),
+            &GpuSpec::a100_40g(),
+        )
+        .unwrap();
+        assert_eq!(plan.chunks, 1);
+        assert!((plan.latency_factor - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn long_sequences_need_chunking() {
+        let plan = plan_chunks(
+            &ModelConfig::inference(2048),
+            &MemoryModel::default(),
+            &GpuSpec::a100_40g(),
+        )
+        .unwrap();
+        assert!(plan.chunks > 1, "chunks {}", plan.chunks);
+        assert!(plan.latency_factor > 1.0);
+    }
+
+    #[test]
+    fn extreme_sequences_oom_even_chunked() {
+        // Table V: 3072+ OOMs on a single device regardless of chunking
+        let plan = plan_chunks(
+            &ModelConfig::inference(3072),
+            &MemoryModel::default(),
+            &GpuSpec::a100_40g(),
+        );
+        assert!(plan.is_none());
+    }
+
+    #[test]
+    fn chunk_monotonic_in_length() {
+        let mem = MemoryModel::default();
+        let gpu = GpuSpec::a100_40g();
+        let c1 = plan_chunks(&ModelConfig::inference(1024), &mem, &gpu)
+            .unwrap()
+            .chunks;
+        let c2 = plan_chunks(&ModelConfig::inference(2048), &mem, &gpu)
+            .unwrap()
+            .chunks;
+        assert!(c2 >= c1);
+    }
+}

@@ -1,0 +1,15 @@
+//! Inference drivers (paper §V.C):
+//!
+//! * [`single`] — single-device trunk execution (`block_fwd` per block),
+//!   the short-sequence path (Fig 12), with the naive-kernel variant as the
+//!   baseline.
+//! * [`chunking`] — the baselines' long-sequence strategy: split the
+//!   attention batch axis into chunks executed sequentially (trades speed
+//!   for memory; paper §V.C).
+//! * distributed inference = [`crate::dap::DapCoordinator::model_forward`]
+//!   (Fig 13 / Table V FastFold path).
+
+pub mod chunking;
+pub mod single;
+
+pub use single::single_device_forward;

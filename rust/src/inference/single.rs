@@ -1,0 +1,66 @@
+//! Single-device trunk inference: embed → N × block_fwd → heads, composing
+//! the per-block executable (the fused-kernel or naive variant) — the
+//! Fig 12 measurement path.
+
+use crate::error::Result;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::{HostTensor, IntTensor};
+
+/// Run the full model on one device. `naive` selects the unfused-kernel
+/// block variant (the "PyTorch-native" baseline of Fig 12).
+pub fn single_device_forward(
+    rt: &Runtime,
+    preset: &str,
+    params: &[HostTensor],
+    tokens: &IntTensor,
+    naive: bool,
+) -> Result<(HostTensor, HostTensor)> {
+    let man = &rt.manifest;
+    let ps = man
+        .params
+        .get(preset)
+        .ok_or_else(|| crate::Error::Manifest(format!("no params for '{preset}'")))?;
+    let pick = |prefix: &str| -> Vec<HostTensor> {
+        ps.leaves
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.name.starts_with(prefix))
+            .map(|(i, _)| params[i].clone())
+            .collect()
+    };
+
+    let embed = rt.load(&format!("{preset}/embed"))?;
+    let block = rt.load(&format!(
+        "{preset}/block_fwd{}",
+        if naive { "_naive" } else { "" }
+    ))?;
+    let heads = rt.load(&format!("{preset}/heads"))?;
+
+    let mut args: Vec<Value> = pick("embedder/").into_iter().map(Into::into).collect();
+    args.push(tokens.clone().into());
+    let out = embed.run(&args)?;
+    let (mut m, mut z) = (out[0].clone(), out[1].clone());
+
+    let n_blocks = man
+        .configs
+        .get(preset)
+        .and_then(|c| c.opt("n_blocks"))
+        .and_then(|v| v.as_usize().ok())
+        .unwrap_or(1);
+    for b in 0..n_blocks {
+        let idx = man.block_leaf_indices(preset, b)?;
+        let mut bargs: Vec<HostTensor> =
+            idx.iter().map(|&i| params[i].clone()).collect();
+        bargs.push(m);
+        bargs.push(z);
+        let out = block.run_f32(&bargs)?;
+        m = out[0].clone();
+        z = out[1].clone();
+    }
+
+    let mut hargs: Vec<Value> = pick("heads/").into_iter().map(Into::into).collect();
+    hargs.push(m.into());
+    hargs.push(z.into());
+    let out = heads.run(&hargs)?;
+    Ok((out[0].clone(), out[1].clone()))
+}

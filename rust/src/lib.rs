@@ -1,0 +1,38 @@
+//! # FastFold (reproduction)
+//!
+//! A three-layer reproduction of *FastFold: Reducing AlphaFold Training
+//! Time from 11 Days to 67 Hours* (Cheng et al., 2022):
+//!
+//! * **L1** — Pallas kernels (fused softmax / Welford LayerNorm / gated
+//!   attention / triangle update / outer-product-mean), AOT-lowered to HLO
+//!   text by the python compile path (`python/compile/`).
+//! * **L2** — the JAX Evoformer / mini-AlphaFold model and its Dynamic
+//!   Axial Parallelism segment decomposition, also AOT-lowered.
+//! * **L3** — this crate: the coordinator. Loads the HLO artifacts through
+//!   PJRT ([`runtime`]), shards activations across logical ranks, executes
+//!   the DAP schedule with Duality-Async overlap ([`dap`]), runs the
+//!   Megatron-style TP baseline ([`tp`]), data-parallel training
+//!   ([`train`]), chunked + distributed inference ([`inference`]), and the
+//!   calibrated A100 performance/memory models that regenerate the paper's
+//!   scaling figures ([`perfmodel`]).
+//!
+//! Python never runs on the request path: `make artifacts` exports
+//! everything once, then the `fastfold` binary is self-contained.
+
+pub mod comm;
+pub mod config;
+pub mod dap;
+pub mod error;
+pub mod inference;
+pub mod json;
+pub mod manifest;
+pub mod metrics;
+pub mod perfmodel;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod tp;
+pub mod train;
+
+pub use error::{Error, Result};
+pub use tensor::{HostTensor, IntTensor};

@@ -1,0 +1,286 @@
+//! `artifacts/manifest.json` — the contract between the python compile path
+//! and the rust runtime: artifact files with typed I/O specs, the canonical
+//! parameter flatten order + initial-params binary, batch specs, and the
+//! DAP schedule.
+
+use crate::error::{Error, Result};
+use crate::json::Json;
+use crate::tensor::HostTensor;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(Error::Manifest(format!("unsupported dtype '{other}'"))),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamLeaf {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub file: String,
+    pub total: usize,
+    pub count: usize,
+    pub leaves: Vec<ParamLeaf>,
+}
+
+/// One op of the DAP schedule (mirrors python/compile/dap.py SCHEDULE).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScheduleOp {
+    Exec { seg: String, inputs: Vec<String>, outputs: Vec<String> },
+    Gather { input: String, output: String, axis: usize, id: Option<String> },
+    Scatter { input: String, output: String, axis: usize, id: Option<String> },
+    AllToAll {
+        input: String,
+        output: String,
+        split: usize,
+        concat: usize,
+        id: Option<String>,
+    },
+    Wait { id: String },
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub params: BTreeMap<String, ParamSet>,
+    pub schedule: Vec<ScheduleOp>,
+    pub configs: BTreeMap<String, Json>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let src = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let j = Json::parse(&src)?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in j.get("artifacts")?.as_obj()? {
+            let inputs = spec
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = spec
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: spec.get("file")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut params = BTreeMap::new();
+        for (cfg, p) in j.get("params")?.as_obj()? {
+            let leaves = p
+                .get("leaves")?
+                .as_arr()?
+                .iter()
+                .map(|l| {
+                    Ok(ParamLeaf {
+                        name: l.get("name")?.as_str()?.to_string(),
+                        shape: l
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|v| v.as_usize())
+                            .collect::<Result<_>>()?,
+                        offset: l.get("offset")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            params.insert(
+                cfg.clone(),
+                ParamSet {
+                    file: p.get("file")?.as_str()?.to_string(),
+                    total: p.get("total")?.as_usize()?,
+                    count: p.get("count")?.as_usize()?,
+                    leaves,
+                },
+            );
+        }
+
+        let schedule = parse_schedule(j.get("dap_schedule")?)?;
+        let configs = j.get("configs")?.as_obj()?.clone();
+
+        Ok(Manifest { dir, artifacts, params, schedule, configs })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("no artifact '{name}'")))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Load the initial parameter leaves for a config preset, in canonical
+    /// flatten order, as host tensors.
+    pub fn load_params(&self, preset: &str) -> Result<Vec<HostTensor>> {
+        let ps = self
+            .params
+            .get(preset)
+            .ok_or_else(|| Error::Manifest(format!("no params for '{preset}'")))?;
+        let bytes = std::fs::read(self.dir.join(&ps.file))?;
+        if bytes.len() != ps.total * 4 {
+            return Err(Error::Manifest(format!(
+                "params file {} is {} bytes, expected {}",
+                ps.file,
+                bytes.len(),
+                ps.total * 4
+            )));
+        }
+        ps.leaves
+            .iter()
+            .map(|leaf| {
+                let n: usize = leaf.shape.iter().product();
+                let start = leaf.offset * 4;
+                let data: Vec<f32> = bytes[start..start + n * 4]
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                HostTensor::new(leaf.shape.clone(), data)
+            })
+            .collect()
+    }
+
+    /// Names of the parameter leaves belonging to block `i` of a preset,
+    /// in canonical order (prefix `blocks/<i>/`).
+    pub fn block_leaf_indices(&self, preset: &str, block: usize) -> Result<Vec<usize>> {
+        let ps = self
+            .params
+            .get(preset)
+            .ok_or_else(|| Error::Manifest(format!("no params for '{preset}'")))?;
+        let prefix = format!("blocks/{block}/");
+        let idx: Vec<usize> = ps
+            .leaves
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.name.starts_with(&prefix))
+            .map(|(i, _)| i)
+            .collect();
+        if idx.is_empty() {
+            return Err(Error::Manifest(format!(
+                "no leaves for block {block} of '{preset}'"
+            )));
+        }
+        Ok(idx)
+    }
+}
+
+fn parse_schedule(j: &Json) -> Result<Vec<ScheduleOp>> {
+    j.as_arr()?
+        .iter()
+        .map(|op| {
+            let kind = op.get("op")?.as_str()?;
+            let id = op.opt("id").map(|v| v.as_str().map(String::from)).transpose()?;
+            match kind {
+                "exec" => Ok(ScheduleOp::Exec {
+                    seg: op.get("seg")?.as_str()?.to_string(),
+                    inputs: op
+                        .get("in")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_str().map(String::from))
+                        .collect::<Result<_>>()?,
+                    outputs: op
+                        .get("out")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_str().map(String::from))
+                        .collect::<Result<_>>()?,
+                }),
+                "gather" => Ok(ScheduleOp::Gather {
+                    input: op.get("in")?.as_str()?.to_string(),
+                    output: op.get("out")?.as_str()?.to_string(),
+                    axis: op.get("axis")?.as_usize()?,
+                    id,
+                }),
+                "scatter" => Ok(ScheduleOp::Scatter {
+                    input: op.get("in")?.as_str()?.to_string(),
+                    output: op.get("out")?.as_str()?.to_string(),
+                    axis: op.get("axis")?.as_usize()?,
+                    id,
+                }),
+                "a2a" => Ok(ScheduleOp::AllToAll {
+                    input: op.get("in")?.as_str()?.to_string(),
+                    output: op.get("out")?.as_str()?.to_string(),
+                    split: op.get("split")?.as_usize()?,
+                    concat: op.get("concat")?.as_usize()?,
+                    id,
+                }),
+                "wait" => Ok(ScheduleOp::Wait {
+                    id: id.ok_or_else(|| Error::Manifest("wait without id".into()))?,
+                }),
+                other => Err(Error::Manifest(format!("unknown schedule op '{other}'"))),
+            }
+        })
+        .collect()
+}

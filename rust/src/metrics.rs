@@ -1,0 +1,148 @@
+//! Metrics & reporting: wall timers, throughput/FLOPs accounting,
+//! parallel-efficiency math, and simple aligned-table printing shared by
+//! the CLI `report` subcommands and the bench harnesses.
+
+use std::time::Instant;
+
+/// Measure a closure's wall time over `iters` runs after `warmup` runs;
+/// returns (mean, min, max) seconds.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let sum: f64 = times.iter().sum();
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    (sum / iters as f64, min, max)
+}
+
+/// Parallel efficiency: speedup(N) / N.
+pub fn parallel_efficiency(t1: f64, tn: f64, n: usize) -> f64 {
+    if tn <= 0.0 || n == 0 {
+        return 0.0;
+    }
+    (t1 / tn) / n as f64
+}
+
+/// Median of a sample (consumes and sorts).
+pub fn median(mut xs: Vec<f64>) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+/// Fixed-width table printer (console reproduction of the paper's tables).
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                s.push_str(c);
+                for _ in c.chars().count()..width[i] {
+                    s.push(' ');
+                }
+                s.push_str(" | ");
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        let sep: Vec<String> =
+            width.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep);
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Human duration.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2} s", s)
+    } else if s < 7200.0 {
+        format!("{:.1} min", s / 60.0)
+    } else if s < 172800.0 {
+        format!("{:.1} h", s / 3600.0)
+    } else {
+        format!("{:.2} days", s / 86400.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_math() {
+        assert!((parallel_efficiency(8.0, 1.0, 8) - 1.0).abs() < 1e-12);
+        assert!((parallel_efficiency(8.0, 2.0, 8) - 0.5).abs() < 1e-12);
+        assert_eq!(parallel_efficiency(1.0, 0.0, 4), 0.0);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(vec![3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(vec![4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!(median(vec![]).is_nan());
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-4).contains("µs") || fmt_secs(5e-4).contains("ms"));
+        assert!(fmt_secs(0.5).contains("ms"));
+        assert!(fmt_secs(30.0).contains("s"));
+        assert!(fmt_secs(3600.0).contains("min"));
+        assert!(fmt_secs(86400.0 * 3.0).contains("days"));
+    }
+
+    #[test]
+    fn timer_runs() {
+        let (mean, min, max) = time_it(1, 3, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(mean >= 0.0 && min <= mean && mean <= max + 1e-12);
+    }
+}

@@ -1,0 +1,148 @@
+//! Activation-memory model → the Table V OOM boundary.
+//!
+//! The paper's §III.B headline: attention context memory scales as
+//! N_r³ · N_head · sizeof(bf16) in the pair stack (> 20 GB at N_r = 384
+//! over 48 layers). We model the peak *inference* working set per device:
+//! representations + the largest transient per block (attention scores or
+//! triangle intermediates), under chunking (baselines) or DAP sharding
+//! (FastFold), and declare sim-OOM when it exceeds device capacity.
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+
+pub const BF16: f64 = 2.0;
+pub const F32: f64 = 4.0;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryModel {
+    /// bytes per element of activations
+    pub elem_bytes: f64,
+    /// framework/weights/workspace overhead per device (bytes)
+    pub fixed_overhead: f64,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        // inference activations are f32 (OpenFold/AlphaFold default);
+        // weights + framework context ≈ 2 GB
+        MemoryModel { elem_bytes: F32, fixed_overhead: 2.0e9 }
+    }
+}
+
+impl MemoryModel {
+    /// Peak inference working set per device (bytes).
+    ///
+    /// * `dap` — DAP degree (activations sharded 1/dap; transient attention
+    ///   batch is over the local shard).
+    /// * `chunk` — chunking factor along the batch axis of attention
+    ///   (baseline path; 1 = no chunking). Chunking shrinks transients but
+    ///   NOT the resident representations — that is why the baselines still
+    ///   OOM at 3k+ (paper Table V).
+    pub fn inference_peak(&self, cfg: &ModelConfig, dap: usize, chunk: usize) -> f64 {
+        let s = cfg.n_seq as f64;
+        let r = cfg.n_res as f64;
+        let dm = cfg.d_msa as f64;
+        let dz = cfg.d_pair as f64;
+        let hp = cfg.n_heads_pair as f64;
+        let hm = cfg.n_heads_msa as f64;
+        let dap = dap as f64;
+        let chunk = chunk as f64;
+
+        let _ = hp;
+        // resident: m (+ residual copy) + z (2 working copies + the
+        // recycling buffer AlphaFold keeps between recycle iterations)
+        let resident = (2.0 * s * r * dm + 3.0 * r * r * dz) / dap;
+
+        // largest transients per block:
+        // attention scores for the processed batch slice (chunkable — the
+        // chunking technique of §V.C targets exactly these):
+        let msa_attn = (s / dap / chunk).max(1.0) * hm * r * r;
+        // triangle-mult working set: left/right projections + gates + the
+        // contraction output. NOT chunkable along the batch axis (the k
+        // contraction needs the full axis) — this is what keeps the
+        // baselines OOMing past ~3k residues even with chunking (Table V).
+        let tri_mult = if dap > 1.0 {
+            // local projections (4/dap) + gathered right operand (1) +
+            // full incoming partial (1) + working copies (0.75)
+            (4.0 / dap + 2.75) * r * r * dz
+        } else {
+            5.0 * r * r * dz
+        };
+        let transient = msa_attn.max(tri_mult);
+
+        self.elem_bytes * (resident + transient) + self.fixed_overhead
+    }
+
+    /// The paper's §III.B training bound: storing row-attention context for
+    /// backward across all blocks without checkpointing.
+    pub fn attention_activation_all_blocks(&self, cfg: &ModelConfig) -> f64 {
+        let r = cfg.n_res as f64;
+        let h = cfg.n_heads_pair as f64;
+        cfg.n_blocks as f64 * r * r * r * h * self.elem_bytes
+    }
+
+    /// Check an inference plan against device capacity.
+    pub fn check(
+        &self,
+        cfg: &ModelConfig,
+        dap: usize,
+        chunk: usize,
+        capacity: f64,
+    ) -> Result<f64> {
+        let need = self.inference_peak(cfg, dap, chunk);
+        if need > capacity {
+            Err(Error::SimOom { need_gib: need / 1e9, cap_gib: capacity / 1e9 })
+        } else {
+            Ok(need)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::perfmodel::gpu::GpuSpec;
+
+    #[test]
+    fn paper_20gb_claim() {
+        // §III.B: N_r=384, N_head=4, 48 layers, bf16 -> > 20 GB
+        let cfg = ModelConfig::finetune();
+        let m = MemoryModel { elem_bytes: BF16, ..MemoryModel::default() };
+        let gb = m.attention_activation_all_blocks(&cfg) / 1e9;
+        assert!(gb > 20.0 && gb < 25.0, "{gb} GB");
+    }
+
+    #[test]
+    fn table5_oom_boundary() {
+        // Single device + chunking OOMs by 3072; DAP-8 fits 4096 (Table V)
+        let m = MemoryModel::default();
+        let cap = GpuSpec::a100_40g().memory;
+        let at = |n, dap, chunk| m.check(&ModelConfig::inference(n), dap, chunk, cap);
+        assert!(at(2560, 1, 16).is_ok(), "2560 single+chunk should fit");
+        assert!(at(3072, 1, 16).is_err(), "3072 single should OOM");
+        assert!(at(4096, 8, 1).is_ok(), "4096 DAP-8 should fit");
+        assert!(at(4096, 4, 1).is_err(), "4096 DAP-4 should OOM");
+        assert!(at(3584, 4, 1).is_ok(), "3584 DAP-4 should fit");
+    }
+
+    #[test]
+    fn dap_shards_memory() {
+        let m = MemoryModel::default();
+        let cfg = ModelConfig::inference(2048);
+        let m1 = m.inference_peak(&cfg, 1, 1);
+        let m4 = m.inference_peak(&cfg, 4, 1);
+        assert!(m4 < m1 * 0.45, "m1={m1:e} m4={m4:e}");
+    }
+
+    #[test]
+    fn chunking_cuts_transients_only() {
+        let m = MemoryModel::default();
+        let cfg = ModelConfig::inference(2048);
+        let no = m.inference_peak(&cfg, 1, 1);
+        let ch = m.inference_peak(&cfg, 1, 16);
+        assert!(ch < no);
+        // resident part persists: chunked is still a large fraction
+        assert!(ch > 0.1 * no);
+    }
+}

@@ -1,0 +1,20 @@
+//! Calibrated analytic performance + memory models.
+//!
+//! The paper's scaling results (Figs 10–13, Tables IV–V) were measured on
+//! 128 nodes × 4 A100; this testbed is one CPU core, so absolute wall-clock
+//! cannot transfer. What does transfer is *structure*: FLOP counts per
+//! module ([`flops`]), activation footprints ([`memory`]), collective
+//! volumes (measured by the comm log), and the α–β link models. [`scaling`]
+//! combines them into step-time predictions whose *shape* (who wins, by
+//! what factor, where OOM hits, where efficiency falls off) reproduces the
+//! paper's evaluation. Calibration constants live in [`gpu`].
+
+pub mod flops;
+pub mod gpu;
+pub mod memory;
+pub mod scaling;
+
+pub use flops::BlockFlops;
+pub use gpu::GpuSpec;
+pub use memory::MemoryModel;
+pub use scaling::{ScalingModel, StepTime};

@@ -1,0 +1,61 @@
+//! [`Runtime`]: one PJRT CPU client + an executable cache keyed by artifact
+//! name. Compilation happens once per artifact (`HloModuleProto::from_text_file`
+//! → `XlaComputation` → `client.compile`); subsequent loads hit the cache.
+
+use super::executable::Executable;
+use crate::error::{Error, Result};
+use crate::manifest::Manifest;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+    /// cumulative compile time, for the perf log
+    pub compile_seconds: RefCell<f64>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(BTreeMap::new()),
+            compile_seconds: RefCell::new(0.0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-once, cached) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.artifact_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+            Error::Manifest(format!("loading {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        *self.compile_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        let exec = Rc::new(Executable::new(exe, spec));
+        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,186 @@
+//! [`Executable`]: a compiled PJRT executable plus its manifest I/O spec.
+//! Validates shapes on the way in, decomposes the result tuple on the way
+//! out, and keeps per-executable run statistics for the perf pass.
+
+use crate::error::{Error, Result};
+use crate::manifest::{ArtifactSpec, DType, TensorSpec};
+use crate::tensor::{HostTensor, IntTensor};
+use std::cell::RefCell;
+use std::time::Instant;
+
+/// An input value: f32 tensor, i32 tensor, or f32 scalar.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(HostTensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&HostTensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => Err(Error::Shape("expected f32 tensor".into())),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Value::F32(t) => t.to_literal(),
+            Value::I32(t) => t.to_literal(),
+        }
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        let dt_ok = matches!(
+            (self, &spec.dtype),
+            (Value::F32(_), DType::F32) | (Value::I32(_), DType::I32)
+        );
+        dt_ok && self.shape() == spec.shape.as_slice()
+    }
+}
+
+impl From<HostTensor> for Value {
+    fn from(t: HostTensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+impl From<IntTensor> for Value {
+    fn from(t: IntTensor) -> Self {
+        Value::I32(t)
+    }
+}
+
+#[derive(Default, Clone, Debug)]
+pub struct ExecStats {
+    pub runs: usize,
+    pub total_seconds: f64,
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+    pub stats: RefCell<ExecStats>,
+}
+
+impl Executable {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable, spec: ArtifactSpec) -> Self {
+        Executable { exe, spec, stats: RefCell::new(ExecStats::default()) }
+    }
+
+    /// Execute with typed host values; returns the decomposed output tuple
+    /// as f32 host tensors (all our artifact outputs are f32).
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: {} inputs supplied, spec wants {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        for (i, (v, s)) in inputs.iter().zip(self.spec.inputs.iter()).enumerate() {
+            if !v.matches(s) {
+                return Err(Error::Shape(format!(
+                    "{}: input {} ('{}') got shape {:?}, spec wants {:?} {:?}",
+                    self.spec.name, i, s.name, v.shape(), s.shape, s.dtype
+                )));
+            }
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let out_lit = result[0][0].to_literal_sync()?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.runs += 1;
+            st.total_seconds += t0.elapsed().as_secs_f64();
+        }
+        // lowered with return_tuple=True: always a tuple, even for 1 output
+        let parts = out_lit.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: got {} outputs, spec wants {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Convenience: all-f32 inputs.
+    pub fn run_f32(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let vals: Vec<Value> = inputs.iter().cloned().map(Value::F32).collect();
+        self.run(&vals)
+    }
+
+    /// Hot-path variant: leading inputs are pre-converted literals (e.g.
+    /// cached block parameters — converted once per block, not once per
+    /// segment execution); the trailing `rest` tensors are converted here.
+    /// Shape validation for the literal prefix happened at cache build.
+    pub fn run_with_params(
+        &self,
+        params: &[xla::Literal],
+        rest: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let want = self.spec.inputs.len();
+        if params.len() + rest.len() != want {
+            return Err(Error::Shape(format!(
+                "{}: {}+{} inputs supplied, spec wants {}",
+                self.spec.name,
+                params.len(),
+                rest.len(),
+                want
+            )));
+        }
+        for (i, t) in rest.iter().enumerate() {
+            let s = &self.spec.inputs[params.len() + i];
+            if t.shape != s.shape {
+                return Err(Error::Shape(format!(
+                    "{}: input '{}' got {:?}, wants {:?}",
+                    self.spec.name, s.name, t.shape, s.shape
+                )));
+            }
+        }
+        let rest_lits: Vec<xla::Literal> =
+            rest.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let mut refs: Vec<&xla::Literal> = params.iter().collect();
+        refs.extend(rest_lits.iter());
+        let t0 = Instant::now();
+        let result = self.exe.execute::<&xla::Literal>(&refs)?;
+        let out_lit = result[0][0].to_literal_sync()?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.runs += 1;
+            st.total_seconds += t0.elapsed().as_secs_f64();
+        }
+        let parts = out_lit.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: got {} outputs, spec wants {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    pub fn mean_run_seconds(&self) -> f64 {
+        let st = self.stats.borrow();
+        if st.runs == 0 {
+            0.0
+        } else {
+            st.total_seconds / st.runs as f64
+        }
+    }
+}

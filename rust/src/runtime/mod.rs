@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the coordinator hot path. Python never runs here.
+
+mod client;
+pub mod executable;
+
+pub use client::Runtime;
+pub use executable::{Executable, Value};

@@ -1,0 +1,295 @@
+//! [`HostTensor`]: the host-side nd-array the coordinator moves between
+//! PJRT executions and collectives.
+//!
+//! Deliberately minimal — row-major f32 (plus an i32 variant for token
+//! batches), with exactly the ops the DAP/TP coordinators need: slicing and
+//! concatenation along an axis (shard / all_gather / all_to_all), axis
+//! splitting, elementwise add (reduce), and (de)serialization to
+//! [`xla::Literal`].
+
+use crate::error::{Error, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elems, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Row-major strides.
+    fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Slice `[start, start+len)` along `axis` (copies).
+    pub fn slice_axis(&self, axis: usize, start: usize, len: usize) -> Result<Self> {
+        if axis >= self.shape.len() || start + len > self.shape[axis] {
+            return Err(Error::Shape(format!(
+                "slice axis {axis} [{start}+{len}) of {:?}",
+                self.shape
+            )));
+        }
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let d = self.shape[axis];
+        let mut out = Vec::with_capacity(outer * len * inner);
+        for o in 0..outer {
+            let base = o * d * inner + start * inner;
+            out.extend_from_slice(&self.data[base..base + len * inner]);
+        }
+        let mut shape = self.shape.clone();
+        shape[axis] = len;
+        HostTensor::new(shape, out)
+    }
+
+    /// Split into `n` equal parts along `axis`.
+    pub fn split_axis(&self, axis: usize, n: usize) -> Result<Vec<Self>> {
+        if axis >= self.shape.len() || self.shape[axis] % n != 0 {
+            return Err(Error::Shape(format!(
+                "split axis {axis} of {:?} into {n}",
+                self.shape
+            )));
+        }
+        let part = self.shape[axis] / n;
+        (0..n).map(|i| self.slice_axis(axis, i * part, part)).collect()
+    }
+
+    /// Concatenate along `axis`.
+    pub fn concat(parts: &[Self], axis: usize) -> Result<Self> {
+        let first = parts.first().ok_or_else(|| Error::Shape("concat of 0 tensors".into()))?;
+        let nd = first.shape.len();
+        if axis >= nd {
+            return Err(Error::Shape(format!("concat axis {axis} of {nd}-d")));
+        }
+        for p in parts {
+            if p.shape.len() != nd
+                || p.shape[..axis] != first.shape[..axis]
+                || p.shape[axis + 1..] != first.shape[axis + 1..]
+            {
+                return Err(Error::Shape(format!(
+                    "concat mismatch {:?} vs {:?}",
+                    p.shape, first.shape
+                )));
+            }
+        }
+        let outer: usize = first.shape[..axis].iter().product();
+        let inner: usize = first.shape[axis + 1..].iter().product();
+        let total_axis: usize = parts.iter().map(|p| p.shape[axis]).sum();
+        let mut out = Vec::with_capacity(outer * total_axis * inner);
+        for o in 0..outer {
+            for p in parts {
+                let d = p.shape[axis];
+                let base = o * d * inner;
+                out.extend_from_slice(&p.data[base..base + d * inner]);
+            }
+        }
+        let mut shape = first.shape.clone();
+        shape[axis] = total_axis;
+        HostTensor::new(shape, out)
+    }
+
+    /// Elementwise in-place add (for reductions).
+    pub fn add_assign(&mut self, other: &Self) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "add {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Swap the first two axes (needed by inference drivers for z^T views).
+    pub fn transpose01(&self) -> Result<Self> {
+        if self.shape.len() < 2 {
+            return Err(Error::Shape("transpose01 needs ndim>=2".into()));
+        }
+        let (d0, d1) = (self.shape[0], self.shape[1]);
+        let inner: usize = self.shape[2..].iter().product();
+        let mut out = vec![0.0f32; self.data.len()];
+        for i in 0..d0 {
+            for j in 0..d1 {
+                let src = (i * d1 + j) * inner;
+                let dst = (j * d0 + i) * inner;
+                out[dst..dst + inner].copy_from_slice(&self.data[src..src + inner]);
+            }
+        }
+        let mut shape = self.shape.clone();
+        shape.swap(0, 1);
+        HostTensor::new(shape, out)
+    }
+
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    // ---------------------------------------------------------- literals
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&self.data);
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        HostTensor::new(dims, data)
+    }
+
+    fn _strides_doc() {
+        // strides() kept private; exposed ops cover coordinator needs.
+        let _ = HostTensor::zeros(&[1]).strides();
+    }
+}
+
+/// Integer tensor (token ids, bin labels) — converted to S32 literals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elems, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(IntTensor { shape, data })
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&self.data);
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor::new(shape.to_vec(), (0..n).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn slice_concat_roundtrip() {
+        let x = t(&[4, 6, 3]);
+        for axis in 0..3 {
+            let n = if axis == 2 { 3 } else { 2 };
+            let parts = x.split_axis(axis, n).unwrap();
+            let back = HostTensor::concat(&parts, axis).unwrap();
+            assert_eq!(back, x, "axis {axis}");
+        }
+    }
+
+    #[test]
+    fn slice_values() {
+        let x = t(&[2, 3]);
+        let s = x.slice_axis(1, 1, 2).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![1.0, 2.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose01_roundtrip() {
+        let x = t(&[3, 5, 2]);
+        let tt = x.transpose01().unwrap().transpose01().unwrap();
+        assert_eq!(tt, x);
+        let y = x.transpose01().unwrap();
+        assert_eq!(y.shape, vec![5, 3, 2]);
+        // spot check element [i=1, j=2] -> [2, 1]
+        assert_eq!(y.data[(2 * 3 + 1) * 2], x.data[(1 * 5 + 2) * 2]);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = t(&[2, 2]);
+        let b = t(&[2, 2]);
+        a.add_assign(&b).unwrap();
+        assert_eq!(a.data, vec![0.0, 2.0, 4.0, 6.0]);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let x = t(&[2, 2]);
+        assert!(x.slice_axis(2, 0, 1).is_err());
+        assert!(x.slice_axis(0, 1, 2).is_err());
+        assert!(x.split_axis(0, 3).is_err());
+        let y = t(&[3, 2]);
+        assert!(HostTensor::concat(&[x.clone(), y], 1).is_err());
+        let mut a = t(&[2, 2]);
+        assert!(a.add_assign(&t(&[4])).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Checkpointing: parameters as raw little-endian f32 in canonical leaf
+//! order (the same layout as the exported `*_params.bin`), plus a small
+//! JSON sidecar with step + shapes for integrity checking on load.
+
+use crate::error::{Error, Result};
+use crate::json::Json;
+use crate::tensor::HostTensor;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub fn save(dir: &str, preset: &str, step: usize, params: &[HostTensor]) -> Result<String> {
+    std::fs::create_dir_all(dir)?;
+    let stem = format!("{preset}_step{step:06}");
+    let bin_path = Path::new(dir).join(format!("{stem}.bin"));
+    let mut bytes = Vec::new();
+    for p in params {
+        for v in &p.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(&bin_path, &bytes)?;
+
+    let mut meta = BTreeMap::new();
+    meta.insert("preset".to_string(), Json::Str(preset.to_string()));
+    meta.insert("step".to_string(), Json::Num(step as f64));
+    meta.insert(
+        "shapes".to_string(),
+        Json::Arr(
+            params
+                .iter()
+                .map(|p| {
+                    Json::Arr(p.shape.iter().map(|&d| Json::Num(d as f64)).collect())
+                })
+                .collect(),
+        ),
+    );
+    let meta_path = Path::new(dir).join(format!("{stem}.json"));
+    std::fs::write(&meta_path, Json::Obj(meta).to_string())?;
+    Ok(bin_path.display().to_string())
+}
+
+pub fn load(dir: &str, preset: &str, step: usize) -> Result<(usize, Vec<HostTensor>)> {
+    let stem = format!("{preset}_step{step:06}");
+    let meta_src = std::fs::read_to_string(Path::new(dir).join(format!("{stem}.json")))?;
+    let meta = Json::parse(&meta_src)?;
+    let got_step = meta.get("step")?.as_usize()?;
+    let shapes: Vec<Vec<usize>> = meta
+        .get("shapes")?
+        .as_arr()?
+        .iter()
+        .map(|s| s.as_arr()?.iter().map(|d| d.as_usize()).collect())
+        .collect::<Result<_>>()?;
+    let bytes = std::fs::read(Path::new(dir).join(format!("{stem}.bin")))?;
+    let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+    if bytes.len() != total * 4 {
+        return Err(Error::msg(format!(
+            "checkpoint {stem}: {} bytes, expected {}",
+            bytes.len(),
+            total * 4
+        )));
+    }
+    let mut params = Vec::with_capacity(shapes.len());
+    let mut off = 0usize;
+    for shape in shapes {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = bytes[off * 4..(off + n) * 4]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        params.push(HostTensor::new(shape, data)?);
+        off += n;
+    }
+    Ok((got_step, params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("ff_ckpt_test");
+        let dir = dir.to_str().unwrap();
+        let params = vec![
+            HostTensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap(),
+            HostTensor::scalar(7.5),
+        ];
+        save(dir, "tiny", 42, &params).unwrap();
+        let (step, loaded) = load(dir, "tiny", 42).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(loaded, params);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_checkpoint_errors() {
+        assert!(load("/nonexistent_dir_xyz", "tiny", 1).is_err());
+    }
+}

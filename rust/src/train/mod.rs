@@ -1,0 +1,29 @@
+//! Training runtime: synthetic co-evolution data, the data-parallel
+//! trainer (grad_step executable → ring all-reduce → adam_update
+//! executable), LR schedule, gradient clipping, checkpointing.
+
+pub mod checkpoint;
+pub mod data;
+pub mod trainer;
+
+pub use data::DataGen;
+pub use trainer::{TrainReport, Trainer};
+
+/// Linear-warmup → constant LR schedule (AlphaFold's training recipe shape).
+pub fn lr_at(step: usize, base_lr: f32, warmup: usize) -> f32 {
+    if warmup == 0 || step >= warmup {
+        base_lr
+    } else {
+        base_lr * (step + 1) as f32 / warmup as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn warmup_ramps() {
+        assert!(super::lr_at(0, 1.0, 10) < 0.2);
+        assert_eq!(super::lr_at(10, 1.0, 10), 1.0);
+        assert_eq!(super::lr_at(5, 1.0, 0), 1.0);
+    }
+}

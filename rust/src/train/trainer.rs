@@ -1,0 +1,231 @@
+//! Data-parallel trainer.
+//!
+//! Per step, per DP rank: `grad_step` executable (loss + grads) on that
+//! rank's batch → host ring all-reduce of the gradient leaves (the exact
+//! algorithm the Fig 11 cost model prices) → gradient clip → `adam_update`
+//! executable. Parameters and optimizer state live as host tensors between
+//! steps (the coordinator owns state; PJRT owns math).
+
+use super::data::{Batch, DataGen};
+use super::lr_at;
+use crate::comm::ring::ring_all_reduce;
+use crate::config::TrainConfig;
+use crate::error::{Error, Result};
+use crate::runtime::{Runtime, Value};
+use crate::tensor::HostTensor;
+use std::rc::Rc;
+use std::time::Instant;
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    preset: String,
+    pub dp: usize,
+    pub params: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub step: usize,
+    pub cfg: TrainConfig,
+    grad_exe: Rc<crate::runtime::Executable>,
+    adam_exe: Rc<crate::runtime::Executable>,
+    gens: Vec<DataGen>,
+    pub history: Vec<(usize, f32)>,
+    pub wire_bytes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub final_loss: f32,
+    pub initial_loss: f32,
+    pub seconds: f64,
+    pub steps_per_sec: f64,
+    pub wire_bytes: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, preset: &str, dp: usize, cfg: TrainConfig) -> Result<Self> {
+        let params = rt.manifest.load_params(preset)?;
+        let zeros: Vec<HostTensor> =
+            params.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
+        let grad_exe = rt.load(&format!("{preset}/grad_step"))?;
+        let adam_exe = rt.load(&format!("{preset}/adam_update"))?;
+        let model_cfg = crate::config::ModelConfig::preset(preset)?;
+        let gens = (0..dp)
+            .map(|r| DataGen::new(model_cfg.clone(), cfg.seed.wrapping_add(1000 * r as u64)))
+            .collect();
+        Ok(Trainer {
+            rt,
+            preset: preset.to_string(),
+            dp,
+            m: zeros.clone(),
+            v: zeros,
+            params,
+            step: 0,
+            cfg,
+            grad_exe,
+            adam_exe,
+            gens,
+            history: Vec::new(),
+            wire_bytes: 0,
+        })
+    }
+
+    fn batch_values(b: &Batch) -> Vec<Value> {
+        // canonical batch flatten order: dict keys sorted by jax =
+        // dist_bins, msa_labels, msa_mask, msa_tokens
+        vec![
+            b.dist_bins.clone().into(),
+            b.msa_labels.clone().into(),
+            b.msa_mask.clone().into(),
+            b.msa_tokens.clone().into(),
+        ]
+    }
+
+    /// One optimizer step over `dp` rank-local batches. Returns mean loss.
+    pub fn train_step(&mut self) -> Result<f32> {
+        let n_leaves = self.params.len();
+        let mut grads_acc: Option<Vec<HostTensor>> = None;
+        let mut loss_acc = 0.0f32;
+
+        // per-rank forward/backward
+        let mut per_rank_grads: Vec<Vec<f32>> = Vec::with_capacity(self.dp);
+        let mut leaf_shapes: Vec<Vec<usize>> = Vec::new();
+        for r in 0..self.dp {
+            let batch = self.gens[r].next_batch();
+            let mut args: Vec<Value> =
+                self.params.iter().cloned().map(Value::F32).collect();
+            args.extend(Self::batch_values(&batch));
+            let out = self.grad_exe.run(&args)?;
+            // outputs: loss scalar, then grads in canonical order
+            loss_acc += out[0].data[0];
+            let grads = &out[1..];
+            if leaf_shapes.is_empty() {
+                leaf_shapes = grads.iter().map(|g| g.shape.clone()).collect();
+            }
+            if self.dp == 1 {
+                grads_acc = Some(grads.to_vec());
+            } else {
+                // flatten for the ring
+                let flat: Vec<f32> =
+                    grads.iter().flat_map(|g| g.data.iter().copied()).collect();
+                per_rank_grads.push(flat);
+            }
+        }
+
+        // ring all-reduce + average
+        let grads: Vec<HostTensor> = if self.dp == 1 {
+            grads_acc.take().ok_or_else(|| Error::msg("no grads"))?
+        } else {
+            let (reduced, wire) = ring_all_reduce(per_rank_grads)?;
+            self.wire_bytes += wire;
+            let mut flat = reduced.into_iter().next().unwrap();
+            let inv = 1.0 / self.dp as f32;
+            for x in flat.iter_mut() {
+                *x *= inv;
+            }
+            let mut out = Vec::with_capacity(n_leaves);
+            let mut off = 0usize;
+            for shape in &leaf_shapes {
+                let n: usize = shape.iter().product();
+                out.push(HostTensor::new(shape.clone(), flat[off..off + n].to_vec())?);
+                off += n;
+            }
+            out
+        };
+
+        // global-norm gradient clip (host-side; tiny vs step cost)
+        let grads = match self.cfg.grad_clip {
+            Some(clip) => clip_by_global_norm(grads, clip),
+            None => grads,
+        };
+
+        // adam update via HLO
+        self.step += 1;
+        let lr = lr_at(self.step - 1, self.cfg.lr, self.cfg.warmup_steps);
+        let mut args: Vec<Value> = Vec::with_capacity(4 * n_leaves + 2);
+        args.extend(self.params.iter().cloned().map(Value::F32));
+        args.extend(grads.into_iter().map(Value::F32));
+        args.extend(self.m.iter().cloned().map(Value::F32));
+        args.extend(self.v.iter().cloned().map(Value::F32));
+        args.push(Value::F32(HostTensor::scalar(self.step as f32)));
+        args.push(Value::F32(HostTensor::scalar(lr)));
+        let out = self.adam_exe.run(&args)?;
+        let (p2, rest) = out.split_at(n_leaves);
+        let (m2, v2) = rest.split_at(n_leaves);
+        self.params = p2.to_vec();
+        self.m = m2.to_vec();
+        self.v = v2.to_vec();
+
+        let loss = loss_acc / self.dp as f32;
+        self.history.push((self.step, loss));
+        Ok(loss)
+    }
+
+    /// Run the configured number of steps; log + checkpoint per config.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let t0 = Instant::now();
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..self.cfg.steps {
+            let loss = self.train_step()?;
+            if first.is_none() {
+                first = Some(loss);
+            }
+            last = loss;
+            if self.step % self.cfg.log_every.max(1) == 0 {
+                println!(
+                    "step {:>5}  loss {:.4}  lr {:.2e}",
+                    self.step,
+                    loss,
+                    lr_at(self.step - 1, self.cfg.lr, self.cfg.warmup_steps)
+                );
+            }
+            if let Some(dir) = &self.cfg.checkpoint_dir {
+                if self.step % self.cfg.checkpoint_every.max(1) == 0 {
+                    super::checkpoint::save(dir, &self.preset, self.step, &self.params)?;
+                }
+            }
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        Ok(TrainReport {
+            steps: self.cfg.steps,
+            final_loss: last,
+            initial_loss: first.unwrap_or(f32::NAN),
+            seconds,
+            steps_per_sec: self.cfg.steps as f64 / seconds.max(1e-9),
+            wire_bytes: self.wire_bytes,
+        })
+    }
+}
+
+fn clip_by_global_norm(mut grads: Vec<HostTensor>, clip: f32) -> Vec<HostTensor> {
+    let sq: f64 = grads
+        .iter()
+        .flat_map(|g| g.data.iter())
+        .map(|&x| (x as f64) * (x as f64))
+        .sum();
+    let norm = sq.sqrt() as f32;
+    if norm > clip && norm > 0.0 {
+        let s = clip / norm;
+        for g in grads.iter_mut() {
+            g.scale(s);
+        }
+    }
+    grads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_scales_down_only() {
+        let big = vec![HostTensor::full(&[4], 10.0)];
+        let out = clip_by_global_norm(big, 1.0);
+        let norm: f32 = out[0].data.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+        let small = vec![HostTensor::full(&[4], 0.01)];
+        let out = clip_by_global_norm(small.clone(), 1.0);
+        assert_eq!(out[0].data, small[0].data);
+    }
+}

@@ -1,0 +1,73 @@
+//! Inference-path integration: fused vs naive full model, chunk planning
+//! against the memory model, Table V verdict wiring.
+
+use fastfold::config::ModelConfig;
+use fastfold::inference::{chunking, single_device_forward};
+use fastfold::perfmodel::{GpuSpec, MemoryModel};
+use fastfold::runtime::Runtime;
+use fastfold::train::DataGen;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+#[test]
+fn fused_and_naive_model_agree() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.manifest.load_params("tiny").unwrap();
+    let mut gen = DataGen::new(ModelConfig::tiny(), 13);
+    let batch = gen.next_batch();
+    let (m_f, z_f) =
+        single_device_forward(&rt, "tiny", &params, &batch.msa_tokens, false).unwrap();
+    let (m_n, z_n) =
+        single_device_forward(&rt, "tiny", &params, &batch.msa_tokens, true).unwrap();
+    assert!(m_f.max_abs_diff(&m_n) < 1e-3, "{}", m_f.max_abs_diff(&m_n));
+    assert!(z_f.max_abs_diff(&z_n) < 1e-3);
+}
+
+#[test]
+fn logits_shapes_match_config() {
+    let Some(rt) = runtime() else { return };
+    let cfg = ModelConfig::tiny();
+    let params = rt.manifest.load_params("tiny").unwrap();
+    let mut gen = DataGen::new(cfg.clone(), 17);
+    let batch = gen.next_batch();
+    let (msa_logits, dist_logits) =
+        single_device_forward(&rt, "tiny", &params, &batch.msa_tokens, false).unwrap();
+    assert_eq!(msa_logits.shape, vec![cfg.n_seq, cfg.n_res, cfg.msa_vocab]);
+    assert_eq!(dist_logits.shape, vec![cfg.n_res, cfg.n_res, cfg.n_dist_bins]);
+}
+
+#[test]
+fn table5_verdicts() {
+    // memory-model OOM pattern of paper Table V
+    let mem = MemoryModel::default();
+    let gpu = GpuSpec::a100_40g();
+    // baselines (with best-effort chunking)
+    assert!(chunking::plan_chunks(&ModelConfig::inference(2560), &mem, &gpu).is_some());
+    assert!(chunking::plan_chunks(&ModelConfig::inference(3072), &mem, &gpu).is_none());
+    // FastFold DAP
+    assert!(chunking::memory_verdict(3072, 8, 1, &mem, &gpu).is_ok());
+    assert!(chunking::memory_verdict(4096, 8, 1, &mem, &gpu).is_ok());
+    assert!(chunking::memory_verdict(4096, 4, 1, &mem, &gpu).is_err());
+}
+
+#[test]
+fn small_preset_also_runs() {
+    let Some(rt) = runtime() else { return };
+    if !rt.manifest.artifacts.contains_key("small/block_fwd") {
+        eprintln!("skipping: small preset not exported");
+        return;
+    }
+    let params = rt.manifest.load_params("small").unwrap();
+    let mut gen = DataGen::new(ModelConfig::small(), 19);
+    let batch = gen.next_batch();
+    let (m, z) =
+        single_device_forward(&rt, "small", &params, &batch.msa_tokens, false).unwrap();
+    assert!(m.data.iter().all(|x| x.is_finite()));
+    assert!(z.data.iter().all(|x| x.is_finite()));
+}

@@ -1,0 +1,110 @@
+//! Runtime integration: manifest loading, artifact compile+execute,
+//! input validation, fused-vs-naive numerics at block level.
+//!
+//! Requires `make artifacts` (tiny preset). Tests skip gracefully if the
+//! artifacts directory is missing so `cargo test` stays green pre-build.
+
+use fastfold::manifest::Manifest;
+use fastfold::rng::Rng;
+use fastfold::runtime::Runtime;
+use fastfold::tensor::HostTensor;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::new(shape.to_vec(), rng.normal_vec(n, 1.0)).unwrap()
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let Some(rt) = runtime() else { return };
+    let man = &rt.manifest;
+    assert!(man.artifacts.contains_key("tiny/block_fwd"));
+    assert!(man.artifacts.contains_key("tiny/dap2/msa_row_core"));
+    // params binary matches recorded total
+    let params = man.load_params("tiny").unwrap();
+    let total: usize = params.iter().map(|p| p.len()).sum();
+    assert_eq!(total, man.params["tiny"].total);
+    // config param count matches the closed-form counter
+    let cfg = fastfold::config::ModelConfig::tiny();
+    assert_eq!(man.params["tiny"].count, cfg.param_count());
+}
+
+#[test]
+fn manifest_missing_dir_errors() {
+    assert!(Manifest::load("/definitely/not/here").is_err());
+}
+
+#[test]
+fn block_forward_executes_and_matches_naive() {
+    let Some(rt) = runtime() else { return };
+    let cfg = fastfold::config::ModelConfig::tiny();
+    let params = rt.manifest.load_params("tiny").unwrap();
+    let idx = rt.manifest.block_leaf_indices("tiny", 0).unwrap();
+    let mut rng = Rng::new(7);
+    let m = rand_tensor(&mut rng, &[cfg.n_seq, cfg.n_res, cfg.d_msa]);
+    let z = rand_tensor(&mut rng, &[cfg.n_res, cfg.n_res, cfg.d_pair]);
+
+    let mut args: Vec<HostTensor> = idx.iter().map(|&i| params[i].clone()).collect();
+    args.push(m.clone());
+    args.push(z.clone());
+
+    let fused = rt.load("tiny/block_fwd").unwrap().run_f32(&args).unwrap();
+    let naive = rt.load("tiny/block_fwd_naive").unwrap().run_f32(&args).unwrap();
+    assert_eq!(fused.len(), 2);
+    assert_eq!(fused[0].shape, m.shape);
+    assert_eq!(fused[1].shape, z.shape);
+    // §V.D: fused kernels change instruction order, not math
+    assert!(fused[0].max_abs_diff(&naive[0]) < 1e-3, "m diff");
+    assert!(fused[1].max_abs_diff(&naive[1]) < 1e-3, "z diff");
+    // and the block actually transforms the input
+    assert!(fused[0].max_abs_diff(&m) > 1e-3);
+}
+
+#[test]
+fn executable_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("tiny/block_fwd").unwrap();
+    // wrong arity
+    assert!(exe.run_f32(&[HostTensor::zeros(&[2, 2])]).is_err());
+    // right arity, wrong shapes
+    let n = exe.spec.inputs.len();
+    let bad: Vec<HostTensor> = (0..n).map(|_| HostTensor::zeros(&[3])).collect();
+    assert!(exe.run_f32(&bad).is_err());
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.load("tiny/heads").unwrap();
+    let before = rt.cached();
+    let b = rt.load("tiny/heads").unwrap();
+    assert_eq!(rt.cached(), before);
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn model_fwd_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.manifest.load_params("tiny").unwrap();
+    let cfg = fastfold::config::ModelConfig::tiny();
+    let mut gen = fastfold::train::DataGen::new(cfg, 3);
+    let batch = gen.next_batch();
+    let run = || {
+        fastfold::inference::single_device_forward(
+            &rt, "tiny", &params, &batch.msa_tokens, false,
+        )
+        .unwrap()
+    };
+    let (m1, z1) = run();
+    let (m2, z2) = run();
+    assert_eq!(m1.max_abs_diff(&m2), 0.0);
+    assert_eq!(z1.max_abs_diff(&z2), 0.0);
+}

@@ -1,0 +1,177 @@
+//! Property-based tests (hand-rolled generator loop over the deterministic
+//! Rng — proptest is unavailable offline): invariants of the tensor ops,
+//! collectives, ring reduction, JSON codec, and the schedule.
+
+use fastfold::comm::ring::ring_all_reduce;
+use fastfold::comm::Collectives;
+use fastfold::json::Json;
+use fastfold::rng::Rng;
+use fastfold::tensor::HostTensor;
+
+const CASES: usize = 60;
+
+fn rand_shape(rng: &mut Rng, maxd: usize) -> Vec<usize> {
+    let nd = 1 + rng.below(3);
+    (0..nd).map(|_| 1 + rng.below(maxd)).collect()
+}
+
+#[test]
+fn prop_split_concat_identity() {
+    let mut rng = Rng::new(100);
+    for case in 0..CASES {
+        let mut shape = rand_shape(&mut rng, 6);
+        let axis = rng.below(shape.len());
+        let n = 1 + rng.below(4);
+        shape[axis] *= n; // ensure divisibility
+        let numel: usize = shape.iter().product();
+        let t = HostTensor::new(shape.clone(), rng.normal_vec(numel, 1.0)).unwrap();
+        let parts = t.split_axis(axis, n).unwrap();
+        assert_eq!(parts.len(), n);
+        let back = HostTensor::concat(&parts, axis).unwrap();
+        assert_eq!(back, t, "case {case} shape {shape:?} axis {axis} n {n}");
+    }
+}
+
+#[test]
+fn prop_all_to_all_roundtrip() {
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let n = 2 + rng.below(3);
+        let a = n * (1 + rng.below(3));
+        let b = n * (1 + rng.below(3));
+        let c = 1 + rng.below(5);
+        let full = HostTensor::new(vec![a, b, c], rng.normal_vec(a * b * c, 1.0)).unwrap();
+        let comm = Collectives::new(n);
+        let shards = full.split_axis(0, n).unwrap();
+        let fwd = comm.all_to_all(&shards, 1, 0).unwrap();
+        let back = comm.all_to_all(&fwd, 0, 1).unwrap();
+        for (x, y) in back.iter().zip(shards.iter()) {
+            assert_eq!(x, y, "case {case} n={n} dims=({a},{b},{c})");
+        }
+    }
+}
+
+#[test]
+fn prop_gather_scatter_duality() {
+    // reduce_scatter(all_gather(x)) == n * x  (the vjp pair used by the
+    // DAP backward tape)
+    let mut rng = Rng::new(102);
+    for _ in 0..CASES {
+        let n = 2 + rng.below(3);
+        let rows = 1 + rng.below(4);
+        let cols = 1 + rng.below(6);
+        let shards: Vec<HostTensor> = (0..n)
+            .map(|_| HostTensor::new(vec![rows, cols], rng.normal_vec(rows * cols, 1.0)).unwrap())
+            .collect();
+        let comm = Collectives::new(n);
+        let full = comm.all_gather(&shards, 0).unwrap();
+        let back = comm.reduce_scatter(&full, 0).unwrap();
+        for (r, (got, want)) in back.iter().zip(shards.iter()).enumerate() {
+            let mut scaled = want.clone();
+            scaled.scale(n as f32);
+            assert!(got.max_abs_diff(&scaled) < 1e-4 * n as f32, "rank {r}");
+        }
+    }
+}
+
+#[test]
+fn prop_ring_all_reduce_matches_sum() {
+    let mut rng = Rng::new(103);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(8);
+        let len = 1 + rng.below(200);
+        let ranks: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(len, 1.0)).collect();
+        let want: Vec<f32> = (0..len)
+            .map(|i| ranks.iter().map(|r| r[i]).sum::<f32>())
+            .collect();
+        let (got, _) = ring_all_reduce(ranks).unwrap();
+        for r in &got {
+            for (a, b) in r.iter().zip(want.iter()) {
+                assert!((a - b).abs() < 1e-3, "n={n} len={len}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Rng::new(104);
+    for _ in 0..CASES {
+        let v = gen_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v, "text: {text}");
+    }
+}
+
+fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bernoulli(0.5)),
+        2 => Json::Num((rng.normal() * 100.0).round()),
+        3 => {
+            let strs = ["hello", "wörld", "a\"b", "tab\there", "line\nbreak", ""];
+            Json::Str(strs[rng.below(strs.len())].to_string())
+        }
+        4 => Json::Arr((0..rng.below(4)).map(|_| gen_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..rng.below(4) {
+                m.insert(format!("k{i}"), gen_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_transpose01_involution() {
+    let mut rng = Rng::new(105);
+    for _ in 0..CASES {
+        let a = 1 + rng.below(6);
+        let b = 1 + rng.below(6);
+        let c = 1 + rng.below(4);
+        let t = HostTensor::new(vec![a, b, c], rng.normal_vec(a * b * c, 1.0)).unwrap();
+        assert_eq!(t.transpose01().unwrap().transpose01().unwrap(), t);
+    }
+}
+
+#[test]
+fn prop_memory_model_monotone() {
+    // peak memory is monotone in sequence length and antitone in dap degree
+    use fastfold::config::ModelConfig;
+    use fastfold::perfmodel::MemoryModel;
+    let m = MemoryModel::default();
+    let mut rng = Rng::new(106);
+    for _ in 0..CASES {
+        let r1 = 256 + 64 * rng.below(30);
+        let r2 = r1 + 64 * (1 + rng.below(10));
+        let dap = 1 << rng.below(4);
+        let p1 = m.inference_peak(&ModelConfig::inference(r1), dap, 1);
+        let p2 = m.inference_peak(&ModelConfig::inference(r2), dap, 1);
+        assert!(p2 >= p1, "r {r1}->{r2} dap {dap}");
+        let p_more = m.inference_peak(&ModelConfig::inference(r1), dap * 2, 1);
+        assert!(p_more <= p1, "dap {dap}->{} at r={r1}", dap * 2);
+    }
+}
+
+#[test]
+fn prop_scaling_model_sane() {
+    // step time decreases (or stays) with more DAP ranks; efficiency <= 1
+    use fastfold::config::ModelConfig;
+    use fastfold::perfmodel::gpu::ImplProfile;
+    use fastfold::perfmodel::scaling::{MpMethod, ScalingModel};
+    let m = ScalingModel::default();
+    let p = ImplProfile::fastfold();
+    for cfg in [ModelConfig::initial_training(), ModelConfig::finetune()] {
+        let mut prev = f64::INFINITY;
+        for n in [1usize, 2, 4, 8] {
+            let t = m.train_step(&cfg, &p, MpMethod::Dap, n, true).total();
+            assert!(t > 0.0);
+            assert!(t <= prev * 1.001, "{}: t({n})={t} prev={prev}", cfg.name);
+            let t1 = m.train_step(&cfg, &p, MpMethod::Dap, 1, true).total();
+            assert!(t1 / (n as f64 * t) <= 1.02);
+            prev = t;
+        }
+    }
+}
