@@ -6,9 +6,11 @@
 
 use fastfold::config::ModelConfig;
 use fastfold::dap::DapCoordinator;
+use fastfold::inference::autochunk;
 use fastfold::metrics::Table;
 use fastfold::perfmodel::gpu::ImplProfile;
 use fastfold::perfmodel::scaling::{MpMethod, ScalingModel};
+use fastfold::perfmodel::{GpuSpec, MemoryModel};
 use fastfold::runtime::Runtime;
 use fastfold::train::DataGen;
 
@@ -63,4 +65,17 @@ fn main() {
     }
     t.print();
     println!("\n(paper: 7.5–9.5x vs OpenFold, 9.3–11.6x vs AlphaFold.)");
+
+    // AutoChunk planner: what the single-device baseline must do to fit
+    // each length (and where it stops fitting entirely — the Table V OOM
+    // handoff to DAP)
+    let mem = MemoryModel::default();
+    let gpu = GpuSpec::a100_40g();
+    println!("\nAutoChunk strategies backing the baseline rows above:");
+    for &len in &[1024usize, 1536, 2048, 2560, 3072] {
+        match autochunk::plan(&ModelConfig::inference(len), &mem, &gpu, 1) {
+            Ok(plan) => println!("  {}", plan.summary()),
+            Err(e) => println!("  autochunk[infer_{len} dap=1]: {e}"),
+        }
+    }
 }

@@ -188,12 +188,37 @@ impl Default for TrainConfig {
     }
 }
 
+/// AutoChunk planner settings (paper §IV), settable from the `[autochunk]`
+/// TOML section so deployments can retarget the planner per fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoChunkConfig {
+    /// Consult the planner (memory guard) before long-sequence inference.
+    pub enabled: bool,
+    /// Device the planner budgets against (a `GpuSpec::by_name` name).
+    pub gpu: String,
+    /// Fraction of the transient budget left free when choosing chunk
+    /// counts (allocator fragmentation / workspace reservation). Defaults
+    /// to [`crate::inference::autochunk::CHUNK_HEADROOM`].
+    pub headroom: f64,
+}
+
+impl Default for AutoChunkConfig {
+    fn default() -> Self {
+        AutoChunkConfig {
+            enabled: true,
+            gpu: "a100_40g".into(),
+            headroom: crate::inference::autochunk::CHUNK_HEADROOM,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub preset: String,
     pub artifacts_dir: String,
     pub parallel: ParallelConfig,
     pub train: TrainConfig,
+    pub autochunk: AutoChunkConfig,
 }
 
 impl Default for RunConfig {
@@ -203,6 +228,7 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             parallel: ParallelConfig::default(),
             train: TrainConfig::default(),
+            autochunk: AutoChunkConfig::default(),
         }
     }
 }
@@ -226,9 +252,13 @@ impl TomlValue {
     }
 
     pub fn as_f32(&self) -> Result<f32> {
+        Ok(self.as_f64()? as f32)
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
         match self {
-            TomlValue::Float(f) => Ok(*f as f32),
-            TomlValue::Int(i) => Ok(*i as f32),
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
             _ => Err(Error::Config(format!("expected float, got {self:?}"))),
         }
     }
@@ -363,6 +393,19 @@ impl RunConfig {
                 cfg.train.grad_clip = Some(v.as_f32()?);
             }
         }
+        if let Some(a) = doc.get("autochunk") {
+            if let Some(v) = a.get("enabled") {
+                cfg.autochunk.enabled = v.as_bool()?;
+            }
+            if let Some(v) = a.get("gpu") {
+                cfg.autochunk.gpu = v.as_str()?.to_string();
+            }
+            if let Some(v) = a.get("headroom") {
+                let h = v.as_f64()?;
+                crate::inference::autochunk::validate_headroom(h)?;
+                cfg.autochunk.headroom = h;
+            }
+        }
         Ok(cfg)
     }
 }
@@ -409,6 +452,11 @@ overlap = false
 [train]
 steps = 50
 lr = 0.0005
+
+[autochunk]
+enabled = true
+gpu = "tpu_v3"
+headroom = 0.25
 "#;
         let cfg = RunConfig::from_toml(src).unwrap();
         assert_eq!(cfg.preset, "small");
@@ -416,6 +464,16 @@ lr = 0.0005
         assert!(!cfg.parallel.overlap);
         assert_eq!(cfg.train.steps, 50);
         assert!((cfg.train.lr - 5e-4).abs() < 1e-9);
+        assert!(cfg.autochunk.enabled);
+        assert_eq!(cfg.autochunk.gpu, "tpu_v3");
+        assert!((cfg.autochunk.headroom - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn autochunk_defaults_and_validation() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.autochunk, AutoChunkConfig::default());
+        assert!(RunConfig::from_toml("[autochunk]\nheadroom = 1.5").is_err());
     }
 
     #[test]

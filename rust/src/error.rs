@@ -1,45 +1,110 @@
 //! Crate-wide error type. Everything funnels into [`Error`]; `Result<T>` is
-//! the crate-default result alias.
+//! the crate-default result alias. Hand-rolled `Display`/`From` impls (the
+//! offline build has no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+/// All failure modes of the coordinator, runtime, and models.
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("manifest error: {0}")]
+    /// Error from the XLA/PJRT layer.
+    Xla(xla::Error),
+    /// Filesystem / IO failure.
+    Io(std::io::Error),
+    /// Artifact-manifest contract violation.
     Manifest(String),
-
-    #[error("json parse error: {0}")]
+    /// JSON parse failure.
     Json(String),
-
-    #[error("config error: {0}")]
+    /// Bad configuration (preset, TOML, CLI flag).
     Config(String),
-
-    #[error("shape mismatch: {0}")]
+    /// Tensor shape mismatch.
     Shape(String),
-
-    #[error("communicator error: {0}")]
+    /// Collective-communication misuse.
     Comm(String),
-
-    #[error("scheduler error: {0}")]
+    /// DAP schedule violation.
     Schedule(String),
-
-    #[error("out of (simulated) device memory: need {need_gib:.2} GiB, capacity {cap_gib:.2} GiB")]
-    SimOom { need_gib: f64, cap_gib: f64 },
-
-    #[error("{0}")]
+    /// The memory model says this plan exceeds device capacity
+    /// (the paper's Table V OOM verdict).
+    SimOom {
+        /// Required memory in decimal GB.
+        need_gb: f64,
+        /// Device capacity in decimal GB.
+        cap_gb: f64,
+    },
+    /// Free-form error message.
     Msg(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Manifest(s) => write!(f, "manifest error: {s}"),
+            Error::Json(s) => write!(f, "json parse error: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Shape(s) => write!(f, "shape mismatch: {s}"),
+            Error::Comm(s) => write!(f, "communicator error: {s}"),
+            Error::Schedule(s) => write!(f, "scheduler error: {s}"),
+            Error::SimOom { need_gb, cap_gb } => write!(
+                f,
+                "out of (simulated) device memory: need {need_gb:.2} GB, \
+                 capacity {cap_gb:.2} GB"
+            ),
+            Error::Msg(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
 impl Error {
+    /// Build a free-form [`Error::Msg`].
     pub fn msg(s: impl Into<String>) -> Self {
         Error::Msg(s.into())
     }
 }
 
+/// Crate-default result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_legacy_format() {
+        let e = Error::SimOom { need_gb: 43.5, cap_gb: 40.0 };
+        let s = e.to_string();
+        assert!(s.contains("43.50") && s.contains("40.00"), "{s}");
+        assert!(Error::Config("x".into()).to_string().starts_with("config error"));
+    }
+
+    #[test]
+    fn io_conversion_keeps_source() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

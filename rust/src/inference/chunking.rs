@@ -1,8 +1,18 @@
-//! Chunked inference — the baselines' long-sequence strategy (paper §V.C):
-//! split the attention batch axis into chunks computed sequentially,
-//! trading latency for peak-transient memory. Chunking does NOT shrink the
-//! resident representations, which is why single-device inference still
-//! OOMs past ~3k residues (Table V) while DAP keeps scaling.
+//! Uniform chunked inference — the baselines' long-sequence strategy
+//! (paper §V.C): split the attention batch axis into chunks computed
+//! sequentially, trading latency for peak-transient memory. Chunking does
+//! NOT shrink the resident representations, which is why single-device
+//! inference still OOMs past ~3k residues (Table V) while DAP keeps
+//! scaling.
+//!
+//! This module is the *legacy baseline*: one global power-of-two factor
+//! against the coarse memory model. The cost-model-driven planner that
+//! supersedes it — per-module strategies, non-power-of-two counts,
+//! latency-aware objective — lives in [`crate::inference::autochunk`].
+//! Agreement with this baseline is property-tested (`proptests.rs`): the
+//! planner is feasible exactly where this heuristic is, and on those
+//! cases never streams a larger MSA-row transient than the heuristic's
+//! power-of-two choice.
 //!
 //! In this runtime, executed chunking reuses the DAP segment decomposition
 //! with the shards run *sequentially on one device* (sum of shard times,
@@ -12,11 +22,26 @@ use crate::config::ModelConfig;
 use crate::error::Result;
 use crate::perfmodel::{GpuSpec, MemoryModel};
 
-/// A chunking plan: how finely the attention batch axis must be split for
-/// the working set to fit device capacity.
+/// A uniform chunking plan: how finely the attention batch axis must be
+/// split for the working set to fit device capacity.
+///
+/// ```
+/// use fastfold::config::ModelConfig;
+/// use fastfold::inference::chunking::plan_chunks;
+/// use fastfold::perfmodel::{GpuSpec, MemoryModel};
+///
+/// // 512 residues fit unchunked; 2048 need chunking; 3072 cannot fit at all
+/// let at = |n| plan_chunks(&ModelConfig::inference(n), &MemoryModel::default(),
+///                          &GpuSpec::a100_40g());
+/// assert_eq!(at(512).unwrap().chunks, 1);
+/// assert!(at(2048).unwrap().chunks > 1);
+/// assert!(at(3072).is_none());
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ChunkPlan {
+    /// Power-of-two chunk count over the attention batch axis.
     pub chunks: usize,
+    /// Modeled peak bytes under this chunk count.
     pub peak_bytes: f64,
     /// latency multiplier vs unchunked (launch + re-read overhead per
     /// chunk; calibrated to the paper's "to a certain extent reduces
@@ -42,6 +67,17 @@ pub fn plan_chunks(cfg: &ModelConfig, mem: &MemoryModel, gpu: &GpuSpec) -> Optio
 
 /// Chunked-vs-DAP memory check used by Table V: returns per-configuration
 /// verdicts (Ok(peak) or SimOom).
+///
+/// ```
+/// use fastfold::inference::chunking::memory_verdict;
+/// use fastfold::perfmodel::{GpuSpec, MemoryModel};
+///
+/// let mem = MemoryModel::default();
+/// let gpu = GpuSpec::a100_40g();
+/// // Table V: 4096 residues fit under DAP-8 but OOM under DAP-4
+/// assert!(memory_verdict(4096, 8, 1, &mem, &gpu).is_ok());
+/// assert!(memory_verdict(4096, 4, 1, &mem, &gpu).is_err());
+/// ```
 pub fn memory_verdict(
     n_res: usize,
     dap: usize,

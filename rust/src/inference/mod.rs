@@ -1,15 +1,22 @@
-//! Inference drivers (paper §V.C):
+//! Inference drivers (paper §V.C–§IV):
 //!
 //! * [`single`] — single-device trunk execution (`block_fwd` per block),
 //!   the short-sequence path (Fig 12), with the naive-kernel variant as the
-//!   baseline.
-//! * [`chunking`] — the baselines' long-sequence strategy: split the
-//!   attention batch axis into chunks executed sequentially (trades speed
-//!   for memory; paper §V.C).
+//!   baseline, plus the AutoChunk memory guard for long sequences.
+//! * [`chunking`] — the baselines' *uniform* long-sequence strategy: one
+//!   power-of-two chunk factor over the attention batch axis (trades speed
+//!   for memory; paper §V.C). Kept as the comparison baseline.
+//! * [`autochunk`] — the cost-model-driven planner (paper §IV): per-module
+//!   chunk strategies searched against the fine-grained memory model, with
+//!   a latency-aware objective. The primary long-sequence path.
 //! * distributed inference = [`crate::dap::DapCoordinator::model_forward`]
-//!   (Fig 13 / Table V FastFold path).
+//!   (Fig 13 / Table V FastFold path), with
+//!   [`crate::dap::DapCoordinator::autochunk_fallback`] planning the
+//!   chunked fallback when a DAP degree alone is not enough.
 
+pub mod autochunk;
 pub mod chunking;
 pub mod single;
 
+pub use autochunk::AutoChunkPlan;
 pub use single::single_device_forward;

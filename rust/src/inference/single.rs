@@ -1,10 +1,48 @@
 //! Single-device trunk inference: embed → N × block_fwd → heads, composing
 //! the per-block executable (the fused-kernel or naive variant) — the
-//! Fig 12 measurement path.
+//! Fig 12 measurement path. For long sequences, [`memory_guard`] consults
+//! the AutoChunk planner before execution so an over-capacity request
+//! fails fast with a sim-OOM verdict (and a plan summary when it fits)
+//! instead of thrashing.
 
+use super::autochunk::{self, AutoChunkPlan};
+use crate::config::ModelConfig;
 use crate::error::Result;
+use crate::perfmodel::{GpuSpec, MemoryModel};
 use crate::runtime::{Runtime, Value};
 use crate::tensor::{HostTensor, IntTensor};
+
+/// Plan-or-refuse gate for the single-device path: returns the AutoChunk
+/// plan for `cfg` on `gpu` at the given headroom (see
+/// [`autochunk::CHUNK_HEADROOM`] for the default policy, or pass the
+/// deployment's `[autochunk] headroom`), or the
+/// [`crate::error::Error::SimOom`] verdict when no per-module strategy
+/// fits (Table V's 3072+ boundary).
+pub fn memory_guard(
+    cfg: &ModelConfig,
+    mem: &MemoryModel,
+    gpu: &GpuSpec,
+    headroom: f64,
+) -> Result<AutoChunkPlan> {
+    autochunk::plan_with_headroom(cfg, mem, gpu, 1, headroom)
+}
+
+/// [`single_device_forward`] behind [`memory_guard`]: plans first, refuses
+/// on sim-OOM, then runs and returns the plan alongside the logits.
+pub fn single_device_forward_guarded(
+    rt: &Runtime,
+    preset: &str,
+    params: &[HostTensor],
+    tokens: &IntTensor,
+    naive: bool,
+    gpu: &GpuSpec,
+    headroom: f64,
+) -> Result<(HostTensor, HostTensor, AutoChunkPlan)> {
+    let cfg = ModelConfig::preset(preset)?;
+    let plan = memory_guard(&cfg, &MemoryModel::default(), gpu, headroom)?;
+    let (m, z) = single_device_forward(rt, preset, params, tokens, naive)?;
+    Ok((m, z, plan))
+}
 
 /// Run the full model on one device. `naive` selects the unfused-kernel
 /// block variant (the "PyTorch-native" baseline of Fig 12).

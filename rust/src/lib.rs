@@ -12,12 +12,19 @@
 //!   PJRT ([`runtime`]), shards activations across logical ranks, executes
 //!   the DAP schedule with Duality-Async overlap ([`dap`]), runs the
 //!   Megatron-style TP baseline ([`tp`]), data-parallel training
-//!   ([`train`]), chunked + distributed inference ([`inference`]), and the
-//!   calibrated A100 performance/memory models that regenerate the paper's
-//!   scaling figures ([`perfmodel`]).
+//!   ([`train`]), chunked + distributed inference ([`inference`]) with the
+//!   AutoChunk planner ([`inference::autochunk`]) choosing per-module
+//!   chunk strategies against the memory cost model, and the calibrated
+//!   A100 performance/memory models that regenerate the paper's scaling
+//!   figures ([`perfmodel`]).
 //!
 //! Python never runs on the request path: `make artifacts` exports
-//! everything once, then the `fastfold` binary is self-contained.
+//! everything once, then the `fastfold` binary is self-contained. This
+//! offline build links the stub `xla` crate (`rust/xla`): literals and
+//! every pure-model path are fully functional; artifact *execution* is
+//! gated behind a descriptive error until real PJRT bindings are linked.
+
+#![warn(missing_docs)]
 
 pub mod comm;
 pub mod config;

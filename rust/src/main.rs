@@ -1,9 +1,12 @@
 //! `fastfold` — the L3 launcher/CLI.
 //!
 //! ```text
-//! fastfold train   [--preset tiny] [--steps N] [--dp N] [--config f.toml]
-//! fastfold infer   [--preset tiny] [--dap N] [--naive]
-//! fastfold report  <table2|table3|table4|table5|fig10|fig11|fig13|validate>
+//! fastfold train     [--preset tiny] [--steps N] [--dp N] [--config f.toml]
+//! fastfold infer     [--preset tiny] [--dap N] [--naive] [--gpu a100_40g]
+//!                    [--no-guard] [--config f.toml]
+//! fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu a100_40g]
+//!                    [--headroom F] [--json] [--config f.toml]
+//! fastfold report    <table2|table3|table4|table5|fig10|fig11|fig13|validate>
 //! fastfold info
 //! ```
 //!
@@ -14,7 +17,7 @@
 use fastfold::config::{ModelConfig, RunConfig, TrainConfig};
 use fastfold::dap::DapCoordinator;
 use fastfold::error::Result;
-use fastfold::inference::chunking;
+use fastfold::inference::{autochunk, chunking};
 use fastfold::metrics::{fmt_secs, Table};
 use fastfold::perfmodel::gpu::ImplProfile;
 use fastfold::perfmodel::scaling::{MpMethod, ScalingModel, INFER_RECYCLES};
@@ -59,13 +62,17 @@ fn run(args: &[String]) -> Result<()> {
     match cmd {
         "train" => cmd_train(&pos, &flags),
         "infer" => cmd_infer(&flags),
+        "autochunk" => cmd_autochunk(&flags),
         "report" => cmd_report(&pos, &flags),
         "info" => cmd_info(&flags),
         _ => {
             println!(
                 "fastfold — FastFold reproduction (see README.md)\n\n\
                  usage:\n  fastfold train  [--preset P] [--steps N] [--dp N] [--config f.toml]\n  \
-                 fastfold infer  [--preset P] [--dap N] [--naive]\n  \
+                 fastfold infer  [--preset P] [--dap N] [--naive] [--gpu G] \
+                 [--no-guard] [--config f.toml]\n  \
+                 fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu G] \
+                 [--headroom F] [--json] [--config f.toml]\n  \
                  fastfold report <table2|table3|table4|table5|fig10|fig11|fig13|validate>\n  \
                  fastfold info   [--artifacts DIR]"
             );
@@ -126,9 +133,21 @@ fn cmd_train(_pos: &[String], flags: &BTreeMap<String, String>) -> Result<()> {
 // ---------------------------------------------------------------- infer
 
 fn cmd_infer(flags: &BTreeMap<String, String>) -> Result<()> {
+    // `[autochunk]` config section: enabled/gpu defaults (flags override)
+    let run_cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_toml_file(path)?,
+        None => RunConfig::default(),
+    };
     let preset = flags.get("preset").cloned().unwrap_or_else(|| "tiny".into());
     let dap: usize = flags.get("dap").and_then(|s| s.parse().ok()).unwrap_or(1);
     let naive = flags.contains_key("naive");
+    let guard = run_cfg.autochunk.enabled && !flags.contains_key("no-guard");
+    let gpu = GpuSpec::by_name(
+        flags
+            .get("gpu")
+            .map(|s| s.as_str())
+            .unwrap_or(&run_cfg.autochunk.gpu),
+    )?;
     let rt = Runtime::new(&artifacts_dir(flags))?;
     let params = rt.manifest.load_params(&preset)?;
     let model_cfg = ModelConfig::preset(&preset)?;
@@ -138,7 +157,30 @@ fn cmd_infer(flags: &BTreeMap<String, String>) -> Result<()> {
     let t0 = std::time::Instant::now();
     let (msa_logits, dist_logits) = if dap > 1 {
         let co = DapCoordinator::new(&rt, &preset, dap, !flags.contains_key("no-overlap"))?;
+        if guard {
+            // memory guard: the planner's chunked fallback must fit this
+            // degree. Advisory only — the executed schedule applies DAP
+            // sharding, not the per-module chunk loops.
+            let plan = co.autochunk_fallback(
+                &MemoryModel::default(),
+                &gpu,
+                run_cfg.autochunk.headroom,
+            )?;
+            println!("[fastfold] memory guard (advisory): {}", plan.summary());
+        }
         co.model_forward(&params, &batch.msa_tokens)?
+    } else if guard {
+        let (m, z, plan) = fastfold::inference::single::single_device_forward_guarded(
+            &rt,
+            &preset,
+            &params,
+            &batch.msa_tokens,
+            naive,
+            &gpu,
+            run_cfg.autochunk.headroom,
+        )?;
+        println!("[fastfold] memory guard (advisory): {}", plan.summary());
+        (m, z)
     } else {
         fastfold::inference::single_device_forward(
             &rt, &preset, &params, &batch.msa_tokens, naive,
@@ -151,6 +193,121 @@ fn cmd_infer(flags: &BTreeMap<String, String>) -> Result<()> {
         dist_logits.shape,
         fmt_secs(t0.elapsed().as_secs_f64())
     );
+    Ok(())
+}
+
+// ------------------------------------------------------------- autochunk
+
+/// Parse a numeric flag strictly: absent → default, malformed → error
+/// (a planner invoked with a typo'd length must not plan a default one).
+fn num_flag<T: std::str::FromStr>(
+    flags: &BTreeMap<String, String>,
+    name: &str,
+    default: T,
+) -> Result<T> {
+    match flags.get(name) {
+        None => Ok(default),
+        Some(s) => s.parse().map_err(|_| {
+            fastfold::Error::Config(format!("--{name}: invalid value '{s}'"))
+        }),
+    }
+}
+
+/// `fastfold autochunk` — run the planner for a sequence length and print
+/// (or emit as JSON) the per-module chunk strategy.
+fn cmd_autochunk(flags: &BTreeMap<String, String>) -> Result<()> {
+    // config-file defaults, overridable by flags
+    let run_cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_toml_file(path)?,
+        None => RunConfig::default(),
+    };
+    let len: usize = num_flag(flags, "len", 2048)?;
+    let seq: usize = num_flag(flags, "seq", 256)?;
+    let dap: usize = num_flag(flags, "dap", 1)?;
+    let gpu_name = flags
+        .get("gpu")
+        .cloned()
+        .unwrap_or_else(|| run_cfg.autochunk.gpu.clone());
+    let headroom: f64 = num_flag(flags, "headroom", run_cfg.autochunk.headroom)?;
+    let gpu = GpuSpec::by_name(&gpu_name)?;
+    let mem = MemoryModel::default();
+    let mut cfg = ModelConfig::inference(len);
+    cfg.n_seq = seq;
+
+    match autochunk::plan_with_headroom(&cfg, &mem, &gpu, dap, headroom) {
+        Ok(plan) => {
+            if flags.contains_key("json") {
+                println!("{}", plan.to_json().to_string());
+                return Ok(());
+            }
+            println!(
+                "AutoChunk plan — {} residues x {} MSA rows, dap={dap}, {} \
+                 ({:.0} GB), headroom {:.0}%\n",
+                len, seq, gpu.name, gpu.memory / 1e9, 100.0 * headroom
+            );
+            let mut t = Table::new(&[
+                "module", "chunks", "transient (GB)", "flops share",
+            ]);
+            for s in &plan.modules {
+                t.row(&[
+                    s.module.name().into(),
+                    s.chunks.to_string(),
+                    format!("{:.2}", s.transient_bytes / 1e9),
+                    format!("{:.1}%", 100.0 * s.flops_weight),
+                ]);
+            }
+            t.print();
+            println!(
+                "\nresident {:.2} GB + worst transient {:.2} GB + overhead \
+                 {:.2} GB = peak {:.2} GB (fits {:.0} GB)",
+                plan.resident_bytes / 1e9,
+                plan.transient_peak_bytes() / 1e9,
+                mem.fixed_overhead / 1e9,
+                plan.peak_bytes / 1e9,
+                plan.capacity_bytes / 1e9
+            );
+            println!(
+                "unchunked baseline {:.2} GB -> saves {:.1}% (paper §IV: \
+                 >80%); modeled latency x{:.2}",
+                plan.unchunked_peak_bytes / 1e9,
+                100.0 * plan.savings_frac(),
+                plan.latency_factor
+            );
+        }
+        // sim-OOM is a *verdict* worth explaining; any other error (bad
+        // headroom, unknown gpu) is a usage error and propagates
+        Err(e @ fastfold::Error::SimOom { .. }) => {
+            // the min-DAP suggestion uses the same headroom as the verdict
+            let min_dap = autochunk::min_dap_degree(&cfg, &mem, &gpu, 64, headroom);
+            if flags.contains_key("json") {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("verdict".to_string(), fastfold::json::Json::Str("oom".into()));
+                o.insert("n_res".to_string(), fastfold::json::Json::Num(len as f64));
+                o.insert("dap".to_string(), fastfold::json::Json::Num(dap as f64));
+                o.insert("error".to_string(), fastfold::json::Json::Str(e.to_string()));
+                o.insert(
+                    "min_dap".to_string(),
+                    match &min_dap {
+                        Some((need, _)) => fastfold::json::Json::Num(*need as f64),
+                        None => fastfold::json::Json::Null,
+                    },
+                );
+                println!("{}", fastfold::json::Json::Obj(o).to_string());
+                return Ok(());
+            }
+            println!("AutoChunk verdict at {len} residues, dap={dap}: {e}");
+            match min_dap {
+                Some((need, plan)) => println!(
+                    "smallest DAP degree that fits: {need} \
+                     (peak {:.1} GB, latency x{:.2})",
+                    plan.peak_bytes / 1e9,
+                    plan.latency_factor
+                ),
+                None => println!("does not fit any DAP degree up to 64"),
+            }
+        }
+        Err(e) => return Err(e),
+    }
     Ok(())
 }
 
@@ -383,7 +540,7 @@ fn report_table5() -> Result<()> {
     println!("Table V — extremely long sequences (memory model + scaling model)\n");
     let mut t = Table::new(&[
         "Length", "AlphaFold", "OpenFold", "FastFold (8 GPU)", "FastFold (4 GPU)",
-        "paper FF8/FF4 (s)",
+        "AutoChunk (1 GPU)", "paper FF8/FF4 (s)",
     ]);
     let paper: BTreeMap<usize, (&str, &str)> = [
         (2560usize, ("133", "154")),
@@ -411,6 +568,12 @@ fn report_table5() -> Result<()> {
                 Err(_) => "OOM".into(),
             }
         };
+        // the planner's single-device verdict: peak when a strategy fits,
+        // OOM when even per-module chunking cannot (3072+)
+        let auto = match autochunk::plan(&ModelConfig::inference(len), &mem, &gpu, 1) {
+            Ok(plan) => format!("{:.1} GB pk", plan.peak_bytes / 1e9),
+            Err(_) => "OOM".into(),
+        };
         let (p8, p4) = paper[&len];
         t.row(&[
             len.to_string(),
@@ -418,6 +581,7 @@ fn report_table5() -> Result<()> {
             base(ImplProfile::openfold()),
             ff(8),
             ff(4),
+            auto,
             format!("{p8} / {p4}"),
         ]);
     }

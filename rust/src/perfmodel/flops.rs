@@ -7,6 +7,7 @@
 //! element counts (they matter for the *memory-bound* fraction the paper's
 //! §III.B analysis highlights, not the FLOP total).
 
+use super::memory::BlockModule;
 use crate::config::ModelConfig;
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -89,6 +90,58 @@ pub fn block_flops(cfg: &ModelConfig, s: usize, r: usize) -> BlockFlops {
     f
 }
 
+/// Forward FLOPs of one Evoformer sub-module at the config's own
+/// `(n_seq, n_res)` — the same terms [`block_flops`] sums, regrouped per
+/// [`BlockModule`] so the AutoChunk planner can weight chunk overhead by a
+/// module's runtime share. Invariant (tested below): the sum over
+/// [`BlockModule::ALL`] equals `block_flops(cfg, n_seq, n_res).total()`.
+pub fn module_flops(cfg: &ModelConfig, module: BlockModule) -> f64 {
+    let s = cfg.n_seq as f64;
+    let r = cfg.n_res as f64;
+    let dm = cfg.d_msa as f64;
+    let dz = cfg.d_pair as f64;
+    let hm = cfg.n_heads_msa as f64;
+    let hp = cfg.n_heads_pair as f64;
+    let dh = cfg.d_head as f64;
+    let t = cfg.transition_factor as f64;
+    let dopm = cfg.d_opm as f64;
+    match module {
+        BlockModule::MsaRowAttn => {
+            gemm(s * r, dm, 4.0 * hm * dh)
+                + gemm(s * r, hm * dh, dm)
+                + gemm(r * r, dz, hm)
+                + 4.0 * s * hm * r * r * dh
+        }
+        BlockModule::MsaColAttn => {
+            gemm(s * r, dm, 4.0 * hm * dh)
+                + gemm(s * r, hm * dh, dm)
+                + 4.0 * r * hm * s * s * dh
+        }
+        BlockModule::OuterProductMean => {
+            gemm(s * r, dm, 2.0 * dopm)
+                + 2.0 * r * r * dopm * dopm * s
+                + gemm(r * r, dopm * dopm, dz)
+        }
+        BlockModule::MsaTransition => {
+            gemm(s * r, dm, t * dm) + gemm(s * r, t * dm, dm)
+        }
+        BlockModule::TriangleMult => {
+            2.0 * (gemm(r * r, dz, 4.0 * dz)
+                + 2.0 * r * r * r * dz
+                + 2.0 * gemm(r * r, dz, dz))
+        }
+        BlockModule::TriangleAttnStart | BlockModule::TriangleAttnEnd => {
+            gemm(r * r, dz, 4.0 * hp * dh)
+                + gemm(r * r, hp * dh, dz)
+                + gemm(r * r, dz, hp)
+                + 4.0 * r * hp * r * r * dh
+        }
+        BlockModule::PairTransition => {
+            gemm(r * r, dz, t * dz) + gemm(r * r, t * dz, dz)
+        }
+    }
+}
+
 /// Whole-model forward FLOPs (embed/heads are negligible vs the trunk).
 pub fn model_flops(cfg: &ModelConfig) -> f64 {
     cfg.n_blocks as f64 * block_flops(cfg, cfg.n_seq, cfg.n_res).total()
@@ -141,5 +194,26 @@ mod tests {
         let f = block_flops(&cfg, cfg.n_seq, cfg.n_res);
         assert!(f.gemm > 0.0 && f.attention > 0.0 && f.triangle > 0.0);
         assert!(f.opm > 0.0 && f.batch_reduce_elems > 0.0);
+    }
+
+    #[test]
+    fn module_flops_sum_to_block_total() {
+        // the per-module regrouping must cover block_flops exactly
+        for cfg in [
+            ModelConfig::tiny(),
+            ModelConfig::initial_training(),
+            ModelConfig::inference(2048),
+        ] {
+            let total: f64 = BlockModule::ALL
+                .into_iter()
+                .map(|m| module_flops(&cfg, m))
+                .sum();
+            let want = block_flops(&cfg, cfg.n_seq, cfg.n_res).total();
+            assert!(
+                (total - want).abs() <= 1e-9 * want,
+                "{}: {total:e} vs {want:e}",
+                cfg.name
+            );
+        }
     }
 }

@@ -38,6 +38,19 @@ impl GpuSpec {
             memory: 16e9,
         }
     }
+
+    /// Look up a device by config/CLI name (`a100_40g`, `tpu_v3`). Also
+    /// accepts the display names (`A100-40G`, `TPUv3`) so a serialized
+    /// `AutoChunkPlan`'s `gpu` field resolves back to its spec.
+    pub fn by_name(name: &str) -> crate::error::Result<Self> {
+        match name {
+            "a100_40g" | "a100" | "A100-40G" => Ok(Self::a100_40g()),
+            "tpu_v3" | "tpuv3" | "TPUv3" => Ok(Self::tpu_v3()),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown gpu spec '{other}' (known: a100_40g, tpu_v3)"
+            ))),
+        }
+    }
 }
 
 /// Achieved-efficiency model for one implementation of the Evoformer.

@@ -10,7 +10,9 @@
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 
+/// Bytes per bf16 element.
 pub const BF16: f64 = 2.0;
+/// Bytes per f32 element.
 pub const F32: f64 = 4.0;
 
 #[derive(Clone, Copy, Debug)]
@@ -30,7 +32,11 @@ impl Default for MemoryModel {
 }
 
 impl MemoryModel {
-    /// Peak inference working set per device (bytes).
+    /// Peak inference working set per device (bytes) — the **coarse**
+    /// model: a single uniform chunk factor over the streamed attention
+    /// transient. The AutoChunk planner uses the finer per-module model
+    /// below ([`MemoryModel::module_transient_elems`]); this function is
+    /// kept as the §V.C uniform-chunking baseline and for Table V.
     ///
     /// * `dap` — DAP degree (activations sharded 1/dap; transient attention
     ///   batch is over the local shard).
@@ -38,6 +44,19 @@ impl MemoryModel {
     ///   (baseline path; 1 = no chunking). Chunking shrinks transients but
     ///   NOT the resident representations — that is why the baselines still
     ///   OOM at 3k+ (paper Table V).
+    ///
+    /// ```
+    /// use fastfold::config::ModelConfig;
+    /// use fastfold::perfmodel::MemoryModel;
+    ///
+    /// let mem = MemoryModel::default();
+    /// let cfg = ModelConfig::inference(2048);
+    /// let unchunked = mem.inference_peak(&cfg, 1, 1);
+    /// let chunked = mem.inference_peak(&cfg, 1, 16);
+    /// // chunking shrinks transients, but the resident reps remain
+    /// assert!(chunked < unchunked);
+    /// assert!(chunked > 0.1 * unchunked);
+    /// ```
     pub fn inference_peak(&self, cfg: &ModelConfig, dap: usize, chunk: usize) -> f64 {
         let s = cfg.n_seq as f64;
         let r = cfg.n_res as f64;
@@ -91,10 +110,195 @@ impl MemoryModel {
     ) -> Result<f64> {
         let need = self.inference_peak(cfg, dap, chunk);
         if need > capacity {
-            Err(Error::SimOom { need_gib: need / 1e9, cap_gib: capacity / 1e9 })
+            Err(Error::SimOom { need_gb: need / 1e9, cap_gb: capacity / 1e9 })
         } else {
             Ok(need)
         }
+    }
+}
+
+// ----------------------------------------------- fine-grained (per-module)
+
+/// The transient-producing sub-modules of one Evoformer block, each with
+/// its own chunkable axis — the strategy space the AutoChunk planner
+/// ([`crate::inference::autochunk`]) searches per block.
+///
+/// The coarse [`MemoryModel::inference_peak`] collapses all of these into
+/// one streamed attention term; this enum models what a *naive unchunked*
+/// execution actually materializes per module, which is the baseline the
+/// paper's ">80% inference memory reduction" claim (§IV AutoChunk) is
+/// measured against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BlockModule {
+    /// MSA row-wise gated attention: scores `(s, h_m, r, r)`, chunkable
+    /// along the MSA-row axis `s`.
+    MsaRowAttn,
+    /// MSA column-wise attention: scores `(r, h_m, s, s)`, chunkable along
+    /// the residue axis `r`.
+    MsaColAttn,
+    /// Outer-product mean: outer tensor `(r, r, d_opm²)` before the output
+    /// projection, chunkable along the first residue axis.
+    OuterProductMean,
+    /// MSA transition MLP: hidden activations `(s, r, t·d_msa)`, chunkable
+    /// along `s`.
+    MsaTransition,
+    /// Triangle multiplicative update (outgoing + incoming): projections,
+    /// gates and the `ikc,jkc->ijc` contraction. **Not chunkable on a
+    /// single device** — the contraction consumes the full `k` axis, which
+    /// is exactly why the baselines still OOM past ~3k residues (Table V)
+    /// while DAP keeps scaling.
+    TriangleMult,
+    /// Triangle attention around starting node: scores `(r, h_p, r, r)` —
+    /// the §III.B cubic term — chunkable along the first residue axis.
+    TriangleAttnStart,
+    /// Triangle attention around ending node: same shape/axis as
+    /// [`BlockModule::TriangleAttnStart`].
+    TriangleAttnEnd,
+    /// Pair transition MLP: hidden activations `(r, r, t·d_pair)`,
+    /// chunkable along the first residue axis.
+    PairTransition,
+}
+
+impl BlockModule {
+    /// Every module, in schedule order.
+    pub const ALL: [BlockModule; 8] = [
+        BlockModule::MsaRowAttn,
+        BlockModule::MsaColAttn,
+        BlockModule::OuterProductMean,
+        BlockModule::MsaTransition,
+        BlockModule::TriangleMult,
+        BlockModule::TriangleAttnStart,
+        BlockModule::TriangleAttnEnd,
+        BlockModule::PairTransition,
+    ];
+
+    /// Stable snake_case name (used by the `ChunkPlan` JSON encoding).
+    pub fn name(self) -> &'static str {
+        match self {
+            BlockModule::MsaRowAttn => "msa_row_attn",
+            BlockModule::MsaColAttn => "msa_col_attn",
+            BlockModule::OuterProductMean => "outer_product_mean",
+            BlockModule::MsaTransition => "msa_transition",
+            BlockModule::TriangleMult => "triangle_mult",
+            BlockModule::TriangleAttnStart => "triangle_attn_start",
+            BlockModule::TriangleAttnEnd => "triangle_attn_end",
+            BlockModule::PairTransition => "pair_transition",
+        }
+    }
+
+    /// Inverse of [`BlockModule::name`].
+    pub fn parse(s: &str) -> Result<Self> {
+        BlockModule::ALL
+            .into_iter()
+            .find(|m| m.name() == s)
+            .ok_or_else(|| Error::Config(format!("unknown block module '{s}'")))
+    }
+
+    /// Length of the axis the chunk loop iterates for this module on one
+    /// device (after DAP sharding). `1` means the module is not chunkable
+    /// (its transient is irreducible on a single device).
+    pub fn chunk_axis_len(self, cfg: &ModelConfig, dap: usize) -> usize {
+        let dap = dap.max(1);
+        let s_loc = (cfg.n_seq + dap - 1) / dap;
+        let r_loc = (cfg.n_res + dap - 1) / dap;
+        match self {
+            BlockModule::MsaRowAttn | BlockModule::MsaTransition => s_loc,
+            BlockModule::MsaColAttn
+            | BlockModule::OuterProductMean
+            | BlockModule::TriangleAttnStart
+            | BlockModule::TriangleAttnEnd
+            | BlockModule::PairTransition => r_loc,
+            BlockModule::TriangleMult => 1,
+        }
+    }
+}
+
+impl MemoryModel {
+    /// Resident representation elements per device: m (+ residual copy) +
+    /// z (2 working copies + the recycling buffer), sharded 1/dap.
+    pub fn resident_elems(&self, cfg: &ModelConfig, dap: usize) -> f64 {
+        let s = cfg.n_seq as f64;
+        let r = cfg.n_res as f64;
+        (2.0 * s * r * cfg.d_msa as f64 + 3.0 * r * r * cfg.d_pair as f64)
+            / dap.max(1) as f64
+    }
+
+    /// Peak transient elements `module` materializes on one device when its
+    /// chunk axis is split into `chunks` pieces (1 = unchunked). Monotone
+    /// nonincreasing in `chunks`, monotone nondecreasing in `cfg.n_res`.
+    pub fn module_transient_elems(
+        &self,
+        cfg: &ModelConfig,
+        module: BlockModule,
+        dap: usize,
+        chunks: usize,
+    ) -> f64 {
+        let dap = dap.max(1);
+        let chunks = chunks.max(1);
+        let s = cfg.n_seq as f64;
+        let r = cfg.n_res as f64;
+        let hm = cfg.n_heads_msa as f64;
+        let hp = cfg.n_heads_pair as f64;
+        let dz = cfg.d_pair as f64;
+        let t = cfg.transition_factor as f64;
+        let axis = module.chunk_axis_len(cfg, dap);
+        // rows of the chunk axis processed at once (chunk counts beyond the
+        // axis length clamp to one row per chunk)
+        let c = chunks.min(axis).max(1);
+        let rows = ((axis + c - 1) / c) as f64;
+        match module {
+            BlockModule::MsaRowAttn => rows * hm * r * r,
+            BlockModule::MsaColAttn => rows * hm * s * s,
+            BlockModule::OuterProductMean => {
+                rows * r * (cfg.d_opm * cfg.d_opm) as f64
+            }
+            BlockModule::MsaTransition => rows * r * t * cfg.d_msa as f64,
+            BlockModule::TriangleMult => {
+                // same irreducible working set as the coarse model: under
+                // DAP the projections shard but the gathered right operand
+                // + incoming partial + working copies do not; on a single
+                // device everything is live at the contraction.
+                if dap > 1 {
+                    (4.0 / dap as f64 + 2.75) * r * r * dz
+                } else {
+                    5.0 * r * r * dz
+                }
+            }
+            BlockModule::TriangleAttnStart | BlockModule::TriangleAttnEnd => {
+                rows * hp * r * r
+            }
+            BlockModule::PairTransition => rows * r * t * dz,
+        }
+    }
+
+    /// Peak bytes of a per-module chunk assignment: resident + the largest
+    /// module transient under its assigned chunk count, plus overhead.
+    /// Modules absent from `assignment` are priced unchunked.
+    pub fn planned_peak_bytes(
+        &self,
+        cfg: &ModelConfig,
+        dap: usize,
+        assignment: &[(BlockModule, usize)],
+    ) -> f64 {
+        let chunks_of = |m: BlockModule| -> usize {
+            assignment
+                .iter()
+                .find(|(am, _)| *am == m)
+                .map(|(_, c)| *c)
+                .unwrap_or(1)
+        };
+        let transient = BlockModule::ALL
+            .into_iter()
+            .map(|m| self.module_transient_elems(cfg, m, dap, chunks_of(m)))
+            .fold(0.0, f64::max);
+        self.elem_bytes * (self.resident_elems(cfg, dap) + transient)
+            + self.fixed_overhead
+    }
+
+    /// Peak bytes of the naive fully-unchunked execution (every module's
+    /// transient materialized whole) — the AutoChunk savings baseline.
+    pub fn unchunked_peak_bytes(&self, cfg: &ModelConfig, dap: usize) -> f64 {
+        self.planned_peak_bytes(cfg, dap, &[])
     }
 }
 
@@ -144,5 +348,81 @@ mod tests {
         assert!(ch < no);
         // resident part persists: chunked is still a large fraction
         assert!(ch > 0.1 * no);
+    }
+
+    #[test]
+    fn module_transients_monotone_in_chunks() {
+        let m = MemoryModel::default();
+        let cfg = ModelConfig::inference(2048);
+        for module in BlockModule::ALL {
+            let mut prev = f64::INFINITY;
+            for c in [1usize, 2, 3, 5, 8, 64, 100_000] {
+                let t = m.module_transient_elems(&cfg, module, 1, c);
+                assert!(t > 0.0);
+                assert!(t <= prev, "{} at c={c}", module.name());
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_mult_is_not_chunkable() {
+        let m = MemoryModel::default();
+        let cfg = ModelConfig::inference(3072);
+        let t1 = m.module_transient_elems(&cfg, BlockModule::TriangleMult, 1, 1);
+        let t64 = m.module_transient_elems(&cfg, BlockModule::TriangleMult, 1, 64);
+        assert_eq!(t1, t64);
+        assert_eq!(BlockModule::TriangleMult.chunk_axis_len(&cfg, 1), 1);
+        // matches the coarse model's irreducible term
+        let r = cfg.n_res as f64;
+        assert_eq!(t1, 5.0 * r * r * cfg.d_pair as f64);
+    }
+
+    #[test]
+    fn triangle_attention_dominates_unchunked() {
+        // §III.B: the h_p · r³ pair-attention scores are the biggest naive
+        // transient at long sequence lengths
+        let m = MemoryModel::default();
+        let cfg = ModelConfig::inference(2048);
+        let tri_attn =
+            m.module_transient_elems(&cfg, BlockModule::TriangleAttnStart, 1, 1);
+        for module in BlockModule::ALL {
+            assert!(
+                m.module_transient_elems(&cfg, module, 1, 1) <= tri_attn,
+                "{}",
+                module.name()
+            );
+        }
+        let r = cfg.n_res as f64;
+        assert_eq!(tri_attn, cfg.n_heads_pair as f64 * r * r * r);
+    }
+
+    #[test]
+    fn module_names_roundtrip() {
+        for module in BlockModule::ALL {
+            assert_eq!(BlockModule::parse(module.name()).unwrap(), module);
+        }
+        assert!(BlockModule::parse("nope").is_err());
+    }
+
+    #[test]
+    fn planned_peak_uses_worst_module() {
+        let m = MemoryModel::default();
+        let cfg = ModelConfig::inference(2048);
+        let naive = m.unchunked_peak_bytes(&cfg, 1);
+        // chunking only triangle attention leaves msa-row as the next peak
+        let partial = m.planned_peak_bytes(
+            &cfg,
+            1,
+            &[
+                (BlockModule::TriangleAttnStart, 64),
+                (BlockModule::TriangleAttnEnd, 64),
+            ],
+        );
+        assert!(partial < naive);
+        let row = m.module_transient_elems(&cfg, BlockModule::MsaRowAttn, 1, 1);
+        let expect = m.elem_bytes * (m.resident_elems(&cfg, 1) + row)
+            + m.fixed_overhead;
+        assert!((partial - expect).abs() < 1.0, "{partial} vs {expect}");
     }
 }

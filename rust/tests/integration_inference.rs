@@ -2,7 +2,7 @@
 //! against the memory model, Table V verdict wiring.
 
 use fastfold::config::ModelConfig;
-use fastfold::inference::{chunking, single_device_forward};
+use fastfold::inference::{autochunk, chunking, single_device_forward};
 use fastfold::perfmodel::{GpuSpec, MemoryModel};
 use fastfold::runtime::Runtime;
 use fastfold::train::DataGen;
@@ -54,6 +54,66 @@ fn table5_verdicts() {
     assert!(chunking::memory_verdict(3072, 8, 1, &mem, &gpu).is_ok());
     assert!(chunking::memory_verdict(4096, 8, 1, &mem, &gpu).is_ok());
     assert!(chunking::memory_verdict(4096, 4, 1, &mem, &gpu).is_err());
+}
+
+#[test]
+fn autochunk_table5_oom_boundary_regression() {
+    // the planner must reproduce the exact Table V OOM pattern: per-module
+    // chunking buys nothing past 3072 on one device (triangle-mult working
+    // set is irreducible), and the DAP verdicts are unchanged
+    let mem = MemoryModel::default();
+    let gpu = GpuSpec::a100_40g();
+    let at = |n, dap| autochunk::plan(&ModelConfig::inference(n), &mem, &gpu, dap);
+    assert!(at(2560, 1).is_ok(), "2560 single should fit with chunking");
+    assert!(at(3072, 1).is_err(), "3072 single should OOM");
+    assert!(at(3584, 1).is_err(), "3584 single should OOM");
+    assert!(at(4096, 1).is_err(), "4096 single should OOM");
+    assert!(at(3584, 4).is_ok(), "3584 DAP-4 should fit");
+    assert!(at(4096, 4).is_err(), "4096 DAP-4 should OOM");
+    assert!(at(4096, 8).is_ok(), "4096 DAP-8 should fit");
+}
+
+#[test]
+fn autochunk_meets_paper_memory_claim() {
+    // §IV acceptance: ≥80% modeled peak reduction vs the naive unchunked
+    // baseline at 2048 residues on an A100-40G, with a sane latency cost
+    let mem = MemoryModel::default();
+    let gpu = GpuSpec::a100_40g();
+    let plan = autochunk::plan(&ModelConfig::inference(2048), &mem, &gpu, 1).unwrap();
+    assert!(plan.fits());
+    assert!(
+        plan.savings_frac() >= 0.80,
+        "savings {:.3} ({})",
+        plan.savings_frac(),
+        plan.summary()
+    );
+    assert!(plan.latency_factor >= 1.0 && plan.latency_factor < 1.6);
+    // and the serialized form round-trips through the crate JSON codec
+    let j = fastfold::json::Json::parse(&plan.to_json().to_string()).unwrap();
+    assert_eq!(autochunk::AutoChunkPlan::from_json(&j).unwrap(), plan);
+}
+
+#[test]
+fn guarded_single_device_forward() {
+    // the AutoChunk memory guard wraps the executed path: tiny preset
+    // plans trivially (no chunking) and runs when artifacts exist
+    let mem = MemoryModel::default();
+    let gpu = GpuSpec::a100_40g();
+    let plan = fastfold::inference::single::memory_guard(
+        &ModelConfig::tiny(), &mem, &gpu, autochunk::CHUNK_HEADROOM).unwrap();
+    assert!(!plan.is_chunked());
+    let Some(rt) = runtime() else { return };
+    let params = rt.manifest.load_params("tiny").unwrap();
+    let mut gen = DataGen::new(ModelConfig::tiny(), 23);
+    let batch = gen.next_batch();
+    let (m, z, plan) = fastfold::inference::single::single_device_forward_guarded(
+        &rt, "tiny", &params, &batch.msa_tokens, false, &gpu,
+        autochunk::CHUNK_HEADROOM,
+    )
+    .unwrap();
+    assert!(plan.fits());
+    assert!(m.data.iter().all(|x| x.is_finite()));
+    assert!(z.data.iter().all(|x| x.is_finite()));
 }
 
 #[test]

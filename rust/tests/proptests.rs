@@ -156,6 +156,119 @@ fn prop_memory_model_monotone() {
 }
 
 #[test]
+fn prop_autochunk_fits_when_feasible() {
+    // every plan the planner returns fits capacity; every refusal is a
+    // sim-OOM verdict, never a silent failure
+    use fastfold::config::ModelConfig;
+    use fastfold::inference::autochunk;
+    use fastfold::perfmodel::{GpuSpec, MemoryModel};
+    let mem = MemoryModel::default();
+    let gpu = GpuSpec::a100_40g();
+    let mut rng = Rng::new(107);
+    for _ in 0..CASES {
+        let r = 256 + 64 * rng.below(60);
+        let dap = 1usize << rng.below(4);
+        match autochunk::plan(&ModelConfig::inference(r), &mem, &gpu, dap) {
+            Ok(p) => {
+                assert!(p.fits(), "r={r} dap={dap}: {}", p.summary());
+                assert!(p.peak_bytes <= p.unchunked_peak_bytes * (1.0 + 1e-12));
+                assert!(p.latency_factor >= 1.0);
+                // every strategy respects its module's chunk axis
+                for s in &p.modules {
+                    let axis = s.module.chunk_axis_len(
+                        &ModelConfig::inference(r), dap);
+                    assert!(s.chunks >= 1 && s.chunks <= axis.max(1));
+                }
+            }
+            Err(e) => assert!(
+                matches!(e, fastfold::Error::SimOom { .. }),
+                "r={r} dap={dap}: {e}"
+            ),
+        }
+    }
+}
+
+#[test]
+fn prop_autochunk_monotone_in_length() {
+    // per-module chunk counts never decrease as sequence length grows:
+    // longer sequences can only need equal-or-deeper chunking
+    use fastfold::config::ModelConfig;
+    use fastfold::inference::autochunk;
+    use fastfold::perfmodel::memory::BlockModule;
+    use fastfold::perfmodel::{GpuSpec, MemoryModel};
+    let mem = MemoryModel::default();
+    let gpu = GpuSpec::a100_40g();
+    let mut rng = Rng::new(108);
+    for _ in 0..CASES {
+        // both lengths inside the single-device feasible band (≤ 2944)
+        let r1 = 256 + 64 * rng.below(30);
+        let r2 = (r1 + 64 * (1 + rng.below(12))).min(2944);
+        let p1 = autochunk::plan(&ModelConfig::inference(r1), &mem, &gpu, 1)
+            .unwrap_or_else(|e| panic!("r1={r1}: {e}"));
+        let p2 = autochunk::plan(&ModelConfig::inference(r2), &mem, &gpu, 1)
+            .unwrap_or_else(|e| panic!("r2={r2}: {e}"));
+        for m in BlockModule::ALL {
+            assert!(
+                p2.chunks_for(m) >= p1.chunks_for(m),
+                "{}: r {r1}->{r2} chunks {} -> {}",
+                m.name(),
+                p1.chunks_for(m),
+                p2.chunks_for(m)
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_autochunk_agrees_with_legacy_pow2() {
+    // (a) planner feasibility matches the legacy pow2 heuristic exactly;
+    // (b) wherever legacy finds a plan, the planner's MSA-row strategy
+    //     (the one axis both can chunk) streams at most as much transient
+    //     as the legacy power-of-two choice — never a regression
+    use fastfold::config::ModelConfig;
+    use fastfold::inference::{autochunk, chunking};
+    use fastfold::perfmodel::memory::BlockModule;
+    use fastfold::perfmodel::{GpuSpec, MemoryModel};
+    let mem = MemoryModel::default();
+    let gpu = GpuSpec::a100_40g();
+    let mut rng = Rng::new(109);
+    for _ in 0..CASES {
+        let r = 256 + 64 * rng.below(60);
+        let cfg = ModelConfig::inference(r);
+        let legacy = chunking::plan_chunks(&cfg, &mem, &gpu);
+        let full = autochunk::plan(&cfg, &mem, &gpu, 1);
+        assert_eq!(
+            legacy.is_some(),
+            full.is_ok(),
+            "r={r}: legacy {legacy:?} vs planner {:?}",
+            full.as_ref().err().map(|e| e.to_string())
+        );
+        if let (Some(l), Ok(p)) = (&legacy, &full) {
+            let legacy_msa = mem.elem_bytes
+                * mem.module_transient_elems(
+                    &cfg,
+                    BlockModule::MsaRowAttn,
+                    1,
+                    l.chunks,
+                );
+            let new_msa = p
+                .modules
+                .iter()
+                .find(|s| s.module == BlockModule::MsaRowAttn)
+                .unwrap();
+            assert!(
+                new_msa.transient_bytes <= legacy_msa + 1.0,
+                "r={r}: planner {} (c={}) vs legacy {} (c={})",
+                new_msa.transient_bytes,
+                new_msa.chunks,
+                legacy_msa,
+                l.chunks
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_scaling_model_sane() {
     // step time decreases (or stays) with more DAP ranks; efficiency <= 1
     use fastfold::config::ModelConfig;

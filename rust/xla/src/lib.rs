@@ -1,0 +1,336 @@
+//! Offline stand-in for the `xla-rs` PJRT bindings.
+//!
+//! The build environment has no network and no XLA/PJRT shared libraries,
+//! so this crate supplies the exact API surface the coordinator uses with
+//! two behaviours:
+//!
+//! * **Data path ([`Literal`], [`ArrayShape`]) — fully functional.** Host
+//!   tensors round-trip through literals losslessly; shape/reshape
+//!   arithmetic is real. Everything the pure-model code path touches works.
+//! * **Execution path ([`PjRtClient`], [`PjRtLoadedExecutable`]) — gated.**
+//!   `compile` succeeds (it records the HLO text length for diagnostics),
+//!   but `execute` returns [`Error`] explaining that a real PJRT backend is
+//!   required. Integration tests already skip when `artifacts/` is absent,
+//!   so the gate is only reachable by explicitly pointing the CLI at
+//!   artifacts without a real backend.
+//!
+//! Swapping the real bindings back in is a one-line change in
+//! `rust/Cargo.toml` (point the `xla` dependency at the real crate); no
+//! coordinator code changes, because this stub mirrors its signatures.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`: a message, nothing more.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-local result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error(msg.into())
+}
+
+// ------------------------------------------------------------------ literal
+
+/// Element storage for an array literal (f32 and i32 are the only dtypes
+/// the artifact contract uses).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    /// 32-bit float elements.
+    F32(Vec<f32>),
+    /// 32-bit signed integer elements.
+    I32(Vec<i32>),
+}
+
+impl LiteralData {
+    fn len(&self) -> usize {
+        match self {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    /// Wrap a host vector into typed literal storage.
+    fn wrap(v: Vec<Self>) -> LiteralData;
+    /// Extract a host vector if the storage matches `Self`.
+    fn unwrap(d: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+    fn unwrap(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+    fn unwrap(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Dimensions of an array literal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// The dimension sizes, outermost first (row-major).
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-side XLA literal: an nd-array of f32/i32, or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    /// A dense row-major array.
+    Array {
+        /// Element storage.
+        data: LiteralData,
+        /// Dimension sizes, outermost first.
+        dims: Vec<i64>,
+    },
+    /// A tuple of literals (executable outputs are lowered as one tuple).
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal::Array {
+            dims: vec![data.len() as i64],
+            data: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { data, .. } => {
+                let want: i64 = dims.iter().product();
+                if want < 0 || want as usize != data.len() {
+                    return Err(err(format!(
+                        "reshape to {:?} wants {} elements, literal has {}",
+                        dims,
+                        want,
+                        data.len()
+                    )));
+                }
+                Ok(Literal::Array { data: data.clone(), dims: dims.to_vec() })
+            }
+            Literal::Tuple(_) => Err(err("cannot reshape a tuple literal")),
+        }
+    }
+
+    /// The array shape (error on tuples).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { dims, .. } => Ok(ArrayShape { dims: dims.clone() }),
+            Literal::Tuple(_) => Err(err("tuple literal has no array shape")),
+        }
+    }
+
+    /// Copy the elements out as a host vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => T::unwrap(data)
+                .ok_or_else(|| err("literal element type mismatch")),
+            Literal::Tuple(_) => Err(err("cannot read elements of a tuple literal")),
+        }
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts.clone()),
+            Literal::Array { .. } => Err(err("literal is not a tuple")),
+        }
+    }
+}
+
+/// Values accepted by [`PjRtLoadedExecutable::execute`]: owned or borrowed
+/// literals (mirrors `xla-rs`'s `BorrowLiteral`).
+pub trait BorrowLiteral {
+    /// Borrow the underlying literal.
+    fn borrow_literal(&self) -> &Literal;
+}
+
+impl BorrowLiteral for Literal {
+    fn borrow_literal(&self) -> &Literal {
+        self
+    }
+}
+
+impl<'a> BorrowLiteral for &'a Literal {
+    fn borrow_literal(&self) -> &Literal {
+        self
+    }
+}
+
+// ------------------------------------------------------------------ compile
+
+/// Parsed HLO module (here: the raw text, held for diagnostics).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text_len: usize,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact from disk.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| err(format!("read {}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { text_len: text.len() })
+    }
+}
+
+/// An XLA computation built from an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    text_len: usize,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { text_len: proto.text_len }
+    }
+}
+
+// ------------------------------------------------------------------ runtime
+
+/// PJRT client handle. The stub "cpu" client exists so pure-model code and
+/// manifest plumbing run; only `execute` is gated.
+#[derive(Debug)]
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    /// Create the (stub) CPU client.
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient { platform: "cpu-stub" })
+    }
+
+    /// Platform name, e.g. `"cpu-stub"`.
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    /// "Compile" a computation. Succeeds so callers can cache executables;
+    /// the gate sits on `execute`.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { hlo_text_len: comp.text_len })
+    }
+}
+
+/// Device buffer returned by an execution (unreachable through the stub,
+/// but part of the API shape).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled executable. `execute` is the offline gate: it returns an
+/// error explaining that a real PJRT backend is required.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    hlo_text_len: usize,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals.
+    ///
+    /// Always errors in this stub build: there is no XLA runtime to run
+    /// the HLO. The error names the fix so the failure is actionable.
+    pub fn execute<L: BorrowLiteral>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let _ = args;
+        Err(err(format!(
+            "PJRT execution unavailable: this build uses the offline xla stub \
+             (artifact HLO text: {} bytes, {} args supplied). Rebuild with the \
+             real xla-rs bindings to execute artifacts.",
+            self.hlo_text_len,
+            args.len()
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let lit = Literal::vec1(&[7i32, 8, 9]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn reshape_validates_count() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[3]).is_err());
+        assert!(lit.reshape(&[2, 1]).is_ok());
+    }
+
+    #[test]
+    fn tuple_access() {
+        let t = Literal::Tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.array_shape().is_err());
+        assert!(Literal::vec1(&[1.0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn execute_is_gated() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu-stub");
+        let comp = XlaComputation::from_proto(&HloModuleProto { text_len: 0 });
+        let exe = client.compile(&comp).unwrap();
+        let lits = vec![Literal::vec1(&[1.0f32])];
+        let e = exe.execute::<Literal>(&lits).unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
