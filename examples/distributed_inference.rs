@@ -44,7 +44,7 @@ fn main() -> fastfold::Result<()> {
             let t0 = std::time::Instant::now();
             let (m_d, z_d) = co.model_forward(&params, &batch.msa_tokens)?;
             let wall = t0.elapsed().as_secs_f64();
-            let tl = co.timeline.borrow();
+            let tl = co.timeline.lock().unwrap();
             let diff = m_d.max_abs_diff(&m_ref).max(z_d.max_abs_diff(&z_ref));
             Ok((wall, tl.elapsed(), tl.exposed_comm_seconds, diff as f64))
         };

@@ -62,7 +62,7 @@ fn main() -> fastfold::Result<()> {
     println!(
         "compiled {} executables in {:.2}s total",
         rt.cached(),
-        rt.compile_seconds.borrow()
+        rt.compile_seconds.lock().unwrap()
     );
     Ok(())
 }

@@ -1,19 +1,74 @@
 //! Fig 10 reproduction: model-parallel scaling intra-node, TP vs DAP.
 //!
-//! Two series per training setting:
+//! Three series per training setting:
 //!  * EXECUTED — the real DAP coordinator at N ∈ {1,2,4} on the tiny
 //!    preset; per-rank simulated step time from the dual-stream timeline
 //!    (measured per-rank compute + α–β comm) — paper Fig 7/10 semantics.
+//!  * THREADED — the same block forward with the rank executor fanned out
+//!    over host worker threads and Duality-Async collectives on the comm
+//!    worker: *wall-clock* step time, threaded vs `--threads 1`
+//!    sequential baseline, plus the measured-vs-modeled exposed-comm
+//!    comparison with overlap on vs off.
 //!  * MODEL — calibrated A100 model at the paper's exact Table I settings.
 
 use fastfold::config::ModelConfig;
-use fastfold::dap::DapCoordinator;
+use fastfold::dap::{default_threads, DapCoordinator};
 use fastfold::metrics::Table;
 use fastfold::perfmodel::gpu::ImplProfile;
 use fastfold::perfmodel::scaling::{MpMethod, ScalingModel};
 use fastfold::rng::Rng;
 use fastfold::runtime::Runtime;
 use fastfold::tensor::HostTensor;
+use std::time::Instant;
+
+struct Measured {
+    wall: f64,
+    sim: f64,
+    measured_exposed: f64,
+    measured_comm: f64,
+    modeled_exposed: f64,
+}
+
+/// Best-of-3 block forward at (n, threads, overlap): wall clock + the two
+/// exposed-comm ledgers (real and α–β).
+fn run_point(
+    rt: &Runtime,
+    bp: &[HostTensor],
+    m: &HostTensor,
+    z: &HostTensor,
+    n: usize,
+    threads: usize,
+    overlap: bool,
+) -> Measured {
+    let mut best = Measured {
+        wall: f64::INFINITY,
+        sim: 0.0,
+        measured_exposed: 0.0,
+        measured_comm: 0.0,
+        modeled_exposed: 0.0,
+    };
+    for _ in 0..3 {
+        let co = DapCoordinator::new(rt, "tiny", n, overlap)
+            .unwrap()
+            .with_threads(threads);
+        let mut st = co.shard_inputs(m, z).unwrap();
+        let t0 = Instant::now();
+        co.block_forward(bp, &mut st).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        if wall < best.wall {
+            let tl = co.timeline.lock().unwrap();
+            let ms = co.measured.lock().unwrap();
+            best = Measured {
+                wall,
+                sim: tl.elapsed(),
+                measured_exposed: ms.exposed_comm_seconds,
+                measured_comm: ms.comm_seconds,
+                modeled_exposed: tl.exposed_comm_seconds,
+            };
+        }
+    }
+    best
+}
 
 fn main() {
     println!("\nFig 10 — model parallelism scaling (DAP vs TP)\n");
@@ -36,40 +91,81 @@ fn main() {
     )
     .unwrap();
 
-    println!("EXECUTED (tiny preset, dual-stream simulated step; block fwd):");
-    let mut t = Table::new(&["DAP ranks", "sim step (ms)", "efficiency", "exposed comm (ms)"]);
-    let mut t1 = 0.0f64;
-    for n in [1usize, 2, 4] {
-        let co = DapCoordinator::new(&rt, "tiny", n, true).unwrap();
-        // warmup (compile + first-run effects)
+    // warmup (compile + first-run effects)
+    {
+        let co = DapCoordinator::new(&rt, "tiny", 1, true).unwrap();
         let mut st = co.shard_inputs(&m, &z).unwrap();
         co.block_forward(&bp, &mut st).unwrap();
-        // measured
-        let co = DapCoordinator::new(&rt, "tiny", n, true).unwrap();
-        let mut best = f64::INFINITY;
-        let mut exposed = 0.0;
-        for _ in 0..3 {
-            let co2 = DapCoordinator::new(&rt, "tiny", n, true).unwrap();
-            let mut st = co2.shard_inputs(&m, &z).unwrap();
-            co2.block_forward(&bp, &mut st).unwrap();
-            let tl = co2.timeline.borrow();
-            if tl.elapsed() < best {
-                best = tl.elapsed();
-                exposed = tl.exposed_comm_seconds;
+    }
+
+    let auto = default_threads();
+    println!(
+        "EXECUTED (tiny preset, block fwd; host threads: 1 = sequential, \
+         {auto} = auto):"
+    );
+    let mut t = Table::new(&[
+        "DAP ranks", "threads", "overlap", "wall (ms)", "sim step (ms)",
+        "meas comm (ms)", "meas exposed (ms)", "model exposed (ms)",
+    ]);
+    let mut wall_seq_dap4 = 0.0f64;
+    let mut wall_thr_dap4 = 0.0f64;
+    let mut share_on = 0.0f64;
+    let mut share_off = 0.0f64;
+    for n in [1usize, 2, 4] {
+        let mut thread_opts = vec![1usize];
+        if auto > 1 {
+            thread_opts.push(auto);
+        }
+        for &threads in &thread_opts {
+            for overlap in [true, false] {
+                let p = run_point(&rt, &bp, &m, &z, n, threads, overlap);
+                if n == 4 && overlap {
+                    if threads == 1 {
+                        wall_seq_dap4 = p.wall;
+                    } else {
+                        wall_thr_dap4 = p.wall;
+                    }
+                }
+                if n == 4 && threads == auto.max(1) {
+                    let share = p.measured_exposed / p.wall.max(1e-12);
+                    if overlap {
+                        share_on = share;
+                    } else {
+                        share_off = share;
+                    }
+                }
+                t.row(&[
+                    n.to_string(),
+                    threads.to_string(),
+                    (if overlap { "on" } else { "off" }).to_string(),
+                    format!("{:.2}", p.wall * 1e3),
+                    format!("{:.2}", p.sim * 1e3),
+                    format!("{:.3}", p.measured_comm * 1e3),
+                    format!("{:.3}", p.measured_exposed * 1e3),
+                    format!("{:.3}", p.modeled_exposed * 1e3),
+                ]);
             }
         }
-        drop(co);
-        if n == 1 {
-            t1 = best;
-        }
-        t.row(&[
-            n.to_string(),
-            format!("{:.2}", best * 1e3),
-            format!("{:.1}%", 100.0 * t1 / (n as f64 * best)),
-            format!("{:.3}", exposed * 1e3),
-        ]);
     }
     t.print();
+    if wall_thr_dap4 > 0.0 {
+        println!(
+            "\nthreaded speedup at dap=4 (overlap on): {:.2}x \
+             (sequential {:.2} ms -> {} threads {:.2} ms)",
+            wall_seq_dap4 / wall_thr_dap4.max(1e-12),
+            wall_seq_dap4 * 1e3,
+            auto,
+            wall_thr_dap4 * 1e3,
+        );
+        println!(
+            "measured exposed-comm share at dap=4, {auto} threads: \
+             overlap on {:.1}% vs off {:.1}%",
+            100.0 * share_on,
+            100.0 * share_off,
+        );
+    } else {
+        println!("\n(single host core: threaded series skipped; run with ≥2 cores)");
+    }
 
     // --- model series at paper scale
     let mdl = ScalingModel::default();

@@ -16,9 +16,14 @@ fn main() {
     println!("\nFig 11 — data-parallel scaling\n");
 
     let rt = Runtime::new("artifacts").expect("run `make artifacts`");
-    println!("EXECUTED (tiny preset, 6 steps per point):");
+    let auto = fastfold::dap::default_threads();
+    println!(
+        "EXECUTED (tiny preset, 6 steps per point; rank executor at 1 \
+         thread = sequential vs {auto} = auto):"
+    );
     let mut t = Table::new(&[
-        "DP ranks", "wall/step (ms, 1 core)", "per-rank step (ms)", "ring wire/step (KiB)",
+        "DP ranks", "threads", "wall/step (ms)", "speedup vs seq",
+        "ring wire/step (KiB)",
     ]);
     for dp in [1usize, 2, 4] {
         let cfg = TrainConfig {
@@ -31,16 +36,28 @@ fn main() {
             seed: 3,
             grad_clip: Some(1.0),
         };
-        let mut tr = Trainer::new(&rt, "tiny", dp, cfg).unwrap();
-        let rep = tr.run().unwrap();
-        let wall_step = rep.seconds / rep.steps as f64;
-        t.row(&[
-            dp.to_string(),
-            format!("{:.1}", wall_step * 1e3),
-            // ranks execute serially on 1 core: per-rank ≈ wall / dp
-            format!("{:.1}", wall_step * 1e3 / dp as f64),
-            format!("{:.1}", rep.wire_bytes as f64 / 1024.0 / rep.steps as f64),
-        ]);
+        let mut wall_seq = 0.0f64;
+        let mut thread_opts = vec![1usize];
+        if auto > 1 {
+            thread_opts.push(auto);
+        }
+        for &threads in &thread_opts {
+            let mut tr = Trainer::new(&rt, "tiny", dp, cfg.clone())
+                .unwrap()
+                .with_threads(threads);
+            let rep = tr.run().unwrap();
+            let wall_step = rep.seconds / rep.steps as f64;
+            if threads == 1 {
+                wall_seq = wall_step;
+            }
+            t.row(&[
+                dp.to_string(),
+                threads.to_string(),
+                format!("{:.1}", wall_step * 1e3),
+                format!("{:.2}x", wall_seq / wall_step.max(1e-12)),
+                format!("{:.1}", rep.wire_bytes as f64 / 1024.0 / rep.steps as f64),
+            ]);
+        }
     }
     t.print();
 

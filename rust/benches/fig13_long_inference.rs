@@ -31,7 +31,7 @@ fn main() {
         co.model_forward(&params, &batch.msa_tokens).unwrap();
         let co = DapCoordinator::new(&rt, "small", n, true).unwrap();
         co.model_forward(&params, &batch.msa_tokens).unwrap();
-        let sim = co.timeline.borrow().elapsed();
+        let sim = co.timeline.lock().unwrap().elapsed();
         if n == 1 {
             base = sim;
         }

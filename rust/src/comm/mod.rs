@@ -10,26 +10,32 @@
 //! `ring` contains a real ring all-reduce (2(N−1) chunk steps) — the
 //! algorithm the DP gradient reduction models — validated against the
 //! naive sum.
+//!
+//! Threading: the log is shared behind `Arc<Mutex<…>>`, so a `Collectives`
+//! clone can be handed to rank worker threads and to the dedicated
+//! [`worker::CommWorker`] thread that runs Duality-Async collectives off
+//! the compute path.
 
 pub mod log;
 pub mod ring;
+pub mod worker;
 
 use crate::error::{Error, Result};
 use crate::tensor::HostTensor;
 pub use log::{CommKind, CommLog, CommRecord};
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
-/// Collective engine over logical ranks. Cheap to clone (shared log).
+/// Collective engine over logical ranks. Cheap to clone (shared log);
+/// `Send + Sync`, so clones may issue collectives from any thread.
 #[derive(Clone)]
 pub struct Collectives {
     pub n: usize,
-    pub log: Rc<RefCell<CommLog>>,
+    pub log: Arc<Mutex<CommLog>>,
 }
 
 impl Collectives {
     pub fn new(n: usize) -> Self {
-        Collectives { n, log: Rc::new(RefCell::new(CommLog::default())) }
+        Collectives { n, log: Arc::new(Mutex::new(CommLog::default())) }
     }
 
     fn check(&self, parts: &[HostTensor], what: &str) -> Result<()> {
@@ -50,7 +56,7 @@ impl Collectives {
         self.check(parts, "all_gather")?;
         let full = HostTensor::concat(parts, axis)?;
         let bytes = full.size_bytes() * (self.n - 1) / self.n.max(1);
-        self.log.borrow_mut().record(CommKind::AllGather, bytes, full.size_bytes());
+        self.log.lock().unwrap().record(CommKind::AllGather, bytes, full.size_bytes());
         Ok(vec![full; self.n])
     }
 
@@ -63,12 +69,17 @@ impl Collectives {
             total.add_assign(p)?;
         }
         let bytes = total.size_bytes() * (self.n - 1) / self.n.max(1);
-        self.log.borrow_mut().record(CommKind::ReduceScatter, bytes, total.size_bytes());
+        self.log.lock().unwrap().record(CommKind::ReduceScatter, bytes, total.size_bytes());
         total.split_axis(axis, self.n)
     }
 
     /// Each rank splits its local tensor along `split`, sends part p to
     /// rank p, and concatenates what it receives along `concat`.
+    ///
+    /// The wire volume is priced per rank from the (validated-uniform)
+    /// local shard size: pricing from `parts[0]` alone would silently
+    /// mis-account a ragged input, so non-uniform shard shapes are an
+    /// error here even when concat could geometrically absorb them.
     pub fn all_to_all(
         &self,
         parts: &[HostTensor],
@@ -76,6 +87,13 @@ impl Collectives {
         concat: usize,
     ) -> Result<Vec<HostTensor>> {
         self.check(parts, "all_to_all")?;
+        if let Some(bad) = parts.iter().position(|p| p.shape != parts[0].shape) {
+            return Err(Error::Comm(format!(
+                "all_to_all: non-uniform shard shapes: rank 0 has {:?} but \
+                 rank {bad} has {:?}",
+                parts[0].shape, parts[bad].shape
+            )));
+        }
         let mut split_parts: Vec<Vec<HostTensor>> = Vec::with_capacity(self.n);
         for p in parts {
             split_parts.push(p.split_axis(split, self.n)?);
@@ -89,7 +107,7 @@ impl Collectives {
         // per-rank volume: local tensor minus the self-part stays put
         let local = parts[0].size_bytes();
         let bytes = local * (self.n - 1) / self.n.max(1);
-        self.log.borrow_mut().record(CommKind::AllToAll, bytes, local);
+        self.log.lock().unwrap().record(CommKind::AllToAll, bytes, local);
         Ok(out)
     }
 
@@ -102,7 +120,7 @@ impl Collectives {
             total.add_assign(p)?;
         }
         let bytes = total.size_bytes() * 2 * (self.n - 1) / self.n.max(1);
-        self.log.borrow_mut().record(CommKind::AllReduce, bytes, total.size_bytes());
+        self.log.lock().unwrap().record(CommKind::AllReduce, bytes, total.size_bytes());
         Ok(vec![total; self.n])
     }
 
@@ -111,7 +129,7 @@ impl Collectives {
         self.check(parts, "broadcast")?;
         let t = parts[root].clone();
         let bytes = t.size_bytes();
-        self.log.borrow_mut().record(CommKind::Broadcast, bytes, bytes);
+        self.log.lock().unwrap().record(CommKind::Broadcast, bytes, bytes);
         Ok(vec![t; self.n])
     }
 }
@@ -190,10 +208,25 @@ mod tests {
         let c = Collectives::new(2);
         c.all_gather(&shards(2, 2), 0).unwrap();
         c.all_reduce(&shards(2, 2)).unwrap();
-        let log = c.log.borrow();
+        let log = c.log.lock().unwrap();
         assert_eq!(log.count(CommKind::AllGather), 1);
         assert_eq!(log.count(CommKind::AllReduce), 1);
         assert!(log.total_bytes() > 0);
+    }
+
+    #[test]
+    fn all_to_all_rejects_nonuniform_shards() {
+        // wire volume is priced from the local shard size, so a ragged
+        // input must be an error, not a silently mispriced transfer
+        let c = Collectives::new(2);
+        let parts = vec![
+            HostTensor::full(&[2, 4], 1.0),
+            HostTensor::full(&[2, 6], 1.0),
+        ];
+        let err = c.all_to_all(&parts, 1, 0).unwrap_err();
+        assert!(err.to_string().contains("non-uniform"), "{err}");
+        // and nothing was logged for the failed collective
+        assert_eq!(c.log.lock().unwrap().len(), 0);
     }
 
     #[test]

@@ -4,14 +4,21 @@
 //! Phase 1 (reduce-scatter): N−1 steps; in step s, rank r sends chunk
 //! (r−s) mod N to rank r+1 and accumulates what it receives.
 //! Phase 2 (all-gather): N−1 steps circulating the finished chunks.
-//! Per-rank wire volume: 2(N−1)/N × size — the constant the α–β model uses.
+//! Per-rank wire volume: ≈ 2(N−1)/N × size — the constant the α–β model
+//! uses — measured here *exactly* per rank, because with a non-divisible
+//! length the remainder-absorbing last chunk makes ranks unequal: over the
+//! 2(N−1) steps, rank r sends every chunk except (r+1) mod N in phase 1
+//! and every chunk except (r+2) mod N in phase 2, so ranks that skip the
+//! big chunk move fewer bytes than ranks that skip a base chunk.
 
 use crate::error::{Error, Result};
 
 /// Run ring all-reduce over per-rank flat vectors (in place, returns sums).
-/// Also returns the per-rank wire bytes actually moved, so tests can verify
-/// the 2(N−1)/N volume formula the perf model assumes.
-pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, usize)> {
+/// Also returns the wire bytes actually sent by each rank, so tests can
+/// verify the 2(N−1)/N volume formula the perf model assumes and callers
+/// can account the critical-path (max) rank honestly. The old truncating
+/// `total / n` average hid the per-rank skew at non-divisible lengths.
+pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
     let n = ranks.len();
     if n == 0 {
         return Err(Error::Comm("ring over 0 ranks".into()));
@@ -21,14 +28,14 @@ pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, usize
         return Err(Error::Comm("ring shards differ in length".into()));
     }
     if n == 1 {
-        return Ok((ranks, 0));
+        return Ok((ranks, vec![0]));
     }
     // chunk boundaries (last chunk absorbs the remainder)
     let base = len / n;
     let bounds: Vec<(usize, usize)> = (0..n)
         .map(|c| (c * base, if c == n - 1 { len } else { (c + 1) * base }))
         .collect();
-    let mut wire = 0usize;
+    let mut wire = vec![0usize; n];
 
     // phase 1: reduce-scatter
     for s in 0..n - 1 {
@@ -47,7 +54,7 @@ pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, usize
             for (i, v) in chunk.iter().enumerate() {
                 ranks[dst][lo + i] += v;
             }
-            wire += chunk.len() * 4;
+            wire[r] += chunk.len() * 4;
         }
     }
     // phase 2: all-gather of finished chunks
@@ -64,10 +71,10 @@ pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, usize
             let (c, ref chunk) = sends[r];
             let (lo, _hi) = bounds[c];
             ranks[dst][lo..lo + chunk.len()].copy_from_slice(chunk);
-            wire += chunk.len() * 4;
+            wire[r] += chunk.len() * 4;
         }
     }
-    Ok((ranks, wire / n))
+    Ok((ranks, wire))
 }
 
 #[cfg(test)]
@@ -96,20 +103,44 @@ mod tests {
 
     #[test]
     fn wire_volume_formula() {
-        // per-rank wire bytes ≈ 2(N−1)/N × size_bytes
+        // divisible length: every rank sends exactly 2(N−1)/N × size_bytes
         let n = 4;
         let len = 1024;
         let ranks: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0; len]).collect();
         let (_, wire) = ring_all_reduce(ranks).unwrap();
         let expect = 2 * (n - 1) * len * 4 / n;
+        assert_eq!(wire, vec![expect; n]);
+    }
+
+    #[test]
+    fn wire_volume_exact_at_non_divisible_length() {
+        // len=33, n=8: base chunk 4 elems, last chunk 5. The old
+        // accounting truncated total/n to a single flat 231 B/rank; the
+        // true per-rank volumes are skewed by which chunk a rank skips.
+        let (n, len) = (8usize, 33usize);
+        let ranks: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0; len]).collect();
+        let (_, wire) = ring_all_reduce(ranks).unwrap();
+        let base = len / n;
+        let chunk_bytes =
+            |c: usize| 4 * if c == n - 1 { len - (n - 1) * base } else { base };
+        // rank r skips chunk (r+1)%n in phase 1 and (r+2)%n in phase 2
+        let expect: Vec<usize> = (0..n)
+            .map(|r| {
+                2 * len * 4 - chunk_bytes((r + 1) % n) - chunk_bytes((r + 2) % n)
+            })
+            .collect();
         assert_eq!(wire, expect);
+        // totals conserved: every chunk crosses every link once per phase
+        assert_eq!(wire.iter().sum::<usize>(), 2 * (n - 1) * len * 4);
+        // the skew the old `total / n` average hid
+        assert!(wire.iter().any(|&w| w != wire[0]));
     }
 
     #[test]
     fn single_rank_noop() {
         let (out, wire) = ring_all_reduce(vec![vec![3.0, 4.0]]).unwrap();
         assert_eq!(out[0], vec![3.0, 4.0]);
-        assert_eq!(wire, 0);
+        assert_eq!(wire, vec![0]);
     }
 
     #[test]

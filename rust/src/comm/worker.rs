@@ -1,0 +1,189 @@
+//! Dedicated communication worker thread: the *real-clock* analogue of the
+//! simulated comm stream in [`crate::dap::Timeline`].
+//!
+//! Duality Async Operations hide collective latency behind compute. The
+//! simulated timeline has always modeled that; this worker makes it true
+//! on the host as well: the schedule executor submits an async collective
+//! here at its trigger point and keeps running rank compute, then joins
+//! the [`CommTicket`] at the schedule's `wait`. Jobs execute FIFO on one
+//! thread — exactly the single comm stream the α–β model prices — and the
+//! collective math is the same [`Collectives`] code the synchronous path
+//! runs, so deferred execution is bit-for-bit identical to inline
+//! execution.
+
+use super::Collectives;
+use crate::error::{Error, Result};
+use crate::tensor::HostTensor;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One deferred collective: the op kind plus the input shards captured at
+/// the schedule's trigger point (issue-time snapshot semantics).
+///
+/// [`CommJob::run`] is the single dispatch point — the worker loop and the
+/// executor's inline path both go through it, so deferred and inline
+/// execution cannot drift apart.
+pub enum CommJob {
+    /// `all_gather(parts, axis)`
+    Gather {
+        /// per-rank input shards
+        parts: Vec<HostTensor>,
+        /// concat axis
+        axis: usize,
+    },
+    /// `reduce_scatter(parts, axis)`
+    Scatter {
+        /// per-rank full partial tensors
+        parts: Vec<HostTensor>,
+        /// split axis
+        axis: usize,
+    },
+    /// `all_to_all(parts, split, concat)`
+    AllToAll {
+        /// per-rank local tensors
+        parts: Vec<HostTensor>,
+        /// axis each rank splits along
+        split: usize,
+        /// axis each rank concatenates along
+        concat: usize,
+    },
+}
+
+impl CommJob {
+    /// Execute the collective against `comm`.
+    pub fn run(self, comm: &Collectives) -> Result<Vec<HostTensor>> {
+        match self {
+            CommJob::Gather { parts, axis } => comm.all_gather(&parts, axis),
+            CommJob::Scatter { parts, axis } => comm.reduce_scatter(&parts, axis),
+            CommJob::AllToAll { parts, split, concat } => {
+                comm.all_to_all(&parts, split, concat)
+            }
+        }
+    }
+}
+
+struct CommDone {
+    result: Result<Vec<HostTensor>>,
+    exec_seconds: f64,
+}
+
+/// Handle for one in-flight collective; joining blocks until the worker
+/// has finished the job.
+pub struct CommTicket {
+    rx: Receiver<CommDone>,
+}
+
+impl CommTicket {
+    /// Block until the collective completes; returns the per-rank results
+    /// and the seconds the worker spent executing it (measured comm time,
+    /// whether or not it was exposed to the compute path).
+    pub fn join(self) -> Result<(Vec<HostTensor>, f64)> {
+        let done = self.rx.recv().map_err(|_| {
+            Error::Comm("comm worker exited before completing a collective".into())
+        })?;
+        Ok((done.result?, done.exec_seconds))
+    }
+}
+
+/// The comm worker thread. Dropping it closes the job queue and joins the
+/// thread; outstanding tickets then fail with a descriptive error.
+pub struct CommWorker {
+    tx: Option<Sender<(CommJob, Sender<CommDone>)>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl CommWorker {
+    /// Spawn the worker over a clone of the comm substrate (the log is
+    /// shared, so collectives run here are recorded like any other).
+    pub fn spawn(comm: Collectives) -> Self {
+        let (tx, rx) = channel::<(CommJob, Sender<CommDone>)>();
+        let handle = std::thread::Builder::new()
+            .name("fastfold-comm".into())
+            .spawn(move || {
+                for (job, reply) in rx {
+                    let t0 = Instant::now();
+                    let result = job.run(&comm);
+                    // a dropped ticket (executor bailed early) is fine
+                    let _ = reply.send(CommDone {
+                        result,
+                        exec_seconds: t0.elapsed().as_secs_f64(),
+                    });
+                }
+            })
+            .expect("spawn fastfold-comm worker thread");
+        CommWorker { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Enqueue a collective; returns immediately with its join ticket.
+    pub fn submit(&self, job: CommJob) -> CommTicket {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .as_ref()
+            .expect("comm worker queue open while worker alive")
+            .send((job, reply_tx))
+            .expect("comm worker thread alive");
+        CommTicket { rx: reply_rx }
+    }
+}
+
+impl Drop for CommWorker {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue → worker loop ends
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deferred_equals_inline() {
+        let comm = Collectives::new(2);
+        let parts = vec![
+            HostTensor::full(&[2, 3], 1.0),
+            HostTensor::full(&[2, 3], 2.0),
+        ];
+        let inline = comm.all_gather(&parts, 0).unwrap();
+        let worker = CommWorker::spawn(comm.clone());
+        let ticket =
+            worker.submit(CommJob::Gather { parts: parts.clone(), axis: 0 });
+        let (deferred, secs) = ticket.join().unwrap();
+        assert_eq!(inline, deferred);
+        assert!(secs >= 0.0);
+        // both executions hit the shared log
+        assert_eq!(comm.log.lock().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn worker_propagates_collective_errors() {
+        let comm = Collectives::new(3); // 3 ranks, 2 shards -> error
+        let worker = CommWorker::spawn(comm);
+        let parts = vec![HostTensor::full(&[2], 0.0), HostTensor::full(&[2], 0.0)];
+        let ticket = worker.submit(CommJob::Scatter { parts, axis: 0 });
+        assert!(ticket.join().is_err());
+    }
+
+    #[test]
+    fn fifo_order_many_jobs() {
+        let comm = Collectives::new(2);
+        let worker = CommWorker::spawn(comm);
+        let tickets: Vec<CommTicket> = (0..8)
+            .map(|i| {
+                let parts = vec![
+                    HostTensor::full(&[4], i as f32),
+                    HostTensor::full(&[4], -(i as f32)),
+                ];
+                worker.submit(CommJob::Scatter { parts, axis: 0 })
+            })
+            .collect();
+        for ticket in tickets {
+            let (out, _) = ticket.join().unwrap();
+            // reduce_scatter of x and -x sums to zero everywhere
+            assert!(out.iter().all(|t| t.data.iter().all(|&v| v == 0.0)));
+        }
+    }
+}

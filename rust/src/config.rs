@@ -153,11 +153,26 @@ pub struct ParallelConfig {
     pub dp_size: usize,
     /// Duality Async Operation (computation–communication overlap) on/off.
     pub overlap: bool,
+    /// Rank-executor host threads: 0 = auto (env `FASTFOLD_THREADS` or
+    /// available parallelism), 1 = sequential, N = explicit budget.
+    pub threads: usize,
 }
 
 impl Default for ParallelConfig {
     fn default() -> Self {
-        ParallelConfig { dap_size: 1, tp_size: 1, dp_size: 1, overlap: true }
+        ParallelConfig { dap_size: 1, tp_size: 1, dp_size: 1, overlap: true, threads: 0 }
+    }
+}
+
+impl ParallelConfig {
+    /// Resolve the configured thread budget: explicit value, or the
+    /// [`crate::dap::default_threads`] policy when 0 (auto).
+    pub fn resolve_threads(&self) -> usize {
+        if self.threads >= 1 {
+            self.threads
+        } else {
+            crate::dap::default_threads()
+        }
     }
 }
 
@@ -366,6 +381,9 @@ impl RunConfig {
             if let Some(v) = p.get("overlap") {
                 cfg.parallel.overlap = v.as_bool()?;
             }
+            if let Some(v) = p.get("threads") {
+                cfg.parallel.threads = v.as_usize()?;
+            }
         }
         if let Some(t) = doc.get("train") {
             if let Some(v) = t.get("steps") {
@@ -448,6 +466,7 @@ artifacts_dir = "artifacts"
 [parallel]
 dap_size = 4
 overlap = false
+threads = 2
 
 [train]
 steps = 50
@@ -462,6 +481,9 @@ headroom = 0.25
         assert_eq!(cfg.preset, "small");
         assert_eq!(cfg.parallel.dap_size, 4);
         assert!(!cfg.parallel.overlap);
+        assert_eq!(cfg.parallel.threads, 2);
+        assert_eq!(cfg.parallel.resolve_threads(), 2);
+        assert!(ParallelConfig::default().resolve_threads() >= 1);
         assert_eq!(cfg.train.steps, 50);
         assert!((cfg.train.lr - 5e-4).abs() < 1e-9);
         assert!(cfg.autochunk.enabled);

@@ -1,8 +1,12 @@
-//! The DAP executor: runs the manifest schedule per Evoformer block across
-//! N logical ranks, records the tape for backward, drives the timeline.
+//! The DAP coordinator: owns the PJRT segment executables, the comm
+//! substrate, and the dual-stream clocks, and drives the threaded
+//! schedule executor ([`super::executor`]) per Evoformer block across N
+//! logical ranks — recording the tape for backward.
 
-use super::tape::{Tape, TapeOp};
+use super::executor::{default_threads, run_schedule, MeasuredComm, SegmentRunner};
+use super::tape::Tape;
 use super::timeline::{CommCost, Timeline};
+use crate::comm::worker::CommWorker;
 use crate::comm::Collectives;
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
@@ -11,24 +15,61 @@ use crate::runtime::{Executable, Runtime};
 use crate::tensor::{HostTensor, IntTensor};
 use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::rc::Rc;
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
 
-/// Per-slot, per-rank tensor state threaded through the schedule.
-pub type State = BTreeMap<String, Vec<HostTensor>>;
+pub use super::executor::State;
 
 pub struct DapCoordinator<'rt> {
     pub rt: &'rt Runtime,
     pub cfg: ModelConfig,
     pub preset: String,
     pub n: usize,
+    /// rank-executor thread budget (1 = the exact sequential path);
+    /// defaults to [`default_threads`], override with [`Self::with_threads`]
+    pub threads: usize,
     pub comm: Collectives,
-    pub timeline: RefCell<Timeline>,
-    segs: BTreeMap<String, Rc<Executable>>,
-    segs_bwd: BTreeMap<String, Rc<Executable>>,
+    pub timeline: Mutex<Timeline>,
+    /// real-clock comm ledger (measured counterpart of the timeline)
+    pub measured: Mutex<MeasuredComm>,
+    segs: BTreeMap<String, Arc<Executable>>,
+    segs_bwd: BTreeMap<String, Arc<Executable>>,
+    /// the long-lived Duality-Async comm worker, spawned lazily on the
+    /// first overlapped block so every block forward reuses one thread
+    comm_worker: RefCell<Option<CommWorker>>,
     /// record a tape during forward (enable for training)
     pub record: RefCell<bool>,
     pub tape: RefCell<Tape>,
+}
+
+/// PJRT-backed segment runner: the production implementation of the
+/// executor's [`SegmentRunner`] seam. Ranks are SPMD (same executable on
+/// equal shards), so `rank` only selects the input shards.
+struct PjrtSegmentRunner<'a> {
+    segs: &'a BTreeMap<String, Arc<Executable>>,
+    block_params: &'a [HostTensor],
+    param_lits: &'a [xla::Literal],
+    lit_cache: bool,
+}
+
+impl SegmentRunner for PjrtSegmentRunner<'_> {
+    fn run_segment(
+        &self,
+        seg: &str,
+        _rank: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let exe = self
+            .segs
+            .get(seg)
+            .ok_or_else(|| Error::Schedule(format!("no segment '{seg}'")))?;
+        if self.lit_cache {
+            exe.run_with_params(self.param_lits, inputs)
+        } else {
+            let mut args = self.block_params.to_vec();
+            args.extend_from_slice(inputs);
+            exe.run_f32(&args)
+        }
+    }
 }
 
 impl<'rt> DapCoordinator<'rt> {
@@ -66,13 +107,24 @@ impl<'rt> DapCoordinator<'rt> {
             cfg,
             preset: preset.to_string(),
             n,
+            threads: default_threads(),
             comm: Collectives::new(n),
-            timeline: RefCell::new(Timeline::new(n, CommCost::cpu_calibrated(), overlap)),
+            timeline: Mutex::new(Timeline::new(n, CommCost::cpu_calibrated(), overlap)),
+            measured: Mutex::new(MeasuredComm::default()),
             segs,
             segs_bwd,
+            comm_worker: RefCell::new(None),
             record: RefCell::new(false),
             tape: RefCell::new(Tape::default()),
         })
+    }
+
+    /// Builder-style override of the rank-executor thread budget
+    /// (`--threads` on the CLI): 1 restores the sequential path, 0 means
+    /// auto ([`default_threads`]), consistent with the CLI/TOML/env knobs.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = if threads == 0 { default_threads() } else { threads };
+        self
     }
 
     pub fn has_backward(&self) -> bool {
@@ -115,7 +167,10 @@ impl<'rt> DapCoordinator<'rt> {
         Ok((m, z))
     }
 
-    /// Run one Evoformer block forward under the DAP schedule.
+    /// Run one Evoformer block forward under the DAP schedule: rank
+    /// executions fan out over `self.threads` worker threads, async
+    /// collectives run on the comm worker and join at `Wait` (real
+    /// Duality-Async overlap; see [`super::executor`]).
     /// `block_params`: the block's 63 parameter leaves in canonical order
     /// (identical on every rank — DAP replicates parameters).
     pub fn block_forward(&self, block_params: &[HostTensor], state: &mut State) -> Result<()> {
@@ -129,123 +184,55 @@ impl<'rt> DapCoordinator<'rt> {
         } else {
             Vec::new()
         };
-        let schedule = self.rt.manifest.schedule.clone();
-        // async collectives whose results are not yet visible in `state`
-        let mut inflight: BTreeMap<String, (String, Vec<HostTensor>)> = BTreeMap::new();
-        let recording = *self.record.borrow();
-
-        for op in &schedule {
-            match op {
-                ScheduleOp::Exec { seg, inputs, outputs } => {
-                    let exe = self
-                        .segs
-                        .get(seg)
-                        .ok_or_else(|| Error::Schedule(format!("no segment '{seg}'")))?;
-                    let mut per_rank_outs: Vec<Vec<HostTensor>> = Vec::with_capacity(self.n);
-                    let t0 = Instant::now();
-                    for r in 0..self.n {
-                        let mut rest: Vec<HostTensor> = Vec::with_capacity(inputs.len());
-                        for slot in inputs {
-                            let shards = state.get(slot).ok_or_else(|| {
-                                Error::Schedule(format!("slot '{slot}' unset for '{seg}'"))
-                            })?;
-                            rest.push(shards[r].clone());
-                        }
-                        if lit_cache {
-                            per_rank_outs.push(exe.run_with_params(&param_lits, &rest)?);
-                        } else {
-                            let mut args = block_params.to_vec();
-                            args.extend(rest);
-                            per_rank_outs.push(exe.run_f32(&args)?);
-                        }
-                    }
-                    let secs = t0.elapsed().as_secs_f64() / self.n as f64;
-                    self.timeline.borrow_mut().exec(secs);
-                    if recording {
-                        let snap: Vec<Vec<HostTensor>> = inputs
-                            .iter()
-                            .map(|slot| state[slot].clone())
-                            .collect();
-                        self.tape.borrow_mut().push(TapeOp::Exec {
-                            seg: seg.clone(),
-                            in_slots: inputs.clone(),
-                            out_slots: outputs.clone(),
-                            inputs: snap,
-                        });
-                    }
-                    for (k, slot) in outputs.iter().enumerate() {
-                        let shards: Vec<HostTensor> =
-                            (0..self.n).map(|r| per_rank_outs[r][k].clone()).collect();
-                        state.insert(slot.clone(), shards);
-                    }
-                }
-                ScheduleOp::Gather { input, output, axis, id } => {
-                    let parts = &state[input];
-                    let bytes = parts[0].size_bytes() * (self.n - 1);
-                    let res = self.comm.all_gather(parts, *axis)?;
-                    if recording {
-                        self.tape.borrow_mut().push(TapeOp::Gather {
-                            in_slot: input.clone(), out_slot: output.clone(), axis: *axis });
-                    }
-                    self.land(state, &mut inflight, id, output, res, bytes);
-                }
-                ScheduleOp::Scatter { input, output, axis, id } => {
-                    let parts = &state[input];
-                    let bytes = parts[0].size_bytes() * (self.n - 1) / self.n;
-                    let res = self.comm.reduce_scatter(parts, *axis)?;
-                    if recording {
-                        self.tape.borrow_mut().push(TapeOp::Scatter {
-                            in_slot: input.clone(), out_slot: output.clone(), axis: *axis });
-                    }
-                    self.land(state, &mut inflight, id, output, res, bytes);
-                }
-                ScheduleOp::AllToAll { input, output, split, concat, id } => {
-                    let parts = &state[input];
-                    let bytes = parts[0].size_bytes() * (self.n - 1) / self.n;
-                    let res = self.comm.all_to_all(parts, *split, *concat)?;
-                    if recording {
-                        self.tape.borrow_mut().push(TapeOp::AllToAll {
-                            in_slot: input.clone(), out_slot: output.clone(),
-                            split: *split, concat: *concat });
-                    }
-                    self.land(state, &mut inflight, id, output, res, bytes);
-                }
-                ScheduleOp::Wait { id } => {
-                    self.timeline.borrow_mut().wait(id);
-                    if let Some((slot, val)) = inflight.remove(id) {
-                        state.insert(slot, val);
-                    }
-                }
-            }
+        let runner = PjrtSegmentRunner {
+            segs: &self.segs,
+            block_params,
+            param_lits: &param_lits,
+            lit_cache,
+        };
+        let schedule = &self.rt.manifest.schedule;
+        // spawn the comm worker once, on the first block that can overlap
+        if self.threads > 1
+            && self.timeline.lock().unwrap().overlap
+            && self.comm_worker.borrow().is_none()
+        {
+            *self.comm_worker.borrow_mut() = Some(CommWorker::spawn(self.comm.clone()));
         }
-        if !inflight.is_empty() {
-            return Err(Error::Schedule(format!(
-                "unjoined collectives at block end: {:?}",
-                inflight.keys().collect::<Vec<_>>()
-            )));
+        let worker_guard = self.comm_worker.borrow();
+        let worker = worker_guard.as_ref();
+        if *self.record.borrow() {
+            let mut tape = self.tape.borrow_mut();
+            run_schedule(
+                schedule, self.n, self.threads, &runner, &self.comm,
+                &self.timeline, &self.measured, worker, state, Some(&mut *tape),
+            )
+        } else {
+            run_schedule(
+                schedule, self.n, self.threads, &runner, &self.comm,
+                &self.timeline, &self.measured, worker, state, None,
+            )
         }
-        Ok(())
     }
 
-    fn land(
-        &self,
-        state: &mut State,
-        inflight: &mut BTreeMap<String, (String, Vec<HostTensor>)>,
-        id: &Option<String>,
-        output: &str,
-        res: Vec<HostTensor>,
-        bytes: usize,
-    ) {
-        match id {
-            Some(id) => {
-                self.timeline.borrow_mut().collective_async(id, bytes);
-                inflight.insert(id.clone(), (output.to_string(), res));
-            }
-            None => {
-                self.timeline.borrow_mut().collective_sync(bytes);
-                state.insert(output.to_string(), res);
-            }
-        }
+    /// One-line measured-vs-modeled overlap report: real wall/comm/exposed
+    /// seconds from [`MeasuredComm`] next to the α–β timeline prediction.
+    pub fn overlap_report(&self) -> String {
+        let tl = self.timeline.lock().unwrap();
+        let m = *self.measured.lock().unwrap();
+        format!(
+            "measured: wall {:.1} ms, comm {:.1} ms, exposed {:.1} ms \
+             ({:.1}% of wall) | modeled (α–β): elapsed {:.1} ms, comm {:.1} ms, \
+             exposed {:.1} ms [threads={}, overlap={}]",
+            m.wall_seconds * 1e3,
+            m.comm_seconds * 1e3,
+            m.exposed_comm_seconds * 1e3,
+            100.0 * m.exposed_share(),
+            tl.elapsed() * 1e3,
+            tl.comm_seconds * 1e3,
+            tl.exposed_comm_seconds * 1e3,
+            self.threads,
+            tl.overlap,
+        )
     }
 
     /// Backward through one recorded block: consumes the tape, returns
@@ -257,13 +244,13 @@ impl<'rt> DapCoordinator<'rt> {
         super::tape::run_backward(self, block_params, tape, d_state)
     }
 
-    pub(crate) fn bwd_exe(&self, seg: &str) -> Result<&Rc<Executable>> {
+    pub(crate) fn bwd_exe(&self, seg: &str) -> Result<&Arc<Executable>> {
         self.segs_bwd
             .get(seg)
             .ok_or_else(|| Error::Schedule(format!("no backward executable for '{seg}' (export with aot --configs tiny)")))
     }
 
-    pub(crate) fn fwd_exe(&self, seg: &str) -> Result<&Rc<Executable>> {
+    pub(crate) fn fwd_exe(&self, seg: &str) -> Result<&Arc<Executable>> {
         self.segs
             .get(seg)
             .ok_or_else(|| Error::Schedule(format!("no segment '{seg}'")))

@@ -1,0 +1,425 @@
+//! Threaded schedule executor: runs a DAP `ScheduleOp` program over N
+//! logical ranks on real host worker threads, with genuinely deferred
+//! Duality-Async collectives.
+//!
+//! This replaces the old coordinator inner loop, where every "rank" ran
+//! sequentially on one thread and overlap existed only in the simulated
+//! [`Timeline`] clock. Here:
+//!
+//! * Each `Exec` fans the N rank executions out over up to `threads`
+//!   scoped worker threads ([`parallel_ranks`]); results are joined in
+//!   rank order, so the parallel path is bit-for-bit identical to the
+//!   sequential one.
+//! * An async collective (`id: Some(..)`) is submitted to the dedicated
+//!   [`CommWorker`] thread at its trigger point and joined at `Wait` —
+//!   compute issued in between genuinely overlaps it on the wall clock,
+//!   not just on the simulated one. The collective math runs the same
+//!   [`Collectives`] code either way (same reduction order), so deferral
+//!   never changes numerics.
+//! * A [`MeasuredComm`] ledger tracks *real* seconds — total collective
+//!   execution time and the part that blocked the compute path — next to
+//!   the α–β-modeled numbers the timeline keeps, so overlap can be
+//!   reported measured-vs-modeled.
+//!
+//! Schedule safety (the silent failure modes this module closes):
+//! reading a slot whose pending async write has not been waited on is a
+//! schedule error (stale-read hazard), writing such a slot is one too
+//! (the joined result would clobber the newer write), waiting on an
+//! unknown id is a schedule error, reusing an in-flight id is a schedule
+//! error, and finishing the schedule with un-joined collectives remains
+//! one.
+
+use super::tape::{Tape, TapeOp};
+use super::timeline::Timeline;
+use crate::comm::worker::{CommJob, CommTicket, CommWorker};
+use crate::comm::Collectives;
+use crate::error::{Error, Result};
+use crate::manifest::ScheduleOp;
+use crate::tensor::HostTensor;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Per-slot, per-rank tensor state threaded through the schedule.
+pub type State = BTreeMap<String, Vec<HostTensor>>;
+
+/// How a segment is actually executed for one rank. The coordinator backs
+/// this with PJRT executables; tests back it with pure host math, so the
+/// threading/overlap machinery is exercised without artifacts.
+pub trait SegmentRunner: Sync {
+    /// Run segment `seg` for `rank` on that rank's input shards; returns
+    /// one output tensor per schedule output slot.
+    fn run_segment(
+        &self,
+        seg: &str,
+        rank: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>>;
+}
+
+/// Rank-executor thread count: `FASTFOLD_THREADS` if set (≥1), else the
+/// host's available parallelism. `1` selects the exact sequential path.
+pub fn default_threads() -> usize {
+    match std::env::var("FASTFOLD_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        Some(t) if t >= 1 => t,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Real-clock communication ledger, the measured counterpart of the
+/// timeline's α–β accounting.
+#[derive(Default, Clone, Copy, Debug)]
+pub struct MeasuredComm {
+    /// wall seconds spent inside `run_schedule` calls
+    pub wall_seconds: f64,
+    /// seconds spent executing collectives (worker or inline)
+    pub comm_seconds: f64,
+    /// seconds the compute path was blocked on comm (inline collectives
+    /// plus time blocked joining tickets at `Wait`)
+    pub exposed_comm_seconds: f64,
+}
+
+impl MeasuredComm {
+    /// Exposed-comm share of wall time (0 when nothing ran).
+    pub fn exposed_share(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.exposed_comm_seconds / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run `f(rank)` for every rank, fanning out over up to `threads` scoped
+/// worker threads (worker w takes ranks w, w+W, …). Results come back in
+/// rank order and the first error (by rank order) wins, so callers cannot
+/// observe whether the map ran sequentially or in parallel.
+pub fn parallel_ranks<T: Send>(
+    threads: usize,
+    n: usize,
+    f: impl Fn(usize) -> Result<T> + Sync,
+) -> Result<Vec<T>> {
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let workers = threads.min(n);
+    let mut results: Vec<(usize, Result<T>)> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let f = &f;
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut r = w;
+                    while r < n {
+                        out.push((r, f(r)));
+                        r += workers;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            results.extend(h.join().expect("rank worker thread panicked"));
+        }
+    });
+    results.sort_by_key(|(r, _)| *r);
+    results.into_iter().map(|(_, res)| res).collect()
+}
+
+/// One un-joined async collective: where its result will land, and either
+/// the already-computed value (inline mode) or the comm-worker ticket.
+enum InflightVal {
+    Ready(Vec<HostTensor>),
+    Pending(CommTicket),
+}
+
+struct Inflight {
+    slot: String,
+    val: InflightVal,
+}
+
+/// Error if `slot` is the destination of an un-joined async write: a
+/// reader would see the stale pre-collective shards, and a writer would
+/// be clobbered when the async result lands at `Wait`.
+fn check_no_inflight_write(
+    inflight: &BTreeMap<String, Inflight>,
+    slot: &str,
+    who: &str,
+    access: SlotAccess,
+) -> Result<()> {
+    for (id, inf) in inflight {
+        if inf.slot == slot {
+            return Err(Error::Schedule(match access {
+                SlotAccess::Read => format!(
+                    "stale read: {who} reads slot '{slot}' while async \
+                     collective '{id}' has an in-flight write to it — the \
+                     schedule must wait on '{id}' first"
+                ),
+                SlotAccess::Write => format!(
+                    "write-after-write: {who} writes slot '{slot}' while \
+                     async collective '{id}' has an in-flight write to it \
+                     (joining '{id}' would clobber the newer value) — the \
+                     schedule must wait on '{id}' first"
+                ),
+            }));
+        }
+    }
+    Ok(())
+}
+
+#[derive(Clone, Copy)]
+enum SlotAccess {
+    Read,
+    Write,
+}
+
+/// Execute `schedule` over `n` ranks. `threads` bounds the rank-executor
+/// fan-out (1 = sequential); async collectives are deferred to a comm
+/// worker when the timeline has overlap on *and* threads > 1, otherwise
+/// they execute inline at the trigger (visibility still deferred to
+/// `Wait`, preserving schedule semantics). Pass `worker` to reuse a
+/// long-lived [`CommWorker`] across calls (the coordinator does, so the
+/// spawn cost is paid once, not per block); with `worker: None` a local
+/// one is spawned for this call when deferral applies. `tape`, when
+/// present, records forward ops for the backward replay.
+#[allow(clippy::too_many_arguments)] // this IS the narrow waist of dap/
+pub fn run_schedule<R: SegmentRunner + ?Sized>(
+    schedule: &[ScheduleOp],
+    n: usize,
+    threads: usize,
+    runner: &R,
+    comm: &Collectives,
+    timeline: &Mutex<Timeline>,
+    measured: &Mutex<MeasuredComm>,
+    worker: Option<&CommWorker>,
+    state: &mut State,
+    mut tape: Option<&mut Tape>,
+) -> Result<()> {
+    let wall0 = Instant::now();
+    let overlap = timeline.lock().unwrap().overlap;
+    let spawned: Option<CommWorker>;
+    let worker: Option<&CommWorker> = if overlap && threads > 1 {
+        match worker {
+            Some(w) => Some(w),
+            None => {
+                spawned = Some(CommWorker::spawn(comm.clone()));
+                spawned.as_ref()
+            }
+        }
+    } else {
+        None
+    };
+    let mut inflight: BTreeMap<String, Inflight> = BTreeMap::new();
+
+    // run one collective inline (blocking the compute path) and account it
+    let run_inline = |job: CommJob| -> Result<Vec<HostTensor>> {
+        let t0 = Instant::now();
+        let res = job.run(comm);
+        let secs = t0.elapsed().as_secs_f64();
+        let mut m = measured.lock().unwrap();
+        m.comm_seconds += secs;
+        m.exposed_comm_seconds += secs;
+        res
+    };
+
+    for op in schedule {
+        match op {
+            ScheduleOp::Exec { seg, inputs, outputs } => {
+                for slot in inputs {
+                    check_no_inflight_write(
+                        &inflight, slot, &format!("'{seg}'"), SlotAccess::Read,
+                    )?;
+                    if !state.contains_key(slot) {
+                        return Err(Error::Schedule(format!(
+                            "slot '{slot}' unset for '{seg}'"
+                        )));
+                    }
+                }
+                for slot in outputs {
+                    check_no_inflight_write(
+                        &inflight, slot, &format!("'{seg}'"), SlotAccess::Write,
+                    )?;
+                }
+                let per_rank: Vec<(Vec<HostTensor>, f64)> =
+                    parallel_ranks(threads, n, |r| {
+                        let ins: Vec<HostTensor> =
+                            inputs.iter().map(|slot| state[slot][r].clone()).collect();
+                        let t0 = Instant::now();
+                        let out = runner.run_segment(seg, r, &ins)?;
+                        if out.len() != outputs.len() {
+                            return Err(Error::Schedule(format!(
+                                "segment '{seg}' returned {} outputs, schedule \
+                                 expects {}",
+                                out.len(),
+                                outputs.len()
+                            )));
+                        }
+                        Ok((out, t0.elapsed().as_secs_f64()))
+                    })?;
+                // the simulated clock wants per-rank compute seconds; the
+                // mean of the per-rank measurements equals the old
+                // wall/n in sequential mode and stays honest under
+                // contention in threaded mode
+                let secs = per_rank.iter().map(|(_, s)| s).sum::<f64>() / n as f64;
+                timeline.lock().unwrap().exec(secs);
+                if let Some(t) = tape.as_deref_mut() {
+                    let snap: Vec<Vec<HostTensor>> =
+                        inputs.iter().map(|slot| state[slot].clone()).collect();
+                    t.push(TapeOp::Exec {
+                        seg: seg.clone(),
+                        in_slots: inputs.clone(),
+                        out_slots: outputs.clone(),
+                        inputs: snap,
+                    });
+                }
+                for (k, slot) in outputs.iter().enumerate() {
+                    let shards: Vec<HostTensor> =
+                        per_rank.iter().map(|(o, _)| o[k].clone()).collect();
+                    state.insert(slot.clone(), shards);
+                }
+            }
+            ScheduleOp::Gather { input, output, axis, id } => {
+                check_no_inflight_write(&inflight, input, "gather", SlotAccess::Read)?;
+                let parts = state.get(input).ok_or_else(|| {
+                    Error::Schedule(format!("slot '{input}' unset for gather"))
+                })?;
+                let bytes = parts[0].size_bytes() * (n - 1);
+                if let Some(t) = tape.as_deref_mut() {
+                    t.push(TapeOp::Gather {
+                        in_slot: input.clone(),
+                        out_slot: output.clone(),
+                        axis: *axis,
+                    });
+                }
+                let job = CommJob::Gather { parts: parts.clone(), axis: *axis };
+                land(
+                    job, id, output, bytes, worker, &run_inline, timeline, state,
+                    &mut inflight,
+                )?;
+            }
+            ScheduleOp::Scatter { input, output, axis, id } => {
+                check_no_inflight_write(&inflight, input, "scatter", SlotAccess::Read)?;
+                let parts = state.get(input).ok_or_else(|| {
+                    Error::Schedule(format!("slot '{input}' unset for scatter"))
+                })?;
+                let bytes = parts[0].size_bytes() * (n - 1) / n;
+                if let Some(t) = tape.as_deref_mut() {
+                    t.push(TapeOp::Scatter {
+                        in_slot: input.clone(),
+                        out_slot: output.clone(),
+                        axis: *axis,
+                    });
+                }
+                let job = CommJob::Scatter { parts: parts.clone(), axis: *axis };
+                land(
+                    job, id, output, bytes, worker, &run_inline, timeline, state,
+                    &mut inflight,
+                )?;
+            }
+            ScheduleOp::AllToAll { input, output, split, concat, id } => {
+                check_no_inflight_write(&inflight, input, "all_to_all", SlotAccess::Read)?;
+                let parts = state.get(input).ok_or_else(|| {
+                    Error::Schedule(format!("slot '{input}' unset for all_to_all"))
+                })?;
+                let bytes = parts[0].size_bytes() * (n - 1) / n;
+                if let Some(t) = tape.as_deref_mut() {
+                    t.push(TapeOp::AllToAll {
+                        in_slot: input.clone(),
+                        out_slot: output.clone(),
+                        split: *split,
+                        concat: *concat,
+                    });
+                }
+                let job = CommJob::AllToAll {
+                    parts: parts.clone(),
+                    split: *split,
+                    concat: *concat,
+                };
+                land(
+                    job, id, output, bytes, worker, &run_inline, timeline, state,
+                    &mut inflight,
+                )?;
+            }
+            ScheduleOp::Wait { id } => {
+                // the timeline is the authority on unknown/double-joined
+                // ids; `land` keeps its pending set and `inflight` in
+                // lockstep, so a miss here is an executor invariant break
+                timeline.lock().unwrap().wait(id)?;
+                let inf = inflight.remove(id).ok_or_else(|| {
+                    Error::Schedule(format!(
+                        "internal: timeline and executor in-flight sets \
+                         diverged for id '{id}'"
+                    ))
+                })?;
+                let res = match inf.val {
+                    InflightVal::Ready(v) => v,
+                    InflightVal::Pending(ticket) => {
+                        let t0 = Instant::now();
+                        let (v, exec_secs) = ticket.join()?;
+                        let blocked = t0.elapsed().as_secs_f64();
+                        let mut m = measured.lock().unwrap();
+                        m.comm_seconds += exec_secs;
+                        // only the join stall was exposed; the rest of the
+                        // collective ran under compute
+                        m.exposed_comm_seconds += blocked;
+                        v
+                    }
+                };
+                state.insert(inf.slot, res);
+            }
+        }
+    }
+    if !inflight.is_empty() {
+        return Err(Error::Schedule(format!(
+            "unjoined collectives at block end: {:?}",
+            inflight.keys().collect::<Vec<_>>()
+        )));
+    }
+    measured.lock().unwrap().wall_seconds += wall0.elapsed().as_secs_f64();
+    Ok(())
+}
+
+/// Land one collective: async ids go to the comm worker (or execute
+/// inline with deferred visibility when no worker runs); sync collectives
+/// execute inline and land immediately.
+#[allow(clippy::too_many_arguments)]
+fn land(
+    job: CommJob,
+    id: &Option<String>,
+    output: &str,
+    bytes: usize,
+    worker: Option<&CommWorker>,
+    run_inline: &dyn Fn(CommJob) -> Result<Vec<HostTensor>>,
+    timeline: &Mutex<Timeline>,
+    state: &mut State,
+    inflight: &mut BTreeMap<String, Inflight>,
+) -> Result<()> {
+    // landing (now or at the future Wait) must not clobber a slot another
+    // in-flight collective is still due to write
+    check_no_inflight_write(inflight, output, "a collective", SlotAccess::Write)?;
+    match id {
+        Some(id) => {
+            if inflight.contains_key(id) {
+                return Err(Error::Schedule(format!(
+                    "async collective id '{id}' reused while still in flight"
+                )));
+            }
+            timeline.lock().unwrap().collective_async(id, bytes);
+            let val = match worker {
+                Some(w) => InflightVal::Pending(w.submit(job)),
+                None => InflightVal::Ready(run_inline(job)?),
+            };
+            inflight.insert(id.clone(), Inflight { slot: output.to_string(), val });
+        }
+        None => {
+            timeline.lock().unwrap().collective_sync(bytes);
+            let res = run_inline(job)?;
+            state.insert(output.to_string(), res);
+        }
+    }
+    Ok(())
+}

@@ -9,15 +9,26 @@
 //! exactly the paper's Fig 7 semantics (see DESIGN.md §2 for why simulated
 //! streams replace CUDA streams on this testbed).
 //!
+//! Since the threaded-executor refactor, parallelism is *real* as well as
+//! simulated: [`executor`] fans rank executions out over host worker
+//! threads and defers async collectives to a dedicated comm worker thread
+//! ([`crate::comm::worker`]), joined at `Wait` — so Duality-Async overlap
+//! is measured on the wall clock ([`executor::MeasuredComm`]) next to the
+//! α–β model. Parallel execution is bit-for-bit equal to sequential
+//! (`threads = 1`): ranks join in order and the collective math is the
+//! same code either way.
+//!
 //! Backward ([`tape`]) replays the schedule in reverse with transposed
 //! collectives (all_gather ↔ reduce_scatter, all_to_all ↔ inverse
 //! all_to_all) and per-segment VJP executables that rematerialize forward
 //! internally — segment-granular gradient checkpointing, as the paper uses.
 
 mod coordinator;
+pub mod executor;
 mod tape;
 mod timeline;
 
-pub use coordinator::{DapCoordinator, State};
-pub use tape::BlockGrads;
+pub use coordinator::DapCoordinator;
+pub use executor::{default_threads, MeasuredComm, SegmentRunner, State};
+pub use tape::{BlockGrads, Tape, TapeOp};
 pub use timeline::{CommCost, Timeline};

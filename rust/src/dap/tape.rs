@@ -162,19 +162,26 @@ pub fn run_backward(
                     };
                     ct_per_out.push(shards);
                 }
-                // run VJP per rank; param grads sum over ranks
+                // run VJP per rank — fanned out over the coordinator's
+                // thread budget like forward Exec ops; results come back
+                // in rank order, so the gradient accumulation below keeps
+                // the sequential summation order bit-for-bit
                 let n_params = block_params.len();
+                let per_rank: Vec<Vec<HostTensor>> =
+                    super::executor::parallel_ranks(co.threads, n, |r| {
+                        let mut rest: Vec<HostTensor> = Vec::new();
+                        for inp in inputs {
+                            rest.push(inp[r].clone());
+                        }
+                        for ct in &ct_per_out {
+                            rest.push(ct[r].clone());
+                        }
+                        bwd.run_with_params(&param_lits, &rest)
+                    })?;
+                // param grads sum over ranks (DAP replicates parameters)
                 let mut d_ins: Vec<Vec<HostTensor>> =
                     vec![Vec::with_capacity(n); in_keys.len()];
-                for r in 0..n {
-                    let mut rest: Vec<HostTensor> = Vec::new();
-                    for inp in inputs {
-                        rest.push(inp[r].clone());
-                    }
-                    for ct in &ct_per_out {
-                        rest.push(ct[r].clone());
-                    }
-                    let outs = bwd.run_with_params(&param_lits, &rest)?;
+                for outs in &per_rank {
                     let (pg, di) = outs.split_at(n_params);
                     match &mut param_grads {
                         Some(acc) => {

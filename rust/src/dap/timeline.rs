@@ -14,6 +14,7 @@
 //! model with presets for NVLink-class and IB-class links and a CPU-
 //! calibrated preset used when mixing with measured CPU compute times.
 
+use crate::error::{Error, Result};
 use std::collections::BTreeMap;
 
 /// α–β communication cost model: time = α + bytes / β.
@@ -124,21 +125,34 @@ impl Timeline {
 
     /// Duality Async wait: join the collective; any time the compute
     /// stream still has to wait is *exposed* (non-overlapped) comm.
-    pub fn wait(&mut self, id: &str) {
-        if let Some(done) = self.pending.remove(id) {
-            let now = self.now();
-            if done > now {
-                self.exposed_comm_seconds += done - now;
-                for c in self.compute.iter_mut() {
-                    *c = (*c).max(done);
-                }
+    ///
+    /// Waiting on an id that was never scheduled (or was already joined)
+    /// is a schedule bug — a typo'd `wait` used to no-op silently, hiding
+    /// both the error and the un-joined collective's cost.
+    pub fn wait(&mut self, id: &str) -> Result<()> {
+        let done = self.pending.remove(id).ok_or_else(|| {
+            Error::Schedule(format!(
+                "wait on unknown async collective id '{id}' \
+                 (never scheduled, or already joined)"
+            ))
+        })?;
+        let now = self.now();
+        if done > now {
+            self.exposed_comm_seconds += done - now;
+            for c in self.compute.iter_mut() {
+                *c = (*c).max(done);
             }
         }
+        Ok(())
     }
 
-    /// Simulated elapsed wall time.
+    /// Simulated elapsed wall time. Un-joined in-flight collectives count:
+    /// the wall clock cannot stop before the comm stream drains. (The old
+    /// `now().max(comm_free.min(now()))` was a tautology that always
+    /// returned `now()`, silently dropping comm time past the last wait.)
     pub fn elapsed(&self) -> f64 {
-        self.now().max(self.comm_free.min(self.now())) // comm past last wait is moot
+        let comm_tail = self.pending.values().fold(0.0f64, |a, &b| a.max(b));
+        self.now().max(comm_tail)
     }
 
     pub fn in_flight(&self) -> usize {
@@ -158,7 +172,7 @@ mod tests {
         t.exec(1.0);
         t.collective_async("x", 500_000); // 0.5 s
         t.exec(1.0); // overlaps
-        t.wait("x");
+        t.wait("x").unwrap();
         assert!((t.elapsed() - 2.0).abs() < 1e-9, "{}", t.elapsed());
         assert!(t.exposed_comm_seconds < 1e-9);
 
@@ -167,7 +181,7 @@ mod tests {
         t.exec(1.0);
         t.collective_async("x", 500_000);
         t.exec(1.0);
-        t.wait("x");
+        t.wait("x").unwrap();
         assert!((t.elapsed() - 2.5).abs() < 1e-9, "{}", t.elapsed());
         assert!((t.exposed_comm_seconds - 0.5).abs() < 1e-9);
     }
@@ -178,7 +192,7 @@ mod tests {
         let mut t = Timeline::new(1, cost, true);
         t.collective_async("x", 1_000_000); // 1 s
         t.exec(0.25); // only 0.25 s to hide behind
-        t.wait("x");
+        t.wait("x").unwrap();
         assert!((t.elapsed() - 1.0).abs() < 1e-9);
         assert!((t.exposed_comm_seconds - 0.75).abs() < 1e-9);
     }
@@ -189,9 +203,41 @@ mod tests {
         let mut t = Timeline::new(1, cost, true);
         t.collective_async("a", 1_000_000);
         t.collective_async("b", 1_000_000); // queues behind a
-        t.wait("a");
-        t.wait("b");
+        t.wait("a").unwrap();
+        t.wait("b").unwrap();
         assert!((t.elapsed() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn elapsed_counts_unjoined_comm() {
+        // regression: elapsed() was `now().max(comm_free.min(now()))`,
+        // a tautology that dropped comm time past the last wait
+        let cost = CommCost { alpha: 0.0, beta: 1e6 };
+        let mut t = Timeline::new(2, cost, true);
+        t.exec(0.25);
+        t.collective_async("tail", 1_000_000); // 1 s, never joined
+        assert_eq!(t.in_flight(), 1);
+        assert!(
+            (t.elapsed() - 1.25).abs() < 1e-9,
+            "elapsed {} must include the un-joined collective",
+            t.elapsed()
+        );
+        // joining it folds the time into compute; elapsed is unchanged
+        t.wait("tail").unwrap();
+        assert!((t.elapsed() - 1.25).abs() < 1e-9);
+        assert!((t.exposed_comm_seconds - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wait_unknown_id_errors() {
+        // regression: a typo'd wait used to succeed silently
+        let mut t = Timeline::new(1, CommCost::cpu_calibrated(), true);
+        let err = t.wait("never-scheduled").unwrap_err();
+        assert!(err.to_string().contains("never-scheduled"), "{err}");
+        // double-join is the same bug
+        t.collective_async("x", 100);
+        t.wait("x").unwrap();
+        assert!(t.wait("x").is_err());
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //!   Axial Parallelism segment decomposition, also AOT-lowered.
 //! * **L3** — this crate: the coordinator. Loads the HLO artifacts through
 //!   PJRT ([`runtime`]), shards activations across logical ranks, executes
-//!   the DAP schedule with Duality-Async overlap ([`dap`]), runs the
+//!   the DAP schedule on a threaded rank executor with real (wall-clock)
+//!   Duality-Async overlap via a dedicated comm worker thread ([`dap`],
+//!   [`comm::worker`]; `--threads 1` restores the bit-identical
+//!   sequential path), runs the
 //!   Megatron-style TP baseline ([`tp`]), data-parallel training
 //!   ([`train`]), chunked + distributed inference ([`inference`]) with the
 //!   AutoChunk planner ([`inference::autochunk`]) choosing per-module

@@ -1,9 +1,10 @@
 //! `fastfold` — the L3 launcher/CLI.
 //!
 //! ```text
-//! fastfold train     [--preset tiny] [--steps N] [--dp N] [--config f.toml]
-//! fastfold infer     [--preset tiny] [--dap N] [--naive] [--gpu a100_40g]
-//!                    [--no-guard] [--config f.toml]
+//! fastfold train     [--preset tiny] [--steps N] [--dp N] [--threads N]
+//!                    [--config f.toml]
+//! fastfold infer     [--preset tiny] [--dap N] [--threads N] [--naive]
+//!                    [--gpu a100_40g] [--no-guard] [--config f.toml]
 //! fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu a100_40g]
 //!                    [--headroom F] [--json] [--config f.toml]
 //! fastfold report    <table2|table3|table4|table5|fig10|fig11|fig13|validate>
@@ -68,8 +69,9 @@ fn run(args: &[String]) -> Result<()> {
         _ => {
             println!(
                 "fastfold — FastFold reproduction (see README.md)\n\n\
-                 usage:\n  fastfold train  [--preset P] [--steps N] [--dp N] [--config f.toml]\n  \
-                 fastfold infer  [--preset P] [--dap N] [--naive] [--gpu G] \
+                 usage:\n  fastfold train  [--preset P] [--steps N] [--dp N] [--threads N] \
+                 [--config f.toml]\n  \
+                 fastfold infer  [--preset P] [--dap N] [--threads N] [--naive] [--gpu G] \
                  [--no-guard] [--config f.toml]\n  \
                  fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu G] \
                  [--headroom F] [--json] [--config f.toml]\n  \
@@ -101,15 +103,22 @@ fn cmd_train(_pos: &[String], flags: &BTreeMap<String, String>) -> Result<()> {
     if let Some(d) = flags.get("dp") {
         run_cfg.parallel.dp_size = d.parse().unwrap_or(1);
     }
+    if let Some(t) = flags.get("threads") {
+        run_cfg.parallel.threads = t
+            .parse()
+            .map_err(|_| fastfold::Error::Config(format!("--threads: invalid value '{t}'")))?;
+    }
     if let Some(dir) = flags.get("checkpoint-dir") {
         run_cfg.train.checkpoint_dir = Some(dir.clone());
     }
+    let threads = run_cfg.parallel.resolve_threads();
     let rt = Runtime::new(&artifacts_dir(flags))?;
     println!(
-        "[fastfold] training preset='{}' dp={} steps={} on {}",
+        "[fastfold] training preset='{}' dp={} steps={} threads={} on {}",
         run_cfg.preset,
         run_cfg.parallel.dp_size,
         run_cfg.train.steps,
+        threads,
         rt.platform()
     );
     let mut trainer = Trainer::new(
@@ -117,7 +126,8 @@ fn cmd_train(_pos: &[String], flags: &BTreeMap<String, String>) -> Result<()> {
         &run_cfg.preset,
         run_cfg.parallel.dp_size,
         run_cfg.train.clone(),
-    )?;
+    )?
+    .with_threads(threads);
     let report = trainer.run()?;
     println!(
         "[fastfold] done: loss {:.4} -> {:.4} in {} ({:.2} steps/s, {} KiB DP wire)",
@@ -134,12 +144,17 @@ fn cmd_train(_pos: &[String], flags: &BTreeMap<String, String>) -> Result<()> {
 
 fn cmd_infer(flags: &BTreeMap<String, String>) -> Result<()> {
     // `[autochunk]` config section: enabled/gpu defaults (flags override)
-    let run_cfg = match flags.get("config") {
+    let mut run_cfg = match flags.get("config") {
         Some(path) => RunConfig::from_toml_file(path)?,
         None => RunConfig::default(),
     };
     let preset = flags.get("preset").cloned().unwrap_or_else(|| "tiny".into());
     let dap: usize = flags.get("dap").and_then(|s| s.parse().ok()).unwrap_or(1);
+    if let Some(t) = flags.get("threads") {
+        run_cfg.parallel.threads = t
+            .parse()
+            .map_err(|_| fastfold::Error::Config(format!("--threads: invalid value '{t}'")))?;
+    }
     let naive = flags.contains_key("naive");
     let guard = run_cfg.autochunk.enabled && !flags.contains_key("no-guard");
     let gpu = GpuSpec::by_name(
@@ -156,7 +171,8 @@ fn cmd_infer(flags: &BTreeMap<String, String>) -> Result<()> {
 
     let t0 = std::time::Instant::now();
     let (msa_logits, dist_logits) = if dap > 1 {
-        let co = DapCoordinator::new(&rt, &preset, dap, !flags.contains_key("no-overlap"))?;
+        let co = DapCoordinator::new(&rt, &preset, dap, !flags.contains_key("no-overlap"))?
+            .with_threads(run_cfg.parallel.resolve_threads());
         if guard {
             // memory guard: the planner's chunked fallback must fit this
             // degree. Advisory only — the executed schedule applies DAP
@@ -168,7 +184,10 @@ fn cmd_infer(flags: &BTreeMap<String, String>) -> Result<()> {
             )?;
             println!("[fastfold] memory guard (advisory): {}", plan.summary());
         }
-        co.model_forward(&params, &batch.msa_tokens)?
+        let out = co.model_forward(&params, &batch.msa_tokens)?;
+        // measured exposed comm (real clock) next to the α–β prediction
+        println!("[fastfold] overlap: {}", co.overlap_report());
+        out
     } else if guard {
         let (m, z, plan) = fastfold::inference::single::single_device_forward_guarded(
             &rt,
@@ -416,7 +435,7 @@ fn report_table3(flags: &BTreeMap<String, String>) -> Result<()> {
     println!("a real block forward at N={n}, preset '{preset}'; TP simulated):\n");
     println!("DAP forward (paper: 3 AllGather + 6 All_to_All; delta from the");
     println!("bias-projection gathers the paper folds into 'no comm' — DESIGN.md §3):");
-    for line in co.comm.log.borrow().summary() {
+    for line in co.comm.log.lock().unwrap().summary() {
         println!("  {line}");
     }
 
@@ -424,7 +443,7 @@ fn report_table3(flags: &BTreeMap<String, String>) -> Result<()> {
     tp.block_forward_comm()?;
     tp.block_backward_comm()?;
     println!("\nTP fwd+bwd (paper: 12 × AllReduce):");
-    for line in tp.comm.log.borrow().summary() {
+    for line in tp.comm.log.lock().unwrap().summary() {
         println!("  {line}");
     }
     Ok(())

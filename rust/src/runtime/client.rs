@@ -5,17 +5,16 @@
 use super::executable::Executable;
 use crate::error::{Error, Result};
 use crate::manifest::Manifest;
-use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+    cache: Mutex<BTreeMap<String, Arc<Executable>>>,
     /// cumulative compile time, for the perf log
-    pub compile_seconds: RefCell<f64>,
+    pub compile_seconds: Mutex<f64>,
 }
 
 impl Runtime {
@@ -26,8 +25,8 @@ impl Runtime {
         Ok(Runtime {
             client,
             manifest,
-            cache: RefCell::new(BTreeMap::new()),
-            compile_seconds: RefCell::new(0.0),
+            cache: Mutex::new(BTreeMap::new()),
+            compile_seconds: Mutex::new(0.0),
         })
     }
 
@@ -35,9 +34,10 @@ impl Runtime {
         self.client.platform_name()
     }
 
-    /// Load (compile-once, cached) an artifact by manifest name.
-    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+    /// Load (compile-once, cached) an artifact by manifest name. The
+    /// returned `Arc` is sharable across rank worker threads.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
         let spec = self.manifest.artifact(name)?.clone();
@@ -48,14 +48,14 @@ impl Runtime {
         })?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
-        *self.compile_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
-        let exec = Rc::new(Executable::new(exe, spec));
-        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        let exec = Arc::new(Executable::new(exe, spec));
+        self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
         Ok(exec)
     }
 
     /// Number of compiled executables currently cached.
     pub fn cached(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 }

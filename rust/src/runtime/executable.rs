@@ -5,7 +5,7 @@
 use crate::error::{Error, Result};
 use crate::manifest::{ArtifactSpec, DType, TensorSpec};
 use crate::tensor::{HostTensor, IntTensor};
-use std::cell::RefCell;
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// An input value: f32 tensor, i32 tensor, or f32 scalar.
@@ -64,15 +64,18 @@ pub struct ExecStats {
     pub total_seconds: f64,
 }
 
+/// `Executable` is `Sync`: rank worker threads share one compiled
+/// executable (`Arc<Executable>`) and race only on the stats ledger,
+/// which sits behind a mutex.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub spec: ArtifactSpec,
-    pub stats: RefCell<ExecStats>,
+    pub stats: Mutex<ExecStats>,
 }
 
 impl Executable {
     pub(crate) fn new(exe: xla::PjRtLoadedExecutable, spec: ArtifactSpec) -> Self {
-        Executable { exe, spec, stats: RefCell::new(ExecStats::default()) }
+        Executable { exe, spec, stats: Mutex::new(ExecStats::default()) }
     }
 
     /// Execute with typed host values; returns the decomposed output tuple
@@ -100,7 +103,7 @@ impl Executable {
         let result = self.exe.execute::<xla::Literal>(&lits)?;
         let out_lit = result[0][0].to_literal_sync()?;
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = self.stats.lock().unwrap();
             st.runs += 1;
             st.total_seconds += t0.elapsed().as_secs_f64();
         }
@@ -159,7 +162,7 @@ impl Executable {
         let result = self.exe.execute::<&xla::Literal>(&refs)?;
         let out_lit = result[0][0].to_literal_sync()?;
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = self.stats.lock().unwrap();
             st.runs += 1;
             st.total_seconds += t0.elapsed().as_secs_f64();
         }
@@ -176,7 +179,7 @@ impl Executable {
     }
 
     pub fn mean_run_seconds(&self) -> f64 {
-        let st = self.stats.borrow();
+        let st = self.stats.lock().unwrap();
         if st.runs == 0 {
             0.0
         } else {

@@ -78,13 +78,13 @@ impl TpCoordinator {
     /// Issue one block's forward collectives (partial-sum AllReduce at each
     /// row-parallel output). Returns per-rank wire bytes this block moved.
     pub fn block_forward_comm(&self) -> Result<usize> {
-        let before = self.comm.log.borrow().total_bytes();
+        let before = self.comm.log.lock().unwrap().total_bytes();
         for site in TP_SITES {
             let t = self.site_tensor(site);
             let parts: Vec<HostTensor> = (0..self.n).map(|_| t.clone()).collect();
             self.comm.all_reduce(&parts)?;
         }
-        Ok(self.comm.log.borrow().total_bytes() - before)
+        Ok(self.comm.log.lock().unwrap().total_bytes() - before)
     }
 
     /// Backward mirrors forward: 6 more AllReduces (paper Table III: 12
@@ -99,7 +99,7 @@ impl TpCoordinator {
     }
 
     pub fn allreduce_count(&self) -> usize {
-        self.comm.log.borrow().count(CommKind::AllReduce)
+        self.comm.log.lock().unwrap().count(CommKind::AllReduce)
     }
 }
 

@@ -5,28 +5,37 @@
 //! algorithm the Fig 11 cost model prices) → gradient clip → `adam_update`
 //! executable. Parameters and optimizer state live as host tensors between
 //! steps (the coordinator owns state; PJRT owns math).
+//!
+//! The per-rank forward/backward fans out over `threads` host worker
+//! threads ([`crate::dap::executor::parallel_ranks`]); batches are drawn
+//! sequentially first and losses/gradients are folded back in rank order,
+//! so the threaded step is bit-for-bit identical to `threads = 1`.
 
 use super::data::{Batch, DataGen};
 use super::lr_at;
 use crate::comm::ring::ring_all_reduce;
 use crate::config::TrainConfig;
+use crate::dap::executor::{default_threads, parallel_ranks};
 use crate::error::{Error, Result};
 use crate::runtime::{Runtime, Value};
 use crate::tensor::HostTensor;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 pub struct Trainer<'rt> {
     rt: &'rt Runtime,
     preset: String,
     pub dp: usize,
+    /// rank-executor thread budget (1 = sequential; default:
+    /// [`default_threads`])
+    pub threads: usize,
     pub params: Vec<HostTensor>,
     pub m: Vec<HostTensor>,
     pub v: Vec<HostTensor>,
     pub step: usize,
     pub cfg: TrainConfig,
-    grad_exe: Rc<crate::runtime::Executable>,
-    adam_exe: Rc<crate::runtime::Executable>,
+    grad_exe: Arc<crate::runtime::Executable>,
+    adam_exe: Arc<crate::runtime::Executable>,
     gens: Vec<DataGen>,
     pub history: Vec<(usize, f32)>,
     pub wire_bytes: usize,
@@ -40,10 +49,15 @@ pub struct TrainReport {
     pub seconds: f64,
     pub steps_per_sec: f64,
     pub wire_bytes: usize,
+    /// rank-executor threads the run used (1 = sequential)
+    pub threads: usize,
 }
 
 impl<'rt> Trainer<'rt> {
     pub fn new(rt: &'rt Runtime, preset: &str, dp: usize, cfg: TrainConfig) -> Result<Self> {
+        if dp == 0 {
+            return Err(Error::Config("dp must be >= 1".into()));
+        }
         let params = rt.manifest.load_params(preset)?;
         let zeros: Vec<HostTensor> =
             params.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
@@ -57,6 +71,7 @@ impl<'rt> Trainer<'rt> {
             rt,
             preset: preset.to_string(),
             dp,
+            threads: default_threads(),
             m: zeros.clone(),
             v: zeros,
             params,
@@ -68,6 +83,14 @@ impl<'rt> Trainer<'rt> {
             history: Vec::new(),
             wire_bytes: 0,
         })
+    }
+
+    /// Builder-style override of the rank-executor thread budget
+    /// (`--threads` on the CLI): 1 restores the sequential path, 0 means
+    /// auto ([`default_threads`]), consistent with the CLI/TOML/env knobs.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = if threads == 0 { default_threads() } else { threads };
+        self
     }
 
     fn batch_values(b: &Batch) -> Vec<Value> {
@@ -84,40 +107,46 @@ impl<'rt> Trainer<'rt> {
     /// One optimizer step over `dp` rank-local batches. Returns mean loss.
     pub fn train_step(&mut self) -> Result<f32> {
         let n_leaves = self.params.len();
-        let mut grads_acc: Option<Vec<HostTensor>> = None;
-        let mut loss_acc = 0.0f32;
 
-        // per-rank forward/backward
-        let mut per_rank_grads: Vec<Vec<f32>> = Vec::with_capacity(self.dp);
-        let mut leaf_shapes: Vec<Vec<usize>> = Vec::new();
-        for r in 0..self.dp {
-            let batch = self.gens[r].next_batch();
-            let mut args: Vec<Value> =
-                self.params.iter().cloned().map(Value::F32).collect();
-            args.extend(Self::batch_values(&batch));
-            let out = self.grad_exe.run(&args)?;
-            // outputs: loss scalar, then grads in canonical order
-            loss_acc += out[0].data[0];
-            let grads = &out[1..];
-            if leaf_shapes.is_empty() {
-                leaf_shapes = grads.iter().map(|g| g.shape.clone()).collect();
-            }
-            if self.dp == 1 {
-                grads_acc = Some(grads.to_vec());
-            } else {
-                // flatten for the ring
-                let flat: Vec<f32> =
-                    grads.iter().flat_map(|g| g.data.iter().copied()).collect();
-                per_rank_grads.push(flat);
-            }
+        // draw every rank's batch sequentially (the data stream is the
+        // same whatever the thread budget), then fan the per-rank
+        // forward/backward out over worker threads
+        let batches: Vec<Batch> =
+            (0..self.dp).map(|r| self.gens[r].next_batch()).collect();
+        let params = &self.params;
+        let grad_exe = &self.grad_exe;
+        let per_rank: Vec<(f32, Vec<HostTensor>)> =
+            parallel_ranks(self.threads, self.dp, |r| {
+                let mut args: Vec<Value> =
+                    params.iter().cloned().map(Value::F32).collect();
+                args.extend(Self::batch_values(&batches[r]));
+                let out = grad_exe.run(&args)?;
+                // outputs: loss scalar, then grads in canonical order
+                Ok((out[0].data[0], out[1..].to_vec()))
+            })?;
+        // fold losses in rank order (bit-for-bit vs the sequential loop)
+        let mut loss_acc = 0.0f32;
+        for (loss, _) in &per_rank {
+            loss_acc += *loss;
         }
+        let leaf_shapes: Vec<Vec<usize>> =
+            per_rank[0].1.iter().map(|g| g.shape.clone()).collect();
 
         // ring all-reduce + average
         let grads: Vec<HostTensor> = if self.dp == 1 {
-            grads_acc.take().ok_or_else(|| Error::msg("no grads"))?
+            per_rank.into_iter().next().map(|(_, g)| g).ok_or_else(|| Error::msg("no grads"))?
         } else {
+            // flatten for the ring
+            let per_rank_grads: Vec<Vec<f32>> = per_rank
+                .iter()
+                .map(|(_, grads)| {
+                    grads.iter().flat_map(|g| g.data.iter().copied()).collect()
+                })
+                .collect();
             let (reduced, wire) = ring_all_reduce(per_rank_grads)?;
-            self.wire_bytes += wire;
+            // account the critical-path rank (exact per-rank volumes can
+            // differ at non-divisible lengths; see comm::ring)
+            self.wire_bytes += wire.iter().copied().max().unwrap_or(0);
             let mut flat = reduced.into_iter().next().unwrap();
             let inv = 1.0 / self.dp as f32;
             for x in flat.iter_mut() {
@@ -194,6 +223,7 @@ impl<'rt> Trainer<'rt> {
             seconds,
             steps_per_sec: self.cfg.steps as f64 / seconds.max(1e-9),
             wire_bytes: self.wire_bytes,
+            threads: self.threads,
         })
     }
 }

@@ -84,7 +84,7 @@ fn comm_log_totals_accumulate() {
     c.all_gather(&shards, 0).unwrap();
     c.all_to_all(&shards, 0, 1).unwrap();
     c.broadcast(&shards, 0).unwrap();
-    let log = c.log.borrow();
+    let log = c.log.lock().unwrap();
     assert_eq!(log.len(), 3);
     assert_eq!(log.count(CommKind::AllGather), 1);
     assert_eq!(log.count(CommKind::AllToAll), 1);

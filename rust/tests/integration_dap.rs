@@ -83,7 +83,7 @@ fn dap_comm_counts_match_design_table3() {
     let co = DapCoordinator::new(&s.rt, "tiny", 2, true).unwrap();
     let mut state = co.shard_inputs(&s.m, &s.z).unwrap();
     co.block_forward(&s.block_params, &mut state).unwrap();
-    let log = co.comm.log.borrow();
+    let log = co.comm.log.lock().unwrap();
     assert_eq!(log.count(CommKind::AllGather), 5);
     assert_eq!(log.count(CommKind::ReduceScatter), 1);
     assert_eq!(log.count(CommKind::AllToAll), 4);
@@ -96,7 +96,7 @@ fn duality_async_overlap_improves_simulated_time() {
         let co = DapCoordinator::new(&s.rt, "tiny", 4, overlap).unwrap();
         let mut state = co.shard_inputs(&s.m, &s.z).unwrap();
         co.block_forward(&s.block_params, &mut state).unwrap();
-        let tl = co.timeline.borrow();
+        let tl = co.timeline.lock().unwrap();
         (tl.elapsed(), tl.exposed_comm_seconds)
     };
     let _warmup = run(true); // first executions include PJRT warmup
@@ -109,6 +109,47 @@ fn duality_async_overlap_improves_simulated_time() {
         t_on <= t_off * 1.25 + 1e-6,
         "overlap {t_on} vs sync {t_off}"
     );
+}
+
+#[test]
+fn threaded_block_forward_bitwise_matches_sequential() {
+    // dap ∈ {2,4,8} (where segment artifacts exist): the threaded rank
+    // executor + comm worker must produce bit-for-bit the sequential
+    // tensors and identical comm-log contents
+    let Some(s) = setup() else { return };
+    for n in [2usize, 4, 8] {
+        let Ok(co_seq) = DapCoordinator::new(&s.rt, "tiny", n, true) else {
+            continue; // degree not exported for this preset
+        };
+        let co_seq = co_seq.with_threads(1);
+        let mut st_seq = co_seq.shard_inputs(&s.m, &s.z).unwrap();
+        co_seq.block_forward(&s.block_params, &mut st_seq).unwrap();
+
+        let co_thr = DapCoordinator::new(&s.rt, "tiny", n, true)
+            .unwrap()
+            .with_threads(4);
+        let mut st_thr = co_thr.shard_inputs(&s.m, &s.z).unwrap();
+        co_thr.block_forward(&s.block_params, &mut st_thr).unwrap();
+
+        assert_eq!(st_seq, st_thr, "n={n}: threaded state diverged");
+        let (a, b) = (
+            co_seq.comm.log.lock().unwrap(),
+            co_thr.comm.log.lock().unwrap(),
+        );
+        assert_eq!(a.len(), b.len(), "n={n}: comm-log length diverged");
+        // per-kind, order-insensitive: the comm worker may interleave its
+        // records with main-thread sync collectives
+        for kind in [
+            fastfold::comm::CommKind::AllGather,
+            fastfold::comm::CommKind::ReduceScatter,
+            fastfold::comm::CommKind::AllToAll,
+            fastfold::comm::CommKind::AllReduce,
+            fastfold::comm::CommKind::Broadcast,
+        ] {
+            assert_eq!(a.count(kind), b.count(kind), "n={n} {kind:?} count");
+            assert_eq!(a.bytes_of(kind), b.bytes_of(kind), "n={n} {kind:?} bytes");
+        }
+    }
 }
 
 #[test]

@@ -79,6 +79,25 @@ fn dp_grad_equals_mean_of_worker_grads() {
 }
 
 #[test]
+fn threaded_train_step_bitwise_matches_sequential_dp_2_4() {
+    // the threaded rank executor must not change training numerics: one
+    // step at dp ∈ {2,4} with threads=1 vs threads=4, params bit-for-bit
+    let Some(rt) = runtime() else { return };
+    for dp in [2usize, 4] {
+        let mut seq = Trainer::new(&rt, "tiny", dp, quick_cfg(1)).unwrap().with_threads(1);
+        let mut thr = Trainer::new(&rt, "tiny", dp, quick_cfg(1)).unwrap().with_threads(4);
+        let l_seq = seq.train_step().unwrap();
+        let l_thr = thr.train_step().unwrap();
+        assert_eq!(l_seq.to_bits(), l_thr.to_bits(), "dp={dp} loss diverged");
+        assert_eq!(seq.params.len(), thr.params.len());
+        for (i, (a, b)) in seq.params.iter().zip(thr.params.iter()).enumerate() {
+            assert_eq!(a, b, "dp={dp} param leaf {i} diverged");
+        }
+        assert_eq!(seq.wire_bytes, thr.wire_bytes, "dp={dp} wire accounting");
+    }
+}
+
+#[test]
 fn checkpoint_roundtrip_through_trainer() {
     let Some(rt) = runtime() else { return };
     let dir = std::env::temp_dir().join("ff_train_ckpt");

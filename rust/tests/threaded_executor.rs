@@ -1,0 +1,346 @@
+//! Threaded schedule-executor suite — runs WITHOUT artifacts: a pure-host
+//! [`SegmentRunner`] stands in for PJRT, so the rank fan-out, the comm
+//! worker deferral, and every schedule-safety error path are exercised in
+//! plain `cargo test`.
+//!
+//! The core property: for any thread budget and any DAP degree, the
+//! threaded executor is *bit-for-bit* identical to the sequential path
+//! (`threads = 1`) — same state tensors, same comm-log counts.
+
+use fastfold::comm::{Collectives, CommKind};
+use fastfold::dap::executor::{parallel_ranks, run_schedule, MeasuredComm, State};
+use fastfold::dap::{CommCost, SegmentRunner, Timeline};
+use fastfold::manifest::ScheduleOp;
+use fastfold::rng::Rng;
+use fastfold::tensor::HostTensor;
+use fastfold::Result;
+use std::sync::Mutex;
+
+/// Deterministic pure-host segments (no PJRT): `scale` is 0.5x + 1
+/// elementwise; `mix` doubles its first input and adds 1 to its second.
+struct FakeRunner;
+
+impl SegmentRunner for FakeRunner {
+    fn run_segment(
+        &self,
+        seg: &str,
+        _rank: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let map = |t: &HostTensor, f: &dyn Fn(f32) -> f32| {
+            HostTensor::new(t.shape.clone(), t.data.iter().map(|&x| f(x)).collect())
+        };
+        match seg {
+            "scale" => Ok(vec![map(&inputs[0], &|x| 0.5 * x + 1.0)?]),
+            "mix" => Ok(vec![
+                map(&inputs[0], &|x| 2.0 * x)?,
+                map(&inputs[1], &|x| x + 1.0)?,
+            ]),
+            other => Err(fastfold::Error::Schedule(format!("fake: no segment '{other}'"))),
+        }
+    }
+}
+
+/// The reference schedule: execs interleaved with one async gather
+/// (overlapped by compute), a sync scatter, and an async all-to-all.
+fn schedule() -> Vec<ScheduleOp> {
+    vec![
+        ScheduleOp::Exec {
+            seg: "scale".into(),
+            inputs: vec!["m".into()],
+            outputs: vec!["m".into()],
+        },
+        ScheduleOp::Gather {
+            input: "m".into(),
+            output: "g".into(),
+            axis: 0,
+            id: Some("h1".into()),
+        },
+        ScheduleOp::Exec {
+            seg: "scale".into(),
+            inputs: vec!["z".into()],
+            outputs: vec!["z".into()],
+        },
+        ScheduleOp::Wait { id: "h1".into() },
+        ScheduleOp::Exec {
+            seg: "mix".into(),
+            inputs: vec!["g".into(), "z".into()],
+            outputs: vec!["m".into(), "z".into()],
+        },
+        ScheduleOp::Scatter { input: "m".into(), output: "m".into(), axis: 0, id: None },
+        ScheduleOp::AllToAll {
+            input: "z".into(),
+            output: "z".into(),
+            split: 1,
+            concat: 0,
+            id: Some("h2".into()),
+        },
+        ScheduleOp::Exec {
+            seg: "scale".into(),
+            inputs: vec!["m".into()],
+            outputs: vec!["m".into()],
+        },
+        ScheduleOp::Wait { id: "h2".into() },
+    ]
+}
+
+/// Build the block-entry state: m (16×4) s-sharded, z (16×8) i-sharded.
+fn entry_state(rng: &mut Rng, n: usize) -> State {
+    let m = HostTensor::new(vec![16, 4], rng.normal_vec(64, 1.0)).unwrap();
+    let z = HostTensor::new(vec![16, 8], rng.normal_vec(128, 1.0)).unwrap();
+    let mut state = State::new();
+    state.insert("m".into(), m.split_axis(0, n).unwrap());
+    state.insert("z".into(), z.split_axis(0, n).unwrap());
+    state
+}
+
+fn run(
+    n: usize,
+    threads: usize,
+    overlap: bool,
+    mut state: State,
+) -> Result<(State, Collectives, MeasuredComm)> {
+    let comm = Collectives::new(n);
+    let timeline = Mutex::new(Timeline::new(n, CommCost::cpu_calibrated(), overlap));
+    let measured = Mutex::new(MeasuredComm::default());
+    run_schedule(
+        &schedule(), n, threads, &FakeRunner, &comm, &timeline, &measured,
+        None, &mut state, None,
+    )?;
+    let m = *measured.lock().unwrap();
+    Ok((state, comm, m))
+}
+
+#[test]
+fn threaded_bitwise_equals_sequential_at_dap_2_4_8() {
+    // the acceptance matrix: dap ∈ {2,4,8} × threads ∈ {2,4,8}, threaded
+    // vs the threads=1 sequential reference, 10 random inputs each
+    for n in [2usize, 4, 8] {
+        for case in 0..10u64 {
+            let mut rng = Rng::new(1000 + case);
+            let state0 = entry_state(&mut rng, n);
+            let (seq, seq_comm, _) = run(n, 1, true, state0.clone()).unwrap();
+            for threads in [2usize, 4, 8] {
+                let (thr, thr_comm, _) = run(n, threads, true, state0.clone()).unwrap();
+                assert_eq!(
+                    seq, thr,
+                    "state diverged: n={n} threads={threads} case={case}"
+                );
+                let (a, b) = (seq_comm.log.lock().unwrap(), thr_comm.log.lock().unwrap());
+                assert_eq!(a.len(), b.len(), "comm count: n={n} threads={threads}");
+                for kind in [
+                    CommKind::AllGather,
+                    CommKind::ReduceScatter,
+                    CommKind::AllToAll,
+                ] {
+                    assert_eq!(a.count(kind), b.count(kind));
+                    assert_eq!(a.bytes_of(kind), b.bytes_of(kind));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn overlap_off_matches_overlap_on_numerics() {
+    // Duality Async is a scheduling choice, never a numerics choice
+    let mut rng = Rng::new(7);
+    let n = 4;
+    let state0 = entry_state(&mut rng, n);
+    let (on, _, _) = run(n, 4, true, state0.clone()).unwrap();
+    let (off, _, _) = run(n, 4, false, state0).unwrap();
+    assert_eq!(on, off);
+}
+
+#[test]
+fn deferred_collectives_are_accounted_on_the_real_clock() {
+    let mut rng = Rng::new(8);
+    let n = 4;
+    let (_, _, measured) = run(n, 4, true, entry_state(&mut rng, n)).unwrap();
+    assert!(measured.wall_seconds > 0.0);
+    assert!(measured.comm_seconds > 0.0, "worker comm time must be measured");
+    // exposed time can never exceed wall time
+    assert!(measured.exposed_comm_seconds <= measured.wall_seconds);
+}
+
+#[test]
+fn stale_read_after_async_write_errors() {
+    // an Exec that reads a slot with an in-flight async write must fail,
+    // not silently consume the stale pre-collective shards
+    let n = 2;
+    let sched = vec![
+        ScheduleOp::Gather {
+            input: "m".into(),
+            output: "m".into(),
+            axis: 0,
+            id: Some("h1".into()),
+        },
+        ScheduleOp::Exec {
+            seg: "scale".into(),
+            inputs: vec!["m".into()],
+            outputs: vec!["m".into()],
+        },
+        ScheduleOp::Wait { id: "h1".into() },
+    ];
+    for threads in [1usize, 2] {
+        let mut rng = Rng::new(9);
+        let mut state = entry_state(&mut rng, n);
+        let comm = Collectives::new(n);
+        let timeline = Mutex::new(Timeline::new(n, CommCost::cpu_calibrated(), true));
+        let measured = Mutex::new(MeasuredComm::default());
+        let err = run_schedule(
+            &sched, n, threads, &FakeRunner, &comm, &timeline, &measured,
+            None, &mut state, None,
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("stale read") && msg.contains("h1"), "{msg}");
+    }
+}
+
+#[test]
+fn write_after_write_on_inflight_slot_errors() {
+    // an Exec that writes a slot with an in-flight async write must fail:
+    // the join at Wait would clobber the newer value
+    let n = 2;
+    let sched = vec![
+        ScheduleOp::Gather {
+            input: "m".into(),
+            output: "g".into(),
+            axis: 0,
+            id: Some("h1".into()),
+        },
+        ScheduleOp::Exec {
+            seg: "scale".into(),
+            inputs: vec!["z".into()],
+            outputs: vec!["g".into()],
+        },
+        ScheduleOp::Wait { id: "h1".into() },
+    ];
+    for threads in [1usize, 2] {
+        let mut rng = Rng::new(14);
+        let mut state = entry_state(&mut rng, n);
+        let comm = Collectives::new(n);
+        let timeline = Mutex::new(Timeline::new(n, CommCost::cpu_calibrated(), true));
+        let measured = Mutex::new(MeasuredComm::default());
+        let err = run_schedule(
+            &sched, n, threads, &FakeRunner, &comm, &timeline, &measured,
+            None, &mut state, None,
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("write-after-write") && msg.contains("h1"), "{msg}");
+    }
+}
+
+#[test]
+fn wait_on_unknown_id_errors() {
+    let n = 2;
+    let sched = vec![ScheduleOp::Wait { id: "typo".into() }];
+    let mut rng = Rng::new(10);
+    let mut state = entry_state(&mut rng, n);
+    let comm = Collectives::new(n);
+    let timeline = Mutex::new(Timeline::new(n, CommCost::cpu_calibrated(), true));
+    let measured = Mutex::new(MeasuredComm::default());
+    let err = run_schedule(
+        &sched, n, 2, &FakeRunner, &comm, &timeline, &measured, None, &mut state,
+        None,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("typo"), "{err}");
+}
+
+#[test]
+fn unjoined_collective_at_end_errors() {
+    let n = 2;
+    let sched = vec![ScheduleOp::Gather {
+        input: "m".into(),
+        output: "g".into(),
+        axis: 0,
+        id: Some("h1".into()),
+    }];
+    for threads in [1usize, 2] {
+        let mut rng = Rng::new(11);
+        let mut state = entry_state(&mut rng, n);
+        let comm = Collectives::new(n);
+        let timeline = Mutex::new(Timeline::new(n, CommCost::cpu_calibrated(), true));
+        let measured = Mutex::new(MeasuredComm::default());
+        let err = run_schedule(
+            &sched, n, threads, &FakeRunner, &comm, &timeline, &measured,
+            None, &mut state, None,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unjoined"), "{err}");
+    }
+}
+
+#[test]
+fn inflight_id_reuse_errors() {
+    let n = 2;
+    let sched = vec![
+        ScheduleOp::Gather {
+            input: "m".into(),
+            output: "g".into(),
+            axis: 0,
+            id: Some("h1".into()),
+        },
+        ScheduleOp::Gather {
+            input: "z".into(),
+            output: "g2".into(),
+            axis: 0,
+            id: Some("h1".into()),
+        },
+    ];
+    let mut rng = Rng::new(12);
+    let mut state = entry_state(&mut rng, n);
+    let comm = Collectives::new(n);
+    let timeline = Mutex::new(Timeline::new(n, CommCost::cpu_calibrated(), true));
+    let measured = Mutex::new(MeasuredComm::default());
+    let err = run_schedule(
+        &sched, n, 2, &FakeRunner, &comm, &timeline, &measured, None, &mut state,
+        None,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("reused"), "{err}");
+}
+
+#[test]
+fn segment_errors_surface_from_worker_threads() {
+    let n = 4;
+    let sched = vec![ScheduleOp::Exec {
+        seg: "no-such-segment".into(),
+        inputs: vec!["m".into()],
+        outputs: vec!["m".into()],
+    }];
+    let mut rng = Rng::new(13);
+    let mut state = entry_state(&mut rng, n);
+    let comm = Collectives::new(n);
+    let timeline = Mutex::new(Timeline::new(n, CommCost::cpu_calibrated(), true));
+    let measured = Mutex::new(MeasuredComm::default());
+    let err = run_schedule(
+        &sched, n, 4, &FakeRunner, &comm, &timeline, &measured, None, &mut state,
+        None,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("no-such-segment"), "{err}");
+}
+
+#[test]
+fn parallel_ranks_preserves_order_and_first_error() {
+    for threads in [1usize, 2, 3, 8] {
+        for n in [1usize, 2, 5, 16] {
+            let got = parallel_ranks(threads, n, |r| Ok(r * r)).unwrap();
+            assert_eq!(got, (0..n).map(|r| r * r).collect::<Vec<_>>());
+        }
+    }
+    // first error by rank order wins, whatever thread hit it
+    let err = parallel_ranks(4, 8, |r| {
+        if r >= 2 {
+            Err(fastfold::Error::msg(format!("rank {r} failed")))
+        } else {
+            Ok(r)
+        }
+    })
+    .unwrap_err();
+    assert_eq!(err.to_string(), "rank 2 failed");
+}
