@@ -1,0 +1,92 @@
+//! Batch serving through the unified inference engine — the ParaFold-style
+//! scenario: one process, many heterogeneous requests, a backend chosen
+//! per request by the cost model.
+//!
+//! ```sh
+//! cargo run --release --example batch_serve            # plan-only (no artifacts)
+//! cargo run --release --example batch_serve -- exec    # executed drain (needs artifacts)
+//! ```
+//!
+//! Without artifacts this prints the placement/schedule preview (what
+//! `fastfold serve --dry-run` shows); with artifacts it drains an
+//! executable tiny/small batch through the real backends and reports
+//! per-request wall latency next to the modeled figures.
+
+use fastfold::config::RunConfig;
+use fastfold::inference::engine::{
+    plan_batch, BackendKind, Engine, InferRequest, PlacementPlanner, SchedPolicy,
+};
+use fastfold::metrics::fmt_secs;
+use fastfold::runtime::Runtime;
+
+fn paper_scale_batch() -> Vec<InferRequest> {
+    [256usize, 1024, 2048, 2560, 3072, 4096]
+        .iter()
+        .enumerate()
+        .map(|(k, &len)| {
+            let mut r = InferRequest::new(&format!("seq-{len}"), "tiny");
+            r.model_len = Some(len);
+            r.seed = 40 + k as u64;
+            r
+        })
+        .collect()
+}
+
+fn main() -> fastfold::Result<()> {
+    let exec = std::env::args().nth(1).as_deref() == Some("exec");
+    let run_cfg = RunConfig {
+        serve: fastfold::config::ServeConfig {
+            policy: SchedPolicy::Sjf,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    if !exec {
+        // plan-only: placement decision tree + schedule at paper scale,
+        // through the same plan_batch pipeline Engine::serve runs
+        let planner = PlacementPlanner::from_run_config(&run_cfg)?;
+        let requests = paper_scale_batch();
+        println!(
+            "[batch_serve] planning {} requests on {} (policy=sjf)\n",
+            requests.len(),
+            planner.gpu.name
+        );
+        let plan = plan_batch(
+            &planner,
+            SchedPolicy::Sjf,
+            run_cfg.serve.max_bypass,
+            4,
+            &requests,
+        );
+        plan.table(&requests).print();
+        for line in plan.rejections(&requests) {
+            println!("  {line}");
+        }
+        println!(
+            "\nSJF schedule over 4 lanes: modeled makespan {}",
+            fmt_secs(plan.modeled_makespan)
+        );
+        println!("(run with `-- exec` and artifacts for the executed drain)");
+        return Ok(());
+    }
+
+    // executed drain: tiny-preset requests, one forced DAP job in the mix
+    let rt = Runtime::new("artifacts")?;
+    let engine = Engine::new(&rt, &run_cfg)?;
+    let mut dap = InferRequest::new("dap2", "tiny");
+    dap.force = Some(BackendKind::Dap(2));
+    let mut long = InferRequest::new("long-2048", "tiny");
+    long.model_len = Some(2048);
+    let requests = vec![
+        InferRequest::new("a", "tiny"),
+        dap,
+        long,
+        InferRequest::new("b", "tiny"),
+    ];
+    println!("[batch_serve] draining {} executable requests\n", requests.len());
+    let report = engine.serve(&requests)?;
+    report.table().print();
+    println!("\n[batch_serve] {}", report.summary());
+    Ok(())
+}

@@ -227,6 +227,30 @@ impl Default for AutoChunkConfig {
     }
 }
 
+/// Serving-layer settings (`[serve]` section): the queue discipline and
+/// admission bounds `fastfold serve` hands the inference engine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Queue discipline: FIFO or shortest-job-first by modeled latency.
+    pub policy: crate::inference::engine::SchedPolicy,
+    /// Largest DAP degree the placement planner may assign (the fleet's
+    /// biggest model-parallel group; Table V serves up to 8).
+    pub max_dap: usize,
+    /// SJF starvation guard: a waiting request runs next once this many
+    /// later arrivals have overtaken it (0 = strict arrival order).
+    pub max_bypass: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            policy: crate::inference::engine::SchedPolicy::Fifo,
+            max_dap: 8,
+            max_bypass: 4,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub preset: String,
@@ -234,6 +258,7 @@ pub struct RunConfig {
     pub parallel: ParallelConfig,
     pub train: TrainConfig,
     pub autochunk: AutoChunkConfig,
+    pub serve: ServeConfig,
 }
 
 impl Default for RunConfig {
@@ -244,6 +269,7 @@ impl Default for RunConfig {
             parallel: ParallelConfig::default(),
             train: TrainConfig::default(),
             autochunk: AutoChunkConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -424,6 +450,22 @@ impl RunConfig {
                 cfg.autochunk.headroom = h;
             }
         }
+        if let Some(s) = doc.get("serve") {
+            if let Some(v) = s.get("policy") {
+                cfg.serve.policy =
+                    crate::inference::engine::SchedPolicy::parse(v.as_str()?)?;
+            }
+            if let Some(v) = s.get("max_dap") {
+                let n = v.as_usize()?;
+                if n == 0 {
+                    return Err(Error::Config("serve max_dap must be >= 1".into()));
+                }
+                cfg.serve.max_dap = n;
+            }
+            if let Some(v) = s.get("max_bypass") {
+                cfg.serve.max_bypass = v.as_usize()?;
+            }
+        }
         Ok(cfg)
     }
 }
@@ -496,6 +538,23 @@ headroom = 0.25
         let cfg = RunConfig::from_toml("").unwrap();
         assert_eq!(cfg.autochunk, AutoChunkConfig::default());
         assert!(RunConfig::from_toml("[autochunk]\nheadroom = 1.5").is_err());
+    }
+
+    #[test]
+    fn serve_section_parses_and_validates() {
+        use crate::inference::engine::SchedPolicy;
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.serve, ServeConfig::default());
+        assert_eq!(cfg.serve.policy, SchedPolicy::Fifo);
+        let cfg = RunConfig::from_toml(
+            "[serve]\npolicy = \"sjf\"\nmax_dap = 16\nmax_bypass = 2",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.policy, SchedPolicy::Sjf);
+        assert_eq!(cfg.serve.max_dap, 16);
+        assert_eq!(cfg.serve.max_bypass, 2);
+        assert!(RunConfig::from_toml("[serve]\npolicy = \"lifo\"").is_err());
+        assert!(RunConfig::from_toml("[serve]\nmax_dap = 0").is_err());
     }
 
     #[test]

@@ -267,22 +267,10 @@ impl<'rt> DapCoordinator<'rt> {
         let man = &self.rt.manifest;
         let embed = self.rt.load(&format!("{}/embed", self.preset))?;
         let heads = self.rt.load(&format!("{}/heads", self.preset))?;
-        let ps = man
-            .params
-            .get(&self.preset)
-            .ok_or_else(|| Error::Manifest(format!("no params for '{}'", self.preset)))?;
-
-        let pick = |prefix: &str| -> Vec<HostTensor> {
-            ps.leaves
-                .iter()
-                .enumerate()
-                .filter(|(_, l)| l.name.starts_with(prefix))
-                .map(|(i, _)| all_params[i].clone())
-                .collect()
-        };
 
         // embed
-        let mut embed_in: Vec<crate::runtime::executable::Value> = pick("embedder/")
+        let mut embed_in: Vec<crate::runtime::executable::Value> = man
+            .pick_params(&self.preset, "embedder/", all_params)?
             .into_iter()
             .map(Into::into)
             .collect();
@@ -300,8 +288,11 @@ impl<'rt> DapCoordinator<'rt> {
         let (m, z) = self.unshard(&state)?;
 
         // heads
-        let mut head_in: Vec<crate::runtime::executable::Value> =
-            pick("heads/").into_iter().map(Into::into).collect();
+        let mut head_in: Vec<crate::runtime::executable::Value> = man
+            .pick_params(&self.preset, "heads/", all_params)?
+            .into_iter()
+            .map(Into::into)
+            .collect();
         head_in.push(m.into());
         head_in.push(z.into());
         let out = heads.run(&head_in)?;

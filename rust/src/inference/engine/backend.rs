@@ -1,0 +1,137 @@
+//! The [`InferBackend`] trait and the production backends the placement
+//! planner chooses among. Each backend wraps an existing execution path —
+//! the refactor moves *selection* into the engine, not the math:
+//!
+//! * [`TrunkBackend`] → [`single_device_forward`] (Fig 12 path), serving
+//!   both the `single` and `chunked` placements (chunking is a memory
+//!   schedule on this testbed, not a numeric change — same outputs,
+//!   latency/peak priced by the plan);
+//! * [`DapBackend`] → [`DapCoordinator::model_forward`] (Fig 13 path),
+//!   one coordinator per request so the tape/comm state stays private.
+//!
+//! [`BackendFactory`] is the construction seam (the same idea as
+//! [`crate::dap::executor::SegmentRunner`]): the engine is the production
+//! factory; tests inject pure-host fakes to exercise the scheduler and
+//! drain loop without artifacts.
+
+use crate::dap::DapCoordinator;
+use crate::error::Result;
+use crate::inference::autochunk::AutoChunkPlan;
+use crate::inference::single_device_forward;
+use crate::runtime::Runtime;
+use crate::tensor::{HostTensor, IntTensor};
+use std::sync::Arc;
+
+use super::planner::Placement;
+use super::InferRequest;
+
+/// What a backend returns for one request.
+#[derive(Clone, Debug)]
+pub struct InferOutput {
+    /// BERT-head logits over the MSA, `(n_seq, n_res, vocab)`.
+    pub msa_logits: HostTensor,
+    /// Distogram logits, `(n_res, n_res, n_dist_bins)`.
+    pub dist_logits: HostTensor,
+    /// One-line execution note for logs (plan summary, overlap report).
+    pub note: Option<String>,
+}
+
+/// One execution strategy behind the engine. Implementations need not be
+/// `Sync` — the engine constructs a backend inside the worker thread that
+/// runs the request.
+pub trait InferBackend {
+    /// Stable display name (`single`, `chunked`, `dap4`).
+    fn name(&self) -> String;
+    /// Execute one request's forward pass on this strategy.
+    fn infer(&self, tokens: &IntTensor) -> Result<InferOutput>;
+}
+
+/// Builds the backend for a placed request. `rank_threads` is the
+/// intra-request rank-executor budget (the engine hands each request one
+/// lane when several run concurrently).
+pub trait BackendFactory: Sync {
+    /// Construct the backend `placement` calls for.
+    fn make<'a>(
+        &'a self,
+        req: &InferRequest,
+        placement: &Placement,
+        rank_threads: usize,
+    ) -> Result<Box<dyn InferBackend + 'a>>;
+}
+
+/// Single-device trunk execution (the Fig 12 measurement path), serving
+/// both the `single` and `chunked` placements: on this testbed an
+/// AutoChunk plan is a memory *schedule*, not a numeric change, so both
+/// run [`single_device_forward`] — `chunked` carries the plan it
+/// executes under as its note, `single` carries the guard's advisory.
+pub struct TrunkBackend<'rt> {
+    /// Artifact runtime (shared executable cache).
+    pub rt: &'rt Runtime,
+    /// Preset whose artifacts execute.
+    pub preset: String,
+    /// Full canonical parameter leaves (engine-cached).
+    pub params: Arc<Vec<HostTensor>>,
+    /// Unfused-kernel baseline variant.
+    pub naive: bool,
+    /// The placement's AutoChunk plan (None with the guard off).
+    pub plan: Option<AutoChunkPlan>,
+    /// Whether this placement executes under the chunk plan (`chunked`)
+    /// or unchunked with the plan as advisory (`single`).
+    pub chunked: bool,
+}
+
+impl InferBackend for TrunkBackend<'_> {
+    fn name(&self) -> String {
+        if self.chunked { "chunked" } else { "single" }.into()
+    }
+
+    fn infer(&self, tokens: &IntTensor) -> Result<InferOutput> {
+        let (m, z) =
+            single_device_forward(self.rt, &self.preset, &self.params, tokens, self.naive)?;
+        let note = self.plan.as_ref().map(|p| {
+            if self.chunked {
+                p.summary()
+            } else {
+                format!("memory guard (advisory): {}", p.summary())
+            }
+        });
+        Ok(InferOutput { msa_logits: m, dist_logits: z, note })
+    }
+}
+
+/// Dynamic Axial Parallelism at degree `n`, wrapping the existing
+/// coordinator (threaded rank executor + Duality-Async comm worker).
+pub struct DapBackend<'rt> {
+    /// Artifact runtime (shared executable cache).
+    pub rt: &'rt Runtime,
+    /// Preset whose artifacts execute.
+    pub preset: String,
+    /// Full canonical parameter leaves (engine-cached).
+    pub params: Arc<Vec<HostTensor>>,
+    /// DAP degree (logical ranks).
+    pub n: usize,
+    /// Duality-Async overlap on/off.
+    pub overlap: bool,
+    /// Intra-request rank-executor thread budget.
+    pub rank_threads: usize,
+    /// Advisory chunked-fallback plan from the memory guard.
+    pub plan: Option<AutoChunkPlan>,
+}
+
+impl InferBackend for DapBackend<'_> {
+    fn name(&self) -> String {
+        format!("dap{}", self.n)
+    }
+
+    fn infer(&self, tokens: &IntTensor) -> Result<InferOutput> {
+        let co = DapCoordinator::new(self.rt, &self.preset, self.n, self.overlap)?
+            .with_threads(self.rank_threads);
+        let (m, z) = co.model_forward(&self.params, tokens)?;
+        let overlap = format!("overlap: {}", co.overlap_report());
+        let note = match &self.plan {
+            Some(p) => format!("memory guard (advisory): {} | {overlap}", p.summary()),
+            None => overlap,
+        };
+        Ok(InferOutput { msa_logits: m, dist_logits: z, note: Some(note) })
+    }
+}

@@ -1,0 +1,690 @@
+//! The unified inference engine: one request-driven serving layer over
+//! the single-device, chunked, and DAP execution paths.
+//!
+//! Before this subsystem each strategy was its own entry point serving
+//! exactly one request (`inference::single`, the DAP coordinator, CLI
+//! glue). ParaFold (arXiv 2111.06340) frames real AlphaFold deployments
+//! as throughput problems over many heterogeneous sequences; here the
+//! [`Engine`] owns the [`Runtime`] (compile-once executable cache) and a
+//! per-preset parameter cache once, accepts a queue of [`InferRequest`]s,
+//! and for each request:
+//!
+//! 1. **places** it via [`planner::PlacementPlanner`] — cost-model-driven
+//!    backend choice with sim-OOM admission control;
+//! 2. **schedules** the admitted batch ([`scheduler`]) — FIFO or SJF by
+//!    modeled latency, starvation-guarded, deterministic;
+//! 3. **executes** up to `threads` requests concurrently — worker lanes
+//!    pull scheduled requests work-conservingly, results land
+//!    slot-indexed so outputs are bit-for-bit identical at any thread
+//!    budget, and each request's DAP backend still runs on PR 2's rank
+//!    executor with its share of the budget;
+//! 4. **accounts** per-request latency and aggregate modeled PFLOP/s
+//!    through [`crate::metrics::ServeStats`].
+//!
+//! `fastfold serve --requests <jsonl>` drives this from the CLI;
+//! `fastfold infer` is now a one-request special case of the same path.
+
+pub mod backend;
+pub mod planner;
+pub mod scheduler;
+
+pub use backend::{BackendFactory, DapBackend, InferBackend, InferOutput, TrunkBackend};
+pub use planner::{BackendKind, Placement, PlacementPlanner};
+pub use scheduler::{schedule_order, simulate_lanes, SchedEntry, SchedPolicy};
+
+use crate::config::{ModelConfig, RunConfig};
+use crate::error::{Error, Result};
+use crate::json::Json;
+use crate::metrics::{fmt_secs, ServeRecord, ServeStats, Table};
+use crate::runtime::Runtime;
+use crate::tensor::HostTensor;
+use crate::train::DataGen;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default input-stream seed — matches the legacy `fastfold infer` data
+/// stream, so engine outputs are bit-for-bit comparable to the old path.
+pub const DEFAULT_SEED: u64 = 7;
+
+/// One inference request as the serving layer sees it.
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    /// Caller-visible request id (reports key on it).
+    pub id: String,
+    /// Preset whose artifacts execute the request.
+    pub preset: String,
+    /// Residue count the cost models price the request at (None = the
+    /// preset's own shape). This is the "short vs long vs DAP-worthy"
+    /// knob: executed semantics stay at preset scale on this testbed
+    /// while placement sees the deployment-scale sequence.
+    pub model_len: Option<usize>,
+    /// Smaller runs sooner (deadline classes); defaults to 0.
+    pub priority: u32,
+    /// Run the unfused-kernel baseline variant.
+    pub naive: bool,
+    /// Synthetic input-stream seed.
+    pub seed: u64,
+    /// Pin the backend instead of consulting the planner (legacy
+    /// `--dap N` paths); the memory guard still vets a forced choice.
+    pub force: Option<BackendKind>,
+}
+
+impl InferRequest {
+    /// A request with defaults (no modeled length, priority 0, fused
+    /// kernels, the legacy input seed, planner-chosen backend).
+    pub fn new(id: &str, preset: &str) -> Self {
+        InferRequest {
+            id: id.to_string(),
+            preset: preset.to_string(),
+            model_len: None,
+            priority: 0,
+            naive: false,
+            seed: DEFAULT_SEED,
+            force: None,
+        }
+    }
+
+    /// Parse one request object. Recognized keys (all optional except
+    /// none): `id` (default `req<index>`), `preset` (default `tiny`),
+    /// `len`, `priority`, `naive`, `seed`, `backend`
+    /// (`single`/`chunked`/`dap<N>`), `dap` (degree ≥ 2 pins `dap<N>`).
+    pub fn from_json(j: &Json, index: usize) -> Result<Self> {
+        // a bare scalar/array line must error, not become a default
+        // request — and a misspelled key must not silently drop a setting
+        const KNOWN: [&str; 8] =
+            ["id", "preset", "len", "priority", "naive", "seed", "backend", "dap"];
+        for key in j.as_obj()?.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(Error::Config(format!(
+                    "request {index}: unknown key '{key}' (known: {})",
+                    KNOWN.join(", ")
+                )));
+            }
+        }
+        let mut req = InferRequest::new(&format!("req{index}"), "tiny");
+        if let Some(v) = j.opt("id") {
+            req.id = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("preset") {
+            req.preset = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("len") {
+            req.model_len = Some(v.as_usize()?);
+        }
+        if let Some(v) = j.opt("priority") {
+            req.priority = v.as_usize()? as u32;
+        }
+        if let Some(v) = j.opt("naive") {
+            req.naive = v.as_bool()?;
+        }
+        if let Some(v) = j.opt("seed") {
+            req.seed = v.as_usize()? as u64;
+        }
+        if j.opt("backend").is_some() && j.opt("dap").is_some() {
+            return Err(Error::Config(format!(
+                "request {index}: 'backend' and 'dap' are both backend \
+                 pins — give one"
+            )));
+        }
+        if let Some(v) = j.opt("backend") {
+            req.force = Some(BackendKind::parse(v.as_str()?)?);
+        } else if let Some(v) = j.opt("dap") {
+            let n = v.as_usize()?;
+            if n >= 2 {
+                req.force = Some(BackendKind::Dap(n));
+            }
+        }
+        Ok(req)
+    }
+
+    /// Parse a JSONL request file (one JSON object per non-blank line).
+    pub fn parse_jsonl(src: &str) -> Result<Vec<InferRequest>> {
+        let mut reqs = Vec::new();
+        for line in src.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let j = Json::parse(line)?;
+            reqs.push(InferRequest::from_json(&j, reqs.len())?);
+        }
+        Ok(reqs)
+    }
+}
+
+/// Work-conserving slot map: up to `threads` scoped workers pull the next
+/// unclaimed slot index and run `f` on it — a free lane always takes the
+/// next scheduled job, matching [`simulate_lanes`]' earliest-free-lane
+/// model (static round-robin striping would let a lane idle behind a long
+/// job). Results land slot-indexed, so outputs are deterministic however
+/// the pulls interleave.
+fn pull_map<T: Send>(threads: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let slot = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if slot >= n {
+                    break;
+                }
+                *slots[slot].lock().unwrap() = Some(f(slot));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("slot mutex poisoned")
+                .expect("every slot is filled before the scope joins")
+        })
+        .collect()
+}
+
+/// The plan-only front half of a drain: placements in submission order,
+/// the executed schedule, and the modeled lane economics — computable
+/// without a [`Runtime`] (dry-run, benches, examples).
+#[derive(Debug)]
+pub struct BatchPlan {
+    /// Per-request placement (or admission rejection), submission order.
+    pub placements: Vec<Result<Placement>>,
+    /// Executed schedule: submission indices in run order (admitted only).
+    pub order: Vec<usize>,
+    /// Modeled start second of each scheduled slot (aligned with `order`).
+    pub modeled_starts: Vec<f64>,
+    /// Modeled makespan of the schedule over the lanes (seconds).
+    pub modeled_makespan: f64,
+}
+
+/// Place, admit, schedule, and lane-simulate a request batch — the single
+/// implementation behind [`Engine::serve`], `fastfold serve --dry-run`,
+/// `bench_serve`, and the examples, so schedule semantics cannot drift
+/// between the executed and preview paths.
+pub fn plan_batch(
+    planner: &PlacementPlanner,
+    policy: SchedPolicy,
+    max_bypass: usize,
+    lanes: usize,
+    requests: &[InferRequest],
+) -> BatchPlan {
+    let placements: Vec<Result<Placement>> =
+        requests.iter().map(|r| planner.place(r)).collect();
+    let admitted: Vec<usize> = placements
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.is_ok())
+        .map(|(i, _)| i)
+        .collect();
+    let latency_of = |i: usize| -> f64 {
+        placements[i].as_ref().map(|p| p.modeled_latency).unwrap_or(0.0)
+    };
+    let entries: Vec<SchedEntry> = admitted
+        .iter()
+        .map(|&i| SchedEntry {
+            arrival: i,
+            priority: requests[i].priority,
+            modeled_latency: latency_of(i),
+        })
+        .collect();
+    let order: Vec<usize> = schedule_order(policy, &entries, max_bypass)
+        .into_iter()
+        .map(|k| admitted[k])
+        .collect();
+    let lats: Vec<f64> = order.iter().map(|&i| latency_of(i)).collect();
+    let (modeled_starts, modeled_makespan) = simulate_lanes(&lats, lanes);
+    BatchPlan { placements, order, modeled_starts, modeled_makespan }
+}
+
+impl BatchPlan {
+    /// Metrics ledger for the planned (not executed) batch: wall fields
+    /// are zero, rejected requests carry zero flops. `requests` must be
+    /// the batch this plan was built from.
+    pub fn stats(&self, requests: &[InferRequest]) -> ServeStats {
+        let mut stats = ServeStats::default();
+        for (req, pl) in requests.iter().zip(self.placements.iter()) {
+            stats.push(match pl {
+                Ok(p) => ServeRecord {
+                    id: req.id.clone(),
+                    backend: p.backend.name(),
+                    modeled_latency: p.modeled_latency,
+                    modeled_flops: p.modeled_flops,
+                    wall_seconds: 0.0,
+                    ok: true,
+                },
+                Err(_) => ServeRecord {
+                    id: req.id.clone(),
+                    backend: "rejected".into(),
+                    modeled_latency: 0.0,
+                    modeled_flops: 0.0,
+                    wall_seconds: 0.0,
+                    ok: false,
+                },
+            });
+        }
+        stats
+    }
+
+    /// Placement preview table — the one rendering the dry-run CLI and
+    /// the examples share.
+    pub fn table(&self, requests: &[InferRequest]) -> Table {
+        let mut t = Table::new(&[
+            "id", "preset", "len", "backend", "modeled lat", "peak GB",
+            "modeled PFLOP/s", "status",
+        ]);
+        for (req, pl) in requests.iter().zip(self.placements.iter()) {
+            let len = req
+                .model_len
+                .map(|l| l.to_string())
+                .unwrap_or_else(|| "preset".into());
+            match pl {
+                Ok(p) => t.row(&[
+                    req.id.clone(),
+                    req.preset.clone(),
+                    len,
+                    p.backend.name(),
+                    fmt_secs(p.modeled_latency),
+                    format!("{:.1}", p.modeled_peak_gb),
+                    format!("{:.2}", p.modeled_pflops()),
+                    "admitted".into(),
+                ]),
+                Err(_) => t.row(&[
+                    req.id.clone(),
+                    req.preset.clone(),
+                    len,
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "rejected".into(),
+                ]),
+            }
+        }
+        t
+    }
+
+    /// Rejection detail lines (`id: error`) for printing under the table.
+    pub fn rejections(&self, requests: &[InferRequest]) -> Vec<String> {
+        requests
+            .iter()
+            .zip(self.placements.iter())
+            .filter_map(|(req, pl)| {
+                pl.as_ref().err().map(|e| format!("{}: {e}", req.id))
+            })
+            .collect()
+    }
+}
+
+/// One request's final disposition, in submission order inside a
+/// [`ServeReport`].
+#[derive(Debug)]
+pub struct RequestOutcome {
+    /// Request id.
+    pub id: String,
+    /// Preset the request named.
+    pub preset: String,
+    /// The planner's placement (None = rejected at admission).
+    pub placement: Option<Placement>,
+    /// The logits, or the rejection/execution error.
+    pub output: Result<(HostTensor, HostTensor)>,
+    /// Backend execution note (plan summary, overlap report).
+    pub note: Option<String>,
+    /// Measured wall seconds for this request's execution.
+    pub wall_seconds: f64,
+}
+
+/// The drained batch: outcomes, the executed schedule, and the metrics
+/// ledger.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Per-request outcomes in submission order.
+    pub outcomes: Vec<RequestOutcome>,
+    /// Executed schedule: submission indices in run order (admitted only).
+    pub order: Vec<usize>,
+    /// Request-level worker lanes the drain used.
+    pub threads: usize,
+    /// Measured wall seconds for the whole drain.
+    pub wall_seconds: f64,
+    /// Modeled makespan of the schedule over `threads` lanes (seconds).
+    pub modeled_makespan: f64,
+    /// Per-request metrics ledger (see [`ServeStats`]).
+    pub stats: ServeStats,
+}
+
+impl ServeReport {
+    /// Requests that produced output.
+    pub fn completed(&self) -> usize {
+        self.stats.completed()
+    }
+
+    /// Aggregate modeled throughput of the drained batch: total modeled
+    /// FLOPs over the modeled makespan (the paper's aggregate-PFLOP/s
+    /// framing).
+    pub fn aggregate_pflops(&self) -> f64 {
+        self.stats.aggregate_pflops(self.modeled_makespan)
+    }
+
+    /// Per-request report table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&[
+            "id", "preset", "backend", "modeled lat", "modeled PFLOP/s", "wall", "status",
+        ]);
+        for o in &self.outcomes {
+            let (backend, lat, pf) = match &o.placement {
+                Some(p) => (
+                    p.backend.name(),
+                    fmt_secs(p.modeled_latency),
+                    format!("{:.2}", p.modeled_pflops()),
+                ),
+                None => ("-".into(), "-".into(), "-".into()),
+            };
+            // no placement = never admitted (sim-OOM, bad preset, fleet
+            // bound) → "rejected"; placed but errored = "failed" — keyed
+            // on admission so the table agrees with backend_mix()
+            let status = match (&o.output, &o.placement) {
+                (Ok(_), _) => "ok".to_string(),
+                (Err(_), None) => "rejected".into(),
+                (Err(_), Some(_)) => "failed".into(),
+            };
+            t.row(&[
+                o.id.clone(),
+                o.preset.clone(),
+                backend,
+                lat,
+                pf,
+                fmt_secs(o.wall_seconds),
+                status,
+            ]);
+        }
+        t
+    }
+
+    /// One-line aggregate summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "served {}/{} requests in {} (threads={}, mean wall {}); \
+             backends: {}; modeled makespan {} -> aggregate {:.2} PFLOP/s \
+             (modeled)",
+            self.completed(),
+            self.outcomes.len(),
+            fmt_secs(self.wall_seconds),
+            self.threads,
+            fmt_secs(self.stats.mean_wall_seconds()),
+            self.stats.backend_mix(),
+            fmt_secs(self.modeled_makespan),
+            self.aggregate_pflops(),
+        )
+    }
+}
+
+/// Lazily-loaded, shareable parameter leaves for one preset: the outer
+/// map lock is held only to find the slot; the per-slot lock is held
+/// across the disk load, so one preset's load never blocks another's.
+type ParamSlot = Arc<Mutex<Option<Arc<Vec<HostTensor>>>>>;
+
+/// The serving engine: owns the runtime + parameter caches once, drains
+/// request batches through place → schedule → execute → account.
+pub struct Engine<'rt> {
+    rt: &'rt Runtime,
+    /// Placement policy (public so deployments can swap cost models).
+    pub planner: PlacementPlanner,
+    /// Queue discipline for [`Engine::serve`].
+    pub policy: SchedPolicy,
+    /// SJF starvation bound (see [`scheduler::schedule_order`]).
+    pub max_bypass: usize,
+    /// Request-level worker-lane budget (also the modeled lane count).
+    pub threads: usize,
+    /// Duality-Async overlap for DAP placements.
+    pub overlap: bool,
+    params: Mutex<BTreeMap<String, ParamSlot>>,
+}
+
+impl<'rt> Engine<'rt> {
+    /// Build an engine from a launcher config (`[parallel]`, `[autochunk]`,
+    /// `[serve]`).
+    pub fn new(rt: &'rt Runtime, cfg: &RunConfig) -> Result<Self> {
+        Ok(Engine {
+            rt,
+            planner: PlacementPlanner::from_run_config(cfg)?,
+            policy: cfg.serve.policy,
+            max_bypass: cfg.serve.max_bypass,
+            threads: cfg.parallel.resolve_threads(),
+            overlap: cfg.parallel.overlap,
+            params: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// The runtime this engine serves from.
+    pub fn runtime(&self) -> &'rt Runtime {
+        self.rt
+    }
+
+    /// Canonical parameter leaves for `preset`, loaded once and shared
+    /// across every request that names the preset. Concurrent lanes
+    /// racing on the *same* preset wait for one read (the per-preset
+    /// slot lock spans the load); lanes on *different* presets load in
+    /// parallel (the map lock is only held to find the slot). A failed
+    /// load leaves the slot empty, so a later request retries.
+    pub fn params_for(&self, preset: &str) -> Result<Arc<Vec<HostTensor>>> {
+        let slot: ParamSlot = self
+            .params
+            .lock()
+            .unwrap()
+            .entry(preset.to_string())
+            .or_default()
+            .clone();
+        let mut guard = slot.lock().unwrap();
+        if let Some(p) = &*guard {
+            return Ok(p.clone());
+        }
+        let loaded = Arc::new(self.rt.manifest.load_params(preset)?);
+        *guard = Some(loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Place one request without executing it (the `--dry-run` path).
+    pub fn place(&self, req: &InferRequest) -> Result<Placement> {
+        self.planner.place(req)
+    }
+
+    /// Drain a batch with the production backends.
+    pub fn serve(&self, requests: &[InferRequest]) -> Result<ServeReport> {
+        self.serve_with(requests, self)
+    }
+
+    /// Drain a batch with an injected [`BackendFactory`] (the test seam —
+    /// scheduling, admission, and accounting are identical to
+    /// [`Engine::serve`]).
+    pub fn serve_with(
+        &self,
+        requests: &[InferRequest],
+        factory: &dyn BackendFactory,
+    ) -> Result<ServeReport> {
+        let t0 = Instant::now();
+
+        // 1.–3. place + admit + schedule + lane-simulate (deterministic,
+        // shared with the dry-run/bench preview paths)
+        let BatchPlan { placements, order, modeled_makespan, .. } =
+            plan_batch(&self.planner, self.policy, self.max_bypass, self.threads, requests);
+
+        // 4. execute: worker lanes pull scheduled requests work-conservingly
+        // ([`pull_map`], mirroring the lane model); results land
+        // slot-indexed, so outputs cannot depend on the thread budget
+        // (rank_threads never changes numerics either — PR 2's bit-for-bit
+        // guarantee). The budget splits across concurrent requests with no
+        // oversubscription: a lone request keeps all of it (legacy
+        // single-request behavior), a full batch gets one lane each.
+        let concurrent = order.len().clamp(1, self.threads.max(1));
+        let rank_threads = (self.threads / concurrent).max(1);
+        let executed: Vec<(usize, Result<InferOutput>, f64)> =
+            pull_map(self.threads, order.len(), |slot| {
+                let i = order[slot];
+                let req = &requests[i];
+                let placement = placements[i]
+                    .as_ref()
+                    .expect("scheduled request must be admitted");
+                let t = Instant::now();
+                let out = (|| {
+                    let be = factory.make(req, placement, rank_threads)?;
+                    let exec_cfg = ModelConfig::preset(&req.preset)?;
+                    let mut gen = DataGen::new(exec_cfg, req.seed);
+                    be.infer(&gen.next_batch().msa_tokens)
+                })();
+                (i, out, t.elapsed().as_secs_f64())
+            });
+
+        // 5. assemble outcomes in submission order + the metrics ledger
+        let mut exec_map: BTreeMap<usize, (Result<InferOutput>, f64)> = executed
+            .into_iter()
+            .map(|(i, out, wall)| (i, (out, wall)))
+            .collect();
+        let mut outcomes = Vec::with_capacity(requests.len());
+        for (i, (req, pl)) in requests.iter().zip(placements.into_iter()).enumerate() {
+            let outcome = match pl {
+                Err(e) => RequestOutcome {
+                    id: req.id.clone(),
+                    preset: req.preset.clone(),
+                    placement: None,
+                    output: Err(e),
+                    note: None,
+                    wall_seconds: 0.0,
+                },
+                Ok(p) => {
+                    let (out, wall) = exec_map
+                        .remove(&i)
+                        .unwrap_or((Err(Error::msg("request was not executed")), 0.0));
+                    let (output, note) = match out {
+                        Ok(InferOutput { msa_logits, dist_logits, note }) => {
+                            (Ok((msa_logits, dist_logits)), note)
+                        }
+                        Err(e) => (Err(e), None),
+                    };
+                    RequestOutcome {
+                        id: req.id.clone(),
+                        preset: req.preset.clone(),
+                        placement: Some(p),
+                        output,
+                        note,
+                        wall_seconds: wall,
+                    }
+                }
+            };
+            outcomes.push(outcome);
+        }
+
+        let mut stats = ServeStats::default();
+        for o in &outcomes {
+            stats.push(ServeRecord {
+                id: o.id.clone(),
+                backend: o
+                    .placement
+                    .as_ref()
+                    .map(|p| p.backend.name())
+                    .unwrap_or_else(|| "rejected".into()),
+                modeled_latency: o.placement.as_ref().map(|p| p.modeled_latency).unwrap_or(0.0),
+                modeled_flops: o.placement.as_ref().map(|p| p.modeled_flops).unwrap_or(0.0),
+                wall_seconds: o.wall_seconds,
+                ok: o.output.is_ok(),
+            });
+        }
+
+        Ok(ServeReport {
+            outcomes,
+            order,
+            threads: self.threads,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            modeled_makespan,
+            stats,
+        })
+    }
+}
+
+impl BackendFactory for Engine<'_> {
+    fn make<'a>(
+        &'a self,
+        req: &InferRequest,
+        placement: &Placement,
+        rank_threads: usize,
+    ) -> Result<Box<dyn InferBackend + 'a>> {
+        let params = self.params_for(&req.preset)?;
+        Ok(match &placement.backend {
+            BackendKind::SingleDevice | BackendKind::Chunked => Box::new(TrunkBackend {
+                rt: self.rt,
+                preset: req.preset.clone(),
+                params,
+                naive: req.naive,
+                plan: placement.plan.clone(),
+                chunked: placement.backend == BackendKind::Chunked,
+            }),
+            BackendKind::Dap(n) => Box::new(DapBackend {
+                rt: self.rt,
+                preset: req.preset.clone(),
+                params,
+                n: *n,
+                overlap: self.overlap,
+                rank_threads,
+                plan: placement.plan.clone(),
+            }),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_parsing_defaults_and_overrides() {
+        let src = r#"
+            {"id": "a", "preset": "small", "len": 2048, "priority": 2}
+            # comment line
+            {"seed": 11, "naive": true}
+            {"id": "d", "dap": 4}
+            {"id": "s", "backend": "chunked"}
+        "#;
+        let reqs = InferRequest::parse_jsonl(src).unwrap();
+        assert_eq!(reqs.len(), 4);
+        assert_eq!(reqs[0].id, "a");
+        assert_eq!(reqs[0].preset, "small");
+        assert_eq!(reqs[0].model_len, Some(2048));
+        assert_eq!(reqs[0].priority, 2);
+        assert_eq!(reqs[1].id, "req1");
+        assert_eq!(reqs[1].preset, "tiny");
+        assert_eq!(reqs[1].seed, 11);
+        assert!(reqs[1].naive);
+        assert_eq!(reqs[2].force, Some(BackendKind::Dap(4)));
+        assert_eq!(reqs[3].force, Some(BackendKind::Chunked));
+        assert!(InferRequest::parse_jsonl("{\"backend\": \"warp\"}").is_err());
+        assert!(InferRequest::parse_jsonl("not json").is_err());
+        // bare non-object JSON lines error instead of becoming defaults
+        assert!(InferRequest::parse_jsonl("42").is_err());
+        assert!(InferRequest::parse_jsonl("[{\"id\": \"a\"}]").is_err());
+        // a misspelled key is a loud error, not a silently dropped setting
+        assert!(InferRequest::parse_jsonl("{\"lenght\": 4096}").is_err());
+        // so are conflicting backend pins
+        assert!(
+            InferRequest::parse_jsonl(r#"{"backend": "chunked", "dap": 4}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn dap_one_is_not_a_forced_backend() {
+        let reqs = InferRequest::parse_jsonl(r#"{"dap": 1}"#).unwrap();
+        assert_eq!(reqs[0].force, None);
+    }
+
+    #[test]
+    fn pull_map_matches_sequential_at_any_width() {
+        let want: Vec<usize> = (0..37).map(|i| i * 3 + 1).collect();
+        for threads in [1usize, 2, 4, 8] {
+            let got = super::pull_map(threads, 37, |i| i * 3 + 1);
+            assert_eq!(got, want, "threads={threads}");
+        }
+        assert!(super::pull_map(4, 0, |i| i).is_empty());
+        assert_eq!(super::pull_map(4, 1, |i| i), vec![0]);
+    }
+}

@@ -1,0 +1,387 @@
+//! Placement planner: the cost-model-driven "which backend serves this
+//! request" decision.
+//!
+//! For every [`InferRequest`] the planner prices the request's modeled
+//! shape against the perf models — FLOPs ([`model_flops`]), memory (the
+//! AutoChunk planner over [`MemoryModel`]), latency ([`ScalingModel`]) —
+//! and walks the decision tree:
+//!
+//! 1. fits unchunked on one device → [`BackendKind::SingleDevice`];
+//! 2. fits with per-module chunking → [`BackendKind::Chunked`] (latency
+//!    scaled by the plan's chunk overhead);
+//! 3. sim-OOM on one device → smallest DAP degree ≤ `max_dap` whose plan
+//!    fits → [`BackendKind::Dap`];
+//! 4. nothing fits → the request is **rejected at admission** with the
+//!    same [`Error::SimOom`] verdict the memory guard raises (Table V's
+//!    OOM rows) — the engine reports it instead of thrashing.
+//!
+//! This is ScaleFold's observation (arXiv 2404.11068) applied to serving:
+//! strategy selection is a cost-model query, not a launch flag.
+
+use crate::config::{ModelConfig, RunConfig};
+use crate::error::{Error, Result};
+use crate::inference::autochunk::{self, AutoChunkPlan};
+use crate::perfmodel::flops::model_flops;
+use crate::perfmodel::gpu::ImplProfile;
+use crate::perfmodel::scaling::{MpMethod, ScalingModel, INFER_RECYCLES};
+use crate::perfmodel::{GpuSpec, MemoryModel};
+
+use super::InferRequest;
+
+/// Which execution strategy a request is placed on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Single-device trunk execution (short sequences, Fig 12).
+    SingleDevice,
+    /// Single device with the AutoChunk plan applied (long sequences that
+    /// still fit one device, paper §IV).
+    Chunked,
+    /// Dynamic Axial Parallelism at the given degree (Fig 13 / Table V).
+    Dap(usize),
+}
+
+impl BackendKind {
+    /// Stable display name: `single`, `chunked`, `dap<N>`.
+    pub fn name(&self) -> String {
+        match self {
+            BackendKind::SingleDevice => "single".into(),
+            BackendKind::Chunked => "chunked".into(),
+            BackendKind::Dap(n) => format!("dap{n}"),
+        }
+    }
+
+    /// DAP degree this backend occupies (1 for the single-device paths).
+    pub fn dap_degree(&self) -> usize {
+        match self {
+            BackendKind::Dap(n) => (*n).max(1),
+            _ => 1,
+        }
+    }
+
+    /// Inverse of [`BackendKind::name`] (request files name backends).
+    /// Degree-1 "DAP" is not a distinct strategy — `dap1`/`dap0` are
+    /// rejected, matching the request-file `dap` key (degree ≥ 2 pins).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "single" | "single_device" => Ok(BackendKind::SingleDevice),
+            "chunked" => Ok(BackendKind::Chunked),
+            other => other
+                .strip_prefix("dap")
+                .and_then(|n| n.parse::<usize>().ok())
+                .filter(|&n| n >= 2)
+                .map(BackendKind::Dap)
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown backend '{other}' (known: single, chunked, dap<N> with N >= 2)"
+                    ))
+                }),
+        }
+    }
+}
+
+/// The planner's verdict for one admitted request.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// Chosen execution strategy.
+    pub backend: BackendKind,
+    /// The AutoChunk plan backing the decision (None with the guard off).
+    pub plan: Option<AutoChunkPlan>,
+    /// Modeled end-to-end latency at paper scale (seconds) — the SJF key.
+    pub modeled_latency: f64,
+    /// Modeled forward FLOPs for the whole request (all recycles).
+    pub modeled_flops: f64,
+    /// Modeled peak device memory under the placement (decimal GB).
+    pub modeled_peak_gb: f64,
+}
+
+impl Placement {
+    /// Modeled device-aggregate throughput of this request's placement.
+    pub fn modeled_pflops(&self) -> f64 {
+        if self.modeled_latency > 0.0 {
+            self.modeled_flops / self.modeled_latency / 1e15
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The pure (no [`crate::runtime::Runtime`] needed) placement policy: cost
+/// models + admission bounds. Fields are public so deployments can swap a
+/// tuned [`MemoryModel`] or a different device/profile.
+#[derive(Clone, Debug)]
+pub struct PlacementPlanner {
+    /// Memory model the AutoChunk planner budgets against.
+    pub mem: MemoryModel,
+    /// Device every backend is priced on.
+    pub gpu: GpuSpec,
+    /// AutoChunk headroom fraction (see `[autochunk] headroom`).
+    pub headroom: f64,
+    /// Consult the memory guard at all (`[autochunk] enabled`); with the
+    /// guard off every unforced request places on `SingleDevice`.
+    pub guard: bool,
+    /// Largest DAP degree the fleet offers (admission bound).
+    pub max_dap: usize,
+    /// Latency model for the SJF key and throughput accounting.
+    pub scaling: ScalingModel,
+    /// Kernel-quality profile requests execute with.
+    pub profile: ImplProfile,
+}
+
+impl PlacementPlanner {
+    /// Build the planner from a launcher config (`[autochunk]` + `[serve]`).
+    pub fn from_run_config(cfg: &RunConfig) -> Result<Self> {
+        Ok(PlacementPlanner {
+            mem: MemoryModel::default(),
+            gpu: GpuSpec::by_name(&cfg.autochunk.gpu)?,
+            headroom: cfg.autochunk.headroom,
+            guard: cfg.autochunk.enabled,
+            max_dap: cfg.serve.max_dap,
+            scaling: ScalingModel::default(),
+            profile: ImplProfile::fastfold(),
+        })
+    }
+
+    /// The config the cost models price the request at: the executable
+    /// preset's own shape, or the paper-scale inference shape when the
+    /// request carries a modeled length (`len` in the request file). The
+    /// preset is validated either way — placement must not outlive a typo.
+    pub fn plan_cfg(&self, req: &InferRequest) -> Result<ModelConfig> {
+        let preset_cfg = ModelConfig::preset(&req.preset)?;
+        Ok(match req.model_len {
+            Some(len) => ModelConfig::inference(len),
+            None => preset_cfg,
+        })
+    }
+
+    /// Modeled end-to-end latency of `cfg` itself — priced on the same
+    /// architecture as `modeled_flops`, so modeled PFLOP/s is a real
+    /// ratio for preset-shaped requests too. (For `inference(len)` shapes
+    /// this equals [`ScalingModel::inference_latency`] at `chunked =
+    /// false`, times the plan's chunk factor.)
+    fn latency(&self, cfg: &ModelConfig, dap: usize, chunk_factor: f64) -> f64 {
+        let t = self.scaling.mp_block_time(
+            cfg, &self.profile, MpMethod::Dap, dap.max(1), false, true,
+        );
+        cfg.n_blocks as f64 * self.scaling.pipeline_mult * t.total() * INFER_RECYCLES
+            * chunk_factor
+    }
+
+    /// Place one request, or reject it ([`Error::SimOom`]) when no fleet
+    /// strategy up to `max_dap` can hold it.
+    pub fn place(&self, req: &InferRequest) -> Result<Placement> {
+        let cfg = self.plan_cfg(req)?;
+        let flops = model_flops(&cfg) * INFER_RECYCLES;
+
+        // forced backend (legacy CLI paths: `--dap N`): the guard still
+        // vets the degree when enabled, exactly as the old entry points
+        // did — and the fleet bound applies to pinned degrees too
+        if let Some(force) = &req.force {
+            let degree = force.dap_degree();
+            if degree > self.max_dap {
+                return Err(Error::Config(format!(
+                    "request pins dap{degree} but the fleet serves at most \
+                     dap{} ([serve] max_dap)",
+                    self.max_dap
+                )));
+            }
+            let plan = if self.guard {
+                Some(autochunk::plan_with_headroom(
+                    &cfg, &self.mem, &self.gpu, degree, self.headroom,
+                )?)
+            } else {
+                None
+            };
+            let chunk_factor = match (force, &plan) {
+                (BackendKind::Chunked, Some(p)) => p.latency_factor,
+                (BackendKind::Chunked, None) => 1.3, // α–β chunk penalty, no plan
+                _ => 1.0,
+            };
+            let peak = plan
+                .as_ref()
+                .map(|p| p.peak_bytes)
+                .unwrap_or_else(|| self.mem.unchunked_peak_bytes(&cfg, degree));
+            return Ok(Placement {
+                backend: force.clone(),
+                modeled_latency: self.latency(&cfg, degree, chunk_factor),
+                modeled_flops: flops,
+                modeled_peak_gb: peak / 1e9,
+                plan,
+            });
+        }
+
+        if !self.guard {
+            return Ok(Placement {
+                backend: BackendKind::SingleDevice,
+                plan: None,
+                modeled_latency: self.latency(&cfg, 1, 1.0),
+                modeled_flops: flops,
+                modeled_peak_gb: self.mem.unchunked_peak_bytes(&cfg, 1) / 1e9,
+            });
+        }
+
+        match autochunk::plan_with_headroom(&cfg, &self.mem, &self.gpu, 1, self.headroom) {
+            Ok(plan) => {
+                let backend = if plan.is_chunked() {
+                    BackendKind::Chunked
+                } else {
+                    BackendKind::SingleDevice
+                };
+                Ok(Placement {
+                    backend,
+                    modeled_latency: self.latency(&cfg, 1, plan.latency_factor),
+                    modeled_flops: flops,
+                    modeled_peak_gb: plan.peak_bytes / 1e9,
+                    plan: Some(plan),
+                })
+            }
+            Err(oom @ Error::SimOom { .. }) => {
+                // degree 1 just failed, so the fallback search starts at 2
+                // (power-of-two degrees, like autochunk::min_dap_degree)
+                let mut found = None;
+                let mut n = 2usize;
+                while n <= self.max_dap {
+                    if let Ok(p) = autochunk::plan_with_headroom(
+                        &cfg, &self.mem, &self.gpu, n, self.headroom,
+                    ) {
+                        found = Some((n, p));
+                        break;
+                    }
+                    n *= 2;
+                }
+                match found {
+                    Some((n, plan)) => Ok(Placement {
+                        backend: BackendKind::Dap(n),
+                        modeled_latency: self.latency(&cfg, n, plan.latency_factor),
+                        modeled_flops: flops,
+                        modeled_peak_gb: plan.peak_bytes / 1e9,
+                        plan: Some(plan),
+                    }),
+                    // admission control: nothing in the fleet fits
+                    None => Err(oom),
+                }
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planner() -> PlacementPlanner {
+        PlacementPlanner {
+            mem: MemoryModel::default(),
+            gpu: GpuSpec::a100_40g(),
+            headroom: autochunk::CHUNK_HEADROOM,
+            guard: true,
+            max_dap: 8,
+            scaling: ScalingModel::default(),
+            profile: ImplProfile::fastfold(),
+        }
+    }
+
+    fn req(len: usize) -> InferRequest {
+        InferRequest { model_len: Some(len), ..InferRequest::new("r", "tiny") }
+    }
+
+    #[test]
+    fn decision_tree_follows_table5() {
+        let p = planner();
+        // short: unchunked single device
+        let short = p.place(&req(512)).unwrap();
+        assert_eq!(short.backend, BackendKind::SingleDevice);
+        // long but fits one device with chunking
+        let long = p.place(&req(2048)).unwrap();
+        assert_eq!(long.backend, BackendKind::Chunked);
+        assert!(long.plan.as_ref().unwrap().is_chunked());
+        // past the single-device boundary: smallest fitting DAP degree
+        let dist = p.place(&req(4096)).unwrap();
+        assert_eq!(dist.backend, BackendKind::Dap(8));
+        assert!(dist.modeled_peak_gb <= p.gpu.memory / 1e9);
+    }
+
+    #[test]
+    fn admission_rejects_beyond_fleet() {
+        let mut p = planner();
+        p.max_dap = 4; // 4096 needs DAP-8 (Table V)
+        let e = p.place(&req(4096)).unwrap_err();
+        assert!(matches!(e, Error::SimOom { .. }), "{e}");
+    }
+
+    #[test]
+    fn guard_off_places_single_unconditionally() {
+        let mut p = planner();
+        p.guard = false;
+        let pl = p.place(&req(4096)).unwrap();
+        assert_eq!(pl.backend, BackendKind::SingleDevice);
+        assert!(pl.plan.is_none());
+    }
+
+    #[test]
+    fn forced_backend_honored_and_vetted() {
+        let p = planner();
+        let mut r = req(2048);
+        r.force = Some(BackendKind::Dap(4));
+        let pl = p.place(&r).unwrap();
+        assert_eq!(pl.backend, BackendKind::Dap(4));
+        assert!(pl.plan.is_some());
+        // a forced degree the guard refuses propagates the verdict
+        let mut r = req(4096);
+        r.force = Some(BackendKind::Dap(4));
+        assert!(matches!(p.place(&r).unwrap_err(), Error::SimOom { .. }));
+        // the fleet bound applies to pinned degrees too
+        let mut r = req(512);
+        r.force = Some(BackendKind::Dap(16));
+        assert!(matches!(p.place(&r).unwrap_err(), Error::Config(_)));
+    }
+
+    #[test]
+    fn modeled_latency_orders_by_length() {
+        let p = planner();
+        let a = p.place(&req(512)).unwrap().modeled_latency;
+        let b = p.place(&req(2048)).unwrap().modeled_latency;
+        assert!(b > a, "{b} vs {a}");
+        assert!(p.place(&req(512)).unwrap().modeled_pflops() > 0.0);
+        // a preset-shaped request is priced on its own architecture for
+        // both flops AND latency — the tiny preset is far cheaper than
+        // any paper-scale shape
+        let tiny = p.place(&InferRequest::new("t", "tiny")).unwrap();
+        assert!(tiny.modeled_latency < a, "{} vs {a}", tiny.modeled_latency);
+        assert!(tiny.modeled_pflops() > 0.0);
+    }
+
+    #[test]
+    fn len_requests_match_inference_latency_model() {
+        // for inference(len) shapes the placement latency must agree with
+        // the ScalingModel's headline inference_latency (unchunked case)
+        let p = planner();
+        let pl = p.place(&req(512)).unwrap();
+        assert!(!pl.plan.as_ref().unwrap().is_chunked());
+        let want = p
+            .scaling
+            .inference_latency(512, &p.profile, MpMethod::Dap, 1, false);
+        assert!(
+            (pl.modeled_latency - want).abs() <= 1e-9 * want,
+            "{} vs {want}",
+            pl.modeled_latency
+        );
+    }
+
+    #[test]
+    fn backend_kind_names_roundtrip() {
+        for k in [BackendKind::SingleDevice, BackendKind::Chunked, BackendKind::Dap(4)] {
+            assert_eq!(BackendKind::parse(&k.name()).unwrap(), k);
+        }
+        assert!(BackendKind::parse("dap0").is_err());
+        assert!(BackendKind::parse("dap1").is_err(), "degree-1 DAP is 'single'");
+        assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn unknown_preset_rejected_even_with_model_len() {
+        let p = planner();
+        let r = InferRequest { model_len: Some(512), ..InferRequest::new("r", "nope") };
+        assert!(p.place(&r).is_err());
+    }
+}

@@ -13,10 +13,16 @@
 //!   (Fig 13 / Table V FastFold path), with
 //!   [`crate::dap::DapCoordinator::autochunk_fallback`] planning the
 //!   chunked fallback when a DAP degree alone is not enough.
+//! * [`engine`] — the request-driven serving layer over all of the above:
+//!   cost-model placement with admission control, a deterministic
+//!   FIFO/SJF scheduler, and a `--threads`-bounded drain loop
+//!   (`fastfold serve`).
 
 pub mod autochunk;
 pub mod chunking;
+pub mod engine;
 pub mod single;
 
 pub use autochunk::AutoChunkPlan;
+pub use engine::{Engine, InferRequest};
 pub use single::single_device_forward;

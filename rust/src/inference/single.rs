@@ -28,18 +28,23 @@ pub fn memory_guard(
 }
 
 /// [`single_device_forward`] behind [`memory_guard`]: plans first, refuses
-/// on sim-OOM, then runs and returns the plan alongside the logits.
+/// on sim-OOM, then runs and returns the plan alongside the logits. The
+/// guard budgets against the *caller's* `mem` — a deployment's tuned
+/// [`MemoryModel`] must change the verdict, not be silently swapped for
+/// the default.
+#[allow(clippy::too_many_arguments)] // mirrors the execution contract 1:1
 pub fn single_device_forward_guarded(
     rt: &Runtime,
     preset: &str,
     params: &[HostTensor],
     tokens: &IntTensor,
     naive: bool,
+    mem: &MemoryModel,
     gpu: &GpuSpec,
     headroom: f64,
 ) -> Result<(HostTensor, HostTensor, AutoChunkPlan)> {
     let cfg = ModelConfig::preset(preset)?;
-    let plan = memory_guard(&cfg, &MemoryModel::default(), gpu, headroom)?;
+    let plan = memory_guard(&cfg, mem, gpu, headroom)?;
     let (m, z) = single_device_forward(rt, preset, params, tokens, naive)?;
     Ok((m, z, plan))
 }
@@ -54,19 +59,6 @@ pub fn single_device_forward(
     naive: bool,
 ) -> Result<(HostTensor, HostTensor)> {
     let man = &rt.manifest;
-    let ps = man
-        .params
-        .get(preset)
-        .ok_or_else(|| crate::Error::Manifest(format!("no params for '{preset}'")))?;
-    let pick = |prefix: &str| -> Vec<HostTensor> {
-        ps.leaves
-            .iter()
-            .enumerate()
-            .filter(|(_, l)| l.name.starts_with(prefix))
-            .map(|(i, _)| params[i].clone())
-            .collect()
-    };
-
     let embed = rt.load(&format!("{preset}/embed"))?;
     let block = rt.load(&format!(
         "{preset}/block_fwd{}",
@@ -74,7 +66,11 @@ pub fn single_device_forward(
     ))?;
     let heads = rt.load(&format!("{preset}/heads"))?;
 
-    let mut args: Vec<Value> = pick("embedder/").into_iter().map(Into::into).collect();
+    let mut args: Vec<Value> = man
+        .pick_params(preset, "embedder/", params)?
+        .into_iter()
+        .map(Into::into)
+        .collect();
     args.push(tokens.clone().into());
     let out = embed.run(&args)?;
     let (mut m, mut z) = (out[0].clone(), out[1].clone());
@@ -96,7 +92,11 @@ pub fn single_device_forward(
         z = out[1].clone();
     }
 
-    let mut hargs: Vec<Value> = pick("heads/").into_iter().map(Into::into).collect();
+    let mut hargs: Vec<Value> = man
+        .pick_params(preset, "heads/", params)?
+        .into_iter()
+        .map(Into::into)
+        .collect();
     hargs.push(m.into());
     hargs.push(z.into());
     let out = heads.run(&hargs)?;

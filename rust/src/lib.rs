@@ -17,9 +17,11 @@
 //!   Megatron-style TP baseline ([`tp`]), data-parallel training
 //!   ([`train`]), chunked + distributed inference ([`inference`]) with the
 //!   AutoChunk planner ([`inference::autochunk`]) choosing per-module
-//!   chunk strategies against the memory cost model, and the calibrated
-//!   A100 performance/memory models that regenerate the paper's scaling
-//!   figures ([`perfmodel`]).
+//!   chunk strategies against the memory cost model, the unified serving
+//!   engine ([`inference::engine`]) placing and scheduling whole request
+//!   batches across the single-device/chunked/DAP backends, and the
+//!   calibrated A100 performance/memory models that regenerate the
+//!   paper's scaling figures ([`perfmodel`]).
 //!
 //! Python never runs on the request path: `make artifacts` exports
 //! everything once, then the `fastfold` binary is self-contained. This

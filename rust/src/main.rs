@@ -3,8 +3,10 @@
 //! ```text
 //! fastfold train     [--preset tiny] [--steps N] [--dp N] [--threads N]
 //!                    [--config f.toml]
-//! fastfold infer     [--preset tiny] [--dap N] [--threads N] [--naive]
-//!                    [--gpu a100_40g] [--no-guard] [--config f.toml]
+//! fastfold infer     [--preset tiny] [--len N] [--dap N] [--threads N]
+//!                    [--naive] [--gpu a100_40g] [--no-guard] [--config f.toml]
+//! fastfold serve     --requests reqs.jsonl [--policy fifo|sjf] [--threads N]
+//!                    [--gpu a100_40g] [--max-dap N] [--dry-run] [--config f.toml]
 //! fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu a100_40g]
 //!                    [--headroom F] [--json] [--config f.toml]
 //! fastfold report    <table2|table3|table4|table5|fig10|fig11|fig13|validate>
@@ -15,9 +17,12 @@
 //! table/figure that is model-driven; the executed benches live under
 //! `cargo bench` (see rust/benches/).
 
-use fastfold::config::{ModelConfig, RunConfig, TrainConfig};
+use fastfold::config::{ModelConfig, RunConfig};
 use fastfold::dap::DapCoordinator;
 use fastfold::error::Result;
+use fastfold::inference::engine::{
+    plan_batch, BackendKind, Engine, InferRequest, PlacementPlanner, SchedPolicy,
+};
 use fastfold::inference::{autochunk, chunking};
 use fastfold::metrics::{fmt_secs, Table};
 use fastfold::perfmodel::gpu::ImplProfile;
@@ -63,6 +68,7 @@ fn run(args: &[String]) -> Result<()> {
     match cmd {
         "train" => cmd_train(&pos, &flags),
         "infer" => cmd_infer(&flags),
+        "serve" => cmd_serve(&flags),
         "autochunk" => cmd_autochunk(&flags),
         "report" => cmd_report(&pos, &flags),
         "info" => cmd_info(&flags),
@@ -71,8 +77,10 @@ fn run(args: &[String]) -> Result<()> {
                 "fastfold — FastFold reproduction (see README.md)\n\n\
                  usage:\n  fastfold train  [--preset P] [--steps N] [--dp N] [--threads N] \
                  [--config f.toml]\n  \
-                 fastfold infer  [--preset P] [--dap N] [--threads N] [--naive] [--gpu G] \
-                 [--no-guard] [--config f.toml]\n  \
+                 fastfold infer  [--preset P] [--len N] [--dap N] [--threads N] [--naive] \
+                 [--gpu G] [--no-guard] [--config f.toml]\n  \
+                 fastfold serve  --requests reqs.jsonl [--policy fifo|sjf] [--threads N] \
+                 [--gpu G] [--max-dap N] [--dry-run] [--config f.toml]\n  \
                  fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu G] \
                  [--headroom F] [--json] [--config f.toml]\n  \
                  fastfold report <table2|table3|table4|table5|fig10|fig11|fig13|validate>\n  \
@@ -142,75 +150,186 @@ fn cmd_train(_pos: &[String], flags: &BTreeMap<String, String>) -> Result<()> {
 
 // ---------------------------------------------------------------- infer
 
-fn cmd_infer(flags: &BTreeMap<String, String>) -> Result<()> {
-    // `[autochunk]` config section: enabled/gpu defaults (flags override)
-    let mut run_cfg = match flags.get("config") {
-        Some(path) => RunConfig::from_toml_file(path)?,
-        None => RunConfig::default(),
-    };
-    let preset = flags.get("preset").cloned().unwrap_or_else(|| "tiny".into());
-    let dap: usize = flags.get("dap").and_then(|s| s.parse().ok()).unwrap_or(1);
+/// Fold the shared infer/serve flag overrides into the run config.
+fn apply_engine_flags(
+    run_cfg: &mut RunConfig,
+    flags: &BTreeMap<String, String>,
+) -> Result<()> {
     if let Some(t) = flags.get("threads") {
         run_cfg.parallel.threads = t
             .parse()
             .map_err(|_| fastfold::Error::Config(format!("--threads: invalid value '{t}'")))?;
     }
-    let naive = flags.contains_key("naive");
-    let guard = run_cfg.autochunk.enabled && !flags.contains_key("no-guard");
-    let gpu = GpuSpec::by_name(
-        flags
-            .get("gpu")
-            .map(|s| s.as_str())
-            .unwrap_or(&run_cfg.autochunk.gpu),
-    )?;
-    let rt = Runtime::new(&artifacts_dir(flags))?;
-    let params = rt.manifest.load_params(&preset)?;
-    let model_cfg = ModelConfig::preset(&preset)?;
-    let mut gen = DataGen::new(model_cfg, 7);
-    let batch = gen.next_batch();
-
-    let t0 = std::time::Instant::now();
-    let (msa_logits, dist_logits) = if dap > 1 {
-        let co = DapCoordinator::new(&rt, &preset, dap, !flags.contains_key("no-overlap"))?
-            .with_threads(run_cfg.parallel.resolve_threads());
-        if guard {
-            // memory guard: the planner's chunked fallback must fit this
-            // degree. Advisory only — the executed schedule applies DAP
-            // sharding, not the per-module chunk loops.
-            let plan = co.autochunk_fallback(
-                &MemoryModel::default(),
-                &gpu,
-                run_cfg.autochunk.headroom,
-            )?;
-            println!("[fastfold] memory guard (advisory): {}", plan.summary());
+    if flags.contains_key("no-guard") {
+        run_cfg.autochunk.enabled = false;
+    }
+    if flags.contains_key("no-overlap") {
+        run_cfg.parallel.overlap = false;
+    }
+    if let Some(g) = flags.get("gpu") {
+        run_cfg.autochunk.gpu = g.clone();
+    }
+    if let Some(p) = flags.get("policy") {
+        run_cfg.serve.policy = SchedPolicy::parse(p)?;
+    }
+    if let Some(n) = flags.get("max-dap") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| fastfold::Error::Config(format!("--max-dap: invalid value '{n}'")))?;
+        if n == 0 {
+            return Err(fastfold::Error::Config("--max-dap must be >= 1".into()));
         }
-        let out = co.model_forward(&params, &batch.msa_tokens)?;
-        // measured exposed comm (real clock) next to the α–β prediction
-        println!("[fastfold] overlap: {}", co.overlap_report());
-        out
-    } else if guard {
-        let (m, z, plan) = fastfold::inference::single::single_device_forward_guarded(
-            &rt,
-            &preset,
-            &params,
-            &batch.msa_tokens,
-            naive,
-            &gpu,
-            run_cfg.autochunk.headroom,
-        )?;
-        println!("[fastfold] memory guard (advisory): {}", plan.summary());
-        (m, z)
-    } else {
-        fastfold::inference::single_device_forward(
-            &rt, &preset, &params, &batch.msa_tokens, naive,
-        )?
+        run_cfg.serve.max_dap = n;
+    }
+    Ok(())
+}
+
+/// `fastfold infer` — a one-request special case of the serving engine:
+/// the placement planner picks (or `--dap N` pins) the backend, the
+/// engine executes it, and the legacy advisory/overlap notes print from
+/// the outcome.
+fn cmd_infer(flags: &BTreeMap<String, String>) -> Result<()> {
+    let mut run_cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_toml_file(path)?,
+        None => RunConfig::default(),
     };
+    apply_engine_flags(&mut run_cfg, flags)?;
+    let preset = flags.get("preset").cloned().unwrap_or_else(|| "tiny".into());
+    let dap: usize = num_flag(flags, "dap", 1)?;
+
+    let mut req = InferRequest::new("cli", &preset);
+    req.naive = flags.contains_key("naive");
+    req.model_len = match flags.get("len") {
+        Some(s) => Some(s.parse().map_err(|_| {
+            fastfold::Error::Config(format!("--len: invalid value '{s}'"))
+        })?),
+        None => None,
+    };
+    if dap > 1 {
+        req.force = Some(BackendKind::Dap(dap));
+        // a single-request CLI `--dap N` is an explicit ask, not a fleet
+        // placement — keep the legacy behavior of honoring any degree
+        run_cfg.serve.max_dap = run_cfg.serve.max_dap.max(dap);
+    }
+
+    let rt = Runtime::new(&artifacts_dir(flags))?;
+    let engine = Engine::new(&rt, &run_cfg)?;
+    let report = engine.serve(std::slice::from_ref(&req))?;
+    let outcome = report
+        .outcomes
+        .into_iter()
+        .next()
+        .expect("one request in, one outcome out");
+    if let Some(note) = &outcome.note {
+        println!("[fastfold] {note}");
+    }
+    let backend = outcome
+        .placement
+        .as_ref()
+        .map(|p| p.backend.name())
+        .unwrap_or_else(|| "-".into());
+    let (msa_logits, dist_logits) = outcome.output?;
     println!(
-        "[fastfold] inference preset='{preset}' dap={dap} naive={naive}: \
+        "[fastfold] inference preset='{preset}' backend={backend} naive={}: \
          msa_logits {:?}, dist_logits {:?} in {}",
+        req.naive,
         msa_logits.shape,
         dist_logits.shape,
-        fmt_secs(t0.elapsed().as_secs_f64())
+        fmt_secs(outcome.wall_seconds)
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------- serve
+
+/// `fastfold serve --requests <jsonl>` — drain a request batch through
+/// the engine: cost-model placement per request, FIFO/SJF scheduling,
+/// `--threads`-bounded concurrent execution, per-request + aggregate
+/// metrics. `--dry-run` plans and schedules without artifacts.
+fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
+    let mut run_cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_toml_file(path)?,
+        None => RunConfig::default(),
+    };
+    apply_engine_flags(&mut run_cfg, flags)?;
+    let path = flags.get("requests").ok_or_else(|| {
+        fastfold::Error::Config("serve: --requests <file.jsonl> is required".into())
+    })?;
+    let src = std::fs::read_to_string(path).map_err(|e| {
+        fastfold::Error::Config(format!("serve: cannot read requests file '{path}': {e}"))
+    })?;
+    let requests = InferRequest::parse_jsonl(&src)?;
+    if requests.is_empty() {
+        return Err(fastfold::Error::Config(format!(
+            "serve: no requests in '{path}'"
+        )));
+    }
+
+    if flags.contains_key("dry-run") {
+        return serve_dry_run(&run_cfg, &requests);
+    }
+
+    let rt = Runtime::new(&artifacts_dir(flags))?;
+    let engine = Engine::new(&rt, &run_cfg)?;
+    println!(
+        "[fastfold] serving {} requests (policy={}, threads={}, gpu={}, max_dap={})\n",
+        requests.len(),
+        engine.policy.name(),
+        engine.threads,
+        engine.planner.gpu.name,
+        engine.planner.max_dap,
+    );
+    let report = engine.serve(&requests)?;
+    report.table().print();
+    println!();
+    for o in &report.outcomes {
+        match (&o.output, &o.note) {
+            (Err(e), _) => println!("  {}: {e}", o.id),
+            (Ok(_), Some(n)) => println!("  {}: {n}", o.id),
+            _ => {}
+        }
+    }
+    println!("\n[fastfold] {}", report.summary());
+    Ok(())
+}
+
+/// Placement + schedule preview (no artifacts, no execution): what the
+/// engine *would* do with the batch — backend per request, schedule
+/// order, modeled makespan, aggregate modeled PFLOP/s. Runs the same
+/// `plan_batch` pipeline as `Engine::serve`, so the preview cannot drift
+/// from the executed schedule.
+fn serve_dry_run(run_cfg: &RunConfig, requests: &[InferRequest]) -> Result<()> {
+    let planner = PlacementPlanner::from_run_config(run_cfg)?;
+    let threads = run_cfg.parallel.resolve_threads();
+    println!(
+        "[fastfold] serve dry-run: {} requests (policy={}, lanes={}, gpu={}, max_dap={})\n",
+        requests.len(),
+        run_cfg.serve.policy.name(),
+        threads,
+        planner.gpu.name,
+        planner.max_dap,
+    );
+    let plan = plan_batch(
+        &planner,
+        run_cfg.serve.policy,
+        run_cfg.serve.max_bypass,
+        threads,
+        requests,
+    );
+    let stats = plan.stats(requests);
+    plan.table(requests).print();
+    for line in plan.rejections(requests) {
+        println!("  {line}");
+    }
+
+    let ids: Vec<&str> = plan.order.iter().map(|&i| requests[i].id.as_str()).collect();
+    println!("\nschedule ({}): {}", run_cfg.serve.policy.name(), ids.join(" -> "));
+    println!(
+        "modeled makespan {} on {} lanes -> aggregate {:.2} PFLOP/s (modeled); backends: {}",
+        fmt_secs(plan.modeled_makespan),
+        threads,
+        stats.aggregate_pflops(plan.modeled_makespan),
+        stats.backend_mix(),
     );
     Ok(())
 }

@@ -211,27 +211,114 @@ impl Manifest {
             .collect()
     }
 
-    /// Names of the parameter leaves belonging to block `i` of a preset,
-    /// in canonical order (prefix `blocks/<i>/`).
-    pub fn block_leaf_indices(&self, preset: &str, block: usize) -> Result<Vec<usize>> {
+    /// Indices of the parameter leaves of `preset` whose names start with
+    /// `prefix`, in canonical flatten order — the one prefix-filtered
+    /// selection every execution path shares (embed/heads/block picks).
+    pub fn leaf_indices_with_prefix(&self, preset: &str, prefix: &str) -> Result<Vec<usize>> {
         let ps = self
             .params
             .get(preset)
             .ok_or_else(|| Error::Manifest(format!("no params for '{preset}'")))?;
-        let prefix = format!("blocks/{block}/");
-        let idx: Vec<usize> = ps
+        Ok(ps
             .leaves
             .iter()
             .enumerate()
-            .filter(|(_, l)| l.name.starts_with(&prefix))
+            .filter(|(_, l)| l.name.starts_with(prefix))
             .map(|(i, _)| i)
-            .collect();
+            .collect())
+    }
+
+    /// The subset of `params` (the full canonical leaf list of `preset`)
+    /// whose leaf names start with `prefix`, cloned in canonical order.
+    /// This replaces the hand-rolled `pick` closures the single-device and
+    /// DAP inference paths used to duplicate.
+    pub fn pick_params(
+        &self,
+        preset: &str,
+        prefix: &str,
+        params: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        self.leaf_indices_with_prefix(preset, prefix)?
+            .into_iter()
+            .map(|i| {
+                params.get(i).cloned().ok_or_else(|| {
+                    Error::Manifest(format!(
+                        "param list has {} leaves, canonical leaf index {i} \
+                         out of range for '{preset}'",
+                        params.len()
+                    ))
+                })
+            })
+            .collect()
+    }
+
+    /// Names of the parameter leaves belonging to block `i` of a preset,
+    /// in canonical order (prefix `blocks/<i>/`).
+    pub fn block_leaf_indices(&self, preset: &str, block: usize) -> Result<Vec<usize>> {
+        let idx = self.leaf_indices_with_prefix(preset, &format!("blocks/{block}/"))?;
         if idx.is_empty() {
             return Err(Error::Manifest(format!(
                 "no leaves for block {block} of '{preset}'"
             )));
         }
         Ok(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_with_leaves(names: &[&str]) -> Manifest {
+        let leaves: Vec<ParamLeaf> = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| ParamLeaf { name: n.to_string(), shape: vec![1], offset: i })
+            .collect();
+        let mut params = BTreeMap::new();
+        params.insert(
+            "tiny".to_string(),
+            ParamSet {
+                file: "params.bin".into(),
+                total: leaves.len(),
+                count: leaves.len(),
+                leaves,
+            },
+        );
+        Manifest {
+            dir: PathBuf::from("."),
+            artifacts: BTreeMap::new(),
+            params,
+            schedule: Vec::new(),
+            configs: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn prefix_indices_preserve_canonical_order() {
+        let m = manifest_with_leaves(&[
+            "embedder/a", "blocks/0/x", "heads/y", "blocks/0/z", "blocks/1/w",
+        ]);
+        assert_eq!(m.leaf_indices_with_prefix("tiny", "embedder/").unwrap(), vec![0]);
+        assert_eq!(m.leaf_indices_with_prefix("tiny", "blocks/0/").unwrap(), vec![1, 3]);
+        assert_eq!(m.leaf_indices_with_prefix("tiny", "heads/").unwrap(), vec![2]);
+        assert_eq!(m.block_leaf_indices("tiny", 1).unwrap(), vec![4]);
+        assert!(m.leaf_indices_with_prefix("nope", "x").is_err());
+        assert!(m.block_leaf_indices("tiny", 7).is_err());
+    }
+
+    #[test]
+    fn pick_params_clones_prefix_subset() {
+        let m = manifest_with_leaves(&["embedder/a", "blocks/0/x", "heads/y"]);
+        let params: Vec<HostTensor> = (0..3)
+            .map(|i| HostTensor::full(&[1], i as f32))
+            .collect();
+        let picked = m.pick_params("tiny", "heads/", &params).unwrap();
+        assert_eq!(picked.len(), 1);
+        assert_eq!(picked[0].data, vec![2.0]);
+        // a short param list (caller passed the wrong leaf vector) errors
+        // instead of silently truncating the pick
+        assert!(m.pick_params("tiny", "heads/", &params[..2]).is_err());
     }
 }
 

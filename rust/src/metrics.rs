@@ -1,7 +1,9 @@
 //! Metrics & reporting: wall timers, throughput/FLOPs accounting,
-//! parallel-efficiency math, and simple aligned-table printing shared by
-//! the CLI `report` subcommands and the bench harnesses.
+//! parallel-efficiency math, per-request serving ledgers
+//! ([`ServeStats`]), and simple aligned-table printing shared by the CLI
+//! `report`/`serve` subcommands and the bench harnesses.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Measure a closure's wall time over `iters` runs after `warmup` runs;
@@ -94,6 +96,91 @@ impl Table {
     }
 }
 
+/// One served request's ledger entry — what the inference engine records
+/// per drained request (plain data so this module stays a leaf).
+#[derive(Clone, Debug)]
+pub struct ServeRecord {
+    /// Request id.
+    pub id: String,
+    /// Backend the placement chose (`single`, `chunked`, `dap<N>`,
+    /// `rejected`).
+    pub backend: String,
+    /// Modeled end-to-end latency (seconds, paper scale).
+    pub modeled_latency: f64,
+    /// Modeled FLOPs for the whole request.
+    pub modeled_flops: f64,
+    /// Measured wall seconds of the execution.
+    pub wall_seconds: f64,
+    /// Whether the request produced output.
+    pub ok: bool,
+}
+
+/// Aggregate serving metrics over a drained request batch.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Per-request records in submission order.
+    pub records: Vec<ServeRecord>,
+}
+
+impl ServeStats {
+    /// Append one request's record.
+    pub fn push(&mut self, r: ServeRecord) {
+        self.records.push(r);
+    }
+
+    /// Requests that produced output.
+    pub fn completed(&self) -> usize {
+        self.records.iter().filter(|r| r.ok).count()
+    }
+
+    /// Total modeled FLOPs across admitted requests (rejected records
+    /// carry 0).
+    pub fn total_modeled_flops(&self) -> f64 {
+        self.records.iter().map(|r| r.modeled_flops).sum()
+    }
+
+    /// Aggregate modeled throughput: total modeled FLOPs over a modeled
+    /// makespan — the paper's "6.02 PetaFLOP/s aggregate" framing.
+    pub fn aggregate_pflops(&self, makespan_seconds: f64) -> f64 {
+        if makespan_seconds > 0.0 {
+            self.total_modeled_flops() / makespan_seconds / 1e15
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean measured wall seconds over completed requests.
+    pub fn mean_wall_seconds(&self) -> f64 {
+        let done: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.ok)
+            .map(|r| r.wall_seconds)
+            .collect();
+        if done.is_empty() {
+            0.0
+        } else {
+            done.iter().sum::<f64>() / done.len() as f64
+        }
+    }
+
+    /// Backend mix, e.g. `chunked x2 dap8 x1 single x3`.
+    pub fn backend_mix(&self) -> String {
+        let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+        for r in &self.records {
+            *counts.entry(r.backend.as_str()).or_default() += 1;
+        }
+        if counts.is_empty() {
+            return "none".into();
+        }
+        counts
+            .iter()
+            .map(|(b, c)| format!("{b} x{c}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
 /// Human duration.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {
@@ -136,6 +223,31 @@ mod tests {
         assert!(fmt_secs(30.0).contains("s"));
         assert!(fmt_secs(3600.0).contains("min"));
         assert!(fmt_secs(86400.0 * 3.0).contains("days"));
+    }
+
+    #[test]
+    fn serve_stats_aggregate() {
+        let mut s = ServeStats::default();
+        let rec = |id: &str, backend: &str, flops: f64, ok: bool| ServeRecord {
+            id: id.into(),
+            backend: backend.into(),
+            modeled_latency: 1.0,
+            modeled_flops: flops,
+            wall_seconds: 0.5,
+            ok,
+        };
+        s.push(rec("a", "single", 2e15, true));
+        s.push(rec("b", "dap4", 6e15, true));
+        s.push(rec("c", "rejected", 0.0, false));
+        assert_eq!(s.completed(), 2);
+        assert!((s.total_modeled_flops() - 8e15).abs() < 1.0);
+        // 8e15 FLOPs over a 4 s modeled makespan = 2 PFLOP/s aggregate
+        assert!((s.aggregate_pflops(4.0) - 2.0).abs() < 1e-9);
+        assert_eq!(s.aggregate_pflops(0.0), 0.0);
+        assert!((s.mean_wall_seconds() - 0.5).abs() < 1e-12);
+        let mix = s.backend_mix();
+        assert!(mix.contains("single x1") && mix.contains("dap4 x1"), "{mix}");
+        assert_eq!(ServeStats::default().backend_mix(), "none");
     }
 
     #[test]

@@ -38,9 +38,7 @@ impl DataGen {
 
         let ancestor: Vec<i32> = (0..r).map(|_| rng.below(aa) as i32).collect();
         let mut msa = vec![0i32; s * r];
-        for i in 0..r {
-            msa[i] = ancestor[i]; // row 0 = target
-        }
+        msa[..r].copy_from_slice(&ancestor); // row 0 = target
         for row in 1..s {
             for i in 0..r {
                 msa[row * r + i] = if rng.bernoulli(self.mutation_rate) {

@@ -107,13 +107,57 @@ fn guarded_single_device_forward() {
     let mut gen = DataGen::new(ModelConfig::tiny(), 23);
     let batch = gen.next_batch();
     let (m, z, plan) = fastfold::inference::single::single_device_forward_guarded(
-        &rt, "tiny", &params, &batch.msa_tokens, false, &gpu,
+        &rt, "tiny", &params, &batch.msa_tokens, false, &mem, &gpu,
         autochunk::CHUNK_HEADROOM,
     )
     .unwrap();
     assert!(plan.fits());
     assert!(m.data.iter().all(|x| x.is_finite()));
     assert!(z.data.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn guarded_forward_respects_tuned_memory_model() {
+    // Regression: the guard used to hardcode `MemoryModel::default()`,
+    // silently ignoring the caller's tuned model. A model whose fixed
+    // overhead alone exceeds device capacity must make the guard refuse
+    // *before* touching params or artifacts — so this runs without the
+    // artifact tree, against a minimal manifest.
+    let dir = std::env::temp_dir().join(format!(
+        "fastfold_guard_regression_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"artifacts":{},"params":{},"dap_schedule":[],"configs":{}}"#,
+    )
+    .unwrap();
+    let rt = Runtime::new(dir.to_str().unwrap()).unwrap();
+
+    let tuned = MemoryModel { fixed_overhead: 1e18, ..MemoryModel::default() };
+    let gpu = GpuSpec::a100_40g();
+    let tokens = fastfold::IntTensor::new(vec![8, 16], vec![0; 128]).unwrap();
+    let err = fastfold::inference::single::single_device_forward_guarded(
+        &rt, "tiny", &[], &tokens, false, &tuned, &gpu, autochunk::CHUNK_HEADROOM,
+    )
+    .unwrap_err();
+    assert!(
+        matches!(err, fastfold::Error::SimOom { .. }),
+        "tuned memory model must drive the verdict, got: {err}"
+    );
+    // sanity: the same call under the default model passes the guard and
+    // only then fails on the (intentionally empty) param manifest
+    let err = fastfold::inference::single::single_device_forward_guarded(
+        &rt, "tiny", &[], &tokens, false, &MemoryModel::default(), &gpu,
+        autochunk::CHUNK_HEADROOM,
+    )
+    .unwrap_err();
+    assert!(
+        matches!(err, fastfold::Error::Manifest(_)),
+        "default model should pass the guard, got: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

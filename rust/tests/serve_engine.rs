@@ -1,0 +1,369 @@
+//! Serving-engine suite.
+//!
+//! Artifact-free half: a pure-host [`BackendFactory`] fake stands in for
+//! PJRT (same seam idea as the threaded-executor suite), so placement,
+//! admission control, scheduling determinism, and the threaded drain loop
+//! are exercised in plain `cargo test`. The core property: the same
+//! request set produces the same backend choices, the same schedule, and
+//! bit-for-bit the same outputs at any `--threads` budget.
+//!
+//! Artifact-gated half: with `artifacts/` present, every engine backend's
+//! output is bit-for-bit identical to the corresponding legacy
+//! single-path invocation (`single_device_forward`, the DAP coordinator).
+
+use fastfold::config::{ModelConfig, RunConfig};
+use fastfold::dap::DapCoordinator;
+use fastfold::inference::engine::{
+    BackendFactory, BackendKind, Engine, InferBackend, InferOutput, InferRequest, Placement,
+    SchedPolicy,
+};
+use fastfold::inference::single_device_forward;
+use fastfold::runtime::Runtime;
+use fastfold::train::DataGen;
+use fastfold::{Error, HostTensor, IntTensor, Result};
+
+// ---------------------------------------------------------------- helpers
+
+/// A Runtime over a minimal (artifact-free) manifest: enough for the
+/// engine's planning/scheduling machinery, which never executes HLO.
+fn stub_runtime(tag: &str) -> (Runtime, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(format!(
+        "fastfold_serve_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"artifacts":{},"params":{},"dap_schedule":[],"configs":{}}"#,
+    )
+    .unwrap();
+    let rt = Runtime::new(dir.to_str().unwrap()).unwrap();
+    (rt, dir)
+}
+
+/// Real-artifact runtime, or None (test self-skips like the other
+/// integration suites).
+fn artifact_runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+/// Deterministic pure-host backend: output derives only from the request
+/// identity, the chosen backend, and the token stream — never from
+/// thread timing.
+struct FakeBackend {
+    name: String,
+    seed: u64,
+    priority: u32,
+}
+
+impl InferBackend for FakeBackend {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn infer(&self, tokens: &IntTensor) -> Result<InferOutput> {
+        let a = self.seed as f32;
+        let b: f32 = tokens.data.iter().map(|&t| t as f32).sum();
+        let c = self.name.bytes().map(|x| x as u32).sum::<u32>() as f32;
+        let m = HostTensor::new(vec![2, 2], vec![a, b, c, self.priority as f32])?;
+        let z = HostTensor::new(vec![2], vec![a + b, c * 0.5])?;
+        Ok(InferOutput {
+            msa_logits: m,
+            dist_logits: z,
+            note: Some(format!("fake:{}", self.name)),
+        })
+    }
+}
+
+struct FakeFactory;
+
+impl BackendFactory for FakeFactory {
+    fn make<'a>(
+        &'a self,
+        req: &InferRequest,
+        placement: &Placement,
+        _rank_threads: usize,
+    ) -> Result<Box<dyn InferBackend + 'a>> {
+        Ok(Box::new(FakeBackend {
+            name: placement.backend.name(),
+            seed: req.seed,
+            priority: req.priority,
+        }))
+    }
+}
+
+/// The mixed batch every determinism test drains: short, long/chunked,
+/// DAP-worthy, and one inadmissible request.
+fn mixed_batch() -> Vec<InferRequest> {
+    let with_len = |id: &str, len: Option<usize>, seed: u64| {
+        let mut r = InferRequest::new(id, "tiny");
+        r.model_len = len;
+        r.seed = seed;
+        r
+    };
+    vec![
+        with_len("preset-short", None, 3),
+        with_len("short-512", Some(512), 5),
+        with_len("long-2048", Some(2048), 7),
+        with_len("dist-4096", Some(4096), 11),
+        with_len("dist-3072", Some(3072), 13),
+        with_len("too-big-8192", Some(8192), 17),
+    ]
+}
+
+fn engine_with(rt: &Runtime, policy: SchedPolicy, threads: usize) -> Engine<'_> {
+    let cfg = RunConfig {
+        serve: fastfold::config::ServeConfig { policy, ..Default::default() },
+        parallel: fastfold::config::ParallelConfig { threads, ..Default::default() },
+        ..Default::default()
+    };
+    Engine::new(rt, &cfg).expect("engine")
+}
+
+// ------------------------------------------------------- artifact-free
+
+#[test]
+fn placement_covers_all_backends_and_rejects() {
+    let (rt, dir) = stub_runtime("placement");
+    let engine = engine_with(&rt, SchedPolicy::Fifo, 1);
+    let reqs = mixed_batch();
+    let report = engine.serve_with(&reqs, &FakeFactory).unwrap();
+
+    let backend = |i: usize| {
+        report.outcomes[i]
+            .placement
+            .as_ref()
+            .map(|p: &Placement| p.backend.clone())
+    };
+    assert_eq!(backend(0), Some(BackendKind::SingleDevice));
+    assert_eq!(backend(1), Some(BackendKind::SingleDevice));
+    assert_eq!(backend(2), Some(BackendKind::Chunked));
+    assert_eq!(backend(3), Some(BackendKind::Dap(8)));
+    assert!(matches!(backend(4), Some(BackendKind::Dap(n)) if n <= 8));
+    // admission control: the 8192-residue request is rejected with the
+    // sim-OOM verdict, not executed
+    assert!(backend(5).is_none());
+    assert!(matches!(
+        report.outcomes[5].output,
+        Err(Error::SimOom { .. })
+    ));
+    assert_eq!(report.completed(), 5);
+    assert_eq!(report.order.len(), 5);
+
+    // metrics: every admitted request contributes modeled flops; the
+    // aggregate throughput figure is finite and positive
+    assert!(report.stats.total_modeled_flops() > 0.0);
+    assert!(report.aggregate_pflops() > 0.0);
+    let mix = report.stats.backend_mix();
+    assert!(
+        mix.contains("single x2") && mix.contains("chunked x1") && mix.contains("rejected x1"),
+        "{mix}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn same_batch_same_outputs_regardless_of_threads() {
+    // satellite acceptance: same request set ⇒ same backend choices and
+    // bit-for-bit same outputs at any --threads, under both policies
+    let (rt, dir) = stub_runtime("determinism");
+    let reqs = mixed_batch();
+    for policy in [SchedPolicy::Fifo, SchedPolicy::Sjf] {
+        let reference = engine_with(&rt, policy, 1)
+            .serve_with(&reqs, &FakeFactory)
+            .unwrap();
+        for threads in [2usize, 4, 8] {
+            let run = engine_with(&rt, policy, threads)
+                .serve_with(&reqs, &FakeFactory)
+                .unwrap();
+            assert_eq!(run.order, reference.order, "schedule @ threads={threads}");
+            for (a, b) in run.outcomes.iter().zip(reference.outcomes.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(
+                    a.placement.as_ref().map(|p| p.backend.clone()),
+                    b.placement.as_ref().map(|p| p.backend.clone()),
+                    "backend for '{}' @ threads={threads}",
+                    a.id
+                );
+                match (&a.output, &b.output) {
+                    (Ok((am, az)), Ok((bm, bz))) => {
+                        // bit-for-bit: exact data equality, not tolerance
+                        assert_eq!(am.data, bm.data, "'{}' @ threads={threads}", a.id);
+                        assert_eq!(az.data, bz.data, "'{}' @ threads={threads}", a.id);
+                    }
+                    (Err(ae), Err(be)) => assert_eq!(ae.to_string(), be.to_string()),
+                    _ => panic!("disposition of '{}' changed with threads", a.id),
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sjf_schedules_short_jobs_first_fifo_preserves_arrival() {
+    let (rt, dir) = stub_runtime("policies");
+    let reqs = mixed_batch();
+    let fifo = engine_with(&rt, SchedPolicy::Fifo, 2)
+        .serve_with(&reqs, &FakeFactory)
+        .unwrap();
+    // FIFO: admitted requests run in submission order
+    assert_eq!(fifo.order, vec![0, 1, 2, 3, 4]);
+
+    let sjf = engine_with(&rt, SchedPolicy::Sjf, 2)
+        .serve_with(&reqs, &FakeFactory)
+        .unwrap();
+    // SJF: the preset-shaped request (tiny = 16 residues) is the cheapest
+    // and runs first
+    assert_eq!(sjf.order.first(), Some(&0));
+    let lat = |i: usize| {
+        sjf.outcomes[i]
+            .placement
+            .as_ref()
+            .map(|p| p.modeled_latency)
+            .unwrap_or(0.0)
+    };
+    let pos =
+        |i: usize| sjf.order.iter().position(|&k| k == i).expect("scheduled");
+    for &a in &sjf.order {
+        for &b in &sjf.order {
+            if lat(a) < lat(b) {
+                // shorter job runs earlier unless the starvation guard
+                // promoted an older long job past it
+                assert!(
+                    pos(a) < pos(b) || b < a,
+                    "sjf order violated: {} vs {}",
+                    sjf.outcomes[a].id,
+                    sjf.outcomes[b].id
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn priorities_override_latency_within_policy() {
+    let (rt, dir) = stub_runtime("priority");
+    let mut reqs = mixed_batch();
+    reqs.truncate(4); // preset-short, short-512, long-2048, dist-4096
+    reqs[3].priority = 0;
+    for r in reqs.iter_mut().take(3) {
+        r.priority = 1; // demote everything except the DAP job
+    }
+    let report = engine_with(&rt, SchedPolicy::Sjf, 1)
+        .serve_with(&reqs, &FakeFactory)
+        .unwrap();
+    // the urgent long job runs first despite SJF
+    assert_eq!(report.order.first(), Some(&3));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn engine_drain_survives_backend_failure() {
+    // a factory that refuses DAP placements: the failed request reports
+    // its error, everything else completes
+    struct FlakyFactory;
+    impl BackendFactory for FlakyFactory {
+        fn make<'a>(
+            &'a self,
+            req: &InferRequest,
+            placement: &Placement,
+            rank_threads: usize,
+        ) -> Result<Box<dyn InferBackend + 'a>> {
+            if matches!(placement.backend, BackendKind::Dap(_)) {
+                return Err(Error::msg("no DAP workers available"));
+            }
+            FakeFactory.make(req, placement, rank_threads)
+        }
+    }
+    let (rt, dir) = stub_runtime("flaky");
+    let reqs = mixed_batch();
+    let report = engine_with(&rt, SchedPolicy::Fifo, 4)
+        .serve_with(&reqs, &FlakyFactory)
+        .unwrap();
+    assert_eq!(report.completed(), 3); // two DAP jobs fail, one rejected
+    for o in &report.outcomes {
+        let is_dap = o
+            .placement
+            .as_ref()
+            .map(|p| matches!(p.backend, BackendKind::Dap(_)))
+            .unwrap_or(false);
+        if is_dap {
+            let e = o.output.as_ref().unwrap_err();
+            assert!(e.to_string().contains("no DAP workers"), "{e}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------------- artifact-gated
+
+#[test]
+fn engine_outputs_match_legacy_paths_bit_for_bit() {
+    let Some(rt) = artifact_runtime() else { return };
+    let engine = engine_with(&rt, SchedPolicy::Fifo, 1);
+    let mut dap2 = InferRequest::new("dap2", "tiny");
+    dap2.force = Some(BackendKind::Dap(2));
+    let mut chunked = InferRequest::new("chunked", "tiny");
+    chunked.force = Some(BackendKind::Chunked);
+    let mut naive = InferRequest::new("naive", "tiny");
+    naive.naive = true;
+    let reqs = vec![InferRequest::new("single", "tiny"), dap2, chunked, naive];
+    let report = engine.serve(&reqs).unwrap();
+
+    // legacy invocations, same seed-7 input stream the engine generates
+    let params = rt.manifest.load_params("tiny").unwrap();
+    let batch = || DataGen::new(ModelConfig::tiny(), 7).next_batch();
+    let (m_ref, z_ref) =
+        single_device_forward(&rt, "tiny", &params, &batch().msa_tokens, false).unwrap();
+    let (m_nv, z_nv) =
+        single_device_forward(&rt, "tiny", &params, &batch().msa_tokens, true).unwrap();
+
+    let out = |i: usize| report.outcomes[i].output.as_ref().expect("completed");
+    assert_eq!(out(0).0.data, m_ref.data, "single m");
+    assert_eq!(out(0).1.data, z_ref.data, "single z");
+    // chunked is a memory schedule, not a numeric change
+    assert_eq!(out(2).0.data, m_ref.data, "chunked m");
+    assert_eq!(out(2).1.data, z_ref.data, "chunked z");
+    assert_eq!(out(3).0.data, m_nv.data, "naive m");
+    assert_eq!(out(3).1.data, z_nv.data, "naive z");
+    // DAP artifacts may not be exported for every degree; when the legacy
+    // path runs, the engine must match it bit-for-bit
+    if let Ok(co) = DapCoordinator::new(&rt, "tiny", 2, true) {
+        let (m_dap, z_dap) = co.model_forward(&params, &batch().msa_tokens).unwrap();
+        assert_eq!(out(1).0.data, m_dap.data, "dap m");
+        assert_eq!(out(1).1.data, z_dap.data, "dap z");
+    } else {
+        assert!(report.outcomes[1].output.is_err());
+    }
+}
+
+#[test]
+fn executed_drain_is_thread_invariant() {
+    let Some(rt) = artifact_runtime() else { return };
+    let mut dap2 = InferRequest::new("dap2", "tiny");
+    dap2.force = Some(BackendKind::Dap(2));
+    let reqs = vec![
+        InferRequest::new("a", "tiny"),
+        dap2,
+        InferRequest::new("b", "tiny"),
+    ];
+    let r1 = engine_with(&rt, SchedPolicy::Sjf, 1).serve(&reqs).unwrap();
+    let r4 = engine_with(&rt, SchedPolicy::Sjf, 4).serve(&reqs).unwrap();
+    assert_eq!(r1.order, r4.order);
+    for (a, b) in r1.outcomes.iter().zip(r4.outcomes.iter()) {
+        match (&a.output, &b.output) {
+            (Ok((am, az)), Ok((bm, bz))) => {
+                assert_eq!(am.data, bm.data, "'{}'", a.id);
+                assert_eq!(az.data, bz.data, "'{}'", a.id);
+            }
+            (Err(ae), Err(be)) => assert_eq!(ae.to_string(), be.to_string()),
+            _ => panic!("disposition of '{}' changed with threads", a.id),
+        }
+    }
+}

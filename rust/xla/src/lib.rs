@@ -187,7 +187,7 @@ impl BorrowLiteral for Literal {
     }
 }
 
-impl<'a> BorrowLiteral for &'a Literal {
+impl BorrowLiteral for &Literal {
     fn borrow_literal(&self) -> &Literal {
         self
     }
