@@ -1,19 +1,19 @@
 //! End-to-end training driver (DESIGN.md §7): train the mini-AlphaFold on
-//! synthetic co-evolution data with data parallelism and log the loss
-//! curve. This is the run recorded in EXPERIMENTS.md.
+//! synthetic co-evolution data under a hybrid DP×DAP plan and log the
+//! loss curve. This is the run recorded in EXPERIMENTS.md.
 //!
 //! ```sh
-//! cargo run --release --example train_e2e -- [preset] [steps] [dp]
-//! # defaults: small 300 2
+//! cargo run --release --example train_e2e -- [preset] [steps] [dp] [dap] [accum]
+//! # defaults: small 300 2 1 1
 //! ```
 //!
 //! Writes the loss curve to train_e2e_loss.csv.
 
 use fastfold::config::TrainConfig;
-use fastfold::metrics::fmt_secs;
+use fastfold::metrics::{fmt_bytes, fmt_secs};
 use fastfold::perfmodel::flops::train_step_flops;
 use fastfold::runtime::Runtime;
-use fastfold::train::Trainer;
+use fastfold::train::{ParallelPlan, Trainer};
 use std::io::Write;
 
 fn main() -> fastfold::Result<()> {
@@ -21,10 +21,15 @@ fn main() -> fastfold::Result<()> {
     let preset = args.first().map(|s| s.as_str()).unwrap_or("small").to_string();
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
     let dp: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let dap: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(1);
+    let accum: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
 
     let rt = Runtime::new("artifacts")?;
-    println!("[train_e2e] preset='{preset}' steps={steps} dp={dp} platform={}",
-             rt.platform());
+    let plan = ParallelPlan::new(dp, dap, accum).with_threads(0);
+    println!(
+        "[train_e2e] preset='{preset}' steps={steps} [{plan}] platform={}",
+        rt.platform()
+    );
     let cfg = TrainConfig {
         steps,
         lr: 1e-3,
@@ -33,9 +38,9 @@ fn main() -> fastfold::Result<()> {
         checkpoint_every: 100,
         checkpoint_dir: Some("checkpoints".into()),
         seed: 42,
-        grad_clip: Some(1.0),
+        ..TrainConfig::default()
     };
-    let mut trainer = Trainer::new(&rt, &preset, dp, cfg)?;
+    let mut trainer = Trainer::hybrid(&rt, &preset, plan, true, cfg)?;
     let report = trainer.run()?;
 
     // loss curve
@@ -46,15 +51,15 @@ fn main() -> fastfold::Result<()> {
     }
 
     let model_cfg = fastfold::config::ModelConfig::preset(&preset)?;
-    let flops = train_step_flops(&model_cfg, 1.0) * dp as f64;
+    let flops = train_step_flops(&model_cfg, 1.0) * plan.effective_batch() as f64;
     println!("\n[train_e2e] summary");
     println!("  loss: {:.4} -> {:.4} over {} steps", report.initial_loss,
              report.final_loss, report.steps);
     println!("  wall: {} ({:.3} steps/s, {:.1} MFLOP/s effective)",
              fmt_secs(report.seconds), report.steps_per_sec,
              report.steps_per_sec * flops / 1e6);
-    println!("  DP ring-allreduce wire: {} KiB/rank total",
-             report.wire_bytes / 1024);
+    println!("  wire: DP ring {} / DAP collectives {}",
+             fmt_bytes(report.wire_bytes), fmt_bytes(report.wire_dap_bytes));
     println!("  loss curve -> train_e2e_loss.csv; checkpoints -> checkpoints/");
     if report.final_loss >= report.initial_loss {
         eprintln!("WARNING: loss did not decrease");

@@ -10,6 +10,8 @@ Exported artifact families (→ DESIGN.md §5):
   model_fwd / embed / heads / block_fwd     single-device inference pieces
   grad_step / adam_update / train_step      training (DP splits grad+adam
                                             around the host all-reduce)
+  loss_head_grad / embed_bwd                hybrid DP×DAP trunk-boundary
+                                            VJPs (heads+loss and embedder)
   dap{N}/<segment>[, _bwd]                  DAP coordinator executables
   fig8_* / fig9_*                           kernel microbench pairs
 All artifact input/output names+shapes+dtypes, the canonical parameter
@@ -235,6 +237,30 @@ def export_core(ex: Exporter, cfg, train=True):
         ex.export(f"{name}/train_step", train_step,
                   (pspec, _f32_like(pspec), _f32_like(pspec), scalar,
                    scalar, bspec))
+
+        # hybrid DP×DAP training boundary VJPs: the rust trainer runs the
+        # trunk through the DAP coordinator + tape; these close the loop
+        # at the trunk edges — (heads + losses) w.r.t. (head params, m, z)
+        # and the embedder w.r.t. its params given (d_m, d_z). The loss
+        # itself is model.trunk_losses, shared with loss_fn/grad_step.
+        def loss_head_grad(hp, m, z, b):
+            loss, pull = jax.vjp(
+                lambda hp_, m_, z_: model.loss_from_heads(hp_, m_, z_, b),
+                hp, m, z)
+            dhp, dm, dz = pull(jnp.ones((), jnp.float32))
+            return loss, dhp, dm, dz
+
+        ex.export(f"{name}/loss_head_grad", loss_head_grad,
+                  (pspec["heads"], m_spec, z_spec, bspec))
+
+        def embed_bwd(ep, t, dm, dz):
+            _, pull = jax.vjp(
+                lambda ep_: model.embedder(ep_, cfg, t), ep)
+            (dep,) = pull((dm, dz))
+            return dep
+
+        ex.export(f"{name}/embed_bwd", embed_bwd,
+                  (pspec["embedder"], tok, m_spec, z_spec))
 
     # initial params binary (canonical jax tree_flatten order)
     params = model.init_params(jax.random.PRNGKey(42), cfg)

@@ -234,19 +234,35 @@ def _xent(logits, labels, mask):
     return -jnp.sum(ll * mask) / (jnp.sum(mask) + 1e-8)
 
 
-def loss_fn(params, cfg: ModelConfig, batch, use_kernels=True):
-    """BERT-style masked-MSA loss + distogram loss (the trunk losses the
-    paper's training pipeline optimizes; structure-module FAPE is out of
-    the Evoformer scope this paper targets)."""
-    msa_logits, dist_logits = forward(
-        params, cfg, batch["msa_tokens"], use_kernels
-    )
+def trunk_losses(msa_logits, dist_logits, batch):
+    """BERT-style masked-MSA loss + 0.3-weighted distogram loss — the ONE
+    definition of the training objective, shared by ``loss_fn`` (the
+    monolithic grad_step export) and ``loss_from_heads`` (the hybrid
+    trainer's heads/loss VJP export) so the two paths cannot diverge."""
     msa_loss = _xent(msa_logits, batch["msa_labels"], batch["msa_mask"])
     dist_loss = _xent(
         dist_logits, batch["dist_bins"],
         jnp.ones_like(batch["dist_bins"], jnp.float32),
     )
     return msa_loss + 0.3 * dist_loss
+
+
+def loss_from_heads(hp, m, z, batch, use_kernels=True):
+    """Trunk losses given head params and the trunk outputs (m, z) — the
+    tail the hybrid DP×DAP trainer differentiates at the trunk boundary
+    (exported as ``loss_head_grad``)."""
+    msa_logits, dist_logits = heads(hp, m, z, use_kernels)
+    return trunk_losses(msa_logits, dist_logits, batch)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, use_kernels=True):
+    """Full-model training loss (the trunk losses the paper's training
+    pipeline optimizes; structure-module FAPE is out of the Evoformer
+    scope this paper targets)."""
+    msa_logits, dist_logits = forward(
+        params, cfg, batch["msa_tokens"], use_kernels
+    )
+    return trunk_losses(msa_logits, dist_logits, batch)
 
 
 # --------------------------------------------------------------------------

@@ -32,9 +32,8 @@ fn main() {
             warmup_steps: 0,
             log_every: 1000,
             checkpoint_every: 10_000,
-            checkpoint_dir: None,
             seed: 3,
-            grad_clip: Some(1.0),
+            ..TrainConfig::default()
         };
         let mut wall_seq = 0.0f64;
         let mut thread_opts = vec![1usize];

@@ -151,6 +151,9 @@ pub struct ParallelConfig {
     pub tp_size: usize,
     /// Data-parallel replicas.
     pub dp_size: usize,
+    /// Gradient-accumulation micro-batches per replica per optimizer step
+    /// (effective batch = dp_size × accum).
+    pub accum: usize,
     /// Duality Async Operation (computation–communication overlap) on/off.
     pub overlap: bool,
     /// Rank-executor host threads: 0 = auto (env `FASTFOLD_THREADS` or
@@ -160,7 +163,14 @@ pub struct ParallelConfig {
 
 impl Default for ParallelConfig {
     fn default() -> Self {
-        ParallelConfig { dap_size: 1, tp_size: 1, dp_size: 1, overlap: true, threads: 0 }
+        ParallelConfig {
+            dap_size: 1,
+            tp_size: 1,
+            dp_size: 1,
+            accum: 1,
+            overlap: true,
+            threads: 0,
+        }
     }
 }
 
@@ -181,6 +191,11 @@ pub struct TrainConfig {
     pub steps: usize,
     pub lr: f32,
     pub warmup_steps: usize,
+    /// step at which the stage decay multiplies the LR (None = never) —
+    /// the AlphaFold warmup → constant → stage-decay shape
+    pub lr_decay_after: Option<usize>,
+    /// multiplicative LR factor applied from `lr_decay_after` on
+    pub lr_decay_factor: f32,
     pub log_every: usize,
     pub checkpoint_every: usize,
     pub checkpoint_dir: Option<String>,
@@ -194,6 +209,8 @@ impl Default for TrainConfig {
             steps: 200,
             lr: 1e-3,
             warmup_steps: 20,
+            lr_decay_after: None,
+            lr_decay_factor: 1.0,
             log_every: 10,
             checkpoint_every: 100,
             checkpoint_dir: None,
@@ -404,6 +421,13 @@ impl RunConfig {
             if let Some(v) = p.get("dp_size") {
                 cfg.parallel.dp_size = v.as_usize()?;
             }
+            if let Some(v) = p.get("accum") {
+                let n = v.as_usize()?;
+                if n == 0 {
+                    return Err(Error::Config("parallel accum must be >= 1".into()));
+                }
+                cfg.parallel.accum = n;
+            }
             if let Some(v) = p.get("overlap") {
                 cfg.parallel.overlap = v.as_bool()?;
             }
@@ -420,6 +444,12 @@ impl RunConfig {
             }
             if let Some(v) = t.get("warmup_steps") {
                 cfg.train.warmup_steps = v.as_usize()?;
+            }
+            if let Some(v) = t.get("lr_decay_after") {
+                cfg.train.lr_decay_after = Some(v.as_usize()?);
+            }
+            if let Some(v) = t.get("lr_decay_factor") {
+                cfg.train.lr_decay_factor = v.as_f32()?;
             }
             if let Some(v) = t.get("log_every") {
                 cfg.train.log_every = v.as_usize()?;
@@ -507,12 +537,15 @@ artifacts_dir = "artifacts"
 
 [parallel]
 dap_size = 4
+accum = 2
 overlap = false
 threads = 2
 
 [train]
 steps = 50
 lr = 0.0005
+lr_decay_after = 40
+lr_decay_factor = 0.95
 
 [autochunk]
 enabled = true
@@ -522,12 +555,16 @@ headroom = 0.25
         let cfg = RunConfig::from_toml(src).unwrap();
         assert_eq!(cfg.preset, "small");
         assert_eq!(cfg.parallel.dap_size, 4);
+        assert_eq!(cfg.parallel.accum, 2);
         assert!(!cfg.parallel.overlap);
         assert_eq!(cfg.parallel.threads, 2);
         assert_eq!(cfg.parallel.resolve_threads(), 2);
         assert!(ParallelConfig::default().resolve_threads() >= 1);
         assert_eq!(cfg.train.steps, 50);
         assert!((cfg.train.lr - 5e-4).abs() < 1e-9);
+        assert_eq!(cfg.train.lr_decay_after, Some(40));
+        assert!((cfg.train.lr_decay_factor - 0.95).abs() < 1e-6);
+        assert!(RunConfig::from_toml("[parallel]\naccum = 0").is_err());
         assert!(cfg.autochunk.enabled);
         assert_eq!(cfg.autochunk.gpu, "tpu_v3");
         assert!((cfg.autochunk.headroom - 0.25).abs() < 1e-9);

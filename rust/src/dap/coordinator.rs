@@ -244,6 +244,20 @@ impl<'rt> DapCoordinator<'rt> {
         super::tape::run_backward(self, block_params, tape, d_state)
     }
 
+    /// Backward through an explicitly supplied tape. The hybrid trainer
+    /// records one tape per Evoformer block during the trunk forward and
+    /// replays them in reverse block order — this entry point lets it own
+    /// that per-block tape stack instead of the coordinator's single
+    /// [`Self::tape`] slot.
+    pub fn block_backward_with(
+        &self,
+        tape: super::tape::Tape,
+        block_params: &[HostTensor],
+        d_state: &mut State,
+    ) -> Result<super::tape::BlockGrads> {
+        super::tape::run_backward(self, block_params, tape, d_state)
+    }
+
     pub(crate) fn bwd_exe(&self, seg: &str) -> Result<&Arc<Executable>> {
         self.segs_bwd
             .get(seg)

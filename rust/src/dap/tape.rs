@@ -12,6 +12,11 @@
 //! * `Gather(axis)`   → `reduce_scatter(d_out, axis)`
 //! * `Scatter(axis)`  → `all_gather(d_out, axis)`
 //! * `AllToAll(s, c)` → `all_to_all(d_out, split=c, concat=s)` (inverse)
+//!
+//! The hybrid trainer records one tape per Evoformer block during the
+//! trunk forward and replays them in reverse block order
+//! ([`DapCoordinator::block_backward_with`]), threading the cotangent
+//! state from the heads/loss VJP back to the embedder.
 
 use super::coordinator::{DapCoordinator, State};
 use crate::error::{Error, Result};

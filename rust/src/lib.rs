@@ -14,8 +14,9 @@
 //!   Duality-Async overlap via a dedicated comm worker thread ([`dap`],
 //!   [`comm::worker`]; `--threads 1` restores the bit-identical
 //!   sequential path), runs the
-//!   Megatron-style TP baseline ([`tp`]), data-parallel training
-//!   ([`train`]), chunked + distributed inference ([`inference`]) with the
+//!   Megatron-style TP baseline ([`tp`]), hybrid DP×DAP training with
+//!   gradient accumulation, a two-stage recipe, and resumable full-state
+//!   checkpoints ([`train`]), chunked + distributed inference ([`inference`]) with the
 //!   AutoChunk planner ([`inference::autochunk`]) choosing per-module
 //!   chunk strategies against the memory cost model, the unified serving
 //!   engine ([`inference::engine`]) placing and scheduling whole request

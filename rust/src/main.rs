@@ -1,8 +1,10 @@
 //! `fastfold` — the L3 launcher/CLI.
 //!
 //! ```text
-//! fastfold train     [--preset tiny] [--steps N] [--dp N] [--threads N]
-//!                    [--config f.toml]
+//! fastfold train     [--preset tiny] [--steps N] [--dp N] [--dap N]
+//!                    [--accum N] [--threads N] [--backend synthetic]
+//!                    [--checkpoint-dir D] [--resume] [--config f.toml]
+//! fastfold scale     [--gpus N] [--dap N] [--gpu a100_40g]
 //! fastfold infer     [--preset tiny] [--len N] [--dap N] [--threads N]
 //!                    [--naive] [--gpu a100_40g] [--no-guard] [--config f.toml]
 //! fastfold serve     --requests reqs.jsonl [--policy fifo|sjf] [--threads N]
@@ -24,13 +26,13 @@ use fastfold::inference::engine::{
     plan_batch, BackendKind, Engine, InferRequest, PlacementPlanner, SchedPolicy,
 };
 use fastfold::inference::{autochunk, chunking};
-use fastfold::metrics::{fmt_secs, Table};
+use fastfold::metrics::{fmt_bytes, fmt_secs, Table};
 use fastfold::perfmodel::gpu::ImplProfile;
 use fastfold::perfmodel::scaling::{MpMethod, ScalingModel, INFER_RECYCLES};
 use fastfold::perfmodel::{GpuSpec, MemoryModel};
 use fastfold::runtime::Runtime;
 use fastfold::tp::TpCoordinator;
-use fastfold::train::{DataGen, Trainer};
+use fastfold::train::{DataGen, ParallelPlan, SyntheticBackend, TrainBackend, Trainer};
 use std::collections::BTreeMap;
 
 fn main() {
@@ -67,6 +69,7 @@ fn run(args: &[String]) -> Result<()> {
     let cmd = pos.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&pos, &flags),
+        "scale" => cmd_scale(&flags),
         "infer" => cmd_infer(&flags),
         "serve" => cmd_serve(&flags),
         "autochunk" => cmd_autochunk(&flags),
@@ -75,8 +78,10 @@ fn run(args: &[String]) -> Result<()> {
         _ => {
             println!(
                 "fastfold — FastFold reproduction (see README.md)\n\n\
-                 usage:\n  fastfold train  [--preset P] [--steps N] [--dp N] [--threads N] \
-                 [--config f.toml]\n  \
+                 usage:\n  fastfold train  [--preset P] [--steps N] [--dp N] [--dap N] \
+                 [--accum N] [--threads N]\n                  [--backend synthetic] \
+                 [--checkpoint-dir D] [--resume] [--config f.toml]\n  \
+                 fastfold scale  [--gpus N] [--dap N] [--gpu G]\n  \
                  fastfold infer  [--preset P] [--len N] [--dap N] [--threads N] [--naive] \
                  [--gpu G] [--no-guard] [--config f.toml]\n  \
                  fastfold serve  --requests reqs.jsonl [--policy fifo|sjf] [--threads N] \
@@ -105,45 +110,232 @@ fn cmd_train(_pos: &[String], flags: &BTreeMap<String, String>) -> Result<()> {
     if let Some(p) = flags.get("preset") {
         run_cfg.preset = p.clone();
     }
-    if let Some(s) = flags.get("steps") {
-        run_cfg.train.steps = s.parse().unwrap_or(run_cfg.train.steps);
-    }
-    if let Some(d) = flags.get("dp") {
-        run_cfg.parallel.dp_size = d.parse().unwrap_or(1);
-    }
+    run_cfg.train.steps = num_flag(flags, "steps", run_cfg.train.steps)?;
+    run_cfg.parallel.dp_size = num_flag(flags, "dp", run_cfg.parallel.dp_size)?;
+    run_cfg.parallel.dap_size = num_flag(flags, "dap", run_cfg.parallel.dap_size)?;
+    run_cfg.parallel.accum = num_flag(flags, "accum", run_cfg.parallel.accum)?;
     if let Some(t) = flags.get("threads") {
         run_cfg.parallel.threads = t
             .parse()
             .map_err(|_| fastfold::Error::Config(format!("--threads: invalid value '{t}'")))?;
     }
+    if flags.contains_key("no-overlap") {
+        run_cfg.parallel.overlap = false;
+    }
     if let Some(dir) = flags.get("checkpoint-dir") {
         run_cfg.train.checkpoint_dir = Some(dir.clone());
     }
-    let threads = run_cfg.parallel.resolve_threads();
-    let rt = Runtime::new(&artifacts_dir(flags))?;
+    run_cfg.train.checkpoint_every =
+        num_flag(flags, "checkpoint-every", run_cfg.train.checkpoint_every)?;
+
+    let plan = ParallelPlan::from_config(&run_cfg.parallel);
+    let model_cfg = ModelConfig::preset(&run_cfg.preset)?;
+    plan.validate(&model_cfg)?;
+    // modeled memory-fit advisory against the configured device (the host
+    // testbed executes regardless — the verdict is what a fleet would hit)
+    let gpu = GpuSpec::by_name(&run_cfg.autochunk.gpu)?;
+    if let Err(e) = plan.check_memory(&model_cfg, &MemoryModel::default(), &gpu) {
+        println!("[fastfold] warning: modeled training memory: {e}");
+    }
+
+    let synthetic = match flags.get("backend").map(|s| s.as_str()) {
+        None | Some("pjrt") => false,
+        Some("synthetic") => true,
+        Some(other) => {
+            return Err(fastfold::Error::Config(format!(
+                "--backend: unknown value '{other}' (pjrt|synthetic)"
+            )))
+        }
+    };
+    if synthetic {
+        // artifact-free pipeline smoke: host-math backend, same
+        // orchestration (plan, accumulation, ring, Adam, checkpoints)
+        let params = SyntheticBackend::init_params(&model_cfg);
+        let backend: Box<dyn TrainBackend> =
+            Box::new(SyntheticBackend::new(plan.dap));
+        let mut trainer = Trainer::with_backend(
+            &run_cfg.preset,
+            model_cfg,
+            params,
+            backend,
+            plan,
+            run_cfg.train.clone(),
+        )?;
+        drive_train(&mut trainer, &run_cfg, flags, "host-synthetic")
+    } else {
+        let rt = Runtime::new(&artifacts_dir(flags))?;
+        let platform = rt.platform();
+        let mut trainer = Trainer::hybrid(
+            &rt,
+            &run_cfg.preset,
+            plan,
+            run_cfg.parallel.overlap,
+            run_cfg.train.clone(),
+        )?;
+        drive_train(&mut trainer, &run_cfg, flags, &platform)
+    }
+}
+
+/// Shared train driver: optional checkpoint resume, the run itself, and
+/// the report line (actual executed steps, applied LR, DP vs DAP wire).
+fn drive_train(
+    trainer: &mut Trainer<'_>,
+    run_cfg: &RunConfig,
+    flags: &BTreeMap<String, String>,
+    platform: &str,
+) -> Result<()> {
+    use fastfold::train::checkpoint;
+    if flags.contains_key("resume") {
+        let dir = run_cfg.train.checkpoint_dir.as_ref().ok_or_else(|| {
+            fastfold::Error::Config(
+                "--resume needs --checkpoint-dir (or [train] checkpoint_dir)".into(),
+            )
+        })?;
+        match checkpoint::latest_step(dir, trainer.preset())? {
+            Some(step) => {
+                let state = checkpoint::load_full(dir, trainer.preset(), step)?;
+                trainer.restore(state)?;
+                println!(
+                    "[fastfold] resumed from '{dir}' at step {step} \
+                     (stage {}, {} steps into it)",
+                    trainer.stage, trainer.steps_in_stage
+                );
+            }
+            None => println!(
+                "[fastfold] --resume: no checkpoint for '{}' in '{dir}', \
+                 starting fresh",
+                trainer.preset()
+            ),
+        }
+    }
     println!(
-        "[fastfold] training preset='{}' dp={} steps={} threads={} on {}",
-        run_cfg.preset,
-        run_cfg.parallel.dp_size,
+        "[fastfold] training preset='{}' [{}] backend={} steps={} on {}",
+        trainer.preset(),
+        trainer.plan,
+        trainer.backend_name(),
         run_cfg.train.steps,
-        threads,
-        rt.platform()
+        platform,
     );
-    let mut trainer = Trainer::new(
-        &rt,
-        &run_cfg.preset,
-        run_cfg.parallel.dp_size,
-        run_cfg.train.clone(),
-    )?
-    .with_threads(threads);
     let report = trainer.run()?;
+    if report.steps == 0 {
+        println!(
+            "[fastfold] nothing to do: training already at step {} \
+             (configured total: {} steps) — raise --steps to continue",
+            trainer.step, run_cfg.train.steps
+        );
+        return Ok(());
+    }
     println!(
-        "[fastfold] done: loss {:.4} -> {:.4} in {} ({:.2} steps/s, {} KiB DP wire)",
+        "[fastfold] done: loss {:.4} -> {:.4}, {} steps in {} \
+         ({:.2} steps/s, final lr {:.2e}; wire: DP {} / DAP {})",
         report.initial_loss,
         report.final_loss,
+        report.steps,
         fmt_secs(report.seconds),
         report.steps_per_sec,
-        report.wire_bytes / 1024
+        report.final_lr,
+        fmt_bytes(report.wire_bytes),
+        fmt_bytes(report.wire_dap_bytes),
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------- scale
+
+/// `fastfold scale --gpus N` — the modeled hybrid DP×DAP scale-out: a
+/// sweep of the fleet size up to N with aggregate PFLOP/s and
+/// efficiencies, plus the two-stage 67-hour headline at the paper layout.
+fn cmd_scale(flags: &BTreeMap<String, String>) -> Result<()> {
+    let gpus: usize = num_flag(flags, "gpus", 512)?;
+    let dap_ft: usize = num_flag(flags, "dap", 4)?;
+    let dap_init: usize = num_flag(flags, "dap-init", 2)?;
+    if gpus == 0 || dap_ft == 0 || dap_init == 0 {
+        return Err(fastfold::Error::Config("scale: --gpus/--dap must be >= 1".into()));
+    }
+    if gpus % dap_ft != 0 {
+        return Err(fastfold::Error::Config(format!(
+            "scale: --gpus {gpus} not divisible by --dap {dap_ft}"
+        )));
+    }
+    if gpus % dap_init != 0 {
+        return Err(fastfold::Error::Config(format!(
+            "scale: --gpus {gpus} not divisible by --dap-init {dap_init}"
+        )));
+    }
+    let gpu_name = flags.get("gpu").cloned().unwrap_or_else(|| "a100_40g".into());
+    let gpu = GpuSpec::by_name(&gpu_name)?;
+    let mem = MemoryModel::default();
+    let m = ScalingModel::default();
+    let p = ImplProfile::fastfold();
+    let cfg_ft = ModelConfig::finetune();
+    let cfg_init = ModelConfig::initial_training();
+
+    // plan validation per stage: geometry + rank budget + memory fit
+    let plan = ParallelPlan::new(gpus / dap_ft, dap_ft, 1);
+    plan.validate_for(std::slice::from_ref(&cfg_ft), &mem, &gpu, gpus)?;
+    ParallelPlan::new(gpus / dap_init, dap_init, 1).validate_for(
+        std::slice::from_ref(&cfg_init),
+        &mem,
+        &gpu,
+        gpus,
+    )?;
+    let need = plan.train_bytes_per_device(&cfg_ft, &mem);
+    println!(
+        "fastfold scale — hybrid DP x DAP fine-tuning on up to {gpus} x {} \
+         ({:.0} GB)\nplan {plan}: {:.1} GB/device modeled training \
+         working set (fits)\n",
+        gpu.name,
+        gpu.memory / 1e9,
+        need / 1e9,
+    );
+
+    let mut t = Table::new(&[
+        "GPUs", "dap", "dp", "step (s)", "samples/s", "agg PFLOP/s", "DP eff",
+        "E2E eff",
+    ]);
+    let mut n = dap_ft;
+    loop {
+        let h = m.hybrid_step(&cfg_ft, &p, dap_ft, n / dap_ft, true);
+        t.row(&[
+            n.to_string(),
+            h.dap.to_string(),
+            h.dp.to_string(),
+            format!("{:.2}", h.step_secs),
+            format!("{:.1}", h.samples_per_sec),
+            format!("{:.2}", h.aggregate_pflops),
+            format!("{:.1}%", 100.0 * h.dp_efficiency),
+            format!("{:.1}%", 100.0 * h.end_to_end_efficiency),
+        ]);
+        if n >= gpus {
+            break;
+        }
+        n = (n * 4).min(gpus);
+    }
+    t.print();
+
+    // the paper's two-stage layout: replica count capped at 128 nodes
+    let dp_init = (gpus / dap_init).min(128);
+    let dp_ft = (gpus / dap_ft).min(128);
+    let (hi, hf) = m.two_stage_hours(&p, (dap_init, dp_init), (dap_ft, dp_ft));
+    let head = m.hybrid_step(&cfg_ft, &p, dap_ft, dp_ft, true);
+    let init_head = m.hybrid_step(&cfg_init, &p, dap_init, dp_init, true);
+    println!(
+        "\ntwo-stage recipe: initial {:.1} h on {} GPUs (dap={dap_init} x \
+         dp={dp_init}) + finetune {:.1} h on {} GPUs (dap={dap_ft} x \
+         dp={dp_ft})",
+        hi,
+        dap_init * dp_init,
+        hf,
+        dap_ft * dp_ft,
+    );
+    println!(
+        "total {:.1} h (paper: 67 h) | finetune aggregate {:.2} PFLOP/s \
+         (paper: 6.02) | DP efficiency {:.1}% (paper: 90.1%) | initial-stage \
+         DP efficiency {:.1}%",
+        hi + hf,
+        head.aggregate_pflops,
+        100.0 * head.dp_efficiency,
+        100.0 * init_head.dp_efficiency,
     );
     Ok(())
 }

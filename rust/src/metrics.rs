@@ -181,6 +181,20 @@ impl ServeStats {
     }
 }
 
+/// Human byte volume (binary units — wire/checkpoint accounting).
+pub fn fmt_bytes(b: usize) -> String {
+    let b = b as f64;
+    if b < 1024.0 {
+        format!("{b:.0} B")
+    } else if b < 1024.0 * 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else if b < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.1} MiB", b / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
 /// Human duration.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {
@@ -214,6 +228,14 @@ mod tests {
         assert_eq!(median(vec![3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(vec![4.0, 1.0, 2.0, 3.0]), 2.5);
         assert!(median(vec![]).is_nan());
+    }
+
+    #[test]
+    fn fmt_bytes_ranges() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert!(fmt_bytes(2048).contains("KiB"));
+        assert!(fmt_bytes(3 * 1024 * 1024).contains("MiB"));
+        assert!(fmt_bytes(2 * 1024 * 1024 * 1024).contains("GiB"));
     }
 
     #[test]

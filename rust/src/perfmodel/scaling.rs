@@ -33,6 +33,39 @@ pub enum MpMethod {
     TensorParallel,
 }
 
+/// Modeled economics of one hybrid DP×DAP training step
+/// ([`ScalingModel::hybrid_step`]).
+#[derive(Clone, Copy, Debug)]
+pub struct HybridStep {
+    /// DAP degree inside each replica
+    pub dap: usize,
+    /// data-parallel replicas
+    pub dp: usize,
+    /// end-to-end step seconds (MP step + exposed DP reduction +
+    /// straggler)
+    pub step_secs: f64,
+    /// the DAP group's step seconds before DP costs
+    pub mp_step_secs: f64,
+    /// global samples per second (dp / step)
+    pub samples_per_sec: f64,
+    /// aggregate modeled PFLOP/s across the fleet — the paper's
+    /// "6.02 PetaFLOPS at 512 GPUs" framing
+    pub aggregate_pflops: f64,
+    /// data-parallel scaling efficiency mp/step — the paper's Fig 11
+    /// "90.1% at 128 nodes" number
+    pub dp_efficiency: f64,
+    /// throughput vs `gpus` ideal single-GPU copies (also absorbs the
+    /// model-parallel efficiency loss inside each replica)
+    pub end_to_end_efficiency: f64,
+}
+
+impl HybridStep {
+    /// Total ranks the layout occupies.
+    pub fn gpus(&self) -> usize {
+        self.dap * self.dp
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct ScalingModel {
     pub gpu: GpuSpec,
@@ -233,6 +266,77 @@ impl ScalingModel {
         mp_step_secs + exposed + straggler
     }
 
+    /// One hybrid DP×DAP training step at paper scale: the DAP group's
+    /// model-parallel step ([`ScalingModel::train_step`]) composed with
+    /// the DP ring/straggler model ([`ScalingModel::dp_step`]), plus the
+    /// throughput/efficiency bookkeeping `fastfold scale` and the
+    /// Table IV bench report.
+    pub fn hybrid_step(
+        &self,
+        cfg: &ModelConfig,
+        p: &ImplProfile,
+        dap: usize,
+        dp: usize,
+        overlap: bool,
+    ) -> HybridStep {
+        let mp = self.train_step(cfg, p, MpMethod::Dap, dap, overlap).total();
+        let step = self.dp_step(cfg, mp, dp);
+        let t1 = self.train_step(cfg, p, MpMethod::Dap, 1, overlap).total();
+        let gpus = dap * dp;
+        let samples_per_sec = dp as f64 / step;
+        let flops =
+            super::flops::train_step_flops(cfg, TRAIN_RECYCLES) * dp as f64;
+        HybridStep {
+            dap,
+            dp,
+            step_secs: step,
+            mp_step_secs: mp,
+            samples_per_sec,
+            aggregate_pflops: flops / step / 1e15,
+            dp_efficiency: mp / step,
+            end_to_end_efficiency: samples_per_sec / (gpus as f64 / t1),
+        }
+    }
+
+    /// Wall hours for a training phase of `samples` samples under one
+    /// hybrid step layout. The model's global batch per optimizer step is
+    /// `dp` (one sample per replica per step — the same convention as
+    /// [`HybridStep::samples_per_sec`]), so fewer replicas honestly means
+    /// more steps, not cheaper hours.
+    pub fn phase_hours(
+        &self,
+        cfg: &ModelConfig,
+        p: &ImplProfile,
+        dap: usize,
+        dp: usize,
+        samples: f64,
+    ) -> f64 {
+        let step = self.hybrid_step(cfg, p, dap, dp, true).step_secs;
+        step * (samples / dp.max(1) as f64) / 3600.0
+    }
+
+    /// The paper's end-to-end Table IV scenario: 10M initial-training
+    /// samples at (dap, dp) = `init`, then 1.5M fine-tuning samples at
+    /// `ft` (the paper's layouts use dp = 128, i.e. global batch 128).
+    /// Returns (initial hours, finetune hours) — the FastFold layout sums
+    /// to the ~67-hour headline.
+    pub fn two_stage_hours(
+        &self,
+        p: &ImplProfile,
+        init: (usize, usize),
+        ft: (usize, usize),
+    ) -> (f64, f64) {
+        let h_init = self.phase_hours(
+            &ModelConfig::initial_training(),
+            p,
+            init.0,
+            init.1,
+            10.0e6,
+        );
+        let h_ft = self.phase_hours(&ModelConfig::finetune(), p, ft.0, ft.1, 1.5e6);
+        (h_init, h_ft)
+    }
+
     /// End-to-end inference latency for a sequence of length `n_res`
     /// (INFER_RECYCLES forward passes; `chunk` slows the baselines by extra
     /// kernel-launch + re-read overhead).
@@ -308,6 +412,71 @@ mod tests {
         let t128 = m.dp_step(&cfg, step, 128);
         let eff = step / t128;
         assert!(eff > 0.82 && eff < 0.97, "dp eff {eff}");
+    }
+
+    #[test]
+    fn hybrid_512_gpu_headline() {
+        // paper Table IV: fine-tuning on 512 A100 (dap=4 × dp=128) runs at
+        // 6.02 aggregate PFLOP/s with 90.1% DP efficiency
+        let m = ScalingModel::default();
+        let p = ImplProfile::fastfold();
+        let h = m.hybrid_step(&ModelConfig::finetune(), &p, 4, 128, true);
+        assert_eq!(h.gpus(), 512);
+        assert!(
+            h.aggregate_pflops > 5.0 && h.aggregate_pflops < 7.0,
+            "aggregate {:.2} PFLOP/s",
+            h.aggregate_pflops
+        );
+        assert!(
+            h.dp_efficiency > 0.90 && h.dp_efficiency < 0.98,
+            "dp efficiency {:.3}",
+            h.dp_efficiency
+        );
+        assert!(h.end_to_end_efficiency > 0.5 && h.end_to_end_efficiency < 1.0);
+        assert!(h.mp_step_secs < h.step_secs);
+        // sanity: samples/s is dp / step
+        assert!((h.samples_per_sec - 128.0 / h.step_secs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hybrid_efficiency_degrades_gracefully_with_dp() {
+        let m = ScalingModel::default();
+        let p = ImplProfile::fastfold();
+        let cfg = ModelConfig::finetune();
+        let mut prev = f64::INFINITY;
+        for dp in [1usize, 8, 32, 128] {
+            let h = m.hybrid_step(&cfg, &p, 4, dp, true);
+            assert!(h.dp_efficiency <= prev + 1e-12, "dp={dp}");
+            assert!(h.dp_efficiency > 0.85, "dp={dp}: {}", h.dp_efficiency);
+            prev = h.dp_efficiency;
+        }
+    }
+
+    #[test]
+    fn two_stage_total_reproduces_67_hours() {
+        // paper headline: 11 days (OpenFold-class) -> ~67 hours (FastFold:
+        // dap=2×dp=128 initial, dap=4×dp=128 finetune)
+        let m = ScalingModel::default();
+        let (hi, hf) = m.two_stage_hours(&ImplProfile::fastfold(), (2, 128), (4, 128));
+        let total = hi + hf;
+        assert!(total > 55.0 && total < 80.0, "total {total:.1} h");
+        assert!(hi > hf, "initial phase dominates: {hi:.1} vs {hf:.1}");
+        // the OpenFold baseline (dense replicas) lands in the ~8.4-day band
+        let (oi, of) = m.two_stage_hours(&ImplProfile::openfold(), (1, 128), (1, 128));
+        let baseline_days = (oi + of) / 24.0;
+        assert!(
+            baseline_days > 6.0 && baseline_days < 11.0,
+            "baseline {baseline_days:.2} days"
+        );
+        // and the speedup is the paper's ~3x economics
+        assert!((oi + of) / total > 2.0, "speedup {:.2}", (oi + of) / total);
+        // hours scale honestly with the replica count (global batch = dp):
+        // half the replicas ≈ twice the wall-clock, not half the cost
+        let (hi64, _) = m.two_stage_hours(&ImplProfile::fastfold(), (2, 64), (4, 64));
+        assert!(
+            hi64 > 1.8 * hi && hi64 < 2.2 * hi,
+            "dp=64 initial {hi64:.1} h vs dp=128 {hi:.1} h"
+        );
     }
 
     #[test]

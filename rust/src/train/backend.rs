@@ -1,0 +1,619 @@
+//! Per-replica step backends — how one micro-batch's (loss, gradients)
+//! and the Adam update are actually computed.
+//!
+//! The trainer orchestrates the hybrid DP×DAP layout (data routing,
+//! gradient accumulation, the DP ring all-reduce, checkpoints); *what* a
+//! replica executes is behind [`TrainBackend`]:
+//!
+//! * [`DenseBackend`] — the `dap = 1` path: the monolithic PJRT
+//!   `grad_step` executable, replicas fanned over the rank-executor
+//!   threads exactly like the pre-hybrid trainer.
+//! * [`HybridDapBackend`] — the `dap > 1` path: embed → DAP block
+//!   forwards through the coordinator (tape recording on) → heads+loss
+//!   VJP → reverse block replay through [`crate::dap::Tape`] (sharded
+//!   grads summed over the DAP group per replica) → embed VJP. Model-
+//!   parallel collective volume is read off the coordinator's comm log so
+//!   the trainer can account DAP wire separately from DP wire.
+//! * [`SyntheticBackend`] — a pure-host stand-in (no artifacts, no PJRT):
+//!   integer-grid gradients derived from the batch plus a host Adam.
+//!   This is the construction seam the hybrid equivalence suite and the
+//!   CI train smoke use, mirroring `SegmentRunner` / `BackendFactory`.
+
+use super::data::Batch;
+use super::plan::ParallelPlan;
+use crate::dap::executor::parallel_ranks;
+use crate::dap::DapCoordinator;
+use crate::error::{Error, Result};
+use crate::runtime::{Executable, Runtime, Value};
+use crate::tensor::HostTensor;
+use std::cell::Cell;
+use std::sync::Arc;
+
+/// (loss, full-model gradient leaves in canonical order).
+pub type GradOut = (f32, Vec<HostTensor>);
+
+/// Updated (params, m, v) after one Adam step.
+pub type AdamOut = (Vec<HostTensor>, Vec<HostTensor>, Vec<HostTensor>);
+
+/// Computes a replica's forward/backward and the optimizer update.
+pub trait TrainBackend {
+    /// Short name for logs/reports ("dense", "dap4", "synthetic").
+    fn name(&self) -> String;
+
+    /// Loss + full-model gradients for one micro-batch.
+    fn grad(&self, params: &[HostTensor], batch: &Batch) -> Result<GradOut>;
+
+    /// Map [`TrainBackend::grad`] over independent micro-batches. The
+    /// default runs sequentially; backends that are `Sync` may fan out
+    /// over `threads` (results MUST come back in batch order — the
+    /// trainer's gradient fold depends on it).
+    fn grad_many(
+        &self,
+        params: &[HostTensor],
+        batches: &[Batch],
+        threads: usize,
+    ) -> Result<Vec<GradOut>> {
+        let _ = threads;
+        batches.iter().map(|b| self.grad(params, b)).collect()
+    }
+
+    /// One Adam update at (1-based) `step` with learning rate `lr`.
+    fn adam(
+        &self,
+        step: usize,
+        lr: f32,
+        params: &[HostTensor],
+        grads: &[HostTensor],
+        m: &[HostTensor],
+        v: &[HostTensor],
+    ) -> Result<AdamOut>;
+
+    /// Model-parallel (DAP) wire bytes moved since the last call
+    /// (0 for backends without model parallelism).
+    fn take_mp_wire_bytes(&self) -> usize {
+        0
+    }
+
+    /// The thread budget this backend actually runs with when the trainer
+    /// requests `requested` threads. The DAP backend bound its budget to
+    /// the coordinator at construction, so a later `with_threads`
+    /// override does not reach it — reports stay honest by asking.
+    fn effective_threads(&self, requested: usize) -> usize {
+        requested
+    }
+}
+
+/// Canonical batch flatten order: dict keys sorted by jax =
+/// dist_bins, msa_labels, msa_mask, msa_tokens.
+pub(crate) fn batch_values(b: &Batch) -> Vec<Value> {
+    vec![
+        b.dist_bins.clone().into(),
+        b.msa_labels.clone().into(),
+        b.msa_mask.clone().into(),
+        b.msa_tokens.clone().into(),
+    ]
+}
+
+fn adam_via_exe(
+    exe: &Executable,
+    step: usize,
+    lr: f32,
+    params: &[HostTensor],
+    grads: &[HostTensor],
+    m: &[HostTensor],
+    v: &[HostTensor],
+) -> Result<AdamOut> {
+    let n = params.len();
+    let mut args: Vec<Value> = Vec::with_capacity(4 * n + 2);
+    args.extend(params.iter().cloned().map(Value::F32));
+    args.extend(grads.iter().cloned().map(Value::F32));
+    args.extend(m.iter().cloned().map(Value::F32));
+    args.extend(v.iter().cloned().map(Value::F32));
+    args.push(Value::F32(HostTensor::scalar(step as f32)));
+    args.push(Value::F32(HostTensor::scalar(lr)));
+    let out = exe.run(&args)?;
+    let (p2, rest) = out.split_at(n);
+    let (m2, v2) = rest.split_at(n);
+    Ok((p2.to_vec(), m2.to_vec(), v2.to_vec()))
+}
+
+/// Build the backend a [`ParallelPlan`] calls for: dense at `dap = 1`,
+/// the DAP coordinator path at `dap > 1`.
+pub fn build_backend<'rt>(
+    rt: &'rt Runtime,
+    preset: &str,
+    plan: &ParallelPlan,
+    overlap: bool,
+) -> Result<Box<dyn TrainBackend + 'rt>> {
+    if plan.dap > 1 {
+        Ok(Box::new(HybridDapBackend::new(
+            rt,
+            preset,
+            plan.dap,
+            overlap,
+            plan.threads,
+        )?))
+    } else {
+        Ok(Box::new(DenseBackend::new(rt, preset)?))
+    }
+}
+
+// ------------------------------------------------------------------ dense
+
+/// `dap = 1`: the monolithic `grad_step` + `adam_update` executables.
+pub struct DenseBackend {
+    grad_exe: Arc<Executable>,
+    adam_exe: Arc<Executable>,
+}
+
+impl DenseBackend {
+    /// Load the preset's training executables.
+    pub fn new(rt: &Runtime, preset: &str) -> Result<Self> {
+        Ok(DenseBackend {
+            grad_exe: rt.load(&format!("{preset}/grad_step"))?,
+            adam_exe: rt.load(&format!("{preset}/adam_update"))?,
+        })
+    }
+}
+
+impl TrainBackend for DenseBackend {
+    fn name(&self) -> String {
+        "dense".into()
+    }
+
+    fn grad(&self, params: &[HostTensor], batch: &Batch) -> Result<GradOut> {
+        let mut args: Vec<Value> =
+            params.iter().cloned().map(Value::F32).collect();
+        args.extend(batch_values(batch));
+        let out = self.grad_exe.run(&args)?;
+        // outputs: loss scalar, then grads in canonical order
+        Ok((out[0].data[0], out[1..].to_vec()))
+    }
+
+    fn grad_many(
+        &self,
+        params: &[HostTensor],
+        batches: &[Batch],
+        threads: usize,
+    ) -> Result<Vec<GradOut>> {
+        // independent micro-batches fan out over the rank-executor
+        // threads; results join in batch order (bit-for-bit vs threads=1)
+        parallel_ranks(threads, batches.len(), |i| self.grad(params, &batches[i]))
+    }
+
+    fn adam(
+        &self,
+        step: usize,
+        lr: f32,
+        params: &[HostTensor],
+        grads: &[HostTensor],
+        m: &[HostTensor],
+        v: &[HostTensor],
+    ) -> Result<AdamOut> {
+        adam_via_exe(&self.adam_exe, step, lr, params, grads, m, v)
+    }
+}
+
+// ----------------------------------------------------------------- hybrid
+
+/// `dap > 1`: the replica's forward/backward runs through the DAP
+/// coordinator and tape; parameters stay replicated, activations are
+/// sharded, per-leaf gradients are summed over the DAP group.
+pub struct HybridDapBackend<'rt> {
+    co: DapCoordinator<'rt>,
+    embed_exe: Arc<Executable>,
+    loss_head_grad_exe: Arc<Executable>,
+    embed_bwd_exe: Arc<Executable>,
+    adam_exe: Arc<Executable>,
+    embed_idx: Vec<usize>,
+    head_idx: Vec<usize>,
+    block_idx: Vec<Vec<usize>>,
+    wire_mark: Cell<usize>,
+}
+
+fn load_or_hint(rt: &Runtime, key: &str) -> Result<Arc<Executable>> {
+    if !rt.manifest.artifacts.contains_key(key) {
+        return Err(Error::Manifest(format!(
+            "hybrid training needs the '{key}' executable — regenerate \
+             artifacts (`make artifacts`) with the current exporter, which \
+             emits the heads/loss and embed VJPs"
+        )));
+    }
+    rt.load(key)
+}
+
+impl<'rt> HybridDapBackend<'rt> {
+    /// Load the coordinator plus the trunk-boundary VJP executables for
+    /// `preset` at DAP degree `dap`.
+    pub fn new(
+        rt: &'rt Runtime,
+        preset: &str,
+        dap: usize,
+        overlap: bool,
+        threads: usize,
+    ) -> Result<Self> {
+        let co = DapCoordinator::new(rt, preset, dap, overlap)?.with_threads(threads);
+        if !co.has_backward() {
+            return Err(Error::Manifest(format!(
+                "preset '{preset}' has no dap{dap} backward (VJP) segment \
+                 executables — export with backward enabled for hybrid \
+                 training"
+            )));
+        }
+        let embed_exe = rt.load(&format!("{preset}/embed"))?;
+        let loss_head_grad_exe = load_or_hint(rt, &format!("{preset}/loss_head_grad"))?;
+        let embed_bwd_exe = load_or_hint(rt, &format!("{preset}/embed_bwd"))?;
+        let adam_exe = rt.load(&format!("{preset}/adam_update"))?;
+        let man = &rt.manifest;
+        let embed_idx = man.leaf_indices_with_prefix(preset, "embedder/")?;
+        let head_idx = man.leaf_indices_with_prefix(preset, "heads/")?;
+        let block_idx: Vec<Vec<usize>> = (0..co.cfg.n_blocks)
+            .map(|b| man.block_leaf_indices(preset, b))
+            .collect::<Result<_>>()?;
+        Ok(HybridDapBackend {
+            co,
+            embed_exe,
+            loss_head_grad_exe,
+            embed_bwd_exe,
+            adam_exe,
+            embed_idx,
+            head_idx,
+            block_idx,
+            wire_mark: Cell::new(0),
+        })
+    }
+
+    /// The coordinator's DAP degree.
+    pub fn dap(&self) -> usize {
+        self.co.n
+    }
+}
+
+impl TrainBackend for HybridDapBackend<'_> {
+    fn name(&self) -> String {
+        format!("dap{}", self.co.n)
+    }
+
+    fn grad(&self, params: &[HostTensor], batch: &Batch) -> Result<GradOut> {
+        let co = &self.co;
+        let mut grads: Vec<Option<HostTensor>> = vec![None; params.len()];
+
+        // embed (replicated)
+        let mut args: Vec<Value> = self
+            .embed_idx
+            .iter()
+            .map(|&i| params[i].clone().into())
+            .collect();
+        args.push(batch.msa_tokens.clone().into());
+        let out = self.embed_exe.run(&args)?;
+        let (m0, z0) = (out[0].clone(), out[1].clone());
+
+        // trunk forward under DAP, recording one tape per block
+        *co.record.borrow_mut() = true;
+        let mut state = co.shard_inputs(&m0, &z0)?;
+        let mut tapes = Vec::with_capacity(co.cfg.n_blocks);
+        let mut block_params = Vec::with_capacity(co.cfg.n_blocks);
+        for idx in &self.block_idx {
+            let bp: Vec<HostTensor> = idx.iter().map(|&i| params[i].clone()).collect();
+            if let Err(e) = co.block_forward(&bp, &mut state) {
+                *co.record.borrow_mut() = false;
+                return Err(e);
+            }
+            tapes.push(std::mem::take(&mut *co.tape.borrow_mut()));
+            block_params.push(bp);
+        }
+        *co.record.borrow_mut() = false;
+        let (m, z) = co.unshard(&state)?;
+
+        // heads + trunk losses, with cotangents w.r.t. (head params, m, z)
+        let mut args: Vec<Value> = self
+            .head_idx
+            .iter()
+            .map(|&i| params[i].clone().into())
+            .collect();
+        args.push(m.into());
+        args.push(z.into());
+        args.extend(batch_values(batch));
+        let out = self.loss_head_grad_exe.run(&args)?;
+        let nh = self.head_idx.len();
+        let loss = out[0].data[0];
+        for (k, &i) in self.head_idx.iter().enumerate() {
+            grads[i] = Some(out[1 + k].clone());
+        }
+        let d_m = out[1 + nh].clone();
+        let d_z = out[2 + nh].clone();
+
+        // reverse block replay: shard the cotangents like the activations,
+        // walk blocks backward, summing each leaf over the DAP group
+        let mut d_state = co.shard_inputs(&d_m, &d_z)?;
+        for b in (0..self.block_idx.len()).rev() {
+            let bg = co.block_backward_with(
+                std::mem::take(&mut tapes[b]),
+                &block_params[b],
+                &mut d_state,
+            )?;
+            if bg.len() != self.block_idx[b].len() {
+                return Err(Error::Schedule(format!(
+                    "block {b} backward returned {} grads, expected {}",
+                    bg.len(),
+                    self.block_idx[b].len()
+                )));
+            }
+            for (g, &i) in bg.into_iter().zip(self.block_idx[b].iter()) {
+                grads[i] = Some(g);
+            }
+        }
+        let (d_m0, d_z0) = co.unshard(&d_state)?;
+
+        // embed VJP
+        let mut args: Vec<Value> = self
+            .embed_idx
+            .iter()
+            .map(|&i| params[i].clone().into())
+            .collect();
+        args.push(batch.msa_tokens.clone().into());
+        args.push(d_m0.into());
+        args.push(d_z0.into());
+        let out = self.embed_bwd_exe.run(&args)?;
+        for (k, &i) in self.embed_idx.iter().enumerate() {
+            grads[i] = Some(out[k].clone());
+        }
+
+        let grads: Vec<HostTensor> = grads
+            .into_iter()
+            .enumerate()
+            .map(|(i, g)| {
+                g.ok_or_else(|| {
+                    Error::Manifest(format!(
+                        "leaf {i} received no gradient (not an embedder/ \
+                         blocks/ heads/ leaf?)"
+                    ))
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok((loss, grads))
+    }
+
+    fn adam(
+        &self,
+        step: usize,
+        lr: f32,
+        params: &[HostTensor],
+        grads: &[HostTensor],
+        m: &[HostTensor],
+        v: &[HostTensor],
+    ) -> Result<AdamOut> {
+        adam_via_exe(&self.adam_exe, step, lr, params, grads, m, v)
+    }
+
+    fn take_mp_wire_bytes(&self) -> usize {
+        let total = self.co.comm.log.lock().unwrap().total_bytes();
+        let prev = self.wire_mark.replace(total);
+        total.saturating_sub(prev)
+    }
+
+    fn effective_threads(&self, _requested: usize) -> usize {
+        // the coordinator's budget was fixed at construction; replicas
+        // run sequentially with the rank fan-out inside each block
+        self.co.threads
+    }
+}
+
+// -------------------------------------------------------------- synthetic
+
+/// Host Adam, element-for-element the formula of the exported
+/// `adam_update` executable (`python/compile/aot.py`).
+pub fn host_adam(
+    step: usize,
+    lr: f32,
+    params: &[HostTensor],
+    grads: &[HostTensor],
+    m: &[HostTensor],
+    v: &[HostTensor],
+) -> Result<AdamOut> {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let t = step as f32;
+    let bc1 = 1.0 - B1.powf(t);
+    let bc2 = 1.0 - B2.powf(t);
+    let mut p2 = Vec::with_capacity(params.len());
+    let mut m2 = Vec::with_capacity(params.len());
+    let mut v2 = Vec::with_capacity(params.len());
+    for (((p, g), mm), vv) in params.iter().zip(grads).zip(m).zip(v) {
+        if p.shape != g.shape {
+            return Err(Error::Shape(format!(
+                "adam: param {:?} vs grad {:?}",
+                p.shape, g.shape
+            )));
+        }
+        let mut pn = p.data.clone();
+        let mut mn = mm.data.clone();
+        let mut vn = vv.data.clone();
+        for i in 0..pn.len() {
+            let gi = g.data[i];
+            mn[i] = B1 * mn[i] + (1.0 - B1) * gi;
+            vn[i] = B2 * vn[i] + (1.0 - B2) * gi * gi;
+            let mhat = mn[i] / bc1;
+            let vhat = vn[i] / bc2;
+            pn[i] -= lr * mhat / (vhat.sqrt() + EPS);
+        }
+        p2.push(HostTensor::new(p.shape.clone(), pn)?);
+        m2.push(HostTensor::new(p.shape.clone(), mn)?);
+        v2.push(HostTensor::new(p.shape.clone(), vn)?);
+    }
+    Ok((p2, m2, v2))
+}
+
+/// Pure-host backend: no artifacts, no PJRT. Gradients are **integer-grid**
+/// functions of the batch alone (token sums scaled by a power of two), so
+/// every partition of the same micro-batch stream — any `(dp, dap, accum)`
+/// split — folds to bit-for-bit identical global gradients; the loss is
+/// `⟨params, grads⟩`, so parameters still enter the reported loss. `dap`
+/// is *simulated* here: each leaf gradient is computed as per-shard
+/// partial sums over contiguous MSA-row blocks folded in rank order,
+/// exercising the same shard-then-sum contract as the real DAP tape.
+pub struct SyntheticBackend {
+    dap: usize,
+    /// power-of-two gradient scale (keeps grads exactly representable)
+    scale: f32,
+}
+
+impl SyntheticBackend {
+    /// A synthetic backend simulating DAP degree `dap` (>= 1).
+    pub fn new(dap: usize) -> Self {
+        SyntheticBackend { dap: dap.max(1), scale: 1.0 / 256.0 }
+    }
+
+    /// Deterministic parameter leaves for a preset — integer-grid values,
+    /// shapes derived from the model dims (a stand-in for the exported
+    /// `*_params.bin` when running artifact-free).
+    pub fn init_params(cfg: &crate::config::ModelConfig) -> Vec<HostTensor> {
+        let shapes: Vec<Vec<usize>> = vec![
+            vec![cfg.d_msa],
+            vec![cfg.d_pair, 4],
+            vec![cfg.n_heads_msa, cfg.d_head],
+            vec![cfg.d_opm, 2],
+            vec![cfg.n_dist_bins],
+            vec![1],
+        ];
+        shapes
+            .into_iter()
+            .enumerate()
+            .map(|(j, shape)| {
+                let n: usize = shape.iter().product();
+                let data: Vec<f32> = (0..n)
+                    .map(|i| ((i * 7 + j * 3) % 13) as f32 / 8.0 - 0.75)
+                    .collect();
+                HostTensor::new(shape, data).expect("static shapes")
+            })
+            .collect()
+    }
+}
+
+impl TrainBackend for SyntheticBackend {
+    fn name(&self) -> String {
+        if self.dap > 1 {
+            format!("synthetic-dap{}", self.dap)
+        } else {
+            "synthetic".into()
+        }
+    }
+
+    fn grad(&self, params: &[HostTensor], batch: &Batch) -> Result<GradOut> {
+        let toks = &batch.msa_tokens.data;
+        let rows = batch.msa_tokens.shape[0];
+        let cols = batch.msa_tokens.shape[1];
+        // contiguous row shards (remainder on the last shard)
+        let dap = self.dap.min(rows.max(1));
+        let base = rows / dap;
+        let mut grads = Vec::with_capacity(params.len());
+        let mut loss_acc = 0.0f64;
+        for (j, p) in params.iter().enumerate() {
+            let n = p.data.len();
+            let mut g = Vec::with_capacity(n);
+            for i in 0..n {
+                let col = (i + j) % cols;
+                // per-shard integer partial sums, folded in rank order —
+                // exact in f32, so the fold order (and hence `dap`) never
+                // changes the bits
+                let mut total = 0.0f32;
+                for k in 0..dap {
+                    let lo = k * base;
+                    let hi = if k == dap - 1 { rows } else { (k + 1) * base };
+                    let mut part = 0.0f32;
+                    for row in lo..hi {
+                        part += (toks[row * cols + col] - 11) as f32;
+                    }
+                    total += part;
+                }
+                let gi = total * self.scale;
+                loss_acc += p.data[i] as f64 * gi as f64;
+                g.push(gi);
+            }
+            grads.push(HostTensor::new(p.shape.clone(), g)?);
+        }
+        Ok((loss_acc as f32, grads))
+    }
+
+    fn grad_many(
+        &self,
+        params: &[HostTensor],
+        batches: &[Batch],
+        threads: usize,
+    ) -> Result<Vec<GradOut>> {
+        parallel_ranks(threads, batches.len(), |i| self.grad(params, &batches[i]))
+    }
+
+    fn adam(
+        &self,
+        step: usize,
+        lr: f32,
+        params: &[HostTensor],
+        grads: &[HostTensor],
+        m: &[HostTensor],
+        v: &[HostTensor],
+    ) -> Result<AdamOut> {
+        host_adam(step, lr, params, grads, m, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::train::DataGen;
+
+    #[test]
+    fn synthetic_grads_are_dap_invariant_bitwise() {
+        let cfg = ModelConfig::tiny();
+        let params = SyntheticBackend::init_params(&cfg);
+        let batch = DataGen::new(cfg.clone(), 3).next_batch();
+        let (l1, g1) = SyntheticBackend::new(1).grad(&params, &batch).unwrap();
+        for dap in [2usize, 4, 8] {
+            let (l, g) = SyntheticBackend::new(dap).grad(&params, &batch).unwrap();
+            assert_eq!(l.to_bits(), l1.to_bits(), "dap={dap} loss");
+            assert_eq!(g, g1, "dap={dap} grads");
+        }
+    }
+
+    #[test]
+    fn synthetic_grad_many_is_thread_invariant() {
+        let cfg = ModelConfig::tiny();
+        let params = SyntheticBackend::init_params(&cfg);
+        let mut gen = DataGen::new(cfg.clone(), 4);
+        let batches: Vec<_> = (0..5).map(|_| gen.next_batch()).collect();
+        let be = SyntheticBackend::new(2);
+        let seq = be.grad_many(&params, &batches, 1).unwrap();
+        let thr = be.grad_many(&params, &batches, 4).unwrap();
+        assert_eq!(seq.len(), thr.len());
+        for ((ls, gs), (lt, gt)) in seq.iter().zip(thr.iter()) {
+            assert_eq!(ls.to_bits(), lt.to_bits());
+            assert_eq!(gs, gt);
+        }
+    }
+
+    #[test]
+    fn host_adam_moves_against_gradient() {
+        let p = vec![HostTensor::full(&[4], 1.0)];
+        let g = vec![HostTensor::full(&[4], 0.5)];
+        let m = vec![HostTensor::zeros(&[4])];
+        let v = vec![HostTensor::zeros(&[4])];
+        let (p2, m2, v2) = host_adam(1, 0.1, &p, &g, &m, &v).unwrap();
+        assert!(p2[0].data[0] < 1.0);
+        assert!(m2[0].data[0] > 0.0);
+        assert!(v2[0].data[0] > 0.0);
+        // deterministic
+        let (p3, _, _) = host_adam(1, 0.1, &p, &g, &m, &v).unwrap();
+        assert_eq!(p2, p3);
+    }
+
+    #[test]
+    fn host_adam_shape_mismatch_rejected() {
+        let p = vec![HostTensor::full(&[4], 1.0)];
+        let g = vec![HostTensor::full(&[2], 0.5)];
+        let m = vec![HostTensor::zeros(&[4])];
+        let v = vec![HostTensor::zeros(&[4])];
+        assert!(host_adam(1, 0.1, &p, &g, &m, &v).is_err());
+    }
+}

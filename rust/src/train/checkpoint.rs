@@ -1,6 +1,17 @@
-//! Checkpointing: parameters as raw little-endian f32 in canonical leaf
-//! order (the same layout as the exported `*_params.bin`), plus a small
-//! JSON sidecar with step + shapes for integrity checking on load.
+//! Checkpointing.
+//!
+//! **V2 (current)**: the *full* training state — parameters, Adam moments
+//! (m, v), optimizer step, schedule position (stage, step-in-stage), and
+//! per-rank data-generator cursors + RNG states — so a resumed run is
+//! bit-for-bit identical to an uninterrupted one. The V1 format persisted
+//! only parameters, which silently restarted Adam moments, the step
+//! count, warmup, and the data stream on resume.
+//!
+//! Layout: one raw little-endian f32 blob (`params | m | v`, canonical
+//! leaf order — the same layout as the exported `*_params.bin`, three
+//! times over) plus a JSON sidecar with `version`, shapes, and the
+//! schedule/data cursors. V1 checkpoints (no `version` key, params-only
+//! blob) remain loadable through [`load`].
 
 use crate::error::{Error, Result};
 use crate::json::Json;
@@ -8,16 +19,248 @@ use crate::tensor::HostTensor;
 use std::collections::BTreeMap;
 use std::path::Path;
 
-pub fn save(dir: &str, preset: &str, step: usize, params: &[HostTensor]) -> Result<String> {
-    std::fs::create_dir_all(dir)?;
-    let stem = format!("{preset}_step{step:06}");
-    let bin_path = Path::new(dir).join(format!("{stem}.bin"));
-    let mut bytes = Vec::new();
-    for p in params {
-        for v in &p.data {
+/// Current checkpoint format version.
+pub const FORMAT_VERSION: usize = 2;
+
+/// Everything a resumed run needs to continue bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    /// model preset the state belongs to
+    pub preset: String,
+    /// global optimizer step
+    pub step: usize,
+    /// schedule stage index
+    pub stage: usize,
+    /// optimizer steps taken inside the current stage
+    pub steps_in_stage: usize,
+    /// gradient-accumulation factor the run used — the per-rank cursor
+    /// stride is `dp × accum`, so resuming under a different accum would
+    /// silently misalign the data streams; restore() rejects a mismatch
+    pub accum: usize,
+    /// parameters (canonical leaf order)
+    pub params: Vec<HostTensor>,
+    /// Adam first moments
+    pub m: Vec<HostTensor>,
+    /// Adam second moments
+    pub v: Vec<HostTensor>,
+    /// per-DP-rank data-generator cursors (batches drawn incl. skips)
+    pub cursors: Vec<u64>,
+    /// per-DP-rank data-generator RNG states
+    pub rng_states: Vec<(u64, u64)>,
+}
+
+fn stem(preset: &str, step: usize) -> String {
+    format!("{preset}_step{step:06}")
+}
+
+fn write_tensors(bytes: &mut Vec<u8>, ts: &[HostTensor]) {
+    for t in ts {
+        for v in &t.data {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
     }
+}
+
+/// Save a full V2 checkpoint; returns the blob path.
+pub fn save_full(dir: &str, state: &TrainState) -> Result<String> {
+    std::fs::create_dir_all(dir)?;
+    let stem = stem(&state.preset, state.step);
+    if state.m.len() != state.params.len() || state.v.len() != state.params.len() {
+        return Err(Error::msg(format!(
+            "checkpoint {stem}: params/m/v leaf counts differ ({}/{}/{})",
+            state.params.len(),
+            state.m.len(),
+            state.v.len()
+        )));
+    }
+    if state.cursors.len() != state.rng_states.len() {
+        return Err(Error::msg(format!(
+            "checkpoint {stem}: {} cursors but {} rng states",
+            state.cursors.len(),
+            state.rng_states.len()
+        )));
+    }
+    let bin_path = Path::new(dir).join(format!("{stem}.bin"));
+    let mut bytes = Vec::new();
+    write_tensors(&mut bytes, &state.params);
+    write_tensors(&mut bytes, &state.m);
+    write_tensors(&mut bytes, &state.v);
+    std::fs::write(&bin_path, &bytes)?;
+
+    let mut meta = BTreeMap::new();
+    meta.insert("version".to_string(), Json::Num(FORMAT_VERSION as f64));
+    meta.insert("preset".to_string(), Json::Str(state.preset.clone()));
+    meta.insert("step".to_string(), Json::Num(state.step as f64));
+    meta.insert("stage".to_string(), Json::Num(state.stage as f64));
+    meta.insert(
+        "steps_in_stage".to_string(),
+        Json::Num(state.steps_in_stage as f64),
+    );
+    meta.insert("accum".to_string(), Json::Num(state.accum as f64));
+    meta.insert(
+        "shapes".to_string(),
+        Json::Arr(
+            state
+                .params
+                .iter()
+                .map(|p| {
+                    Json::Arr(p.shape.iter().map(|&d| Json::Num(d as f64)).collect())
+                })
+                .collect(),
+        ),
+    );
+    meta.insert(
+        "cursors".to_string(),
+        Json::Arr(state.cursors.iter().map(|&c| Json::Num(c as f64)).collect()),
+    );
+    // RNG states are full u64s — hex strings, since Json::Num is an f64
+    meta.insert(
+        "rng".to_string(),
+        Json::Arr(
+            state
+                .rng_states
+                .iter()
+                .map(|(s0, s1)| Json::Str(format!("{s0:016x}:{s1:016x}")))
+                .collect(),
+        ),
+    );
+    let meta_path = Path::new(dir).join(format!("{stem}.json"));
+    std::fs::write(&meta_path, Json::Obj(meta).to_string())?;
+    Ok(bin_path.display().to_string())
+}
+
+fn parse_shapes(meta: &Json) -> Result<Vec<Vec<usize>>> {
+    meta.get("shapes")?
+        .as_arr()?
+        .iter()
+        .map(|s| s.as_arr()?.iter().map(|d| d.as_usize()).collect())
+        .collect::<Result<_>>()
+}
+
+fn read_tensors(
+    bytes: &[u8],
+    shapes: &[Vec<usize>],
+    offset_elems: usize,
+) -> Result<Vec<HostTensor>> {
+    let mut out = Vec::with_capacity(shapes.len());
+    let mut off = offset_elems;
+    for shape in shapes {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = bytes[off * 4..(off + n) * 4]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        out.push(HostTensor::new(shape.clone(), data)?);
+        off += n;
+    }
+    Ok(out)
+}
+
+fn parse_rng(s: &str) -> Result<(u64, u64)> {
+    let (a, b) = s
+        .split_once(':')
+        .ok_or_else(|| Error::Json(format!("bad rng state '{s}'")))?;
+    let p = |h: &str| {
+        u64::from_str_radix(h, 16)
+            .map_err(|_| Error::Json(format!("bad rng state '{s}'")))
+    };
+    Ok((p(a)?, p(b)?))
+}
+
+/// Load a full V2 checkpoint (errors on V1 — params-only checkpoints
+/// cannot resume the optimizer; use [`load`] to read just parameters).
+pub fn load_full(dir: &str, preset: &str, step: usize) -> Result<TrainState> {
+    let stem = stem(preset, step);
+    let meta_src = std::fs::read_to_string(Path::new(dir).join(format!("{stem}.json")))?;
+    let meta = Json::parse(&meta_src)?;
+    let version = match meta.opt("version") {
+        Some(v) => v.as_usize()?,
+        None => 1,
+    };
+    if version != FORMAT_VERSION {
+        return Err(Error::msg(format!(
+            "checkpoint {stem} is format v{version}: params-only, cannot \
+             resume optimizer state (re-checkpoint with this build for \
+             full-state resume)"
+        )));
+    }
+    let shapes = parse_shapes(&meta)?;
+    let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+    let bytes = std::fs::read(Path::new(dir).join(format!("{stem}.bin")))?;
+    if bytes.len() != 3 * total * 4 {
+        return Err(Error::msg(format!(
+            "checkpoint {stem}: {} bytes, expected {} (params+m+v)",
+            bytes.len(),
+            3 * total * 4
+        )));
+    }
+    let params = read_tensors(&bytes, &shapes, 0)?;
+    let m = read_tensors(&bytes, &shapes, total)?;
+    let v = read_tensors(&bytes, &shapes, 2 * total)?;
+    let cursors: Vec<u64> = meta
+        .get("cursors")?
+        .as_arr()?
+        .iter()
+        .map(|c| c.as_usize().map(|u| u as u64))
+        .collect::<Result<_>>()?;
+    let rng_states: Vec<(u64, u64)> = meta
+        .get("rng")?
+        .as_arr()?
+        .iter()
+        .map(|s| parse_rng(s.as_str()?))
+        .collect::<Result<_>>()?;
+    if cursors.len() != rng_states.len() {
+        return Err(Error::msg(format!(
+            "checkpoint {stem}: {} cursors but {} rng states",
+            cursors.len(),
+            rng_states.len()
+        )));
+    }
+    Ok(TrainState {
+        preset: meta.get("preset")?.as_str()?.to_string(),
+        step: meta.get("step")?.as_usize()?,
+        stage: meta.get("stage")?.as_usize()?,
+        steps_in_stage: meta.get("steps_in_stage")?.as_usize()?,
+        accum: meta.get("accum")?.as_usize()?,
+        params,
+        m,
+        v,
+        cursors,
+        rng_states,
+    })
+}
+
+/// Highest checkpointed step for `preset` in `dir` (None when no
+/// checkpoint exists) — what `fastfold train --resume` picks up.
+pub fn latest_step(dir: &str, preset: &str) -> Result<Option<usize>> {
+    let prefix = format!("{preset}_step");
+    let mut best: Option<usize> = None;
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(None),
+    };
+    for entry in entries {
+        let name = entry?.file_name();
+        let name = name.to_string_lossy();
+        if let Some(rest) = name.strip_prefix(&prefix) {
+            if let Some(digits) = rest.strip_suffix(".json") {
+                if let Ok(step) = digits.parse::<usize>() {
+                    best = Some(best.map_or(step, |b| b.max(step)));
+                }
+            }
+        }
+    }
+    Ok(best)
+}
+
+/// Save a params-only V1 checkpoint (kept for export/interop; training
+/// uses [`save_full`]).
+pub fn save(dir: &str, preset: &str, step: usize, params: &[HostTensor]) -> Result<String> {
+    std::fs::create_dir_all(dir)?;
+    let stem = stem(preset, step);
+    let bin_path = Path::new(dir).join(format!("{stem}.bin"));
+    let mut bytes = Vec::new();
+    write_tensors(&mut bytes, params);
     std::fs::write(&bin_path, &bytes)?;
 
     let mut meta = BTreeMap::new();
@@ -39,37 +282,27 @@ pub fn save(dir: &str, preset: &str, step: usize, params: &[HostTensor]) -> Resu
     Ok(bin_path.display().to_string())
 }
 
+/// Load only the parameters (reads both V1 and V2 blobs).
 pub fn load(dir: &str, preset: &str, step: usize) -> Result<(usize, Vec<HostTensor>)> {
-    let stem = format!("{preset}_step{step:06}");
+    let stem = stem(preset, step);
     let meta_src = std::fs::read_to_string(Path::new(dir).join(format!("{stem}.json")))?;
     let meta = Json::parse(&meta_src)?;
     let got_step = meta.get("step")?.as_usize()?;
-    let shapes: Vec<Vec<usize>> = meta
-        .get("shapes")?
-        .as_arr()?
-        .iter()
-        .map(|s| s.as_arr()?.iter().map(|d| d.as_usize()).collect())
-        .collect::<Result<_>>()?;
+    let version = match meta.opt("version") {
+        Some(v) => v.as_usize()?,
+        None => 1,
+    };
+    let shapes = parse_shapes(&meta)?;
     let bytes = std::fs::read(Path::new(dir).join(format!("{stem}.bin")))?;
     let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
-    if bytes.len() != total * 4 {
+    let expect = if version >= 2 { 3 * total * 4 } else { total * 4 };
+    if bytes.len() != expect {
         return Err(Error::msg(format!(
-            "checkpoint {stem}: {} bytes, expected {}",
-            bytes.len(),
-            total * 4
+            "checkpoint {stem}: {} bytes, expected {expect}",
+            bytes.len()
         )));
     }
-    let mut params = Vec::with_capacity(shapes.len());
-    let mut off = 0usize;
-    for shape in shapes {
-        let n: usize = shape.iter().product();
-        let data: Vec<f32> = bytes[off * 4..(off + n) * 4]
-            .chunks_exact(4)
-            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-            .collect();
-        params.push(HostTensor::new(shape, data)?);
-        off += n;
-    }
+    let params = read_tensors(&bytes, &shapes, 0)?;
     Ok((got_step, params))
 }
 
@@ -77,23 +310,94 @@ pub fn load(dir: &str, preset: &str, step: usize) -> Result<(usize, Vec<HostTens
 mod tests {
     use super::*;
 
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join(name);
+        std::fs::remove_dir_all(&dir).ok();
+        dir.to_str().unwrap().to_string()
+    }
+
+    fn leaves(seed: f32) -> Vec<HostTensor> {
+        vec![
+            HostTensor::new(vec![2, 3], (0..6).map(|i| seed + i as f32).collect())
+                .unwrap(),
+            HostTensor::scalar(seed * 7.5),
+        ]
+    }
+
     #[test]
-    fn roundtrip() {
-        let dir = std::env::temp_dir().join("ff_ckpt_test");
-        let dir = dir.to_str().unwrap();
-        let params = vec![
-            HostTensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap(),
-            HostTensor::scalar(7.5),
-        ];
-        save(dir, "tiny", 42, &params).unwrap();
-        let (step, loaded) = load(dir, "tiny", 42).unwrap();
+    fn v1_roundtrip() {
+        let dir = tmp("ff_ckpt_v1");
+        let params = leaves(1.0);
+        save(&dir, "tiny", 42, &params).unwrap();
+        let (step, loaded) = load(&dir, "tiny", 42).unwrap();
         assert_eq!(step, 42);
         assert_eq!(loaded, params);
+        // V1 cannot resume optimizer state — loud error, not silent zeros
+        let err = load_full(&dir, "tiny", 42).unwrap_err();
+        assert!(err.to_string().contains("v1"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn v2_full_roundtrip() {
+        let dir = tmp("ff_ckpt_v2");
+        let state = TrainState {
+            preset: "tiny".into(),
+            step: 7,
+            stage: 1,
+            steps_in_stage: 3,
+            accum: 2,
+            params: leaves(1.0),
+            m: leaves(0.25),
+            v: leaves(0.5),
+            cursors: vec![12, 12],
+            rng_states: vec![(u64::MAX, 1), (0x1234_5678_9abc_def0, 42)],
+        };
+        save_full(&dir, &state).unwrap();
+        let got = load_full(&dir, "tiny", 7).unwrap();
+        assert_eq!(got.step, 7);
+        assert_eq!(got.stage, 1);
+        assert_eq!(got.steps_in_stage, 3);
+        assert_eq!(got.accum, 2);
+        assert_eq!(got.params, state.params);
+        assert_eq!(got.m, state.m);
+        assert_eq!(got.v, state.v);
+        assert_eq!(got.cursors, state.cursors);
+        assert_eq!(got.rng_states, state.rng_states);
+        // params-only reader sees just the parameter section
+        let (step, params) = load(&dir, "tiny", 7).unwrap();
+        assert_eq!(step, 7);
+        assert_eq!(params, state.params);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn latest_step_scans_dir() {
+        let dir = tmp("ff_ckpt_latest");
+        assert_eq!(latest_step(&dir, "tiny").unwrap(), None);
+        for step in [2usize, 10, 6] {
+            let state = TrainState {
+                preset: "tiny".into(),
+                step,
+                stage: 0,
+                steps_in_stage: step,
+                accum: 1,
+                params: leaves(1.0),
+                m: leaves(0.0),
+                v: leaves(0.0),
+                cursors: vec![step as u64],
+                rng_states: vec![(1, 2)],
+            };
+            save_full(&dir, &state).unwrap();
+        }
+        assert_eq!(latest_step(&dir, "tiny").unwrap(), Some(10));
+        assert_eq!(latest_step(&dir, "small").unwrap(), None);
         std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]
     fn missing_checkpoint_errors() {
         assert!(load("/nonexistent_dir_xyz", "tiny", 1).is_err());
+        assert!(load_full("/nonexistent_dir_xyz", "tiny", 1).is_err());
     }
 }

@@ -23,14 +23,52 @@ pub struct DataGen {
     rng: Rng,
     pub mask_frac: f64,
     pub mutation_rate: f64,
+    /// batches drawn so far (including [`DataGen::fast_forward`] skips) —
+    /// the per-rank cursor the V2 checkpoint records
+    cursor: u64,
 }
 
 impl DataGen {
     pub fn new(cfg: ModelConfig, seed: u64) -> Self {
-        DataGen { cfg, rng: Rng::new(seed), mask_frac: 0.15, mutation_rate: 0.15 }
+        DataGen { cfg, rng: Rng::new(seed), mask_frac: 0.15, mutation_rate: 0.15, cursor: 0 }
+    }
+
+    /// Rebuild a generator at an exact saved position (V2 checkpoint
+    /// resume): the RNG state is restored O(1), so the next batch is
+    /// bit-for-bit the one an uninterrupted run would have drawn.
+    pub fn from_state(cfg: ModelConfig, rng_state: (u64, u64), cursor: u64) -> Self {
+        DataGen {
+            cfg,
+            rng: Rng::from_state(rng_state),
+            mask_frac: 0.15,
+            mutation_rate: 0.15,
+            cursor,
+        }
+    }
+
+    /// Batches drawn so far (including skips).
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// Snapshot the underlying RNG state (paired with [`DataGen::cursor`]
+    /// in the V2 checkpoint).
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.state()
+    }
+
+    /// Draw and discard `k` batches. The hybrid trainer assigns one global
+    /// batch stream replica-major — rank r consumes global indices
+    /// `step·E + r·accum + a` (E = dp·accum) — so each rank skips the
+    /// other ranks' draws to stay on the shared stream.
+    pub fn fast_forward(&mut self, k: usize) {
+        for _ in 0..k {
+            self.next_batch();
+        }
     }
 
     pub fn next_batch(&mut self) -> Batch {
+        self.cursor += 1;
         let s = self.cfg.n_seq;
         let r = self.cfg.n_res;
         let aa = 20usize;
@@ -155,6 +193,32 @@ mod tests {
         let mut a = DataGen::new(ModelConfig::tiny(), 7);
         let mut b = DataGen::new(ModelConfig::tiny(), 7);
         assert_eq!(a.next_batch().msa_tokens.data, b.next_batch().msa_tokens.data);
+    }
+
+    #[test]
+    fn fast_forward_matches_discarded_draws() {
+        let mut a = DataGen::new(ModelConfig::tiny(), 8);
+        let mut b = DataGen::new(ModelConfig::tiny(), 8);
+        for _ in 0..3 {
+            a.next_batch();
+        }
+        b.fast_forward(3);
+        assert_eq!(a.cursor(), b.cursor());
+        assert_eq!(a.next_batch().msa_tokens.data, b.next_batch().msa_tokens.data);
+    }
+
+    #[test]
+    fn state_restore_resumes_stream_bitwise() {
+        let mut a = DataGen::new(ModelConfig::tiny(), 9);
+        for _ in 0..5 {
+            a.next_batch();
+        }
+        let mut b = DataGen::from_state(ModelConfig::tiny(), a.rng_state(), a.cursor());
+        let (ba, bb) = (a.next_batch(), b.next_batch());
+        assert_eq!(ba.msa_tokens.data, bb.msa_tokens.data);
+        assert_eq!(ba.dist_bins.data, bb.dist_bins.data);
+        assert_eq!(ba.msa_mask.data, bb.msa_mask.data);
+        assert_eq!(a.cursor(), b.cursor());
     }
 
     #[test]

@@ -1,15 +1,25 @@
-//! Training runtime: synthetic co-evolution data, the data-parallel
-//! trainer (grad_step executable → ring all-reduce → adam_update
-//! executable), LR schedule, gradient clipping, checkpointing.
+//! Training runtime: synthetic co-evolution data, the hybrid DP×DAP
+//! trainer (micro-batch grads → accumulation → ring all-reduce →
+//! adam_update), the [`ParallelPlan`] layout, the two-stage AlphaFold
+//! recipe + full LR schedule, and resumable full-state (V2)
+//! checkpointing.
 
+pub mod backend;
 pub mod checkpoint;
 pub mod data;
+pub mod plan;
+pub mod schedule;
 pub mod trainer;
 
+pub use backend::{SyntheticBackend, TrainBackend};
 pub use data::DataGen;
+pub use plan::ParallelPlan;
+pub use schedule::{LrSchedule, Stage, TrainSchedule};
 pub use trainer::{TrainReport, Trainer};
 
-/// Linear-warmup → constant LR schedule (AlphaFold's training recipe shape).
+/// Linear-warmup → constant LR — the degenerate (no stage-decay) case of
+/// [`LrSchedule`]; `LrSchedule::warmup_only(base_lr, warmup).at(step)`
+/// reproduces it exactly (cross-checked in `schedule::tests`).
 pub fn lr_at(step: usize, base_lr: f32, warmup: usize) -> f32 {
     if warmup == 0 || step >= warmup {
         base_lr

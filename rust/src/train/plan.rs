@@ -1,0 +1,215 @@
+//! `ParallelPlan` — the hybrid DP×DAP training layout (paper §V.B).
+//!
+//! The paper's 67-hour headline composes data parallelism *across*
+//! replicas with Dynamic Axial Parallelism *inside* each replica: a job on
+//! `dp × dap` GPUs runs `dp` model replicas, each sharded over a `dap`-way
+//! DAP group, with gradient accumulation giving an effective batch of
+//! `dp × accum` samples per optimizer step. The plan is resolved from
+//! CLI / TOML / env ([`crate::config::ParallelConfig`]) and validated
+//! against the model geometry and the [`crate::perfmodel`] memory model
+//! before any executable is loaded.
+
+use crate::config::{ModelConfig, ParallelConfig};
+use crate::error::{Error, Result};
+use crate::perfmodel::{GpuSpec, MemoryModel};
+
+/// Activation multiplier for a training step vs the inference working set:
+/// forward activations + backward cotangents + segment-checkpoint
+/// rematerialization headroom (the DAP tape rematerializes forward inside
+/// each segment VJP, so the multiplier is small and flat rather than
+/// `O(n_blocks)` — the §III.B bound this repo's backward avoids).
+pub const TRAIN_ACT_MULT: f64 = 3.0;
+
+/// How a training job is laid out across ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelPlan {
+    /// data-parallel replicas (each holds a full model copy)
+    pub dp: usize,
+    /// DAP degree inside each replica (1 = dense single-device replica)
+    pub dap: usize,
+    /// gradient-accumulation micro-batches per replica per optimizer step
+    pub accum: usize,
+    /// host rank-executor thread budget (resolved; >= 1)
+    pub threads: usize,
+}
+
+impl Default for ParallelPlan {
+    fn default() -> Self {
+        ParallelPlan { dp: 1, dap: 1, accum: 1, threads: 1 }
+    }
+}
+
+impl std::fmt::Display for ParallelPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "dp={} x dap={} ({} GPUs), accum={} (effective batch {}), threads={}",
+            self.dp,
+            self.dap,
+            self.gpus(),
+            self.accum,
+            self.effective_batch(),
+            self.threads
+        )
+    }
+}
+
+impl ParallelPlan {
+    /// A plan with explicit degrees and a sequential thread budget.
+    pub fn new(dp: usize, dap: usize, accum: usize) -> Self {
+        ParallelPlan { dp, dap, accum, threads: 1 }
+    }
+
+    /// Resolve a plan from the run config's `[parallel]` section (which
+    /// itself merges TOML, CLI flags, and the `FASTFOLD_THREADS` env).
+    pub fn from_config(p: &ParallelConfig) -> Self {
+        ParallelPlan {
+            dp: p.dp_size,
+            dap: p.dap_size,
+            accum: p.accum,
+            threads: p.resolve_threads(),
+        }
+    }
+
+    /// Builder-style thread override (0 = auto).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads =
+            if threads == 0 { crate::dap::default_threads() } else { threads };
+        self
+    }
+
+    /// Total rank budget the plan occupies.
+    pub fn gpus(&self) -> usize {
+        self.dp * self.dap
+    }
+
+    /// Samples consumed per optimizer step.
+    pub fn effective_batch(&self) -> usize {
+        self.dp * self.accum
+    }
+
+    /// Structural validation against the model geometry: every degree
+    /// >= 1, and `dap` must divide both axial dimensions (the DAP schedule
+    /// shards `n_seq` and `n_res` along axis 0).
+    pub fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        if self.dp == 0 || self.dap == 0 || self.accum == 0 || self.threads == 0 {
+            return Err(Error::Config(format!(
+                "parallel plan degrees must be >= 1 (got dp={}, dap={}, \
+                 accum={}, threads={})",
+                self.dp, self.dap, self.accum, self.threads
+            )));
+        }
+        if cfg.n_seq % self.dap != 0 || cfg.n_res % self.dap != 0 {
+            return Err(Error::Config(format!(
+                "dap={} does not divide (n_seq={}, n_res={}) of preset '{}'",
+                self.dap, cfg.n_seq, cfg.n_res, cfg.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// Per-device training memory this plan needs (bytes): framework
+    /// overhead + [`TRAIN_ACT_MULT`] × the DAP-sharded activation working
+    /// set + the optimizer state (params, grads, Adam m/v — replicated on
+    /// every rank; DAP shards activations, not parameters).
+    pub fn train_bytes_per_device(&self, cfg: &ModelConfig, mem: &MemoryModel) -> f64 {
+        let act = mem.inference_peak(cfg, self.dap, 1) - mem.fixed_overhead;
+        let opt_state = 4.0 * 4.0 * cfg.param_count() as f64; // p+g+m+v, f32
+        mem.fixed_overhead + TRAIN_ACT_MULT * act + opt_state
+    }
+
+    /// Memory-fit check for one training stage: Ok(per-device bytes) when
+    /// the stage fits `gpu`, `Err(SimOom)` otherwise — the same verdict
+    /// type the Table V inference boundary uses.
+    pub fn check_memory(
+        &self,
+        cfg: &ModelConfig,
+        mem: &MemoryModel,
+        gpu: &GpuSpec,
+    ) -> Result<f64> {
+        let need = self.train_bytes_per_device(cfg, mem);
+        if need > gpu.memory {
+            return Err(Error::SimOom { need_gb: need / 1e9, cap_gb: gpu.memory / 1e9 });
+        }
+        Ok(need)
+    }
+
+    /// Full resolution: structure + rank budget + memory fit for every
+    /// stage config. This is what `fastfold train` / `fastfold scale` run
+    /// before touching artifacts.
+    pub fn validate_for(
+        &self,
+        stages: &[ModelConfig],
+        mem: &MemoryModel,
+        gpu: &GpuSpec,
+        max_gpus: usize,
+    ) -> Result<()> {
+        if self.gpus() > max_gpus {
+            return Err(Error::Config(format!(
+                "plan needs {} ranks (dp={} x dap={}), budget is {max_gpus}",
+                self.gpus(),
+                self.dp,
+                self.dap
+            )));
+        }
+        for cfg in stages {
+            self.validate(cfg)?;
+            self.check_memory(cfg, mem, gpu)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let p = ParallelPlan::new(128, 4, 2);
+        assert_eq!(p.gpus(), 512);
+        assert_eq!(p.effective_batch(), 256);
+        assert!(p.to_string().contains("512 GPUs"));
+    }
+
+    #[test]
+    fn rejects_zero_and_nondividing_dap() {
+        let cfg = ModelConfig::tiny(); // n_seq=8, n_res=16
+        assert!(ParallelPlan::new(0, 1, 1).validate(&cfg).is_err());
+        assert!(ParallelPlan::new(1, 1, 0).validate(&cfg).is_err());
+        assert!(ParallelPlan::new(1, 3, 1).validate(&cfg).is_err());
+        assert!(ParallelPlan::new(2, 4, 2).validate(&cfg).is_ok());
+    }
+
+    #[test]
+    fn memory_need_shrinks_with_dap() {
+        let mem = MemoryModel::default();
+        let cfg = ModelConfig::finetune();
+        let n1 = ParallelPlan::new(1, 1, 1).train_bytes_per_device(&cfg, &mem);
+        let n4 = ParallelPlan::new(1, 4, 1).train_bytes_per_device(&cfg, &mem);
+        assert!(n4 < n1, "dap sharding must shrink the working set: {n4} vs {n1}");
+    }
+
+    #[test]
+    fn oom_verdict_on_small_device() {
+        let mem = MemoryModel::default();
+        let cfg = ModelConfig::finetune();
+        let mut small = GpuSpec::a100_40g();
+        small.memory = 4.0e9;
+        let err = ParallelPlan::new(1, 1, 1).check_memory(&cfg, &mem, &small);
+        assert!(matches!(err, Err(Error::SimOom { .. })), "{err:?}");
+        // the paper's fix: shard with DAP until the stage fits a real A100
+        let a100 = GpuSpec::a100_40g();
+        assert!(ParallelPlan::new(1, 4, 1).check_memory(&cfg, &mem, &a100).is_ok());
+    }
+
+    #[test]
+    fn rank_budget_enforced() {
+        let mem = MemoryModel::default();
+        let gpu = GpuSpec::a100_40g();
+        let stages = [ModelConfig::initial_training(), ModelConfig::finetune()];
+        let plan = ParallelPlan::new(128, 4, 1);
+        assert!(plan.validate_for(&stages, &mem, &gpu, 512).is_ok());
+        assert!(plan.validate_for(&stages, &mem, &gpu, 256).is_err());
+    }
+}

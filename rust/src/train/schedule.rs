@@ -1,0 +1,224 @@
+//! The two-stage AlphaFold training recipe (paper Table I / §V.B) and the
+//! full learning-rate shape.
+//!
+//! AlphaFold trains in two stages: **initial training** at crop
+//! (N_r=256, N_s=128) for ~10M samples, then **fine-tuning** at
+//! (N_r=384, N_s=512) for ~1.5M samples at a lower LR. Within a stage the
+//! LR shape is linear-warmup → constant → a multiplicative stage decay
+//! ([`LrSchedule`]); the old `lr_at` warmup-only helper is the degenerate
+//! case with no decay.
+
+use crate::config::{ModelConfig, TrainConfig};
+use crate::error::{Error, Result};
+
+/// Warmup → constant → stage-decay learning-rate shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LrSchedule {
+    /// plateau LR after warmup
+    pub base_lr: f32,
+    /// linear warmup length in steps (0 = start at `base_lr`)
+    pub warmup_steps: usize,
+    /// step at which the stage decay kicks in (None = never)
+    pub decay_after: Option<usize>,
+    /// multiplicative factor applied from `decay_after` on (AlphaFold
+    /// drops to 0.95× for the tail of initial training)
+    pub decay_factor: f32,
+}
+
+impl LrSchedule {
+    /// Warmup-only schedule — exactly the repo's original `lr_at` shape.
+    pub fn warmup_only(base_lr: f32, warmup_steps: usize) -> Self {
+        LrSchedule { base_lr, warmup_steps, decay_after: None, decay_factor: 1.0 }
+    }
+
+    /// Schedule described by a [`TrainConfig`] (its `lr_decay_after` /
+    /// `lr_decay_factor` knobs; `None` decay when unset).
+    pub fn from_train_config(cfg: &TrainConfig) -> Self {
+        LrSchedule {
+            base_lr: cfg.lr,
+            warmup_steps: cfg.warmup_steps,
+            decay_after: cfg.lr_decay_after,
+            decay_factor: cfg.lr_decay_factor,
+        }
+    }
+
+    /// LR applied at (0-indexed) `step` within the stage.
+    pub fn at(&self, step: usize) -> f32 {
+        let lr = if self.warmup_steps == 0 || step >= self.warmup_steps {
+            self.base_lr
+        } else {
+            self.base_lr * (step + 1) as f32 / self.warmup_steps as f32
+        };
+        match self.decay_after {
+            Some(d) if step >= d => lr * self.decay_factor,
+            _ => lr,
+        }
+    }
+}
+
+/// One stage of the recipe: a model preset (crop geometry) trained for a
+/// fixed number of optimizer steps under its own LR schedule.
+#[derive(Clone, Debug)]
+pub struct Stage {
+    /// stage label ("initial" / "finetune")
+    pub name: String,
+    /// model preset the stage runs (`ModelConfig::preset` name)
+    pub preset: String,
+    /// optimizer steps in this stage
+    pub steps: usize,
+    /// LR shape within the stage
+    pub lr: LrSchedule,
+}
+
+/// An ordered list of stages — the unit `Trainer::run_schedule` executes
+/// and the V2 checkpoint indexes into (`stage`, `steps_in_stage`).
+#[derive(Clone, Debug)]
+pub struct TrainSchedule {
+    /// stages in execution order (never empty)
+    pub stages: Vec<Stage>,
+}
+
+impl TrainSchedule {
+    /// A single-stage schedule over `preset` with the config's LR knobs —
+    /// what plain `fastfold train` runs.
+    pub fn single(preset: &str, cfg: &TrainConfig) -> Self {
+        TrainSchedule {
+            stages: vec![Stage {
+                name: "train".into(),
+                preset: preset.to_string(),
+                steps: cfg.steps,
+                lr: LrSchedule::from_train_config(cfg),
+            }],
+        }
+    }
+
+    /// The paper's two-stage recipe at a given global batch size:
+    /// initial training (10M samples, LR 1e-3, 1k-step warmup, 0.95×
+    /// stage decay over the final 7.5%) then fine-tuning (1.5M samples,
+    /// LR 5e-4, no warmup).
+    pub fn alphafold(global_batch: usize) -> Self {
+        let gb = global_batch.max(1);
+        let init_steps = 10_000_000 / gb;
+        let ft_steps = 1_500_000 / gb;
+        TrainSchedule {
+            stages: vec![
+                Stage {
+                    name: "initial".into(),
+                    preset: "initial_training".into(),
+                    steps: init_steps,
+                    lr: LrSchedule {
+                        base_lr: 1e-3,
+                        warmup_steps: 1000.min(init_steps),
+                        decay_after: Some(init_steps - init_steps / 13),
+                        decay_factor: 0.95,
+                    },
+                },
+                Stage {
+                    name: "finetune".into(),
+                    preset: "finetune".into(),
+                    steps: ft_steps,
+                    lr: LrSchedule::warmup_only(5e-4, 0),
+                },
+            ],
+        }
+    }
+
+    /// Total optimizer steps across all stages.
+    pub fn total_steps(&self) -> usize {
+        self.stages.iter().map(|s| s.steps).sum()
+    }
+
+    /// Model configs of every stage, in order (for plan validation).
+    pub fn stage_configs(&self) -> Result<Vec<ModelConfig>> {
+        self.stages.iter().map(|s| ModelConfig::preset(&s.preset)).collect()
+    }
+
+    /// Locate a global step: (stage index, step within that stage).
+    /// `global_step == total_steps()` maps past the final stage end.
+    pub fn stage_of(&self, global_step: usize) -> Result<(usize, usize)> {
+        let mut rem = global_step;
+        for (i, s) in self.stages.iter().enumerate() {
+            if rem < s.steps {
+                return Ok((i, rem));
+            }
+            rem -= s.steps;
+        }
+        Err(Error::Config(format!(
+            "global step {global_step} is past the schedule's {} total steps",
+            self.total_steps()
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_only_matches_legacy_lr_at() {
+        let s = LrSchedule::warmup_only(1.0, 10);
+        for step in 0..25 {
+            assert_eq!(s.at(step), super::super::lr_at(step, 1.0, 10), "step {step}");
+        }
+        // warmup = 0 is flat from step 0
+        assert_eq!(LrSchedule::warmup_only(0.5, 0).at(0), 0.5);
+    }
+
+    #[test]
+    fn full_shape_warmup_constant_decay() {
+        let s = LrSchedule {
+            base_lr: 1.0,
+            warmup_steps: 4,
+            decay_after: Some(10),
+            decay_factor: 0.5,
+        };
+        assert!((s.at(0) - 0.25).abs() < 1e-6);
+        assert!((s.at(3) - 1.0).abs() < 1e-6);
+        assert_eq!(s.at(4), 1.0);
+        assert_eq!(s.at(9), 1.0);
+        assert_eq!(s.at(10), 0.5);
+        assert_eq!(s.at(100), 0.5);
+    }
+
+    #[test]
+    fn alphafold_recipe_shape() {
+        let sched = TrainSchedule::alphafold(128);
+        assert_eq!(sched.stages.len(), 2);
+        assert_eq!(sched.stages[0].preset, "initial_training");
+        assert_eq!(sched.stages[1].preset, "finetune");
+        assert_eq!(sched.stages[0].steps, 78_125);
+        assert_eq!(sched.stages[1].steps, 11_718);
+        assert!(sched.stages[1].lr.base_lr < sched.stages[0].lr.base_lr);
+        // decay applies only in the initial stage's tail
+        let lr = &sched.stages[0].lr;
+        assert_eq!(lr.at(50_000), 1e-3);
+        assert!(lr.at(78_000) < 1e-3);
+        sched.stage_configs().unwrap();
+    }
+
+    #[test]
+    fn stage_of_walks_boundaries() {
+        let sched = TrainSchedule {
+            stages: vec![
+                Stage {
+                    name: "a".into(),
+                    preset: "tiny".into(),
+                    steps: 3,
+                    lr: LrSchedule::warmup_only(1.0, 0),
+                },
+                Stage {
+                    name: "b".into(),
+                    preset: "tiny".into(),
+                    steps: 2,
+                    lr: LrSchedule::warmup_only(0.5, 0),
+                },
+            ],
+        };
+        assert_eq!(sched.total_steps(), 5);
+        assert_eq!(sched.stage_of(0).unwrap(), (0, 0));
+        assert_eq!(sched.stage_of(2).unwrap(), (0, 2));
+        assert_eq!(sched.stage_of(3).unwrap(), (1, 0));
+        assert_eq!(sched.stage_of(4).unwrap(), (1, 1));
+        assert!(sched.stage_of(5).is_err());
+    }
+}

@@ -1,157 +1,290 @@
-//! Data-parallel trainer.
+//! Hybrid DP×DAP trainer (paper §V.B).
 //!
-//! Per step, per DP rank: `grad_step` executable (loss + grads) on that
-//! rank's batch → host ring all-reduce of the gradient leaves (the exact
-//! algorithm the Fig 11 cost model prices) → gradient clip → `adam_update`
-//! executable. Parameters and optimizer state live as host tensors between
-//! steps (the coordinator owns state; PJRT owns math).
+//! One optimizer step under a [`ParallelPlan`]:
 //!
-//! The per-rank forward/backward fans out over `threads` host worker
-//! threads ([`crate::dap::executor::parallel_ranks`]); batches are drawn
-//! sequentially first and losses/gradients are folded back in rank order,
-//! so the threaded step is bit-for-bit identical to `threads = 1`.
+//! 1. **Data routing** — one logical global batch stream, assigned
+//!    replica-major: at step `s`, replica `r`'s micro-batch `a` is global
+//!    index `s·E + r·accum + a` (E = dp·accum). Every replica's generator
+//!    shares the seed and skips the other replicas' draws, so the stream
+//!    a run consumes is a pure function of the *effective* batch — the
+//!    foundation of the hybrid ≡ sequential equivalence suite.
+//! 2. **Replica forward/backward** — through the [`TrainBackend`]: the
+//!    monolithic `grad_step` executable at `dap = 1`, the DAP
+//!    coordinator + tape VJP at `dap > 1` (sharded activations, per-leaf
+//!    grads summed over the DAP group). Dense micro-batches fan out over
+//!    the rank-executor threads; results fold in batch order
+//!    (bit-for-bit vs `threads = 1`).
+//! 3. **Accumulation + DP reduction** — micro-grads accumulate per
+//!    replica in micro order, cross replicas via the host ring
+//!    all-reduce (the Fig 11 algorithm; critical-path rank accounted in
+//!    `wire_dp_bytes`, DAP collectives separately in `wire_dap_bytes`),
+//!    then mean over the effective batch, global-norm clip, and the Adam
+//!    executable.
+//!
+//! [`Trainer::run_schedule`] drives the two-stage AlphaFold recipe
+//! ([`TrainSchedule`]); V2 checkpoints persist params + Adam moments +
+//! step + schedule position + per-rank data cursors, so
+//! [`Trainer::restore`] resumes bit-for-bit.
 
+use super::backend::{build_backend, TrainBackend};
+use super::checkpoint;
 use super::data::{Batch, DataGen};
-use super::lr_at;
+use super::plan::ParallelPlan;
+use super::schedule::{LrSchedule, Stage, TrainSchedule};
 use crate::comm::ring::ring_all_reduce;
-use crate::config::TrainConfig;
-use crate::dap::executor::{default_threads, parallel_ranks};
+use crate::config::{ModelConfig, TrainConfig};
+use crate::dap::executor::default_threads;
 use crate::error::{Error, Result};
-use crate::runtime::{Runtime, Value};
+use crate::runtime::Runtime;
 use crate::tensor::HostTensor;
-use std::sync::Arc;
 use std::time::Instant;
 
+/// The training coordinator: owns parameters, optimizer state, the data
+/// generators, and a [`TrainBackend`].
 pub struct Trainer<'rt> {
-    rt: &'rt Runtime,
+    rt: Option<&'rt Runtime>,
     preset: String,
-    pub dp: usize,
-    /// rank-executor thread budget (1 = sequential; default:
-    /// [`default_threads`])
-    pub threads: usize,
+    model_cfg: ModelConfig,
+    /// the hybrid layout this trainer executes
+    pub plan: ParallelPlan,
+    /// Duality-Async overlap for the DAP backend
+    pub overlap: bool,
+    /// model parameters (canonical leaf order)
     pub params: Vec<HostTensor>,
+    /// Adam first moments
     pub m: Vec<HostTensor>,
+    /// Adam second moments
     pub v: Vec<HostTensor>,
+    /// global optimizer step (1-based after the first step)
     pub step: usize,
+    /// current schedule stage index
+    pub stage: usize,
+    /// optimizer steps taken inside the current stage
+    pub steps_in_stage: usize,
+    /// run configuration (steps, LR knobs, checkpointing, seed)
     pub cfg: TrainConfig,
-    grad_exe: Arc<crate::runtime::Executable>,
-    adam_exe: Arc<crate::runtime::Executable>,
+    /// LR shape of the current stage
+    pub lr_sched: LrSchedule,
+    /// LR actually applied by the most recent step
+    pub last_lr: f32,
+    backend: Box<dyn TrainBackend + 'rt>,
     gens: Vec<DataGen>,
+    /// (step, loss) pairs
     pub history: Vec<(usize, f32)>,
-    pub wire_bytes: usize,
+    /// DP ring all-reduce wire bytes (critical-path rank), cumulative
+    pub wire_dp_bytes: usize,
+    /// DAP (model-parallel) collective wire bytes, cumulative
+    pub wire_dap_bytes: usize,
 }
 
+/// What one `run`/`run_schedule` call did.
 #[derive(Clone, Debug)]
 pub struct TrainReport {
+    /// optimizer steps actually executed by this call (not `cfg.steps` —
+    /// a resumed or staged run executes the remainder)
     pub steps: usize,
+    /// loss at the last executed step
     pub final_loss: f32,
+    /// loss at the first executed step
     pub initial_loss: f32,
+    /// wall seconds
     pub seconds: f64,
+    /// executed steps per wall second
     pub steps_per_sec: f64,
+    /// DP ring wire bytes moved by this call
     pub wire_bytes: usize,
+    /// DAP collective wire bytes moved by this call
+    pub wire_dap_bytes: usize,
     /// rank-executor threads the run used (1 = sequential)
     pub threads: usize,
+    /// LR applied at the last executed step
+    pub final_lr: f32,
+}
+
+/// Same-seed generators on one global stream: rank r starts offset by
+/// `r · accum` draws (its slice of step 0's effective batch).
+fn make_gens(cfg: &ModelConfig, seed: u64, dp: usize, accum: usize) -> Vec<DataGen> {
+    (0..dp)
+        .map(|r| {
+            let mut g = DataGen::new(cfg.clone(), seed);
+            g.fast_forward(r * accum);
+            g
+        })
+        .collect()
 }
 
 impl<'rt> Trainer<'rt> {
+    /// Data-parallel trainer (dap = 1, no accumulation) — the legacy
+    /// constructor, kept as the `ParallelPlan { dp, 1, 1 }` special case.
     pub fn new(rt: &'rt Runtime, preset: &str, dp: usize, cfg: TrainConfig) -> Result<Self> {
-        if dp == 0 {
-            return Err(Error::Config("dp must be >= 1".into()));
-        }
+        let plan = ParallelPlan { dp, dap: 1, accum: 1, threads: default_threads() };
+        Self::hybrid(rt, preset, plan, true, cfg)
+    }
+
+    /// Hybrid DP×DAP trainer under an explicit [`ParallelPlan`].
+    /// `overlap` enables Duality-Async comm deferral in the DAP backend.
+    pub fn hybrid(
+        rt: &'rt Runtime,
+        preset: &str,
+        plan: ParallelPlan,
+        overlap: bool,
+        cfg: TrainConfig,
+    ) -> Result<Self> {
+        let model_cfg = ModelConfig::preset(preset)?;
+        plan.validate(&model_cfg)?;
         let params = rt.manifest.load_params(preset)?;
+        let backend = build_backend(rt, preset, &plan, overlap)?;
+        Ok(Self::assemble(Some(rt), preset, model_cfg, params, backend, plan, overlap, cfg))
+    }
+
+    /// Construction seam for artifact-free runs: an explicit backend and
+    /// initial parameters (the hybrid equivalence suite and the CLI
+    /// `--backend synthetic` smoke path). No runtime: stages cannot
+    /// switch presets.
+    pub fn with_backend(
+        preset: &str,
+        model_cfg: ModelConfig,
+        params: Vec<HostTensor>,
+        backend: Box<dyn TrainBackend + 'rt>,
+        plan: ParallelPlan,
+        cfg: TrainConfig,
+    ) -> Result<Self> {
+        plan.validate(&model_cfg)?;
+        Ok(Self::assemble(None, preset, model_cfg, params, backend, plan, true, cfg))
+    }
+
+    #[allow(clippy::too_many_arguments)] // private assembly point
+    fn assemble(
+        rt: Option<&'rt Runtime>,
+        preset: &str,
+        model_cfg: ModelConfig,
+        params: Vec<HostTensor>,
+        backend: Box<dyn TrainBackend + 'rt>,
+        plan: ParallelPlan,
+        overlap: bool,
+        cfg: TrainConfig,
+    ) -> Self {
         let zeros: Vec<HostTensor> =
             params.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
-        let grad_exe = rt.load(&format!("{preset}/grad_step"))?;
-        let adam_exe = rt.load(&format!("{preset}/adam_update"))?;
-        let model_cfg = crate::config::ModelConfig::preset(preset)?;
-        let gens = (0..dp)
-            .map(|r| DataGen::new(model_cfg.clone(), cfg.seed.wrapping_add(1000 * r as u64)))
-            .collect();
-        Ok(Trainer {
+        let gens = make_gens(&model_cfg, cfg.seed, plan.dp, plan.accum);
+        let lr_sched = LrSchedule::from_train_config(&cfg);
+        Trainer {
             rt,
             preset: preset.to_string(),
-            dp,
-            threads: default_threads(),
+            model_cfg,
+            plan,
+            overlap,
             m: zeros.clone(),
             v: zeros,
             params,
             step: 0,
+            stage: 0,
+            steps_in_stage: 0,
             cfg,
-            grad_exe,
-            adam_exe,
+            lr_sched,
+            last_lr: 0.0,
+            backend,
             gens,
             history: Vec::new(),
-            wire_bytes: 0,
-        })
+            wire_dp_bytes: 0,
+            wire_dap_bytes: 0,
+        }
     }
 
     /// Builder-style override of the rank-executor thread budget
     /// (`--threads` on the CLI): 1 restores the sequential path, 0 means
-    /// auto ([`default_threads`]), consistent with the CLI/TOML/env knobs.
+    /// auto ([`default_threads`]). For `dap > 1` set the budget on the
+    /// plan *before* construction — the coordinator binds it then.
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = if threads == 0 { default_threads() } else { threads };
+        self.plan = self.plan.with_threads(threads);
         self
     }
 
-    fn batch_values(b: &Batch) -> Vec<Value> {
-        // canonical batch flatten order: dict keys sorted by jax =
-        // dist_bins, msa_labels, msa_mask, msa_tokens
-        vec![
-            b.dist_bins.clone().into(),
-            b.msa_labels.clone().into(),
-            b.msa_mask.clone().into(),
-            b.msa_tokens.clone().into(),
-        ]
+    /// The preset this trainer currently runs.
+    pub fn preset(&self) -> &str {
+        &self.preset
     }
 
-    /// One optimizer step over `dp` rank-local batches. Returns mean loss.
+    /// The backend's display name ("dense", "dap4", "synthetic").
+    pub fn backend_name(&self) -> String {
+        self.backend.name()
+    }
+
+    /// Per-rank data cursors (batches drawn incl. skips).
+    pub fn cursors(&self) -> Vec<u64> {
+        self.gens.iter().map(|g| g.cursor()).collect()
+    }
+
+    /// One optimizer step over the effective batch (dp × accum
+    /// micro-batches). Returns the mean micro-loss.
     pub fn train_step(&mut self) -> Result<f32> {
+        let (dp, accum) = (self.plan.dp, self.plan.accum);
+        let e = dp * accum;
         let n_leaves = self.params.len();
 
-        // draw every rank's batch sequentially (the data stream is the
-        // same whatever the thread budget), then fan the per-rank
-        // forward/backward out over worker threads
-        let batches: Vec<Batch> =
-            (0..self.dp).map(|r| self.gens[r].next_batch()).collect();
-        let params = &self.params;
-        let grad_exe = &self.grad_exe;
-        let per_rank: Vec<(f32, Vec<HostTensor>)> =
-            parallel_ranks(self.threads, self.dp, |r| {
-                let mut args: Vec<Value> =
-                    params.iter().cloned().map(Value::F32).collect();
-                args.extend(Self::batch_values(&batches[r]));
-                let out = grad_exe.run(&args)?;
-                // outputs: loss scalar, then grads in canonical order
-                Ok((out[0].data[0], out[1..].to_vec()))
-            })?;
-        // fold losses in rank order (bit-for-bit vs the sequential loop)
+        // draw the step's effective batch, replica-major on the global
+        // stream; each rank then skips the other ranks' next-step slice.
+        // The skip regenerates (dp-1)·accum discarded batches per rank —
+        // accepted: it is what a real per-rank loader does (each rank owns
+        // an independent, individually-resumable stream, which is what the
+        // checkpoint's per-rank cursors capture), and synthetic data gen
+        // is noise next to a PJRT forward/backward at any dp this
+        // single-process simulator runs.
+        let mut batches: Vec<Batch> = Vec::with_capacity(e);
+        for gen in self.gens.iter_mut() {
+            for _ in 0..accum {
+                batches.push(gen.next_batch());
+            }
+            gen.fast_forward((dp - 1) * accum);
+        }
+
+        let results =
+            self.backend.grad_many(&self.params, &batches, self.plan.threads)?;
+        if results.len() != e {
+            return Err(Error::msg(format!(
+                "backend returned {} micro-grads for {e} micro-batches",
+                results.len()
+            )));
+        }
+        self.wire_dap_bytes += self.backend.take_mp_wire_bytes();
+
+        // fold losses in global micro order (replica-major = stream order)
         let mut loss_acc = 0.0f32;
-        for (loss, _) in &per_rank {
-            loss_acc += *loss;
+        for (l, _) in &results {
+            loss_acc += *l;
         }
         let leaf_shapes: Vec<Vec<usize>> =
-            per_rank[0].1.iter().map(|g| g.shape.clone()).collect();
+            results[0].1.iter().map(|g| g.shape.clone()).collect();
 
-        // ring all-reduce + average
-        let grads: Vec<HostTensor> = if self.dp == 1 {
-            per_rank.into_iter().next().map(|(_, g)| g).ok_or_else(|| Error::msg("no grads"))?
-        } else {
-            // flatten for the ring
-            let per_rank_grads: Vec<Vec<f32>> = per_rank
-                .iter()
-                .map(|(_, grads)| {
-                    grads.iter().flat_map(|g| g.data.iter().copied()).collect()
-                })
-                .collect();
-            let (reduced, wire) = ring_all_reduce(per_rank_grads)?;
-            // account the critical-path rank (exact per-rank volumes can
-            // differ at non-divisible lengths; see comm::ring)
-            self.wire_bytes += wire.iter().copied().max().unwrap_or(0);
-            let mut flat = reduced.into_iter().next().unwrap();
-            let inv = 1.0 / self.dp as f32;
-            for x in flat.iter_mut() {
-                *x *= inv;
+        // replica-local accumulation in micro order
+        let mut it = results.into_iter();
+        let mut per_replica: Vec<Vec<HostTensor>> = Vec::with_capacity(dp);
+        for _r in 0..dp {
+            let (_, mut acc) = it.next().ok_or_else(|| Error::msg("no grads"))?;
+            for _a in 1..accum {
+                let (_, g) = it.next().ok_or_else(|| Error::msg("no grads"))?;
+                for (a, b) in acc.iter_mut().zip(g.iter()) {
+                    a.add_assign(b)?;
+                }
             }
+            per_replica.push(acc);
+        }
+
+        // DP reduction: the host ring all-reduce (the exact algorithm the
+        // Fig 11 cost model prices), critical-path rank accounted
+        let mut grads: Vec<HostTensor> = if dp == 1 {
+            per_replica.pop().ok_or_else(|| Error::msg("no grads"))?
+        } else {
+            let per_rank_flat: Vec<Vec<f32>> = per_replica
+                .iter()
+                .map(|gs| gs.iter().flat_map(|g| g.data.iter().copied()).collect())
+                .collect();
+            let (reduced, wire) = ring_all_reduce(per_rank_flat)?;
+            self.wire_dp_bytes += wire.iter().copied().max().unwrap_or(0);
+            let flat = reduced
+                .into_iter()
+                .next()
+                .ok_or_else(|| Error::msg("empty ring result"))?;
             let mut out = Vec::with_capacity(n_leaves);
             let mut off = 0usize;
             for shape in &leaf_shapes {
@@ -162,68 +295,211 @@ impl<'rt> Trainer<'rt> {
             out
         };
 
+        // mean over the effective batch
+        let inv = 1.0 / e as f32;
+        if e > 1 {
+            for g in grads.iter_mut() {
+                g.scale(inv);
+            }
+        }
+
         // global-norm gradient clip (host-side; tiny vs step cost)
         let grads = match self.cfg.grad_clip {
             Some(clip) => clip_by_global_norm(grads, clip),
             None => grads,
         };
 
-        // adam update via HLO
+        // the LR actually applied this step (stage-local schedule)
+        let lr = self.lr_sched.at(self.steps_in_stage);
         self.step += 1;
-        let lr = lr_at(self.step - 1, self.cfg.lr, self.cfg.warmup_steps);
-        let mut args: Vec<Value> = Vec::with_capacity(4 * n_leaves + 2);
-        args.extend(self.params.iter().cloned().map(Value::F32));
-        args.extend(grads.into_iter().map(Value::F32));
-        args.extend(self.m.iter().cloned().map(Value::F32));
-        args.extend(self.v.iter().cloned().map(Value::F32));
-        args.push(Value::F32(HostTensor::scalar(self.step as f32)));
-        args.push(Value::F32(HostTensor::scalar(lr)));
-        let out = self.adam_exe.run(&args)?;
-        let (p2, rest) = out.split_at(n_leaves);
-        let (m2, v2) = rest.split_at(n_leaves);
-        self.params = p2.to_vec();
-        self.m = m2.to_vec();
-        self.v = v2.to_vec();
+        self.steps_in_stage += 1;
+        let (p2, m2, v2) =
+            self.backend
+                .adam(self.step, lr, &self.params, &grads, &self.m, &self.v)?;
+        self.params = p2;
+        self.m = m2;
+        self.v = v2;
+        self.last_lr = lr;
 
-        let loss = loss_acc / self.dp as f32;
+        let loss = loss_acc / e as f32;
         self.history.push((self.step, loss));
         Ok(loss)
     }
 
-    /// Run the configured number of steps; log + checkpoint per config.
+    /// Snapshot the full training state (V2 checkpoint payload).
+    pub fn state(&self) -> checkpoint::TrainState {
+        checkpoint::TrainState {
+            preset: self.preset.clone(),
+            step: self.step,
+            stage: self.stage,
+            steps_in_stage: self.steps_in_stage,
+            accum: self.plan.accum,
+            params: self.params.clone(),
+            m: self.m.clone(),
+            v: self.v.clone(),
+            cursors: self.cursors(),
+            rng_states: self.gens.iter().map(|g| g.rng_state()).collect(),
+        }
+    }
+
+    /// Restore a V2 checkpoint into this trainer: params, Adam moments,
+    /// step, schedule position, and the per-rank data generators — the
+    /// next step is bit-for-bit the one an uninterrupted run would take.
+    pub fn restore(&mut self, state: checkpoint::TrainState) -> Result<()> {
+        if state.preset != self.preset {
+            return Err(Error::Config(format!(
+                "checkpoint is for preset '{}', trainer runs '{}'",
+                state.preset, self.preset
+            )));
+        }
+        if state.params.len() != self.params.len() {
+            return Err(Error::Config(format!(
+                "checkpoint has {} leaves, model has {}",
+                state.params.len(),
+                self.params.len()
+            )));
+        }
+        for (a, b) in state.params.iter().zip(self.params.iter()) {
+            if a.shape != b.shape {
+                return Err(Error::Config(format!(
+                    "checkpoint leaf shape {:?} != model {:?}",
+                    a.shape, b.shape
+                )));
+            }
+        }
+        if state.cursors.len() != self.plan.dp {
+            return Err(Error::Config(format!(
+                "checkpoint has {} data-rank cursors, plan has dp={}",
+                state.cursors.len(),
+                self.plan.dp
+            )));
+        }
+        if state.accum != self.plan.accum {
+            return Err(Error::Config(format!(
+                "checkpoint was written at accum={}, plan has accum={} — \
+                 the per-rank cursor stride (dp × accum) would misalign \
+                 the data streams",
+                state.accum, self.plan.accum
+            )));
+        }
+        self.gens = state
+            .rng_states
+            .iter()
+            .zip(state.cursors.iter())
+            .map(|(rs, &c)| DataGen::from_state(self.model_cfg.clone(), *rs, c))
+            .collect();
+        self.params = state.params;
+        self.m = state.m;
+        self.v = state.v;
+        self.step = state.step;
+        self.stage = state.stage;
+        self.steps_in_stage = state.steps_in_stage;
+        Ok(())
+    }
+
+    fn save_checkpoint(&self, dir: &str) -> Result<()> {
+        checkpoint::save_full(dir, &self.state())?;
+        Ok(())
+    }
+
+    /// Enter a schedule stage: bind its LR shape and, when the stage runs
+    /// a different preset (initial-training crop → finetune crop),
+    /// rebuild the backend and data generators for the new geometry
+    /// (parameters carry over — AlphaFold's leaves are crop-independent).
+    fn enter_stage(&mut self, index: usize, stage: &Stage) -> Result<()> {
+        self.lr_sched = stage.lr;
+        if stage.preset == self.preset {
+            return Ok(());
+        }
+        let rt = self.rt.ok_or_else(|| {
+            Error::Config(format!(
+                "stage '{}' switches preset '{}' -> '{}', but this trainer \
+                 was built without a runtime (with_backend seam)",
+                stage.name, self.preset, stage.preset
+            ))
+        })?;
+        let model_cfg = ModelConfig::preset(&stage.preset)?;
+        self.plan.validate(&model_cfg)?;
+        let expect = rt.manifest.load_params(&stage.preset)?;
+        if expect.len() != self.params.len() {
+            return Err(Error::Config(format!(
+                "preset '{}' has {} leaves, carried params have {} — stages \
+                 must share parameter shapes",
+                stage.preset,
+                expect.len(),
+                self.params.len()
+            )));
+        }
+        for (a, b) in expect.iter().zip(self.params.iter()) {
+            if a.shape != b.shape {
+                return Err(Error::Config(format!(
+                    "stage '{}' leaf shape {:?} != carried {:?}",
+                    stage.name, a.shape, b.shape
+                )));
+            }
+        }
+        self.backend = build_backend(rt, &stage.preset, &self.plan, self.overlap)?;
+        self.preset = stage.preset.clone();
+        self.model_cfg = model_cfg;
+        // a new crop geometry is a new data stream: deterministic
+        // stage-derived seed, fresh replica offsets
+        let seed = self.cfg.seed.wrapping_add(1_000_003u64.wrapping_mul(index as u64));
+        self.gens = make_gens(&self.model_cfg, seed, self.plan.dp, self.plan.accum);
+        Ok(())
+    }
+
+    /// Run the single-stage schedule implied by `cfg` (`cfg.steps` total;
+    /// a restored trainer executes only the remainder).
     pub fn run(&mut self) -> Result<TrainReport> {
+        let sched = TrainSchedule::single(&self.preset, &self.cfg);
+        self.run_schedule(&sched)
+    }
+
+    /// Drive a (possibly multi-stage) [`TrainSchedule`] from the current
+    /// position to the end; log and checkpoint per config.
+    pub fn run_schedule(&mut self, sched: &TrainSchedule) -> Result<TrainReport> {
         let t0 = Instant::now();
+        let wire_dp0 = self.wire_dp_bytes;
+        let wire_dap0 = self.wire_dap_bytes;
         let mut first = None;
         let mut last = 0.0;
-        for _ in 0..self.cfg.steps {
-            let loss = self.train_step()?;
-            if first.is_none() {
-                first = Some(loss);
-            }
-            last = loss;
-            if self.step % self.cfg.log_every.max(1) == 0 {
-                println!(
-                    "step {:>5}  loss {:.4}  lr {:.2e}",
-                    self.step,
-                    loss,
-                    lr_at(self.step - 1, self.cfg.lr, self.cfg.warmup_steps)
-                );
-            }
-            if let Some(dir) = &self.cfg.checkpoint_dir {
-                if self.step % self.cfg.checkpoint_every.max(1) == 0 {
-                    super::checkpoint::save(dir, &self.preset, self.step, &self.params)?;
+        let mut executed = 0usize;
+        while self.stage < sched.stages.len() {
+            let stage = sched.stages[self.stage].clone();
+            self.enter_stage(self.stage, &stage)?;
+            while self.steps_in_stage < stage.steps {
+                let loss = self.train_step()?;
+                executed += 1;
+                if first.is_none() {
+                    first = Some(loss);
+                }
+                last = loss;
+                if self.step % self.cfg.log_every.max(1) == 0 {
+                    println!(
+                        "step {:>5}  stage {}  loss {:.4}  lr {:.2e}",
+                        self.step, stage.name, loss, self.last_lr
+                    );
+                }
+                if let Some(dir) = &self.cfg.checkpoint_dir {
+                    if self.step % self.cfg.checkpoint_every.max(1) == 0 {
+                        self.save_checkpoint(dir)?;
+                    }
                 }
             }
+            self.stage += 1;
+            self.steps_in_stage = 0;
         }
         let seconds = t0.elapsed().as_secs_f64();
         Ok(TrainReport {
-            steps: self.cfg.steps,
+            steps: executed,
             final_loss: last,
             initial_loss: first.unwrap_or(f32::NAN),
             seconds,
-            steps_per_sec: self.cfg.steps as f64 / seconds.max(1e-9),
-            wire_bytes: self.wire_bytes,
-            threads: self.threads,
+            steps_per_sec: executed as f64 / seconds.max(1e-9),
+            wire_bytes: self.wire_dp_bytes - wire_dp0,
+            wire_dap_bytes: self.wire_dap_bytes - wire_dap0,
+            threads: self.backend.effective_threads(self.plan.threads),
+            final_lr: self.last_lr,
         })
     }
 }
@@ -257,5 +533,21 @@ mod tests {
         let small = vec![HostTensor::full(&[4], 0.01)];
         let out = clip_by_global_norm(small.clone(), 1.0);
         assert_eq!(out[0].data, small[0].data);
+    }
+
+    #[test]
+    fn make_gens_offsets_the_global_stream() {
+        let cfg = ModelConfig::tiny();
+        // dp=2, accum=2: rank 1 starts at global index 2
+        let gens = make_gens(&cfg, 11, 2, 2);
+        assert_eq!(gens[0].cursor(), 0);
+        assert_eq!(gens[1].cursor(), 2);
+        let mut reference = DataGen::new(cfg, 11);
+        reference.fast_forward(2);
+        let mut g1 = gens.into_iter().nth(1).unwrap();
+        assert_eq!(
+            g1.next_batch().msa_tokens.data,
+            reference.next_batch().msa_tokens.data
+        );
     }
 }

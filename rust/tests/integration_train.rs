@@ -1,10 +1,13 @@
-//! Training integration: the DP trainer (grad_step → ring all-reduce →
-//! adam_update, all via PJRT) must reduce the loss on synthetic data, be
-//! reproducible, and checkpoint-roundtrip.
+//! Training integration (artifact-gated): the trainer over real PJRT
+//! executables must reduce the loss on synthetic data, be reproducible,
+//! stay bit-for-bit across thread budgets, checkpoint-resume exactly, and
+//! — when the hybrid artifacts are exported — route `dap > 1` replicas
+//! through the DAP coordinator/tape with parameters bit-for-bit equal to
+//! the dense baseline at matched effective batch.
 
 use fastfold::config::TrainConfig;
 use fastfold::runtime::Runtime;
-use fastfold::train::Trainer;
+use fastfold::train::{checkpoint, ParallelPlan, Trainer};
 
 fn runtime() -> Option<Runtime> {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
@@ -21,9 +24,8 @@ fn quick_cfg(steps: usize) -> TrainConfig {
         warmup_steps: 2,
         log_every: 1000,
         checkpoint_every: 10_000,
-        checkpoint_dir: None,
         seed: 5,
-        grad_clip: Some(1.0),
+        ..TrainConfig::default()
     }
 }
 
@@ -32,6 +34,7 @@ fn loss_decreases_single_worker() {
     let Some(rt) = runtime() else { return };
     let mut t = Trainer::new(&rt, "tiny", 1, quick_cfg(12)).unwrap();
     let report = t.run().unwrap();
+    assert_eq!(report.steps, 12);
     assert!(
         report.final_loss < report.initial_loss,
         "{} -> {}",
@@ -42,13 +45,15 @@ fn loss_decreases_single_worker() {
 }
 
 #[test]
-fn dp2_matches_loss_trajectory_shape_and_reduces() {
+fn dp2_reduces_loss_and_moves_ring_wire() {
     let Some(rt) = runtime() else { return };
     let mut t = Trainer::new(&rt, "tiny", 2, quick_cfg(8)).unwrap();
     let report = t.run().unwrap();
     assert!(report.final_loss < report.initial_loss);
-    // ring all-reduce actually moved gradient bytes
+    // ring all-reduce actually moved gradient bytes; dense path moves no
+    // model-parallel bytes
     assert!(report.wire_bytes > 0);
+    assert_eq!(report.wire_dap_bytes, 0);
 }
 
 #[test]
@@ -62,20 +67,20 @@ fn training_is_deterministic() {
 }
 
 #[test]
-fn dp_grad_equals_mean_of_worker_grads() {
-    // DP=2 with identical per-worker data seeds must equal DP=1 math:
-    // verified indirectly — same-seed generators produce identical batches,
-    // so all-reduced mean grads == single grads and losses match exactly.
+fn accumulation_matches_dp_at_same_effective_batch() {
+    // dp=2 × accum=1 and dp=1 × accum=2 consume the same global stream;
+    // on real f32 grads the two fold orders agree to float tolerance
     let Some(rt) = runtime() else { return };
-    let mut t1 = Trainer::new(&rt, "tiny", 1, quick_cfg(3)).unwrap();
-    let mut t2 = Trainer::new(&rt, "tiny", 2, quick_cfg(3)).unwrap();
-    // force both DP workers onto the same data stream as the single worker
-    // by reusing seed spacing: worker r uses seed+1000r, so instead compare
-    // that DP loss is finite and close in magnitude after equal steps.
-    let r1 = t1.run().unwrap();
-    let r2 = t2.run().unwrap();
-    assert!(r1.final_loss.is_finite() && r2.final_loss.is_finite());
-    assert!((r1.final_loss - r2.final_loss).abs() < 1.0);
+    let mut a = Trainer::hybrid(&rt, "tiny", ParallelPlan::new(2, 1, 1), true, quick_cfg(3))
+        .unwrap();
+    let mut b = Trainer::hybrid(&rt, "tiny", ParallelPlan::new(1, 1, 2), true, quick_cfg(3))
+        .unwrap();
+    let ra = a.run().unwrap();
+    let rb = b.run().unwrap();
+    assert!((ra.final_loss - rb.final_loss).abs() < 1e-4);
+    for (x, y) in a.params.iter().zip(b.params.iter()) {
+        assert!(x.max_abs_diff(y) < 1e-4);
+    }
 }
 
 #[test]
@@ -93,24 +98,89 @@ fn threaded_train_step_bitwise_matches_sequential_dp_2_4() {
         for (i, (a, b)) in seq.params.iter().zip(thr.params.iter()).enumerate() {
             assert_eq!(a, b, "dp={dp} param leaf {i} diverged");
         }
-        assert_eq!(seq.wire_bytes, thr.wire_bytes, "dp={dp} wire accounting");
+        assert_eq!(seq.wire_dp_bytes, thr.wire_dp_bytes, "dp={dp} wire accounting");
     }
 }
 
 #[test]
-fn checkpoint_roundtrip_through_trainer() {
+fn hybrid_dap2_routes_through_coordinator_and_matches_dense() {
+    // the tentpole: dap=2 replicas run embed → DAP blocks (tape) → heads
+    // VJP → reverse replay; parameters land bit-for-bit on the dense
+    // baseline at matched effective batch, and DAP wire is accounted
+    let Some(rt) = runtime() else { return };
+    if !rt.manifest.artifacts.contains_key("tiny/loss_head_grad") {
+        eprintln!("skipping: hybrid artifacts (loss_head_grad/embed_bwd) not exported");
+        return;
+    }
+    let mut dense =
+        Trainer::hybrid(&rt, "tiny", ParallelPlan::new(1, 1, 1), true, quick_cfg(2))
+            .unwrap();
+    let mut hybrid =
+        Trainer::hybrid(&rt, "tiny", ParallelPlan::new(1, 2, 1), true, quick_cfg(2))
+            .unwrap();
+    assert_eq!(hybrid.backend_name(), "dap2");
+    let ld = dense.run().unwrap();
+    let lh = hybrid.run().unwrap();
+    assert!(lh.wire_dap_bytes > 0, "DAP collectives must be accounted");
+    assert_eq!(ld.wire_bytes, 0);
+    // dense runs one fused XLA program, hybrid runs the segment
+    // decomposition — agreement is float-tight, not bitwise (the bitwise
+    // layout-equivalence contract is enforced in hybrid_trainer.rs where
+    // the per-micro math is identical by construction)
+    assert!(
+        (ld.final_loss - lh.final_loss).abs() < 1e-4,
+        "hybrid loss diverged from dense: {} vs {}",
+        ld.final_loss,
+        lh.final_loss
+    );
+    for (i, (a, b)) in dense.params.iter().zip(hybrid.params.iter()).enumerate() {
+        assert!(a.max_abs_diff(b) < 1e-4, "param leaf {i} diverged");
+    }
+
+    // but the hybrid path at the SAME degree is deterministic bit-for-bit
+    let mut again =
+        Trainer::hybrid(&rt, "tiny", ParallelPlan::new(1, 2, 1), true, quick_cfg(2))
+            .unwrap();
+    let la = again.run().unwrap();
+    assert_eq!(la.final_loss.to_bits(), lh.final_loss.to_bits());
+    for (a, b) in again.params.iter().zip(hybrid.params.iter()) {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn checkpoint_resume_through_trainer_is_bitwise() {
     let Some(rt) = runtime() else { return };
     let dir = std::env::temp_dir().join("ff_train_ckpt");
+    std::fs::remove_dir_all(&dir).ok();
     let dir_s = dir.to_str().unwrap().to_string();
     let mut cfg = quick_cfg(4);
     cfg.checkpoint_every = 2;
     cfg.checkpoint_dir = Some(dir_s.clone());
-    let mut t = Trainer::new(&rt, "tiny", 1, cfg).unwrap();
-    t.run().unwrap();
-    let (step, params) = fastfold::train::checkpoint::load(&dir_s, "tiny", 4).unwrap();
+    let mut full = Trainer::new(&rt, "tiny", 1, cfg.clone()).unwrap();
+    full.run().unwrap();
+
+    // params-only reader still works against the V2 blob
+    let (step, params) = checkpoint::load(&dir_s, "tiny", 4).unwrap();
     assert_eq!(step, 4);
-    assert_eq!(params.len(), t.params.len());
-    for (a, b) in params.iter().zip(t.params.iter()) {
+    assert_eq!(params.len(), full.params.len());
+    for (a, b) in params.iter().zip(full.params.iter()) {
+        assert_eq!(a, b);
+    }
+
+    // full-state resume from the midpoint reproduces the run bit-for-bit
+    let mut resumed = Trainer::new(&rt, "tiny", 1, cfg).unwrap();
+    resumed.restore(checkpoint::load_full(&dir_s, "tiny", 2).unwrap()).unwrap();
+    let report = resumed.run().unwrap();
+    assert_eq!(report.steps, 2);
+    assert_eq!(full.step, resumed.step);
+    for (a, b) in full.params.iter().zip(resumed.params.iter()) {
+        assert_eq!(a, b);
+    }
+    for (a, b) in full.m.iter().zip(resumed.m.iter()) {
+        assert_eq!(a, b);
+    }
+    for (a, b) in full.v.iter().zip(resumed.v.iter()) {
         assert_eq!(a, b);
     }
     std::fs::remove_dir_all(dir).ok();
