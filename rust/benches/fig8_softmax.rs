@@ -1,10 +1,19 @@
 //! Fig 8 reproduction: fused softmax kernel vs the unfused "native" chain.
 //!
-//! Both variants are AOT HLO artifacts executing identical math on the same
-//! PJRT CPU backend — the measured delta isolates the kernel *structure*
-//! (one fused pass vs an 8-op chain with optimization barriers), which is
-//! exactly what the paper's CUDA comparison isolates. Paper: 1.77–3.32×.
+//! Two modes, both printed when available:
+//!
+//! * **Native host mode (always runs — no artifacts, no device):** the
+//!   fused host kernel (`fastfold::kernels::softmax`) vs the naive
+//!   6-op chain (scale, max, sub, exp, sum, div — one traversal per op,
+//!   temporaries from the scratch pool). Outputs are bit-for-bit equal;
+//!   the measured delta isolates memory passes, which is what the
+//!   paper's CUDA comparison isolates. Paper band: 1.77–3.32×.
+//! * **Artifact mode (when `artifacts/` exists with real PJRT):** both
+//!   variants as AOT HLO executing on the same backend — the original
+//!   fig8 comparison, kept intact.
 
+use fastfold::bench::bench_med;
+use fastfold::kernels::{softmax, ScratchPool};
 use fastfold::metrics::{median, Table};
 use fastfold::rng::Rng;
 use fastfold::runtime::Runtime;
@@ -13,6 +22,47 @@ use fastfold::tensor::HostTensor;
 const SIZES: [(usize, usize); 6] =
     [(1024, 32), (1024, 64), (1024, 128), (1024, 256), (4096, 64), (4096, 128)];
 const ITERS: usize = 30;
+
+fn native_mode() {
+    let mut rng = Rng::new(8);
+    let mut pool = ScratchPool::new();
+    println!("\nFig 8 — Fused Softmax, native host kernels (paper band: 1.77–3.32x)\n");
+    let mut t = Table::new(&[
+        "size (rows x cols)", "naive (µs)", "fused (µs)", "host ratio",
+        "HBM-pass model",
+    ]);
+    for (rows, cols) in SIZES {
+        let x = rng.normal_vec(rows * cols, 2.0);
+        let scale = 1.0 / (cols as f32).sqrt();
+        let mut out = vec![0.0f32; x.len()];
+        let fused = bench_med(3, ITERS, || {
+            softmax::softmax_rows(&x, cols, scale, &mut out);
+            std::hint::black_box(out[0]);
+        });
+        let naive = bench_med(3, ITERS, || {
+            softmax::softmax_rows_naive(&x, cols, scale, &mut pool, &mut out);
+            std::hint::black_box(out[0]);
+        });
+        // bandwidth-bound model: the unfused chain makes ~8 read+write
+        // passes over the tensor (scale, max, sub, exp, sum, div +
+        // barriers); the fused kernel makes 1 read + 1 write. On an
+        // HBM-bound GPU the speedup approaches this ratio derated by
+        // launch overheads — the paper measures 1.77–3.32x inside it.
+        let model = 8.0f64 / 2.0;
+        t.row(&[
+            format!("{rows} x {cols}"),
+            format!("{:.1}", naive * 1e6),
+            format!("{:.1}", fused * 1e6),
+            format!("{:.2}x", naive / fused),
+            format!("{model:.1}x bound"),
+        ]);
+    }
+    t.print();
+    println!();
+    println!("Native mode: fused and naive are bit-for-bit equal (pinned by the");
+    println!("kernels::softmax test); the ratio above measures memory passes on");
+    println!("one CPU core. `fastfold bench --json` records it in BENCH_host.json.");
+}
 
 fn bench_exe(rt: &Runtime, name: &str, inputs: &[HostTensor]) -> f64 {
     let exe = rt.load(name).expect(name);
@@ -29,36 +79,36 @@ fn bench_exe(rt: &Runtime, name: &str, inputs: &[HostTensor]) -> f64 {
     median(times)
 }
 
-fn main() {
-    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+fn artifact_mode(rt: &Runtime) {
     let mut rng = Rng::new(8);
-    println!("\nFig 8 — Fused Softmax (paper speedup band: 1.77–3.32x)\n");
+    println!("\nFig 8 — HLO artifact comparison (same math, AOT Pallas vs XLA chain)\n");
     let mut t = Table::new(&[
         "size (rows x cols)", "naive (µs)", "fused (µs)", "cpu ratio",
-        "HBM-pass model",
     ]);
     for (rows, cols) in SIZES {
         let x = HostTensor::new(vec![rows, cols], rng.normal_vec(rows * cols, 2.0)).unwrap();
-        let naive = bench_exe(&rt, &format!("bench/fig8_naive_{rows}x{cols}"), &[x.clone()]);
-        let fused = bench_exe(&rt, &format!("bench/fig8_fused_{rows}x{cols}"), &[x]);
-        // bandwidth-bound model: the unfused chain makes 8 read+write passes
-        // over the tensor (scale, max, sub, exp, sum, div + barriers); the
-        // fused kernel makes 1 read + 1 write. On an HBM-bound GPU the
-        // speedup approaches this ratio derated by launch overheads — the
-        // paper measures 1.77–3.32x inside this envelope.
-        let model = 8.0f64 / 2.0;
+        let naive = bench_exe(rt, &format!("bench/fig8_naive_{rows}x{cols}"), &[x.clone()]);
+        let fused = bench_exe(rt, &format!("bench/fig8_fused_{rows}x{cols}"), &[x]);
         t.row(&[
             format!("{rows} x {cols}"),
             format!("{:.1}", naive * 1e6),
             format!("{:.1}", fused * 1e6),
             format!("{:.2}x", naive / fused),
-            format!("{model:.1}x bound"),
         ]);
     }
     t.print();
     println!();
     println!("NOTE: cpu ratio is interpret-mode Pallas vs vectorized XLA on one");
-    println!("CPU core — NOT a TPU/GPU wallclock proxy (grid loop overhead");
-    println!("dominates). The kernel's fusion structure (1 HBM pass vs 8) is the");
-    println!("quantity that transfers; see EXPERIMENTS.md §Fig8 and DESIGN.md §6.");
+    println!("CPU core — NOT a TPU/GPU wallclock proxy; see EXPERIMENTS.md §Fig8.");
+}
+
+fn main() {
+    native_mode();
+    match Runtime::new("artifacts") {
+        Ok(rt) => artifact_mode(&rt),
+        Err(_) => {
+            println!("\n(artifacts/ absent — HLO artifact comparison skipped; the");
+            println!(" native host mode above runs everywhere, including CI)");
+        }
+    }
 }

@@ -1,0 +1,382 @@
+//! Host perf bench harness — the measurable half of the zero-copy data
+//! plane and the native fused kernels.
+//!
+//! `fastfold bench --json` (and the tier-1 `tests/bench_host.rs` smoke,
+//! which runs the same harness in quick mode) measures the repo's
+//! host-side hot paths and emits a machine-readable `BENCH_host.json`
+//! ledger so perf changes are tracked per PR instead of asserted:
+//!
+//! * **shard_move** — DAP shard split + unshard reassembly throughput,
+//!   view-based ([`HostTensor::split_axis`] O(1) views +
+//!   adjacency-aware [`HostTensor::concat`]) vs the copying reference
+//!   ([`HostTensor::slice_axis_copy`] / [`HostTensor::concat_copy`]).
+//! * **ring_all_reduce** — the DP gradient reduction's host GB/s with
+//!   its per-step snapshots in the reused scratch buffer.
+//! * **fused_softmax / fused_layernorm / fused_adam** — the paper's
+//!   Fig 8/9 fused-vs-naive deltas, on host ([`crate::kernels`]).
+//! * **synthetic_train** — artifact-free hybrid trainer steps/s (the CI
+//!   train smoke's layout: dp=2 × dap=2 on the synthetic backend).
+//! * **serve_makespan** — the serving planner's modeled makespan and
+//!   aggregate PFLOP/s over a mixed request fleet (deterministic — a
+//!   schedule regression, not a wall-clock one).
+//!
+//! Every metric is median-of-N wall time on plain host code: no
+//! artifacts, no network, no device.
+
+use crate::comm::ring::ring_all_reduce;
+use crate::config::{ModelConfig, RunConfig, TrainConfig};
+use crate::error::Result;
+use crate::inference::engine::{plan_batch, InferRequest, PlacementPlanner, SchedPolicy};
+use crate::json::Json;
+use crate::kernels::{adam, layernorm, softmax, ScratchPool};
+use crate::metrics::{median, Table};
+use crate::rng::Rng;
+use crate::tensor::HostTensor;
+use crate::train::{ParallelPlan, SyntheticBackend, TrainBackend, Trainer};
+use std::collections::BTreeMap;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Harness knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BenchOptions {
+    /// Quick mode: smaller tensors and fewer iterations, sized to run
+    /// inside the tier-1 test suite (seconds, not minutes).
+    pub quick: bool,
+}
+
+/// Median wall seconds of `f` over `iters` runs after `warmup` runs —
+/// the one timing loop every host bench (this harness and the fig8/fig9
+/// benches' native mode) shares, so aggregation can never drift between
+/// them.
+pub fn bench_med<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let times: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    median(times)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+// ------------------------------------------------------------ shard moves
+
+fn bench_shard_move(o: &BenchOptions, rng: &mut Rng) -> Json {
+    let (rows, cols, dap) = if o.quick { (256usize, 2048usize, 8usize) } else { (512, 8192, 8) };
+    let iters = if o.quick { 20 } else { 40 };
+    let x = HostTensor::new(vec![rows, cols], rng.normal_vec(rows * cols, 1.0))
+        .expect("static shape");
+    let part = rows / dap;
+    // bytes conceptually moved per roundtrip: every element leaves as a
+    // shard and comes back through the unshard
+    let bytes = 2.0 * x.size_bytes() as f64;
+
+    let view = bench_med(3, iters, || {
+        let parts = x.split_axis(0, dap).expect("divisible");
+        let back = HostTensor::concat(&parts, 0).expect("same shapes");
+        black_box(back.len());
+    });
+    let copy = bench_med(3, iters, || {
+        let parts: Vec<HostTensor> = (0..dap)
+            .map(|i| x.slice_axis_copy(0, i * part, part).expect("in range"))
+            .collect();
+        let back = HostTensor::concat_copy(&parts, 0).expect("same shapes");
+        black_box(back.len());
+    });
+    let view = view.max(1e-9);
+    obj(vec![
+        ("elems", num((rows * cols) as f64)),
+        ("dap", num(dap as f64)),
+        ("view_us", num(view * 1e6)),
+        ("copy_us", num(copy * 1e6)),
+        ("view_gbps", num(bytes / view / 1e9)),
+        ("copy_gbps", num(bytes / copy.max(1e-9) / 1e9)),
+        ("speedup", num(copy / view)),
+    ])
+}
+
+// ---------------------------------------------------------------- ring
+
+fn bench_ring(o: &BenchOptions, rng: &mut Rng) -> Json {
+    let (n, len) = if o.quick { (8usize, 1usize << 16) } else { (8, 1 << 20) };
+    let iters = if o.quick { 10 } else { 20 };
+    let base: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(len, 1.0)).collect();
+    let mut wire_total = 0usize;
+    let mut times = Vec::with_capacity(iters);
+    for it in 0..iters + 2 {
+        let ranks = base.clone();
+        let t0 = Instant::now();
+        let (out, wire) = ring_all_reduce(ranks).expect("uniform shards");
+        let dt = t0.elapsed().as_secs_f64();
+        black_box(out.len());
+        if it >= 2 {
+            times.push(dt);
+            wire_total = wire.iter().sum();
+        }
+    }
+    let med = median(times).max(1e-9);
+    obj(vec![
+        ("ranks", num(n as f64)),
+        ("elems_per_rank", num(len as f64)),
+        ("wire_bytes", num(wire_total as f64)),
+        ("time_ms", num(med * 1e3)),
+        ("gbps", num(wire_total as f64 / med / 1e9)),
+    ])
+}
+
+// -------------------------------------------------------------- kernels
+
+fn bench_softmax(o: &BenchOptions, rng: &mut Rng) -> Json {
+    let (rows, cols) = if o.quick { (1024usize, 128usize) } else { (4096, 128) };
+    let iters = if o.quick { 15 } else { 30 };
+    let x = rng.normal_vec(rows * cols, 2.0);
+    let scale = 1.0 / (cols as f32).sqrt();
+    let mut out = vec![0.0f32; x.len()];
+    let mut pool = ScratchPool::new();
+    let fused = bench_med(3, iters, || {
+        softmax::softmax_rows(&x, cols, scale, &mut out);
+        black_box(out[0]);
+    });
+    let naive = bench_med(3, iters, || {
+        softmax::softmax_rows_naive(&x, cols, scale, &mut pool, &mut out);
+        black_box(out[0]);
+    });
+    obj(vec![
+        ("rows", num(rows as f64)),
+        ("cols", num(cols as f64)),
+        ("naive_us", num(naive * 1e6)),
+        ("fused_us", num(fused * 1e6)),
+        ("speedup", num(naive / fused.max(1e-9))),
+    ])
+}
+
+fn bench_layernorm(o: &BenchOptions, rng: &mut Rng) -> Json {
+    let (rows, cols) = if o.quick { (1024usize, 128usize) } else { (4096, 128) };
+    let iters = if o.quick { 15 } else { 30 };
+    let x = rng.normal_vec(rows * cols, 2.0);
+    let g = rng.normal_vec(cols, 1.0);
+    let b = rng.normal_vec(cols, 1.0);
+    let mut out = vec![0.0f32; x.len()];
+    let mut pool = ScratchPool::new();
+    let fused = bench_med(3, iters, || {
+        layernorm::layernorm_rows(&x, cols, &g, &b, 1e-5, &mut out);
+        black_box(out[0]);
+    });
+    let apex = bench_med(3, iters, || {
+        layernorm::layernorm_rows_apex(&x, cols, &g, &b, 1e-5, &mut out);
+        black_box(out[0]);
+    });
+    let naive = bench_med(3, iters, || {
+        layernorm::layernorm_rows_naive(&x, cols, &g, &b, 1e-5, &mut pool, &mut out);
+        black_box(out[0]);
+    });
+    obj(vec![
+        ("rows", num(rows as f64)),
+        ("cols", num(cols as f64)),
+        ("naive_us", num(naive * 1e6)),
+        ("apex_us", num(apex * 1e6)),
+        ("fused_us", num(fused * 1e6)),
+        ("speedup", num(naive / fused.max(1e-9))),
+        ("speedup_vs_apex", num(apex / fused.max(1e-9))),
+    ])
+}
+
+fn bench_adam(o: &BenchOptions, rng: &mut Rng) -> Json {
+    let n = if o.quick { 1usize << 16 } else { 1 << 20 };
+    let iters = if o.quick { 10 } else { 20 };
+    let p0 = rng.normal_vec(n, 1.0);
+    let g = rng.normal_vec(n, 0.5);
+    let m0 = rng.normal_vec(n, 0.1);
+    let v0: Vec<f32> = rng.normal_vec(n, 0.1).iter().map(|x| x * x).collect();
+    let mut pool = ScratchPool::new();
+    // state clones happen OUTSIDE the timed region: only the update
+    // traversal itself is measured, so the ratio isolates pass count
+    // instead of being diluted by identical memcpy costs on both sides
+    let mut timed = |naive: bool| -> f64 {
+        let mut times = Vec::with_capacity(iters);
+        for it in 0..iters + 2 {
+            let (mut p, mut m, mut v) = (p0.clone(), m0.clone(), v0.clone());
+            let t0 = Instant::now();
+            if naive {
+                adam::adam_step_naive(3, 1e-3, &mut p, &g, &mut m, &mut v, &mut pool);
+            } else {
+                adam::adam_step(3, 1e-3, &mut p, &g, &mut m, &mut v);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            black_box(p[0]);
+            if it >= 2 {
+                times.push(dt);
+            }
+        }
+        median(times)
+    };
+    let fused = timed(false);
+    let naive = timed(true);
+    obj(vec![
+        ("elems", num(n as f64)),
+        ("naive_us", num(naive * 1e6)),
+        ("fused_us", num(fused * 1e6)),
+        ("speedup", num(naive / fused.max(1e-9))),
+    ])
+}
+
+// ------------------------------------------------------ train and serve
+
+fn bench_synthetic_train(o: &BenchOptions) -> Result<Json> {
+    let steps = if o.quick { 2usize } else { 8 };
+    let model_cfg = ModelConfig::tiny();
+    let plan = ParallelPlan::new(2, 2, 1);
+    let params = SyntheticBackend::init_params(&model_cfg);
+    let backend: Box<dyn TrainBackend> = Box::new(SyntheticBackend::new(plan.dap));
+    let cfg = TrainConfig { steps, log_every: usize::MAX, ..TrainConfig::default() };
+    let mut trainer =
+        Trainer::with_backend("tiny", model_cfg, params, backend, plan, cfg)?;
+    let report = trainer.run()?;
+    Ok(obj(vec![
+        ("steps", num(report.steps as f64)),
+        ("steps_per_sec", num(report.steps_per_sec)),
+        ("dp_wire_bytes", num(report.wire_bytes as f64)),
+        ("final_loss", num(report.final_loss as f64)),
+    ]))
+}
+
+fn bench_serve_makespan() -> Result<Json> {
+    let run_cfg = RunConfig::default();
+    let planner = PlacementPlanner::from_run_config(&run_cfg)?;
+    let lens = [None, Some(512), Some(1024), Some(2048), Some(2560), Some(3072)];
+    let requests: Vec<InferRequest> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, len)| {
+            let mut r = InferRequest::new(&format!("bench{i}"), "tiny");
+            r.model_len = *len;
+            r
+        })
+        .collect();
+    let lanes = 4usize;
+    let plan = plan_batch(
+        &planner,
+        SchedPolicy::Sjf,
+        run_cfg.serve.max_bypass,
+        lanes,
+        &requests,
+    );
+    let stats = plan.stats(&requests);
+    let admitted = plan.order.len();
+    Ok(obj(vec![
+        ("requests", num(requests.len() as f64)),
+        ("admitted", num(admitted as f64)),
+        ("lanes", num(lanes as f64)),
+        ("modeled_makespan_s", num(plan.modeled_makespan)),
+        ("aggregate_pflops", num(stats.aggregate_pflops(plan.modeled_makespan))),
+    ]))
+}
+
+// ---------------------------------------------------------------- driver
+
+/// Run the full host bench suite; returns the `BENCH_host.json` document.
+pub fn run_host_bench(opts: BenchOptions) -> Result<Json> {
+    let mut rng = Rng::new(2024);
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("host".into()));
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("quick".to_string(), Json::Bool(opts.quick));
+    top.insert("shard_move".to_string(), bench_shard_move(&opts, &mut rng));
+    top.insert("ring_all_reduce".to_string(), bench_ring(&opts, &mut rng));
+    top.insert("fused_softmax".to_string(), bench_softmax(&opts, &mut rng));
+    top.insert("fused_layernorm".to_string(), bench_layernorm(&opts, &mut rng));
+    top.insert("fused_adam".to_string(), bench_adam(&opts, &mut rng));
+    top.insert("synthetic_train".to_string(), bench_synthetic_train(&opts)?);
+    top.insert("serve_makespan".to_string(), bench_serve_makespan()?);
+    Ok(Json::Obj(top))
+}
+
+/// Console rendering of a [`run_host_bench`] document.
+pub fn render_table(doc: &Json) -> Table {
+    let mut t = Table::new(&["metric", "baseline", "optimized", "speedup / rate"]);
+    let f = |j: &Json, key: &str| -> f64 {
+        j.get(key).and_then(|v| v.as_f64()).unwrap_or(f64::NAN)
+    };
+    if let Ok(s) = doc.get("shard_move") {
+        t.row(&[
+            format!("shard move ({}x dap{})", f(s, "elems"), f(s, "dap")),
+            format!("{:.1} µs copy", f(s, "copy_us")),
+            format!("{:.2} µs view", f(s, "view_us")),
+            format!("{:.0}x", f(s, "speedup")),
+        ]);
+    }
+    if let Ok(s) = doc.get("ring_all_reduce") {
+        t.row(&[
+            format!("ring all-reduce ({} ranks)", f(s, "ranks")),
+            format!("{:.0} B wire", f(s, "wire_bytes")),
+            format!("{:.2} ms", f(s, "time_ms")),
+            format!("{:.2} GB/s", f(s, "gbps")),
+        ]);
+    }
+    for (key, label) in [
+        ("fused_softmax", "softmax"),
+        ("fused_layernorm", "layernorm"),
+        ("fused_adam", "adam"),
+    ] {
+        if let Ok(s) = doc.get(key) {
+            t.row(&[
+                format!("fused {label}"),
+                format!("{:.1} µs naive", f(s, "naive_us")),
+                format!("{:.1} µs fused", f(s, "fused_us")),
+                format!("{:.2}x", f(s, "speedup")),
+            ]);
+        }
+    }
+    if let Ok(s) = doc.get("synthetic_train") {
+        t.row(&[
+            "synthetic train (dp2 x dap2)".into(),
+            format!("{} steps", f(s, "steps")),
+            String::new(),
+            format!("{:.1} steps/s", f(s, "steps_per_sec")),
+        ]);
+    }
+    if let Ok(s) = doc.get("serve_makespan") {
+        t.row(&[
+            "serve schedule (modeled)".into(),
+            format!("{} reqs / {} lanes", f(s, "requests"), f(s, "lanes")),
+            format!("{:.1} s makespan", f(s, "modeled_makespan_s")),
+            format!("{:.2} PFLOP/s", f(s, "aggregate_pflops")),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_makespan_is_deterministic() {
+        let a = bench_serve_makespan().unwrap();
+        let b = bench_serve_makespan().unwrap();
+        assert_eq!(a, b);
+        let mk = a.get("modeled_makespan_s").unwrap().as_f64().unwrap();
+        assert!(mk > 0.0);
+        let adm = a.get("admitted").unwrap().as_f64().unwrap();
+        assert!(adm >= 1.0);
+    }
+
+    #[test]
+    fn synthetic_train_reports_steps() {
+        let j = bench_synthetic_train(&BenchOptions { quick: true }).unwrap();
+        assert_eq!(j.get("steps").unwrap().as_f64().unwrap(), 2.0);
+        assert!(j.get("steps_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

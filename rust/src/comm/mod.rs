@@ -157,8 +157,8 @@ mod tests {
         assert_eq!(out.len(), 3);
         assert_eq!(out[0].shape, vec![6, 2]);
         assert_eq!(out[0], out[2]);
-        assert_eq!(out[0].data[0], 0.0);
-        assert_eq!(out[0].data[4], 100.0);
+        assert_eq!(out[0].data()[0], 0.0);
+        assert_eq!(out[0].data()[4], 100.0);
     }
 
     #[test]
@@ -169,7 +169,7 @@ mod tests {
             .collect();
         let out = c.reduce_scatter(&full, 0).unwrap();
         assert_eq!(out[0].shape, vec![2, 2]);
-        assert!(out.iter().all(|t| t.data.iter().all(|&x| x == 3.0)));
+        assert!(out.iter().all(|t| t.data().iter().all(|&x| x == 3.0)));
     }
 
     #[test]
@@ -200,7 +200,7 @@ mod tests {
         let want: Vec<f32> = (0..4)
             .map(|i| (0..3).map(|r| (r * 100 + i) as f32).sum())
             .collect();
-        assert_eq!(out[1].data, want);
+        assert_eq!(out[1].data(), want.as_slice());
     }
 
     #[test]

@@ -10,6 +10,14 @@
 //! 2(N−1) steps, rank r sends every chunk except (r+1) mod N in phase 1
 //! and every chunk except (r+2) mod N in phase 2, so ranks that skip the
 //! big chunk move fewer bytes than ranks that skip a base chunk.
+//!
+//! Allocation behavior: each of the 2(N−1) steps needs a snapshot of the
+//! chunks in flight (the exchange is simultaneous, so in-place
+//! accumulation without a snapshot would let rank r's update feed rank
+//! r+1 within the same step). The snapshot lives in **one reusable
+//! scratch buffer** (N × max-chunk elements) allocated once per call —
+//! the old implementation allocated N fresh `Vec`s per step, 2N(N−1)
+//! allocations per reduction, on the trainer's per-step hot path.
 
 use crate::error::{Error, Result};
 
@@ -35,43 +43,47 @@ pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, Vec<u
     let bounds: Vec<(usize, usize)> = (0..n)
         .map(|c| (c * base, if c == n - 1 { len } else { (c + 1) * base }))
         .collect();
+    let max_chunk = bounds.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0);
     let mut wire = vec![0usize; n];
+    // one scratch for all 2(N−1) per-step snapshots: lane r holds the
+    // chunk rank r sends this step
+    let mut scratch = vec![0.0f32; n * max_chunk];
 
     // phase 1: reduce-scatter
     for s in 0..n - 1 {
         // snapshot the chunks being sent this step (simultaneous exchange)
-        let sends: Vec<(usize, Vec<f32>)> = (0..n)
-            .map(|r| {
-                let c = (r + n - s) % n;
-                let (lo, hi) = bounds[c];
-                (c, ranks[r][lo..hi].to_vec())
-            })
-            .collect();
+        for r in 0..n {
+            let c = (r + n - s) % n;
+            let (lo, hi) = bounds[c];
+            scratch[r * max_chunk..r * max_chunk + (hi - lo)]
+                .copy_from_slice(&ranks[r][lo..hi]);
+        }
         for r in 0..n {
             let dst = (r + 1) % n;
-            let (c, ref chunk) = sends[r];
-            let (lo, _hi) = bounds[c];
-            for (i, v) in chunk.iter().enumerate() {
-                ranks[dst][lo + i] += v;
+            let c = (r + n - s) % n;
+            let (lo, hi) = bounds[c];
+            let sent = &scratch[r * max_chunk..r * max_chunk + (hi - lo)];
+            for (d, &v) in ranks[dst][lo..hi].iter_mut().zip(sent) {
+                *d += v;
             }
-            wire[r] += chunk.len() * 4;
+            wire[r] += (hi - lo) * 4;
         }
     }
     // phase 2: all-gather of finished chunks
     for s in 0..n - 1 {
-        let sends: Vec<(usize, Vec<f32>)> = (0..n)
-            .map(|r| {
-                let c = (r + 1 + n - s) % n;
-                let (lo, hi) = bounds[c];
-                (c, ranks[r][lo..hi].to_vec())
-            })
-            .collect();
+        for r in 0..n {
+            let c = (r + 1 + n - s) % n;
+            let (lo, hi) = bounds[c];
+            scratch[r * max_chunk..r * max_chunk + (hi - lo)]
+                .copy_from_slice(&ranks[r][lo..hi]);
+        }
         for r in 0..n {
             let dst = (r + 1) % n;
-            let (c, ref chunk) = sends[r];
-            let (lo, _hi) = bounds[c];
-            ranks[dst][lo..lo + chunk.len()].copy_from_slice(chunk);
-            wire[r] += chunk.len() * 4;
+            let c = (r + 1 + n - s) % n;
+            let (lo, hi) = bounds[c];
+            ranks[dst][lo..hi]
+                .copy_from_slice(&scratch[r * max_chunk..r * max_chunk + (hi - lo)]);
+            wire[r] += (hi - lo) * 4;
         }
     }
     Ok((ranks, wire))
@@ -81,6 +93,62 @@ pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, Vec<u
 mod tests {
     use super::*;
     use crate::rng::Rng;
+
+    /// The pre-scratch reference implementation (per-step `Vec`
+    /// snapshots), kept verbatim so the scratch-buffer rewrite is pinned
+    /// against it — values *and* per-rank wire accounting.
+    fn ring_all_reduce_ref(
+        mut ranks: Vec<Vec<f32>>,
+    ) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
+        let n = ranks.len();
+        if n == 0 {
+            return Err(Error::Comm("ring over 0 ranks".into()));
+        }
+        let len = ranks[0].len();
+        if n == 1 {
+            return Ok((ranks, vec![0]));
+        }
+        let base = len / n;
+        let bounds: Vec<(usize, usize)> = (0..n)
+            .map(|c| (c * base, if c == n - 1 { len } else { (c + 1) * base }))
+            .collect();
+        let mut wire = vec![0usize; n];
+        for s in 0..n - 1 {
+            let sends: Vec<(usize, Vec<f32>)> = (0..n)
+                .map(|r| {
+                    let c = (r + n - s) % n;
+                    let (lo, hi) = bounds[c];
+                    (c, ranks[r][lo..hi].to_vec())
+                })
+                .collect();
+            for r in 0..n {
+                let dst = (r + 1) % n;
+                let (c, ref chunk) = sends[r];
+                let (lo, _hi) = bounds[c];
+                for (i, v) in chunk.iter().enumerate() {
+                    ranks[dst][lo + i] += v;
+                }
+                wire[r] += chunk.len() * 4;
+            }
+        }
+        for s in 0..n - 1 {
+            let sends: Vec<(usize, Vec<f32>)> = (0..n)
+                .map(|r| {
+                    let c = (r + 1 + n - s) % n;
+                    let (lo, hi) = bounds[c];
+                    (c, ranks[r][lo..hi].to_vec())
+                })
+                .collect();
+            for r in 0..n {
+                let dst = (r + 1) % n;
+                let (c, ref chunk) = sends[r];
+                let (lo, _hi) = bounds[c];
+                ranks[dst][lo..lo + chunk.len()].copy_from_slice(chunk);
+                wire[r] += chunk.len() * 4;
+            }
+        }
+        Ok((ranks, wire))
+    }
 
     #[test]
     fn matches_naive_sum() {
@@ -96,6 +164,35 @@ mod tests {
             for r in &got {
                 for (a, b) in r.iter().zip(want.iter()) {
                     assert!((a - b).abs() < 1e-4, "n={n} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_rewrite_is_bitwise_the_reference() {
+        // the scratch-buffer rewrite must not change a single bit of the
+        // result or a single byte of the per-rank wire accounting —
+        // including the non-divisible-length skew cases
+        let mut rng = Rng::new(55);
+        for &(n, len) in &[
+            (2usize, 8usize),
+            (3, 10),
+            (4, 64),
+            (5, 7),
+            (8, 33),
+            (7, 1),
+            (6, 6),
+        ] {
+            let ranks: Vec<Vec<f32>> = (0..n)
+                .map(|_| rng.normal_vec(len, 1.0))
+                .collect();
+            let (got, wire) = ring_all_reduce(ranks.clone()).unwrap();
+            let (want, wire_ref) = ring_all_reduce_ref(ranks).unwrap();
+            assert_eq!(wire, wire_ref, "wire skew changed: n={n} len={len}");
+            for (a, b) in got.iter().zip(want.iter()) {
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "n={n} len={len}");
                 }
             }
         }

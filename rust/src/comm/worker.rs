@@ -183,7 +183,7 @@ mod tests {
         for ticket in tickets {
             let (out, _) = ticket.join().unwrap();
             // reduce_scatter of x and -x sums to zero everywhere
-            assert!(out.iter().all(|t| t.data.iter().all(|&v| v == 0.0)));
+            assert!(out.iter().all(|t| t.data().iter().all(|&v| v == 0.0)));
         }
     }
 }

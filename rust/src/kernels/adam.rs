@@ -1,0 +1,150 @@
+//! Fused Adam update: the exported `adam_update` executable's formula
+//! (`python/compile/aot.py`) as a single host traversal.
+//!
+//! [`adam_step`] updates `p`, `m`, `v` in one pass — the fused form the
+//! ScaleFold-style host path wants. [`adam_step_naive`] is the unfused
+//! op chain (m-update, v-update, bias-corrections, denominator, apply —
+//! six traversals, three temporaries), kept as the measurable baseline.
+//! Both execute identical per-element op sequences, so they are
+//! **bit-for-bit equal** (pinned by test), and both match the legacy
+//! host Adam loop exactly — the hybrid trainer's bit-for-bit resume and
+//! equivalence suites see no numeric change from the fusion.
+
+use super::scratch::ScratchPool;
+
+/// Adam β₁ (first-moment decay), matching the exported executable.
+pub const BETA1: f32 = 0.9;
+/// Adam β₂ (second-moment decay).
+pub const BETA2: f32 = 0.999;
+/// Adam ε (denominator stabilizer).
+pub const EPS: f32 = 1e-8;
+
+/// One fused Adam update at (1-based) `step` with learning rate `lr`:
+/// updates `p`, `m`, `v` in place in a single traversal. Slice lengths
+/// must agree (panics otherwise — callers own shape checks).
+pub fn adam_step(step: usize, lr: f32, p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32]) {
+    assert!(
+        p.len() == g.len() && p.len() == m.len() && p.len() == v.len(),
+        "adam: length mismatch (p={}, g={}, m={}, v={})",
+        p.len(),
+        g.len(),
+        m.len(),
+        v.len()
+    );
+    let t = step as f32;
+    let bc1 = 1.0 - BETA1.powf(t);
+    let bc2 = 1.0 - BETA2.powf(t);
+    for (((pi, &gi), mi), vi) in
+        p.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut())
+    {
+        *mi = BETA1 * *mi + (1.0 - BETA1) * gi;
+        *vi = BETA2 * *vi + (1.0 - BETA2) * gi * gi;
+        let mhat = *mi / bc1;
+        let vhat = *vi / bc2;
+        *pi -= lr * mhat / (vhat.sqrt() + EPS);
+    }
+}
+
+/// The naive unfused Adam chain: one traversal per op with temporaries
+/// from `pool` — the memory-traffic baseline. Bit-for-bit equal to
+/// [`adam_step`].
+pub fn adam_step_naive(
+    step: usize,
+    lr: f32,
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    pool: &mut ScratchPool,
+) {
+    assert!(
+        p.len() == g.len() && p.len() == m.len() && p.len() == v.len(),
+        "adam: length mismatch (p={}, g={}, m={}, v={})",
+        p.len(),
+        g.len(),
+        m.len(),
+        v.len()
+    );
+    let t = step as f32;
+    let bc1 = 1.0 - BETA1.powf(t);
+    let bc2 = 1.0 - BETA2.powf(t);
+    // op 1: first moment
+    for (mi, &gi) in m.iter_mut().zip(g) {
+        *mi = BETA1 * *mi + (1.0 - BETA1) * gi;
+    }
+    // op 2: second moment
+    for (vi, &gi) in v.iter_mut().zip(g) {
+        *vi = BETA2 * *vi + (1.0 - BETA2) * gi * gi;
+    }
+    // op 3: bias-corrected first moment
+    let mut mhat = pool.take(p.len());
+    for (o, &mi) in mhat.iter_mut().zip(m.iter()) {
+        *o = mi / bc1;
+    }
+    // op 4: bias-corrected second moment
+    let mut vhat = pool.take(p.len());
+    for (o, &vi) in vhat.iter_mut().zip(v.iter()) {
+        *o = vi / bc2;
+    }
+    // op 5: denominator
+    let mut denom = pool.take(p.len());
+    for (o, &vh) in denom.iter_mut().zip(vhat.iter()) {
+        *o = vh.sqrt() + EPS;
+    }
+    // op 6: apply
+    for ((pi, &mh), &dn) in p.iter_mut().zip(mhat.iter()).zip(denom.iter()) {
+        *pi -= lr * mh / dn;
+    }
+    pool.give(denom);
+    pool.give(vhat);
+    pool.give(mhat);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn fused_equals_naive_bitwise() {
+        let mut rng = Rng::new(71);
+        let mut pool = ScratchPool::new();
+        for step in [1usize, 2, 10, 1000] {
+            let n = 257;
+            let p0 = rng.normal_vec(n, 1.0);
+            let g = rng.normal_vec(n, 0.5);
+            let m0 = rng.normal_vec(n, 0.1);
+            let v0: Vec<f32> = rng.normal_vec(n, 0.1).iter().map(|x| x * x).collect();
+            let (mut pa, mut ma, mut va) = (p0.clone(), m0.clone(), v0.clone());
+            let (mut pb, mut mb, mut vb) = (p0, m0, v0);
+            adam_step(step, 1e-3, &mut pa, &g, &mut ma, &mut va);
+            adam_step_naive(step, 1e-3, &mut pb, &g, &mut mb, &mut vb, &mut pool);
+            for i in 0..n {
+                assert_eq!(pa[i].to_bits(), pb[i].to_bits(), "p[{i}] step {step}");
+                assert_eq!(ma[i].to_bits(), mb[i].to_bits(), "m[{i}] step {step}");
+                assert_eq!(va[i].to_bits(), vb[i].to_bits(), "v[{i}] step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn moves_against_gradient() {
+        let mut p = vec![1.0f32; 4];
+        let g = vec![0.5f32; 4];
+        let mut m = vec![0.0f32; 4];
+        let mut v = vec![0.0f32; 4];
+        adam_step(1, 0.1, &mut p, &g, &mut m, &mut v);
+        assert!(p[0] < 1.0);
+        assert!(m[0] > 0.0);
+        assert!(v[0] > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn length_mismatch_panics() {
+        let mut p = vec![0.0f32; 2];
+        let mut m = vec![0.0f32; 2];
+        let mut v = vec![0.0f32; 2];
+        adam_step(1, 0.1, &mut p, &[0.0; 3], &mut m, &mut v);
+    }
+}

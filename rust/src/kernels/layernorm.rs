@@ -1,0 +1,276 @@
+//! Fused LayerNorm (paper Fig 9): normalize each row to zero mean / unit
+//! variance, then apply the `gamma`/`beta` affine.
+//!
+//! Three implementations, mirroring the paper's three baselines:
+//!
+//! * [`layernorm_rows`] — **fused, chunked Welford**: one read pass
+//!   accumulates mean and M2 over [`LANES`] interleaved accumulator
+//!   lanes (merged with the parallel-Welford combine), one read+write
+//!   pass applies the normalize+affine. 2 memory passes, no
+//!   temporaries. This is the paper's chunked-Welford kernel at host
+//!   scale — and the chunking matters on a CPU too: textbook
+//!   single-accumulator Welford puts a division on the loop-carried
+//!   dependency chain (serial ~15–20 cycles/element), which can lose to
+//!   the naive chain's vectorizable passes; separate lanes plus
+//!   precomputed running-mean reciprocals keep the single pass
+//!   pipelined.
+//! * [`layernorm_rows_apex`] — "Apex-like" single fusion: separate mean
+//!   and variance reduction passes, then one fused apply. 3 passes, no
+//!   temporaries.
+//! * [`layernorm_rows_naive`] — the unfused op chain: mean, subtract,
+//!   square, variance, normalize, affine — 6 traversals with
+//!   temporaries from the [`ScratchPool`].
+//!
+//! Welford changes the *summation order*, so fused vs naive is validated
+//! to tolerance (like the paper's Fig 14 numerics check), not bitwise;
+//! apex vs naive share the two-pass statistics and differ only in fusion.
+
+use super::scratch::ScratchPool;
+
+/// Interleaved Welford accumulator lanes in [`layernorm_rows`] — the
+/// "chunk" count of the chunked-Welford statistics pass.
+pub const LANES: usize = 4;
+
+/// Fused chunked-Welford LayerNorm over `cols`-length rows.
+/// `gamma`/`beta` are length-`cols`; `out.len() == x.len()` (panics on
+/// mismatch — callers own shape checks).
+pub fn layernorm_rows(
+    x: &[f32],
+    cols: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+    out: &mut [f32],
+) {
+    check(x, cols, gamma, beta, out.len());
+    // running-mean reciprocals 1/(k+1), shared by every row and lane —
+    // keeps the hot loop division-free (float division would otherwise
+    // bound the pass's throughput)
+    let max_cnt = (cols + LANES - 1) / LANES;
+    let recip: Vec<f32> = (0..max_cnt).map(|k| 1.0 / (k as f32 + 1.0)).collect();
+    for (orow, xrow) in out.chunks_exact_mut(cols).zip(x.chunks_exact(cols)) {
+        // pass 1: chunked Welford — LANES independent accumulators over
+        // interleaved elements (separate dependency chains), merged by
+        // the parallel-Welford combination
+        let mut mean = [0.0f32; LANES];
+        let mut m2 = [0.0f32; LANES];
+        let mut cnt = [0usize; LANES];
+        for chunk in xrow.chunks(LANES) {
+            for (l, &xv) in chunk.iter().enumerate() {
+                let delta = xv - mean[l];
+                mean[l] += delta * recip[cnt[l]];
+                m2[l] += delta * (xv - mean[l]);
+                cnt[l] += 1;
+            }
+        }
+        let mut n_acc = cnt[0] as f32;
+        let mut mean_acc = mean[0];
+        let mut m2_acc = m2[0];
+        for l in 1..LANES {
+            if cnt[l] == 0 {
+                continue;
+            }
+            let nb = cnt[l] as f32;
+            let delta = mean[l] - mean_acc;
+            let n = n_acc + nb;
+            m2_acc += m2[l] + delta * delta * n_acc * nb / n;
+            mean_acc += delta * nb / n;
+            n_acc = n;
+        }
+        let var = m2_acc / cols as f32;
+        let rstd = 1.0 / (var + eps).sqrt();
+        // pass 2: fused normalize + affine
+        for ((o, &xv), (&g, &b)) in
+            orow.iter_mut().zip(xrow).zip(gamma.iter().zip(beta.iter()))
+        {
+            *o = (xv - mean_acc) * rstd * g + b;
+        }
+    }
+}
+
+/// "Apex-like" single-fusion baseline: two-pass statistics (mean pass,
+/// variance pass) + one fused normalize/affine pass — 3 traversals, no
+/// temporaries.
+pub fn layernorm_rows_apex(
+    x: &[f32],
+    cols: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+    out: &mut [f32],
+) {
+    check(x, cols, gamma, beta, out.len());
+    for (orow, xrow) in out.chunks_exact_mut(cols).zip(x.chunks_exact(cols)) {
+        let mean = xrow.iter().sum::<f32>() / cols as f32;
+        let mut acc = 0.0f32;
+        for &xv in xrow {
+            let d = xv - mean;
+            acc += d * d;
+        }
+        let var = acc / cols as f32;
+        let rstd = 1.0 / (var + eps).sqrt();
+        for ((o, &xv), (&g, &b)) in
+            orow.iter_mut().zip(xrow).zip(gamma.iter().zip(beta.iter()))
+        {
+            *o = (xv - mean) * rstd * g + b;
+        }
+    }
+}
+
+/// The naive unfused chain: one traversal per op (mean → subtract →
+/// square → variance → normalize → affine) with temporaries from `pool`
+/// — the memory-traffic baseline.
+pub fn layernorm_rows_naive(
+    x: &[f32],
+    cols: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+    pool: &mut ScratchPool,
+    out: &mut [f32],
+) {
+    check(x, cols, gamma, beta, out.len());
+    let rows = x.len() / cols;
+
+    // op 1: row means
+    let mut means = pool.take(rows);
+    for (o, row) in means.iter_mut().zip(x.chunks_exact(cols)) {
+        *o = row.iter().sum::<f32>() / cols as f32;
+    }
+    // op 2: center
+    let mut centered = pool.take(x.len());
+    for ((orow, xrow), &mean) in centered
+        .chunks_exact_mut(cols)
+        .zip(x.chunks_exact(cols))
+        .zip(means.iter())
+    {
+        for (o, &xv) in orow.iter_mut().zip(xrow) {
+            *o = xv - mean;
+        }
+    }
+    // op 3: square
+    let mut sq = pool.take(x.len());
+    for (o, &c) in sq.iter_mut().zip(centered.iter()) {
+        *o = c * c;
+    }
+    // op 4: row variances
+    let mut vars = pool.take(rows);
+    for (o, row) in vars.iter_mut().zip(sq.chunks_exact(cols)) {
+        *o = row.iter().sum::<f32>() / cols as f32;
+    }
+    // op 5: normalize
+    let mut norm = pool.take(x.len());
+    for ((orow, crow), &var) in norm
+        .chunks_exact_mut(cols)
+        .zip(centered.chunks_exact(cols))
+        .zip(vars.iter())
+    {
+        let rstd = 1.0 / (var + eps).sqrt();
+        for (o, &c) in orow.iter_mut().zip(crow) {
+            *o = c * rstd;
+        }
+    }
+    // op 6: affine
+    for (orow, nrow) in out.chunks_exact_mut(cols).zip(norm.chunks_exact(cols)) {
+        for ((o, &nv), (&g, &b)) in
+            orow.iter_mut().zip(nrow).zip(gamma.iter().zip(beta.iter()))
+        {
+            *o = nv * g + b;
+        }
+    }
+    pool.give(norm);
+    pool.give(vars);
+    pool.give(sq);
+    pool.give(centered);
+    pool.give(means);
+}
+
+fn check(x: &[f32], cols: usize, gamma: &[f32], beta: &[f32], out_len: usize) {
+    assert!(cols > 0, "layernorm over 0 columns");
+    assert_eq!(x.len() % cols, 0, "input not a whole number of rows");
+    assert_eq!(gamma.len(), cols, "gamma length mismatch");
+    assert_eq!(beta.len(), cols, "beta length mismatch");
+    assert_eq!(out_len, x.len(), "output length mismatch");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    const EPS: f32 = 1e-5;
+
+    #[test]
+    fn fused_matches_naive_and_apex_to_tolerance() {
+        let mut rng = Rng::new(91);
+        let mut pool = ScratchPool::new();
+        for &(rows, cols) in &[(1usize, 4usize), (8, 32), (16, 128), (3, 65)] {
+            let x = rng.normal_vec(rows * cols, 2.0);
+            let g = rng.normal_vec(cols, 1.0);
+            let b = rng.normal_vec(cols, 1.0);
+            let mut fused = vec![0.0f32; x.len()];
+            let mut apex = vec![0.0f32; x.len()];
+            let mut naive = vec![0.0f32; x.len()];
+            layernorm_rows(&x, cols, &g, &b, EPS, &mut fused);
+            layernorm_rows_apex(&x, cols, &g, &b, EPS, &mut apex);
+            layernorm_rows_naive(&x, cols, &g, &b, EPS, &mut pool, &mut naive);
+            for i in 0..x.len() {
+                assert!(
+                    (fused[i] - naive[i]).abs() < 1e-4,
+                    "fused vs naive at {i}: {} vs {}",
+                    fused[i],
+                    naive[i]
+                );
+                assert!(
+                    (apex[i] - naive[i]).abs() < 1e-5,
+                    "apex vs naive at {i}: {} vs {}",
+                    apex[i],
+                    naive[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn normalizes_rows() {
+        let mut rng = Rng::new(92);
+        let (rows, cols) = (4usize, 64usize);
+        let x = rng.normal_vec(rows * cols, 3.0);
+        let g = vec![1.0f32; cols];
+        let b = vec![0.0f32; cols];
+        let mut out = vec![0.0f32; x.len()];
+        layernorm_rows(&x, cols, &g, &b, EPS, &mut out);
+        for row in out.chunks_exact(cols) {
+            let mean: f32 = row.iter().sum::<f32>() / cols as f32;
+            let var: f32 =
+                row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / cols as f32;
+            assert!(mean.abs() < 1e-4, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+    }
+
+    #[test]
+    fn affine_applies() {
+        let x = vec![1.0f32, -1.0];
+        let mut out = vec![0.0f32; 2];
+        layernorm_rows(&x, 2, &[2.0, 2.0], &[10.0, 10.0], EPS, &mut out);
+        // normalized row is ±1 (up to eps), so out ≈ 10 ± 2
+        assert!((out[0] - 12.0).abs() < 1e-2, "{}", out[0]);
+        assert!((out[1] - 8.0).abs() < 1e-2, "{}", out[1]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Rng::new(93);
+        let x = rng.normal_vec(256, 1.0);
+        let g = vec![1.0f32; 64];
+        let b = vec![0.0f32; 64];
+        let mut a = vec![0.0f32; 256];
+        let mut c = vec![0.0f32; 256];
+        layernorm_rows(&x, 64, &g, &b, EPS, &mut a);
+        layernorm_rows(&x, 64, &g, &b, EPS, &mut c);
+        for (p, q) in a.iter().zip(c.iter()) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+    }
+}

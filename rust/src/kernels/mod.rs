@@ -1,0 +1,64 @@
+//! Native fused host kernels (paper Figs 8–9 brought on-host).
+//!
+//! The paper's kernel pillar fuses multi-op chains — softmax's
+//! scale/max/sub/exp/sum/div, LayerNorm's two reduction passes plus the
+//! affine apply — into single kernels that traverse memory once or twice
+//! instead of once per op. This module implements those fused kernels as
+//! plain-slice host functions, next to their **naive op-chain
+//! counterparts** (one full traversal per op, temporaries from a
+//! [`ScratchPool`]) so the fused-vs-naive delta is measurable everywhere
+//! (`fastfold bench`, the fig8/fig9 benches' native mode) without
+//! artifacts or a device.
+//!
+//! Contracts:
+//!
+//! * `softmax` fused vs naive is **bit-for-bit identical** (same
+//!   per-element op sequence, same fold order) — fusion changes memory
+//!   traffic, never numerics.
+//! * `adam` fused vs naive is bit-for-bit identical, and both match the
+//!   exported `adam_update` executable's formula exactly (the
+//!   [`crate::train`] host Adam path runs on the fused kernel).
+//! * `layernorm`'s fused kernel uses chunked Welford accumulation —
+//!   numerically *better* than the naive two-pass chain but not
+//!   bit-identical to it; equivalence is validated to tolerance, like
+//!   the paper's Fig 14 numerics check.
+//!
+//! Kernels operate on raw `&[f32]` rows so this module stays a leaf
+//! (usable from [`crate::tensor`] without cycles of responsibility).
+
+pub mod adam;
+pub mod layernorm;
+pub mod scratch;
+pub mod softmax;
+
+pub use scratch::ScratchPool;
+
+/// Elementwise `dst += src` (the reduction primitive behind
+/// [`crate::tensor::HostTensor::add_assign`]).
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (a, &b) in dst.iter_mut().zip(src) {
+        *a += b;
+    }
+}
+
+/// Elementwise `dst *= s` (behind [`crate::tensor::HostTensor::scale`]).
+pub fn scale(dst: &mut [f32], s: f32) {
+    for a in dst.iter_mut() {
+        *a *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise_helpers() {
+        let mut a = vec![1.0f32, 2.0, 3.0];
+        add_assign(&mut a, &[0.5, 0.5, 0.5]);
+        assert_eq!(a, vec![1.5, 2.5, 3.5]);
+        scale(&mut a, 2.0);
+        assert_eq!(a, vec![3.0, 5.0, 7.0]);
+    }
+}

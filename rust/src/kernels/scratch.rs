@@ -1,0 +1,77 @@
+//! [`ScratchPool`]: a reusable buffer pool for kernel temporaries.
+//!
+//! The naive op-chain kernels materialize one temporary per op — exactly
+//! the allocation traffic the fused kernels eliminate. The pool lets the
+//! chains (and any other per-step temporary consumer, e.g. the ring
+//! all-reduce's per-step snapshot) pay the allocation once and reuse it
+//! across iterations, so benches compare *memory passes*, not allocator
+//! throughput.
+
+/// A LIFO free-list of `Vec<f32>` buffers. `take` hands out a zeroed
+/// buffer of the requested length, reusing the most recently returned
+/// allocation (LIFO — callers with a fixed take/give pattern, like the
+/// naive kernel chains, get their own allocations back and reallocate
+/// nothing in steady state); `give` returns a buffer for reuse.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    free: Vec<Vec<f32>>,
+}
+
+impl ScratchPool {
+    /// An empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a buffer of exactly `len` zeros (reuses a retained allocation
+    /// when one exists; its capacity is kept, so steady-state `take`s
+    /// allocate nothing once the pool is warm).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut b = self.free.pop().unwrap_or_default();
+        b.clear();
+        b.resize(len, 0.0);
+        b
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn give(&mut self, b: Vec<f32>) {
+        self.free.push(b);
+    }
+
+    /// Number of buffers currently retained for reuse.
+    pub fn retained(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reuses_capacity() {
+        let mut pool = ScratchPool::new();
+        let mut b = pool.take(128);
+        assert_eq!(b.len(), 128);
+        assert!(b.iter().all(|&x| x == 0.0));
+        b[0] = 7.0;
+        let cap = b.capacity();
+        let ptr = b.as_ptr();
+        pool.give(b);
+        assert_eq!(pool.retained(), 1);
+        let c = pool.take(64);
+        assert_eq!(c.len(), 64);
+        assert!(c.iter().all(|&x| x == 0.0), "reused buffers come back zeroed");
+        assert_eq!(c.as_ptr(), ptr, "allocation reused");
+        assert_eq!(c.capacity(), cap);
+        assert_eq!(pool.retained(), 0);
+    }
+
+    #[test]
+    fn empty_pool_allocates() {
+        let mut pool = ScratchPool::new();
+        assert_eq!(pool.retained(), 0);
+        let b = pool.take(8);
+        assert_eq!(b.len(), 8);
+    }
+}

@@ -1,0 +1,156 @@
+//! Fused softmax (paper Fig 8): `softmax(x · scale)` over the last axis.
+//!
+//! The unfused chain is 6 ops — scale, row-max, subtract, exp, row-sum,
+//! divide — each a full memory traversal with a temporary
+//! ([`softmax_rows_naive`]). The fused kernel ([`softmax_rows`]) makes
+//! one read pass for the max, one read+write pass computing
+//! `exp(x·scale − max)` while accumulating the row sum, and one in-place
+//! normalize pass — no temporaries at all. Both execute the identical
+//! per-element op sequence in the identical fold order, so outputs are
+//! **bit-for-bit equal** (pinned by test); only the memory traffic
+//! differs, which is exactly the quantity the paper's 1.77–3.32× Fig 8
+//! band measures.
+
+use super::scratch::ScratchPool;
+
+/// Fused row softmax: `out[r] = softmax(x[r] · scale)` for each
+/// `cols`-length row. `x.len()` must be a multiple of `cols` and
+/// `out.len() == x.len()` (panics otherwise — callers own shape checks).
+pub fn softmax_rows(x: &[f32], cols: usize, scale: f32, out: &mut [f32]) {
+    assert!(cols > 0, "softmax over 0 columns");
+    assert_eq!(x.len() % cols, 0, "input not a whole number of rows");
+    assert_eq!(out.len(), x.len(), "output length mismatch");
+    for (orow, xrow) in out.chunks_exact_mut(cols).zip(x.chunks_exact(cols)) {
+        let mut mx = f32::NEG_INFINITY;
+        for &xv in xrow {
+            mx = mx.max(xv * scale);
+        }
+        let mut sum = 0.0f32;
+        for (o, &xv) in orow.iter_mut().zip(xrow) {
+            let e = (xv * scale - mx).exp();
+            *o = e;
+            sum += e;
+        }
+        for o in orow.iter_mut() {
+            *o /= sum;
+        }
+    }
+}
+
+/// The naive unfused chain: one full traversal per op (scale → row-max →
+/// subtract → exp → row-sum → divide), temporaries from `pool` — the
+/// memory-traffic baseline the fused kernel is measured against.
+/// Bit-for-bit equal to [`softmax_rows`].
+pub fn softmax_rows_naive(
+    x: &[f32],
+    cols: usize,
+    scale: f32,
+    pool: &mut ScratchPool,
+    out: &mut [f32],
+) {
+    assert!(cols > 0, "softmax over 0 columns");
+    assert_eq!(x.len() % cols, 0, "input not a whole number of rows");
+    assert_eq!(out.len(), x.len(), "output length mismatch");
+    let rows = x.len() / cols;
+
+    // op 1: scale
+    let mut scaled = pool.take(x.len());
+    for (o, &xv) in scaled.iter_mut().zip(x) {
+        *o = xv * scale;
+    }
+    // op 2: row max
+    let mut rowmax = pool.take(rows);
+    for (o, row) in rowmax.iter_mut().zip(scaled.chunks_exact(cols)) {
+        *o = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    }
+    // op 3: subtract the row max
+    let mut sub = pool.take(x.len());
+    for ((orow, srow), &mx) in sub
+        .chunks_exact_mut(cols)
+        .zip(scaled.chunks_exact(cols))
+        .zip(rowmax.iter())
+    {
+        for (o, &s) in orow.iter_mut().zip(srow) {
+            *o = s - mx;
+        }
+    }
+    // op 4: exp
+    let mut ex = pool.take(x.len());
+    for (o, &s) in ex.iter_mut().zip(sub.iter()) {
+        *o = s.exp();
+    }
+    // op 5: row sum
+    let mut rowsum = pool.take(rows);
+    for (o, row) in rowsum.iter_mut().zip(ex.chunks_exact(cols)) {
+        *o = row.iter().sum();
+    }
+    // op 6: divide
+    for ((orow, erow), &s) in out
+        .chunks_exact_mut(cols)
+        .zip(ex.chunks_exact(cols))
+        .zip(rowsum.iter())
+    {
+        for (o, &e) in orow.iter_mut().zip(erow) {
+            *o = e / s;
+        }
+    }
+    pool.give(rowsum);
+    pool.give(ex);
+    pool.give(sub);
+    pool.give(rowmax);
+    pool.give(scaled);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn fused_equals_naive_bitwise() {
+        let mut rng = Rng::new(81);
+        let mut pool = ScratchPool::new();
+        for &(rows, cols) in &[(1usize, 1usize), (3, 7), (16, 64), (5, 33)] {
+            let x = rng.normal_vec(rows * cols, 2.0);
+            for &scale in &[1.0f32, 0.176_776_7] {
+                let mut fused = vec![0.0f32; x.len()];
+                let mut naive = vec![0.0f32; x.len()];
+                softmax_rows(&x, cols, scale, &mut fused);
+                softmax_rows_naive(&x, cols, scale, &mut pool, &mut naive);
+                for (a, b) in fused.iter().zip(naive.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "rows={rows} cols={cols}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_normalize_and_order_preserved() {
+        let x = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let mut out = vec![0.0f32; 6];
+        softmax_rows(&x, 3, 1.0, &mut out);
+        for row in out.chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(row[0] < row[1] && row[1] < row[2], "monotone in logits");
+            assert!(row.iter().all(|&p| p > 0.0));
+        }
+    }
+
+    #[test]
+    fn large_logits_are_stable() {
+        // the max-subtraction is what keeps exp() finite
+        let x = vec![1000.0f32, 1001.0, 999.0];
+        let mut out = vec![0.0f32; 3];
+        softmax_rows(&x, 3, 1.0, &mut out);
+        assert!(out.iter().all(|p| p.is_finite()));
+        assert!((out.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole number of rows")]
+    fn ragged_input_panics() {
+        let mut out = vec![0.0f32; 5];
+        softmax_rows(&[0.0; 5], 3, 1.0, &mut out);
+    }
+}

@@ -22,7 +22,11 @@
 //!   engine ([`inference::engine`]) placing and scheduling whole request
 //!   batches across the single-device/chunked/DAP backends, and the
 //!   calibrated A100 performance/memory models that regenerate the
-//!   paper's scaling figures ([`perfmodel`]).
+//!   paper's scaling figures ([`perfmodel`]). The host data plane is
+//!   zero-copy ([`tensor`]: Arc-backed views with copy-on-write), the
+//!   paper's fused kernels run natively on host next to their naive op
+//!   chains ([`kernels`]), and `fastfold bench` ([`bench`]) emits the
+//!   `BENCH_host.json` perf ledger.
 //!
 //! Python never runs on the request path: `make artifacts` exports
 //! everything once, then the `fastfold` binary is self-contained. This
@@ -32,12 +36,14 @@
 
 #![warn(missing_docs)]
 
+pub mod bench;
 pub mod comm;
 pub mod config;
 pub mod dap;
 pub mod error;
 pub mod inference;
 pub mod json;
+pub mod kernels;
 pub mod manifest;
 pub mod metrics;
 pub mod perfmodel;

@@ -11,6 +11,7 @@
 //!                    [--gpu a100_40g] [--max-dap N] [--dry-run] [--config f.toml]
 //! fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu a100_40g]
 //!                    [--headroom F] [--json] [--config f.toml]
+//! fastfold bench     [--json] [--out BENCH_host.json] [--quick]
 //! fastfold report    <table2|table3|table4|table5|fig10|fig11|fig13|validate>
 //! fastfold info
 //! ```
@@ -73,6 +74,7 @@ fn run(args: &[String]) -> Result<()> {
         "infer" => cmd_infer(&flags),
         "serve" => cmd_serve(&flags),
         "autochunk" => cmd_autochunk(&flags),
+        "bench" => cmd_bench(&flags),
         "report" => cmd_report(&pos, &flags),
         "info" => cmd_info(&flags),
         _ => {
@@ -88,6 +90,7 @@ fn run(args: &[String]) -> Result<()> {
                  [--gpu G] [--max-dap N] [--dry-run] [--config f.toml]\n  \
                  fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu G] \
                  [--headroom F] [--json] [--config f.toml]\n  \
+                 fastfold bench  [--json] [--out BENCH_host.json] [--quick]\n  \
                  fastfold report <table2|table3|table4|table5|fig10|fig11|fig13|validate>\n  \
                  fastfold info   [--artifacts DIR]"
             );
@@ -637,6 +640,38 @@ fn cmd_autochunk(flags: &BTreeMap<String, String>) -> Result<()> {
             }
         }
         Err(e) => return Err(e),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- bench
+
+/// `fastfold bench` — the host perf harness: measures the zero-copy data
+/// plane (shard moves, ring all-reduce) and the native fused kernels
+/// (softmax / LayerNorm / Adam vs their naive op chains), plus the
+/// synthetic train steps/s and the modeled serve makespan. `--json`
+/// writes the `BENCH_host.json` ledger (`--out` overrides the path);
+/// `--quick` runs the reduced sizes the tier-1 smoke uses. No artifacts,
+/// no network, no device.
+fn cmd_bench(flags: &BTreeMap<String, String>) -> Result<()> {
+    let opts = fastfold::bench::BenchOptions { quick: flags.contains_key("quick") };
+    let doc = fastfold::bench::run_host_bench(opts)?;
+    if flags.contains_key("json") || flags.contains_key("out") {
+        let out = flags
+            .get("out")
+            .cloned()
+            .unwrap_or_else(|| "BENCH_host.json".to_string());
+        std::fs::write(&out, format!("{doc}\n"))?;
+        println!("{doc}");
+        eprintln!("[fastfold] wrote {out}");
+    } else {
+        println!(
+            "fastfold bench — host data plane + native fused kernels \
+             (quick={})\n",
+            opts.quick
+        );
+        fastfold::bench::render_table(&doc).print();
+        println!("\n(use --json to emit the BENCH_host.json ledger)");
     }
     Ok(())
 }

@@ -315,7 +315,7 @@ mod tests {
             .collect();
         let picked = m.pick_params("tiny", "heads/", &params).unwrap();
         assert_eq!(picked.len(), 1);
-        assert_eq!(picked[0].data, vec![2.0]);
+        assert_eq!(picked[0].data(), &[2.0][..]);
         // a short param list (caller passed the wrong leaf vector) errors
         // instead of silently truncating the pick
         assert!(m.pick_params("tiny", "heads/", &params[..2]).is_err());

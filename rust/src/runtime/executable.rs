@@ -5,7 +5,7 @@
 use crate::error::{Error, Result};
 use crate::manifest::{ArtifactSpec, DType, TensorSpec};
 use crate::tensor::{HostTensor, IntTensor};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
 
 /// An input value: f32 tensor, i32 tensor, or f32 scalar.
@@ -58,24 +58,49 @@ impl From<IntTensor> for Value {
     }
 }
 
-#[derive(Default, Clone, Debug)]
+/// Lock-free per-executable run statistics. The old `Mutex<ExecStats>`
+/// serialized every rank worker on the ledger after each segment run;
+/// relaxed atomic counters record without contention, and integer
+/// nanosecond accumulation keeps the totals *exact* (addition of u64
+/// nanos is associative — the sum is independent of thread interleaving,
+/// unlike a float accumulator).
+#[derive(Default, Debug)]
 pub struct ExecStats {
-    pub runs: usize,
-    pub total_seconds: f64,
+    runs: AtomicUsize,
+    total_nanos: AtomicU64,
+}
+
+impl ExecStats {
+    /// Record one run of `seconds` wall time.
+    pub fn record(&self, seconds: f64) {
+        self.runs.fetch_add(1, Ordering::Relaxed);
+        self.total_nanos
+            .fetch_add((seconds * 1e9).round().max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    /// Number of recorded runs.
+    pub fn runs(&self) -> usize {
+        self.runs.load(Ordering::Relaxed)
+    }
+
+    /// Total recorded wall seconds.
+    pub fn total_seconds(&self) -> f64 {
+        self.total_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
 }
 
 /// `Executable` is `Sync`: rank worker threads share one compiled
-/// executable (`Arc<Executable>`) and race only on the stats ledger,
-/// which sits behind a mutex.
+/// executable (`Arc<Executable>`) and record into the lock-free
+/// [`ExecStats`] ledger without serializing on a mutex.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub spec: ArtifactSpec,
-    pub stats: Mutex<ExecStats>,
+    pub stats: ExecStats,
 }
 
 impl Executable {
     pub(crate) fn new(exe: xla::PjRtLoadedExecutable, spec: ArtifactSpec) -> Self {
-        Executable { exe, spec, stats: Mutex::new(ExecStats::default()) }
+        Executable { exe, spec, stats: ExecStats::default() }
     }
 
     /// Execute with typed host values; returns the decomposed output tuple
@@ -102,11 +127,7 @@ impl Executable {
         let t0 = Instant::now();
         let result = self.exe.execute::<xla::Literal>(&lits)?;
         let out_lit = result[0][0].to_literal_sync()?;
-        {
-            let mut st = self.stats.lock().unwrap();
-            st.runs += 1;
-            st.total_seconds += t0.elapsed().as_secs_f64();
-        }
+        self.stats.record(t0.elapsed().as_secs_f64());
         // lowered with return_tuple=True: always a tuple, even for 1 output
         let parts = out_lit.to_tuple()?;
         if parts.len() != self.spec.outputs.len() {
@@ -161,11 +182,7 @@ impl Executable {
         let t0 = Instant::now();
         let result = self.exe.execute::<&xla::Literal>(&refs)?;
         let out_lit = result[0][0].to_literal_sync()?;
-        {
-            let mut st = self.stats.lock().unwrap();
-            st.runs += 1;
-            st.total_seconds += t0.elapsed().as_secs_f64();
-        }
+        self.stats.record(t0.elapsed().as_secs_f64());
         let parts = out_lit.to_tuple()?;
         if parts.len() != self.spec.outputs.len() {
             return Err(Error::Shape(format!(
@@ -179,11 +196,46 @@ impl Executable {
     }
 
     pub fn mean_run_seconds(&self) -> f64 {
-        let st = self.stats.lock().unwrap();
-        if st.runs == 0 {
+        let runs = self.stats.runs();
+        if runs == 0 {
             0.0
         } else {
-            st.total_seconds / st.runs as f64
+            self.stats.total_seconds() / runs as f64
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_exact_under_concurrency() {
+        // the atomic ledger must lose nothing however threads interleave:
+        // 8 workers × 1000 records of exactly 1 ms each (1 ms = 10^6
+        // nanos, exactly representable) must total exactly 8 s / 8000 runs
+        let st = ExecStats::default();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        st.record(0.001);
+                    }
+                });
+            }
+        });
+        assert_eq!(st.runs(), 8000);
+        assert!((st.total_seconds() - 8.0).abs() < 1e-12, "{}", st.total_seconds());
+    }
+
+    #[test]
+    fn stats_empty_and_negative_guard() {
+        let st = ExecStats::default();
+        assert_eq!(st.runs(), 0);
+        assert_eq!(st.total_seconds(), 0.0);
+        // a (clock-skew) negative duration must not wrap the counter
+        st.record(-1.0);
+        assert_eq!(st.runs(), 1);
+        assert_eq!(st.total_seconds(), 0.0);
     }
 }

@@ -1,21 +1,56 @@
 //! [`HostTensor`]: the host-side nd-array the coordinator moves between
 //! PJRT executions and collectives.
 //!
-//! Deliberately minimal — row-major f32 (plus an i32 variant for token
-//! batches), with exactly the ops the DAP/TP coordinators need: slicing and
-//! concatenation along an axis (shard / all_gather / all_to_all), axis
-//! splitting, elementwise add (reduce), and (de)serialization to
-//! [`xla::Literal`].
+//! **Storage model (the zero-copy host data plane).** Every tensor is a
+//! *view* into shared `Arc<Vec<f32>>` storage: `(buf, offset, shape)`,
+//! always contiguous in row-major order. Consequences:
+//!
+//! * `clone()` is O(1) — an `Arc` bump plus a shape copy. The DAP
+//!   executor's shard moves and the tape's forward snapshots no longer
+//!   deep-copy activations.
+//! * `slice_axis`/`split_axis` along a leading axis (the DAP shard axis)
+//!   are O(1) metadata ops; `concat` of adjacent views of one buffer
+//!   (the shard → unshard roundtrip) reassembles the parent view without
+//!   touching element data.
+//! * Mutation goes through [`HostTensor::data_mut`], which is
+//!   **copy-on-write**: a uniquely-owned full-buffer tensor mutates in
+//!   place, a shared or sub-view tensor first materializes its own
+//!   buffer. No caller can observe another view's mutation.
+//! * Literal conversion shares storage with the `xla` stub
+//!   ([`xla::Literal::from_shared`] / `to_shared`), so the Runtime hot
+//!   path moves `Arc`s, not element copies.
+//!
+//! Views are deliberately restricted to *contiguous* runs (no general
+//! strides): the hot paths — axis-0 sharding, executor slot moves, tape
+//! snapshots, literal conversion — are all contiguous, and a strided
+//! `transpose01` view would only defer the same copy to the next literal
+//! conversion while making every consumer stride-aware. The copying
+//! reference implementations ([`HostTensor::slice_axis_copy`],
+//! [`HostTensor::concat_copy`]) are kept for the equivalence property
+//! suite and the `fastfold bench` shard-move comparison.
 
 use crate::error::{Error, Result};
+use crate::kernels;
+use std::sync::Arc;
 
-#[derive(Clone, Debug, PartialEq)]
+/// Row-major f32 nd-array over shared, view-based storage (see the
+/// module docs for the zero-copy semantics).
+#[derive(Clone, Debug)]
 pub struct HostTensor {
+    /// Logical dimensions, outermost first (row-major).
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    buf: Arc<Vec<f32>>,
+    offset: usize,
+}
+
+impl PartialEq for HostTensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data() == other.data()
+    }
 }
 
 impl HostTensor {
+    /// Build a tensor owning `data` (element count must match `shape`).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -26,72 +61,163 @@ impl HostTensor {
                 data.len()
             )));
         }
-        Ok(HostTensor { shape, data })
+        Ok(HostTensor { shape, buf: Arc::new(data), offset: 0 })
     }
 
+    /// Build a tensor sharing an existing storage buffer (zero-copy; the
+    /// literal round-trip uses this).
+    pub fn from_shared(shape: Vec<usize>, buf: Arc<Vec<f32>>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != buf.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elems, shared buffer has {}",
+                shape,
+                n,
+                buf.len()
+            )));
+        }
+        Ok(HostTensor { shape, buf, offset: 0 })
+    }
+
+    /// All-zeros tensor.
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
-        HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
+        HostTensor { shape: shape.to_vec(), buf: Arc::new(vec![0.0; n]), offset: 0 }
     }
 
+    /// Rank-0 scalar.
     pub fn scalar(v: f32) -> Self {
-        HostTensor { shape: vec![], data: vec![v] }
+        HostTensor { shape: vec![], buf: Arc::new(vec![v]), offset: 0 }
     }
 
+    /// Constant-filled tensor.
     pub fn full(shape: &[usize], v: f32) -> Self {
         let n = shape.iter().product();
-        HostTensor { shape: shape.to_vec(), data: vec![v; n] }
+        HostTensor { shape: shape.to_vec(), buf: Arc::new(vec![v; n]), offset: 0 }
     }
 
+    /// Element count of the view.
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.shape.iter().product()
     }
 
+    /// True when the view holds no elements (some dimension is 0).
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len() == 0
     }
 
+    /// Number of dimensions.
     pub fn ndim(&self) -> usize {
         self.shape.len()
     }
 
+    /// Byte volume of the view's elements.
     pub fn size_bytes(&self) -> usize {
-        self.data.len() * 4
+        self.len() * 4
     }
 
-    /// Row-major strides.
-    fn strides(&self) -> Vec<usize> {
-        let mut s = vec![1usize; self.shape.len()];
-        for i in (0..self.shape.len().saturating_sub(1)).rev() {
-            s[i] = s[i + 1] * self.shape[i + 1];
+    /// The view's elements in logical (row-major) order. O(1): views are
+    /// always contiguous, so this is a plain sub-slice of the shared
+    /// buffer.
+    pub fn data(&self) -> &[f32] {
+        &self.buf[self.offset..self.offset + self.len()]
+    }
+
+    /// Copy the view's elements out as an owned vector.
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.data().to_vec()
+    }
+
+    /// Mutable access with **copy-on-write** semantics: if this tensor
+    /// uniquely owns its full buffer it mutates in place; otherwise (the
+    /// storage is shared with other views, or this is a sub-view) it
+    /// first materializes a private copy of its elements. Either way the
+    /// returned slice is this tensor's elements in logical order and no
+    /// other view observes the mutation.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        let n = self.len();
+        let unique_full = self.offset == 0
+            && self.buf.len() == n
+            && Arc::get_mut(&mut self.buf).is_some();
+        if !unique_full {
+            let copied = self.data().to_vec();
+            self.buf = Arc::new(copied);
+            self.offset = 0;
         }
-        s
+        Arc::get_mut(&mut self.buf)
+            .expect("unique after copy-on-write")
+            .as_mut_slice()
     }
 
-    /// Slice `[start, start+len)` along `axis` (copies).
-    pub fn slice_axis(&self, axis: usize, start: usize, len: usize) -> Result<Self> {
+    /// True when `self` and `other` share one storage buffer (views of
+    /// the same allocation). Test/diagnostic helper for the zero-copy
+    /// contracts.
+    pub fn shares_storage(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
+    }
+
+    /// True when this tensor is a proper view (does not span its whole
+    /// storage buffer).
+    pub fn is_view(&self) -> bool {
+        self.offset != 0 || self.buf.len() != self.len()
+    }
+
+    /// Shared validation for the slice family: bounds-check the request
+    /// and return `(outer, inner, d)` — the dims both implementations
+    /// gather with (one checker, so the paths cannot diverge).
+    fn slice_dims(&self, axis: usize, start: usize, len: usize) -> Result<(usize, usize, usize)> {
         if axis >= self.shape.len() || start + len > self.shape[axis] {
             return Err(Error::Shape(format!(
                 "slice axis {axis} [{start}+{len}) of {:?}",
                 self.shape
             )));
         }
-        let outer: usize = self.shape[..axis].iter().product();
-        let inner: usize = self.shape[axis + 1..].iter().product();
-        let d = self.shape[axis];
+        let outer = self.shape[..axis].iter().product();
+        let inner = self.shape[axis + 1..].iter().product();
+        Ok((outer, inner, self.shape[axis]))
+    }
+
+    /// Slice `[start, start+len)` along `axis`. O(1) when the selected
+    /// elements form one contiguous run — `axis` is the leading
+    /// non-trivial dimension (the DAP shard axis) or the slice is the
+    /// identity — otherwise a gather-copy.
+    pub fn slice_axis(&self, axis: usize, start: usize, len: usize) -> Result<Self> {
+        let (outer, inner, d) = self.slice_dims(axis, start, len)?;
+        if outer == 1 || len == d {
+            // one contiguous run: offset arithmetic only (len == d forces
+            // start == 0 — the identity slice — at any axis)
+            let mut shape = self.shape.clone();
+            shape[axis] = len;
+            return Ok(HostTensor {
+                shape,
+                buf: Arc::clone(&self.buf),
+                offset: self.offset + start * inner,
+            });
+        }
+        // non-contiguous selection: one gather algorithm, shared with the
+        // reference so the two paths cannot diverge
+        self.slice_axis_copy(axis, start, len)
+    }
+
+    /// Reference copying `slice_axis` (the pre-view implementation) —
+    /// kept for the equivalence property suite and the shard-move bench.
+    pub fn slice_axis_copy(&self, axis: usize, start: usize, len: usize) -> Result<Self> {
+        let (outer, inner, d) = self.slice_dims(axis, start, len)?;
+        let src = self.data();
         let mut out = Vec::with_capacity(outer * len * inner);
         for o in 0..outer {
             let base = o * d * inner + start * inner;
-            out.extend_from_slice(&self.data[base..base + len * inner]);
+            out.extend_from_slice(&src[base..base + len * inner]);
         }
         let mut shape = self.shape.clone();
         shape[axis] = len;
         HostTensor::new(shape, out)
     }
 
-    /// Split into `n` equal parts along `axis`.
+    /// Split into `n` equal parts along `axis` (O(1) views on the leading
+    /// axis).
     pub fn split_axis(&self, axis: usize, n: usize) -> Result<Vec<Self>> {
-        if axis >= self.shape.len() || self.shape[axis] % n != 0 {
+        if axis >= self.shape.len() || n == 0 || self.shape[axis] % n != 0 {
             return Err(Error::Shape(format!(
                 "split axis {axis} of {:?} into {n}",
                 self.shape
@@ -101,8 +227,10 @@ impl HostTensor {
         (0..n).map(|i| self.slice_axis(axis, i * part, part)).collect()
     }
 
-    /// Concatenate along `axis`.
-    pub fn concat(parts: &[Self], axis: usize) -> Result<Self> {
+    /// Shared validation for the concat family: rank/shape compatibility
+    /// plus the result geometry `(outer, inner, concatenated shape)` —
+    /// one checker, so the view and copy paths cannot diverge.
+    fn concat_dims(parts: &[Self], axis: usize) -> Result<(usize, usize, Vec<usize>)> {
         let first = parts.first().ok_or_else(|| Error::Shape("concat of 0 tensors".into()))?;
         let nd = first.shape.len();
         if axis >= nd {
@@ -119,23 +247,61 @@ impl HostTensor {
                 )));
             }
         }
-        let outer: usize = first.shape[..axis].iter().product();
-        let inner: usize = first.shape[axis + 1..].iter().product();
+        let outer = first.shape[..axis].iter().product();
+        let inner = first.shape[axis + 1..].iter().product();
         let total_axis: usize = parts.iter().map(|p| p.shape[axis]).sum();
-        let mut out = Vec::with_capacity(outer * total_axis * inner);
+        let mut shape = first.shape.clone();
+        shape[axis] = total_axis;
+        Ok((outer, inner, shape))
+    }
+
+    /// Concatenate along `axis`. When `parts` are adjacent views of one
+    /// buffer in order (the shard → unshard roundtrip), the parent view
+    /// is reassembled without copying; otherwise a gather-copy.
+    pub fn concat(parts: &[Self], axis: usize) -> Result<Self> {
+        let (outer, _inner, shape) = Self::concat_dims(parts, axis)?;
+        if outer == 1 {
+            // zero-copy reassembly of adjacent in-order views
+            let first = &parts[0];
+            let mut off = first.offset;
+            let mut adjacent = true;
+            for p in parts {
+                if !Arc::ptr_eq(&p.buf, &first.buf) || p.offset != off {
+                    adjacent = false;
+                    break;
+                }
+                off += p.len();
+            }
+            if adjacent {
+                return Ok(HostTensor {
+                    shape,
+                    buf: Arc::clone(&first.buf),
+                    offset: first.offset,
+                });
+            }
+        }
+        // one gather algorithm, shared with the reference so the two
+        // paths cannot diverge
+        Self::concat_copy(parts, axis)
+    }
+
+    /// Reference copying `concat` (always materializes) — kept for the
+    /// equivalence property suite and the shard-move bench.
+    pub fn concat_copy(parts: &[Self], axis: usize) -> Result<Self> {
+        let (outer, inner, shape) = Self::concat_dims(parts, axis)?;
+        let mut out = Vec::with_capacity(shape.iter().product());
         for o in 0..outer {
             for p in parts {
                 let d = p.shape[axis];
                 let base = o * d * inner;
-                out.extend_from_slice(&p.data[base..base + d * inner]);
+                out.extend_from_slice(&p.data()[base..base + d * inner]);
             }
         }
-        let mut shape = first.shape.clone();
-        shape[axis] = total_axis;
         HostTensor::new(shape, out)
     }
 
-    /// Elementwise in-place add (for reductions).
+    /// Elementwise in-place add (for reductions); copy-on-write if the
+    /// storage is shared.
     pub fn add_assign(&mut self, other: &Self) -> Result<()> {
         if self.shape != other.shape {
             return Err(Error::Shape(format!(
@@ -143,31 +309,32 @@ impl HostTensor {
                 self.shape, other.shape
             )));
         }
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a += b;
-        }
+        kernels::add_assign(self.data_mut(), other.data());
         Ok(())
     }
 
+    /// In-place scalar multiply; copy-on-write if the storage is shared.
     pub fn scale(&mut self, s: f32) {
-        for a in self.data.iter_mut() {
-            *a *= s;
-        }
+        kernels::scale(self.data_mut(), s);
     }
 
-    /// Swap the first two axes (needed by inference drivers for z^T views).
+    /// Swap the first two axes (needed by inference drivers for z^T
+    /// views). Materializes: a transposed run is not contiguous, and its
+    /// consumers (literal conversion, kernels) need contiguous data
+    /// anyway.
     pub fn transpose01(&self) -> Result<Self> {
         if self.shape.len() < 2 {
             return Err(Error::Shape("transpose01 needs ndim>=2".into()));
         }
         let (d0, d1) = (self.shape[0], self.shape[1]);
         let inner: usize = self.shape[2..].iter().product();
-        let mut out = vec![0.0f32; self.data.len()];
+        let src = self.data();
+        let mut out = vec![0.0f32; src.len()];
         for i in 0..d0 {
             for j in 0..d1 {
-                let src = (i * d1 + j) * inner;
-                let dst = (j * d0 + i) * inner;
-                out[dst..dst + inner].copy_from_slice(&self.data[src..src + inner]);
+                let s = (i * d1 + j) * inner;
+                let d = (j * d0 + i) * inner;
+                out[d..d + inner].copy_from_slice(&src[s..s + inner]);
             }
         }
         let mut shape = self.shape.clone();
@@ -175,43 +342,99 @@ impl HostTensor {
         HostTensor::new(shape, out)
     }
 
+    /// Largest elementwise absolute difference vs `other`.
     pub fn max_abs_diff(&self, other: &Self) -> f32 {
-        self.data
+        self.data()
             .iter()
-            .zip(other.data.iter())
+            .zip(other.data().iter())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
 
+    // ----------------------------------------------------------- kernels
+
+    /// Fused softmax over the last axis (`exp(x·scale − rowmax)`
+    /// normalized per row) via [`crate::kernels::softmax`].
+    pub fn softmax_last_axis(&self, scale: f32) -> Result<Self> {
+        let cols = *self
+            .shape
+            .last()
+            .ok_or_else(|| Error::Shape("softmax needs ndim >= 1".into()))?;
+        if cols == 0 {
+            return Err(Error::Shape("softmax over an empty axis".into()));
+        }
+        let mut out = vec![0.0f32; self.len()];
+        kernels::softmax::softmax_rows(self.data(), cols, scale, &mut out);
+        HostTensor::new(self.shape.clone(), out)
+    }
+
+    /// Fused (chunked-Welford) LayerNorm over the last axis via
+    /// [`crate::kernels::layernorm`]. `gamma`/`beta` must be rank-1 of
+    /// the last-axis length.
+    pub fn layernorm_last_axis(
+        &self,
+        gamma: &HostTensor,
+        beta: &HostTensor,
+        eps: f32,
+    ) -> Result<Self> {
+        let cols = *self
+            .shape
+            .last()
+            .ok_or_else(|| Error::Shape("layernorm needs ndim >= 1".into()))?;
+        if cols == 0 {
+            return Err(Error::Shape("layernorm over an empty axis".into()));
+        }
+        if gamma.shape != [cols] || beta.shape != [cols] {
+            return Err(Error::Shape(format!(
+                "layernorm gamma {:?} / beta {:?} must be [{cols}]",
+                gamma.shape, beta.shape
+            )));
+        }
+        let mut out = vec![0.0f32; self.len()];
+        kernels::layernorm::layernorm_rows(
+            self.data(),
+            cols,
+            gamma.data(),
+            beta.data(),
+            eps,
+            &mut out,
+        );
+        HostTensor::new(self.shape.clone(), out)
+    }
+
     // ---------------------------------------------------------- literals
 
+    /// Convert to an `xla` literal. Zero-copy (shared `Arc`) when this
+    /// tensor spans its whole buffer; a sub-view materializes once.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(&self.data);
+        if !self.is_view() {
+            return Ok(xla::Literal::from_shared(Arc::clone(&self.buf), &dims)?);
+        }
+        let lit = xla::Literal::vec1(self.data());
         Ok(lit.reshape(&dims)?)
     }
 
+    /// Build from an `xla` literal, sharing its storage (zero-copy).
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = lit.to_vec::<f32>()?;
-        HostTensor::new(dims, data)
-    }
-
-    fn _strides_doc() {
-        // strides() kept private; exposed ops cover coordinator needs.
-        let _ = HostTensor::zeros(&[1]).strides();
+        let buf = lit.to_shared::<f32>()?;
+        HostTensor::from_shared(dims, buf)
     }
 }
 
 /// Integer tensor (token ids, bin labels) — converted to S32 literals.
 #[derive(Clone, Debug, PartialEq)]
 pub struct IntTensor {
+    /// Logical dimensions, outermost first (row-major).
     pub shape: Vec<usize>,
+    /// Elements in row-major order.
     pub data: Vec<i32>,
 }
 
 impl IntTensor {
+    /// Build a tensor owning `data` (element count must match `shape`).
     pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -225,6 +448,7 @@ impl IntTensor {
         Ok(IntTensor { shape, data })
     }
 
+    /// Convert to an S32 `xla` literal.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = xla::Literal::vec1(&self.data);
@@ -257,7 +481,66 @@ mod tests {
         let x = t(&[2, 3]);
         let s = x.slice_axis(1, 1, 2).unwrap();
         assert_eq!(s.shape, vec![2, 2]);
-        assert_eq!(s.data, vec![1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(s.data(), &[1.0, 2.0, 4.0, 5.0][..]);
+    }
+
+    #[test]
+    fn axis0_slice_is_a_view_and_inner_slice_copies() {
+        let x = t(&[4, 3]);
+        let v = x.slice_axis(0, 1, 2).unwrap();
+        assert!(v.shares_storage(&x), "leading-axis slice must be O(1)");
+        assert!(v.is_view());
+        assert_eq!(v.data(), &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0][..]);
+        let c = x.slice_axis(1, 0, 2).unwrap();
+        assert!(!c.shares_storage(&x), "inner slice gathers");
+        assert_eq!(c.data(), &[0.0, 1.0, 3.0, 4.0, 6.0, 7.0][..]);
+        // identity slice at any axis is a view
+        let id = x.slice_axis(1, 0, 3).unwrap();
+        assert!(id.shares_storage(&x));
+        assert_eq!(id, x);
+    }
+
+    #[test]
+    fn shard_unshard_roundtrip_is_zero_copy() {
+        let x = t(&[8, 5]);
+        let parts = x.split_axis(0, 4).unwrap();
+        assert!(parts.iter().all(|p| p.shares_storage(&x)));
+        let back = HostTensor::concat(&parts, 0).unwrap();
+        assert!(back.shares_storage(&x), "adjacent views reassemble free");
+        assert_eq!(back, x);
+        // out-of-order parts must fall back to the copy path, correctly
+        let swapped = vec![parts[1].clone(), parts[0].clone()];
+        let y = HostTensor::concat(&swapped, 0).unwrap();
+        assert!(!y.shares_storage(&x));
+        assert_eq!(y.data()[0], 10.0);
+    }
+
+    #[test]
+    fn copy_on_write_isolates_views() {
+        let x = t(&[4, 2]);
+        let mut v = x.slice_axis(0, 0, 2).unwrap();
+        assert!(v.shares_storage(&x));
+        v.data_mut()[0] = 99.0;
+        assert!(!v.shares_storage(&x), "mutation must detach the view");
+        assert_eq!(x.data()[0], 0.0, "parent unchanged");
+        assert_eq!(v.data()[0], 99.0);
+        // a uniquely-owned full tensor mutates in place (no realloc)
+        let mut u = t(&[3]);
+        let before = u.data().as_ptr();
+        u.data_mut()[1] = 5.0;
+        assert_eq!(u.data().as_ptr(), before);
+        assert_eq!(u.data(), &[0.0, 5.0, 2.0][..]);
+    }
+
+    #[test]
+    fn clone_shares_until_mutated() {
+        let x = t(&[2, 2]);
+        let mut y = x.clone();
+        assert!(y.shares_storage(&x));
+        y.scale(2.0);
+        assert!(!y.shares_storage(&x));
+        assert_eq!(x.data(), &[0.0, 1.0, 2.0, 3.0][..]);
+        assert_eq!(y.data(), &[0.0, 2.0, 4.0, 6.0][..]);
     }
 
     #[test]
@@ -268,7 +551,7 @@ mod tests {
         let y = x.transpose01().unwrap();
         assert_eq!(y.shape, vec![5, 3, 2]);
         // spot check element [i=1, j=2] -> [2, 1]
-        assert_eq!(y.data[(2 * 3 + 1) * 2], x.data[(1 * 5 + 2) * 2]);
+        assert_eq!(y.data()[(2 * 3 + 1) * 2], x.data()[(1 * 5 + 2) * 2]);
     }
 
     #[test]
@@ -276,9 +559,19 @@ mod tests {
         let mut a = t(&[2, 2]);
         let b = t(&[2, 2]);
         a.add_assign(&b).unwrap();
-        assert_eq!(a.data, vec![0.0, 2.0, 4.0, 6.0]);
+        assert_eq!(a.data(), &[0.0, 2.0, 4.0, 6.0][..]);
         a.scale(0.5);
-        assert_eq!(a.data, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(a.data(), &[0.0, 1.0, 2.0, 3.0][..]);
+    }
+
+    #[test]
+    fn add_assign_on_shared_storage_is_safe() {
+        let x = t(&[4]);
+        let mut a = x.clone();
+        let b = x.clone();
+        a.add_assign(&b).unwrap();
+        assert_eq!(a.data(), &[0.0, 2.0, 4.0, 6.0][..]);
+        assert_eq!(x.data(), &[0.0, 1.0, 2.0, 3.0][..], "source untouched");
     }
 
     #[test]
@@ -291,5 +584,38 @@ mod tests {
         assert!(HostTensor::concat(&[x.clone(), y], 1).is_err());
         let mut a = t(&[2, 2]);
         assert!(a.add_assign(&t(&[4])).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_shares_storage() {
+        let x = t(&[2, 3]);
+        let lit = x.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, x);
+        assert!(back.shares_storage(&x), "full-buffer literal path is zero-copy");
+        // a sub-view materializes exactly once on the way in
+        let v = x.slice_axis(0, 1, 1).unwrap();
+        let lit = v.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn kernel_wrappers_normalize() {
+        let x = t(&[2, 4]);
+        let sm = x.softmax_last_axis(1.0).unwrap();
+        for row in sm.data().chunks_exact(4) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "row sums to {s}");
+        }
+        let g = HostTensor::full(&[4], 1.0);
+        let b = HostTensor::zeros(&[4]);
+        let ln = x.layernorm_last_axis(&g, &b, 1e-5).unwrap();
+        for row in ln.data().chunks_exact(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "row mean {mean}");
+        }
+        assert!(x.layernorm_last_axis(&HostTensor::zeros(&[3]), &b, 1e-5).is_err());
+        assert!(HostTensor::scalar(1.0).softmax_last_axis(1.0).is_err());
     }
 }

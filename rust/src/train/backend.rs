@@ -167,7 +167,7 @@ impl TrainBackend for DenseBackend {
         args.extend(batch_values(batch));
         let out = self.grad_exe.run(&args)?;
         // outputs: loss scalar, then grads in canonical order
-        Ok((out[0].data[0], out[1..].to_vec()))
+        Ok((out[0].data()[0], out[1..].to_vec()))
     }
 
     fn grad_many(
@@ -316,7 +316,7 @@ impl TrainBackend for HybridDapBackend<'_> {
         args.extend(batch_values(batch));
         let out = self.loss_head_grad_exe.run(&args)?;
         let nh = self.head_idx.len();
-        let loss = out[0].data[0];
+        let loss = out[0].data()[0];
         for (k, &i) in self.head_idx.iter().enumerate() {
             grads[i] = Some(out[1 + k].clone());
         }
@@ -402,7 +402,10 @@ impl TrainBackend for HybridDapBackend<'_> {
 // -------------------------------------------------------------- synthetic
 
 /// Host Adam, element-for-element the formula of the exported
-/// `adam_update` executable (`python/compile/aot.py`).
+/// `adam_update` executable (`python/compile/aot.py`), executed per leaf
+/// by the fused single-traversal kernel ([`crate::kernels::adam`] —
+/// bit-for-bit the old three-clone loop, one copy-on-write per state
+/// tensor instead of three eager clones plus an index loop).
 pub fn host_adam(
     step: usize,
     lr: f32,
@@ -411,12 +414,6 @@ pub fn host_adam(
     m: &[HostTensor],
     v: &[HostTensor],
 ) -> Result<AdamOut> {
-    const B1: f32 = 0.9;
-    const B2: f32 = 0.999;
-    const EPS: f32 = 1e-8;
-    let t = step as f32;
-    let bc1 = 1.0 - B1.powf(t);
-    let bc2 = 1.0 - B2.powf(t);
     let mut p2 = Vec::with_capacity(params.len());
     let mut m2 = Vec::with_capacity(params.len());
     let mut v2 = Vec::with_capacity(params.len());
@@ -427,20 +424,20 @@ pub fn host_adam(
                 p.shape, g.shape
             )));
         }
-        let mut pn = p.data.clone();
-        let mut mn = mm.data.clone();
-        let mut vn = vv.data.clone();
-        for i in 0..pn.len() {
-            let gi = g.data[i];
-            mn[i] = B1 * mn[i] + (1.0 - B1) * gi;
-            vn[i] = B2 * vn[i] + (1.0 - B2) * gi * gi;
-            let mhat = mn[i] / bc1;
-            let vhat = vn[i] / bc2;
-            pn[i] -= lr * mhat / (vhat.sqrt() + EPS);
-        }
-        p2.push(HostTensor::new(p.shape.clone(), pn)?);
-        m2.push(HostTensor::new(p.shape.clone(), mn)?);
-        v2.push(HostTensor::new(p.shape.clone(), vn)?);
+        let mut pn = p.clone();
+        let mut mn = mm.clone();
+        let mut vn = vv.clone();
+        crate::kernels::adam::adam_step(
+            step,
+            lr,
+            pn.data_mut(),
+            g.data(),
+            mn.data_mut(),
+            vn.data_mut(),
+        );
+        p2.push(pn);
+        m2.push(mn);
+        v2.push(vn);
     }
     Ok((p2, m2, v2))
 }
@@ -510,7 +507,8 @@ impl TrainBackend for SyntheticBackend {
         let mut grads = Vec::with_capacity(params.len());
         let mut loss_acc = 0.0f64;
         for (j, p) in params.iter().enumerate() {
-            let n = p.data.len();
+            let pd = p.data();
+            let n = pd.len();
             let mut g = Vec::with_capacity(n);
             for i in 0..n {
                 let col = (i + j) % cols;
@@ -528,7 +526,7 @@ impl TrainBackend for SyntheticBackend {
                     total += part;
                 }
                 let gi = total * self.scale;
-                loss_acc += p.data[i] as f64 * gi as f64;
+                loss_acc += pd[i] as f64 * gi as f64;
                 g.push(gi);
             }
             grads.push(HostTensor::new(p.shape.clone(), g)?);
@@ -600,9 +598,9 @@ mod tests {
         let m = vec![HostTensor::zeros(&[4])];
         let v = vec![HostTensor::zeros(&[4])];
         let (p2, m2, v2) = host_adam(1, 0.1, &p, &g, &m, &v).unwrap();
-        assert!(p2[0].data[0] < 1.0);
-        assert!(m2[0].data[0] > 0.0);
-        assert!(v2[0].data[0] > 0.0);
+        assert!(p2[0].data()[0] < 1.0);
+        assert!(m2[0].data()[0] > 0.0);
+        assert!(v2[0].data()[0] > 0.0);
         // deterministic
         let (p3, _, _) = host_adam(1, 0.1, &p, &g, &m, &v).unwrap();
         assert_eq!(p2, p3);

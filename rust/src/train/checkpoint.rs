@@ -55,7 +55,7 @@ fn stem(preset: &str, step: usize) -> String {
 
 fn write_tensors(bytes: &mut Vec<u8>, ts: &[HostTensor]) {
     for t in ts {
-        for v in &t.data {
+        for v in t.data() {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
     }

@@ -159,14 +159,15 @@ mod tests {
         let mut g = DataGen::new(ModelConfig::tiny(), 2);
         let b = g.next_batch();
         let mask_tok = g.cfg.msa_vocab as i32 - 1;
-        for i in 0..b.msa_mask.data.len() {
-            if b.msa_mask.data[i] > 0.5 {
+        let mask = b.msa_mask.data();
+        for (i, &mv) in mask.iter().enumerate() {
+            if mv > 0.5 {
                 assert_eq!(b.msa_tokens.data[i], mask_tok);
             } else {
                 assert_eq!(b.msa_tokens.data[i], b.msa_labels.data[i]);
             }
         }
-        let frac = b.msa_mask.data.iter().sum::<f32>() / b.msa_mask.data.len() as f32;
+        let frac = mask.iter().sum::<f32>() / mask.len() as f32;
         assert!(frac > 0.05 && frac < 0.3, "mask frac {frac}");
     }
 
@@ -217,7 +218,7 @@ mod tests {
         let (ba, bb) = (a.next_batch(), b.next_batch());
         assert_eq!(ba.msa_tokens.data, bb.msa_tokens.data);
         assert_eq!(ba.dist_bins.data, bb.dist_bins.data);
-        assert_eq!(ba.msa_mask.data, bb.msa_mask.data);
+        assert_eq!(ba.msa_mask.data(), bb.msa_mask.data());
         assert_eq!(a.cursor(), b.cursor());
     }
 

@@ -277,7 +277,7 @@ impl<'rt> Trainer<'rt> {
         } else {
             let per_rank_flat: Vec<Vec<f32>> = per_replica
                 .iter()
-                .map(|gs| gs.iter().flat_map(|g| g.data.iter().copied()).collect())
+                .map(|gs| gs.iter().flat_map(|g| g.data().iter().copied()).collect())
                 .collect();
             let (reduced, wire) = ring_all_reduce(per_rank_flat)?;
             self.wire_dp_bytes += wire.iter().copied().max().unwrap_or(0);
@@ -507,7 +507,7 @@ impl<'rt> Trainer<'rt> {
 fn clip_by_global_norm(mut grads: Vec<HostTensor>, clip: f32) -> Vec<HostTensor> {
     let sq: f64 = grads
         .iter()
-        .flat_map(|g| g.data.iter())
+        .flat_map(|g| g.data().iter())
         .map(|&x| (x as f64) * (x as f64))
         .sum();
     let norm = sq.sqrt() as f32;
@@ -528,11 +528,11 @@ mod tests {
     fn clip_scales_down_only() {
         let big = vec![HostTensor::full(&[4], 10.0)];
         let out = clip_by_global_norm(big, 1.0);
-        let norm: f32 = out[0].data.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let norm: f32 = out[0].data().iter().map(|x| x * x).sum::<f32>().sqrt();
         assert!((norm - 1.0).abs() < 1e-5);
         let small = vec![HostTensor::full(&[4], 0.01)];
         let out = clip_by_global_norm(small.clone(), 1.0);
-        assert_eq!(out[0].data, small[0].data);
+        assert_eq!(out[0].data(), small[0].data());
     }
 
     #[test]

@@ -1,0 +1,57 @@
+//! Tier-1 perf smoke: runs the host bench harness in quick mode, gates
+//! the fused kernels against their naive chains and the view-based shard
+//! moves against the copying reference, and emits the `BENCH_host.json`
+//! ledger at the workspace root — so every `cargo test` run (local and
+//! CI) leaves a fresh machine-readable perf record behind.
+//!
+//! Floors are deliberately loose on wall-clock-noisy metrics (fused must
+//! simply not be *slower* than its multi-pass chain) and strict where
+//! the win is structural (view shard moves are O(1) metadata vs an O(n)
+//! gather — required ≥ 2×, in practice orders of magnitude).
+
+use fastfold::bench::{run_host_bench, BenchOptions};
+
+fn metric(doc: &fastfold::json::Json, section: &str, key: &str) -> f64 {
+    doc.get(section)
+        .and_then(|s| s.get(key))
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|e| panic!("missing {section}.{key}: {e}"))
+}
+
+#[test]
+fn host_bench_quick_meets_floors_and_emits_ledger() {
+    let doc = run_host_bench(BenchOptions { quick: true }).expect("bench runs");
+
+    // structural win: O(1) views vs O(n) gather — far more than 2x in
+    // any profile (the view path does no element work at all)
+    let shard = metric(&doc, "shard_move", "speedup");
+    assert!(shard >= 2.0, "view shard-move speedup {shard:.2}x < 2x");
+
+    // kernel-ratio floors bind only in optimized builds: dev-profile
+    // iterator overhead can invert fused-vs-naive without saying
+    // anything about release behavior — the CI perf-smoke job gates the
+    // release binary. The metrics must still exist and be finite here.
+    for section in ["fused_softmax", "fused_layernorm", "fused_adam"] {
+        let s = metric(&doc, section, "speedup");
+        assert!(s.is_finite() && s > 0.0, "{section} speedup not measured: {s}");
+        if cfg!(debug_assertions) {
+            eprintln!("note: debug build — {section} floor ({s:.3}x) not enforced");
+        } else {
+            assert!(s > 1.0, "{section} fused slower than naive chain: {s:.3}x");
+        }
+    }
+
+    // the rest of the ledger is present and sane
+    assert!(metric(&doc, "ring_all_reduce", "gbps") > 0.0);
+    assert!(metric(&doc, "ring_all_reduce", "wire_bytes") > 0.0);
+    assert!(metric(&doc, "synthetic_train", "steps_per_sec") > 0.0);
+    assert!(metric(&doc, "serve_makespan", "modeled_makespan_s") > 0.0);
+    assert!(metric(&doc, "serve_makespan", "admitted") >= 1.0);
+
+    // emit the ledger at the workspace root (best effort: a read-only
+    // checkout must not fail the suite)
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_host.json");
+    if let Err(e) = std::fs::write(path, format!("{doc}\n")) {
+        eprintln!("note: could not write {path}: {e}");
+    }
+}

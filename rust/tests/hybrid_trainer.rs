@@ -308,10 +308,10 @@ fn synthetic_loss_depends_on_params() {
         .iter()
         .enumerate()
         .find_map(|(j, gl)| {
-            gl.data.iter().position(|&x| x != 0.0).map(|i| (j, i))
+            gl.data().iter().position(|&x| x != 0.0).map(|i| (j, i))
         })
         .expect("some nonzero gradient coordinate");
-    bumped[leaf].data[idx] += 1.0;
+    bumped[leaf].data_mut()[idx] += 1.0;
     let (l1, _) = be.grad(&bumped, &batch).unwrap();
     assert_ne!(l0.to_bits(), l1.to_bits());
 }

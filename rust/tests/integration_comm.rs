@@ -67,10 +67,10 @@ fn ring_matches_collectives_all_reduce() {
     let shards = rand_shards(&mut rng, n, &[129]); // non-divisible length
     let c = Collectives::new(n);
     let want = c.all_reduce(&shards).unwrap();
-    let flat: Vec<Vec<f32>> = shards.iter().map(|t| t.data.clone()).collect();
+    let flat: Vec<Vec<f32>> = shards.iter().map(|t| t.data().to_vec()).collect();
     let (got, _) = ring_all_reduce(flat).unwrap();
     for g in &got {
-        for (a, b) in g.iter().zip(want[0].data.iter()) {
+        for (a, b) in g.iter().zip(want[0].data().iter()) {
             assert!((a - b).abs() < 1e-4);
         }
     }

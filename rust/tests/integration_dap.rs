@@ -183,7 +183,7 @@ fn dap_backward_matches_reference_vjp() {
         assert_eq!(pg.len(), np);
         for (i, (got, want)) in pg.iter().zip(ref_pg.iter()).enumerate() {
             let d = got.max_abs_diff(want);
-            let scale = want.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+            let scale = want.data().iter().fold(0.0f32, |a, &b| a.max(b.abs()));
             assert!(
                 d < 1e-3 + 1e-3 * scale,
                 "n={n} param leaf {i}: diff {d} (scale {scale})"

@@ -112,8 +112,8 @@ fn guarded_single_device_forward() {
     )
     .unwrap();
     assert!(plan.fits());
-    assert!(m.data.iter().all(|x| x.is_finite()));
-    assert!(z.data.iter().all(|x| x.is_finite()));
+    assert!(m.data().iter().all(|x| x.is_finite()));
+    assert!(z.data().iter().all(|x| x.is_finite()));
 }
 
 #[test]
@@ -172,6 +172,6 @@ fn small_preset_also_runs() {
     let batch = gen.next_batch();
     let (m, z) =
         single_device_forward(&rt, "small", &params, &batch.msa_tokens, false).unwrap();
-    assert!(m.data.iter().all(|x| x.is_finite()));
-    assert!(z.data.iter().all(|x| x.is_finite()));
+    assert!(m.data().iter().all(|x| x.is_finite()));
+    assert!(z.data().iter().all(|x| x.is_finite()));
 }

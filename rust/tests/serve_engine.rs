@@ -192,8 +192,8 @@ fn same_batch_same_outputs_regardless_of_threads() {
                 match (&a.output, &b.output) {
                     (Ok((am, az)), Ok((bm, bz))) => {
                         // bit-for-bit: exact data equality, not tolerance
-                        assert_eq!(am.data, bm.data, "'{}' @ threads={threads}", a.id);
-                        assert_eq!(az.data, bz.data, "'{}' @ threads={threads}", a.id);
+                        assert_eq!(am.data(), bm.data(), "'{}' @ threads={threads}", a.id);
+                        assert_eq!(az.data(), bz.data(), "'{}' @ threads={threads}", a.id);
                     }
                     (Err(ae), Err(be)) => assert_eq!(ae.to_string(), be.to_string()),
                     _ => panic!("disposition of '{}' changed with threads", a.id),
@@ -325,19 +325,19 @@ fn engine_outputs_match_legacy_paths_bit_for_bit() {
         single_device_forward(&rt, "tiny", &params, &batch().msa_tokens, true).unwrap();
 
     let out = |i: usize| report.outcomes[i].output.as_ref().expect("completed");
-    assert_eq!(out(0).0.data, m_ref.data, "single m");
-    assert_eq!(out(0).1.data, z_ref.data, "single z");
+    assert_eq!(out(0).0.data(), m_ref.data(), "single m");
+    assert_eq!(out(0).1.data(), z_ref.data(), "single z");
     // chunked is a memory schedule, not a numeric change
-    assert_eq!(out(2).0.data, m_ref.data, "chunked m");
-    assert_eq!(out(2).1.data, z_ref.data, "chunked z");
-    assert_eq!(out(3).0.data, m_nv.data, "naive m");
-    assert_eq!(out(3).1.data, z_nv.data, "naive z");
+    assert_eq!(out(2).0.data(), m_ref.data(), "chunked m");
+    assert_eq!(out(2).1.data(), z_ref.data(), "chunked z");
+    assert_eq!(out(3).0.data(), m_nv.data(), "naive m");
+    assert_eq!(out(3).1.data(), z_nv.data(), "naive z");
     // DAP artifacts may not be exported for every degree; when the legacy
     // path runs, the engine must match it bit-for-bit
     if let Ok(co) = DapCoordinator::new(&rt, "tiny", 2, true) {
         let (m_dap, z_dap) = co.model_forward(&params, &batch().msa_tokens).unwrap();
-        assert_eq!(out(1).0.data, m_dap.data, "dap m");
-        assert_eq!(out(1).1.data, z_dap.data, "dap z");
+        assert_eq!(out(1).0.data(), m_dap.data(), "dap m");
+        assert_eq!(out(1).1.data(), z_dap.data(), "dap z");
     } else {
         assert!(report.outcomes[1].output.is_err());
     }
@@ -359,8 +359,8 @@ fn executed_drain_is_thread_invariant() {
     for (a, b) in r1.outcomes.iter().zip(r4.outcomes.iter()) {
         match (&a.output, &b.output) {
             (Ok((am, az)), Ok((bm, bz))) => {
-                assert_eq!(am.data, bm.data, "'{}'", a.id);
-                assert_eq!(az.data, bz.data, "'{}'", a.id);
+                assert_eq!(am.data(), bm.data(), "'{}'", a.id);
+                assert_eq!(az.data(), bz.data(), "'{}'", a.id);
             }
             (Err(ae), Err(be)) => assert_eq!(ae.to_string(), be.to_string()),
             _ => panic!("disposition of '{}' changed with threads", a.id),

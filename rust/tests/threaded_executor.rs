@@ -28,7 +28,7 @@ impl SegmentRunner for FakeRunner {
         inputs: &[HostTensor],
     ) -> Result<Vec<HostTensor>> {
         let map = |t: &HostTensor, f: &dyn Fn(f32) -> f32| {
-            HostTensor::new(t.shape.clone(), t.data.iter().map(|&x| f(x)).collect())
+            HostTensor::new(t.shape.clone(), t.data().iter().map(|&x| f(x)).collect())
         };
         match seg {
             "scale" => Ok(vec![map(&inputs[0], &|x| 0.5 * x + 1.0)?]),

@@ -20,6 +20,7 @@
 
 use std::fmt;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Error type mirroring `xla::Error`: a message, nothing more.
 #[derive(Debug, Clone)]
@@ -43,13 +44,17 @@ fn err(msg: impl Into<String>) -> Error {
 // ------------------------------------------------------------------ literal
 
 /// Element storage for an array literal (f32 and i32 are the only dtypes
-/// the artifact contract uses).
+/// the artifact contract uses). Storage is `Arc`-shared: cloning a
+/// literal (reshape, tuple decomposition, `to_literal_sync`) bumps a
+/// refcount instead of deep-copying elements, and the coordinator's
+/// `HostTensor` shares the same buffers through
+/// [`Literal::from_shared`] / [`Literal::to_shared`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum LiteralData {
-    /// 32-bit float elements.
-    F32(Vec<f32>),
-    /// 32-bit signed integer elements.
-    I32(Vec<i32>),
+    /// 32-bit float elements (shared storage).
+    F32(Arc<Vec<f32>>),
+    /// 32-bit signed integer elements (shared storage).
+    I32(Arc<Vec<i32>>),
 }
 
 impl LiteralData {
@@ -65,17 +70,31 @@ impl LiteralData {
 pub trait NativeType: Copy {
     /// Wrap a host vector into typed literal storage.
     fn wrap(v: Vec<Self>) -> LiteralData;
-    /// Extract a host vector if the storage matches `Self`.
+    /// Wrap an already-shared buffer into typed literal storage
+    /// (zero-copy).
+    fn wrap_shared(v: Arc<Vec<Self>>) -> LiteralData;
+    /// Extract a host vector if the storage matches `Self` (copies).
     fn unwrap(d: &LiteralData) -> Option<Vec<Self>>;
+    /// Share the storage buffer if it matches `Self` (zero-copy).
+    fn unwrap_shared(d: &LiteralData) -> Option<Arc<Vec<Self>>>;
 }
 
 impl NativeType for f32 {
     fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::F32(Arc::new(v))
+    }
+    fn wrap_shared(v: Arc<Vec<Self>>) -> LiteralData {
         LiteralData::F32(v)
     }
     fn unwrap(d: &LiteralData) -> Option<Vec<Self>> {
         match d {
-            LiteralData::F32(v) => Some(v.clone()),
+            LiteralData::F32(v) => Some(v.as_ref().clone()),
+            _ => None,
+        }
+    }
+    fn unwrap_shared(d: &LiteralData) -> Option<Arc<Vec<Self>>> {
+        match d {
+            LiteralData::F32(v) => Some(Arc::clone(v)),
             _ => None,
         }
     }
@@ -83,11 +102,20 @@ impl NativeType for f32 {
 
 impl NativeType for i32 {
     fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::I32(Arc::new(v))
+    }
+    fn wrap_shared(v: Arc<Vec<Self>>) -> LiteralData {
         LiteralData::I32(v)
     }
     fn unwrap(d: &LiteralData) -> Option<Vec<Self>> {
         match d {
-            LiteralData::I32(v) => Some(v.clone()),
+            LiteralData::I32(v) => Some(v.as_ref().clone()),
+            _ => None,
+        }
+    }
+    fn unwrap_shared(d: &LiteralData) -> Option<Arc<Vec<Self>>> {
+        match d {
+            LiteralData::I32(v) => Some(Arc::clone(v)),
             _ => None,
         }
     }
@@ -126,6 +154,31 @@ impl Literal {
         Literal::Array {
             dims: vec![data.len() as i64],
             data: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Build a literal sharing an existing storage buffer (zero-copy);
+    /// element count must match `dims`.
+    pub fn from_shared<T: NativeType>(data: Arc<Vec<T>>, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != data.len() {
+            return Err(err(format!(
+                "from_shared to {:?} wants {} elements, buffer has {}",
+                dims,
+                want,
+                data.len()
+            )));
+        }
+        Ok(Literal::Array { data: T::wrap_shared(data), dims: dims.to_vec() })
+    }
+
+    /// Share the element storage (zero-copy counterpart of
+    /// [`Literal::to_vec`]).
+    pub fn to_shared<T: NativeType>(&self) -> Result<Arc<Vec<T>>> {
+        match self {
+            Literal::Array { data, .. } => T::unwrap_shared(data)
+                .ok_or_else(|| err("literal element type mismatch")),
+            Literal::Tuple(_) => Err(err("cannot read elements of a tuple literal")),
         }
     }
 
@@ -321,6 +374,19 @@ mod tests {
         assert_eq!(parts.len(), 2);
         assert!(t.array_shape().is_err());
         assert!(Literal::vec1(&[1.0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn shared_storage_roundtrip_is_zero_copy() {
+        let buf = Arc::new(vec![1.0f32, 2.0, 3.0, 4.0]);
+        let lit = Literal::from_shared(Arc::clone(&buf), &[2, 2]).unwrap();
+        let back = lit.to_shared::<f32>().unwrap();
+        assert!(Arc::ptr_eq(&buf, &back), "no element copy on the data path");
+        // reshape clones only the Arc, not the elements
+        let re = lit.reshape(&[4]).unwrap();
+        assert!(Arc::ptr_eq(&buf, &re.to_shared::<f32>().unwrap()));
+        assert!(Literal::from_shared(buf, &[3]).is_err());
+        assert!(Literal::vec1(&[1i32]).to_shared::<f32>().is_err());
     }
 
     #[test]
