@@ -63,11 +63,14 @@ pub fn bench_med<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
     median(times)
 }
 
-fn obj(pairs: Vec<(&str, Json)>) -> Json {
+/// Build a JSON object from `(key, value)` pairs — shared with the
+/// serve-daemon bench ledger so both harnesses shape JSON identically.
+pub(crate) fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
-fn num(v: f64) -> Json {
+/// Wrap a number as JSON (deterministic rendering lives in [`Json`]).
+pub(crate) fn num(v: f64) -> Json {
     Json::Num(v)
 }
 

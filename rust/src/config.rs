@@ -256,6 +256,15 @@ pub struct ServeConfig {
     /// SJF starvation guard: a waiting request runs next once this many
     /// later arrivals have overtaken it (0 = strict arrival order).
     pub max_bypass: usize,
+    /// Daemon backpressure bound: a request arriving while this many
+    /// requests already wait is shed instead of queued (0 = unbounded;
+    /// only the `fastfold daemon` continuous loop enforces it — a batch
+    /// drain has no arrival process to push back on).
+    pub queue_cap: usize,
+    /// Result-cache byte budget in decimal GB (0 disables the cache).
+    /// Entries are priced at the modeled output size of the request
+    /// shape, so one 4096-residue distogram costs real gigabytes.
+    pub cache_gb: f64,
 }
 
 impl Default for ServeConfig {
@@ -264,6 +273,8 @@ impl Default for ServeConfig {
             policy: crate::inference::engine::SchedPolicy::Fifo,
             max_dap: 8,
             max_bypass: 4,
+            queue_cap: 512,
+            cache_gb: 8.0,
         }
     }
 }
@@ -495,6 +506,18 @@ impl RunConfig {
             if let Some(v) = s.get("max_bypass") {
                 cfg.serve.max_bypass = v.as_usize()?;
             }
+            if let Some(v) = s.get("queue_cap") {
+                cfg.serve.queue_cap = v.as_usize()?;
+            }
+            if let Some(v) = s.get("cache_gb") {
+                let g = v.as_f64()?;
+                if !(0.0..=1024.0).contains(&g) {
+                    return Err(Error::Config(format!(
+                        "serve cache_gb must be in [0, 1024], got {g}"
+                    )));
+                }
+                cfg.serve.cache_gb = g;
+            }
         }
         Ok(cfg)
     }
@@ -584,14 +607,19 @@ headroom = 0.25
         assert_eq!(cfg.serve, ServeConfig::default());
         assert_eq!(cfg.serve.policy, SchedPolicy::Fifo);
         let cfg = RunConfig::from_toml(
-            "[serve]\npolicy = \"sjf\"\nmax_dap = 16\nmax_bypass = 2",
+            "[serve]\npolicy = \"sjf\"\nmax_dap = 16\nmax_bypass = 2\n\
+             queue_cap = 64\ncache_gb = 2.5",
         )
         .unwrap();
         assert_eq!(cfg.serve.policy, SchedPolicy::Sjf);
         assert_eq!(cfg.serve.max_dap, 16);
         assert_eq!(cfg.serve.max_bypass, 2);
+        assert_eq!(cfg.serve.queue_cap, 64);
+        assert!((cfg.serve.cache_gb - 2.5).abs() < 1e-12);
         assert!(RunConfig::from_toml("[serve]\npolicy = \"lifo\"").is_err());
         assert!(RunConfig::from_toml("[serve]\nmax_dap = 0").is_err());
+        assert!(RunConfig::from_toml("[serve]\ncache_gb = -1.0").is_err());
+        assert!(RunConfig::from_toml("[serve]\ncache_gb = 99999").is_err());
     }
 
     #[test]

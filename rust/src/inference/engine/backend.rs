@@ -36,6 +36,16 @@ pub struct InferOutput {
     pub note: Option<String>,
 }
 
+impl InferOutput {
+    /// Bytes this output occupies — the price the result cache charges
+    /// an entry against its byte budget (tensor payloads plus the note).
+    pub fn size_bytes(&self) -> usize {
+        self.msa_logits.size_bytes()
+            + self.dist_logits.size_bytes()
+            + self.note.as_ref().map_or(0, String::len)
+    }
+}
+
 /// One execution strategy behind the engine. Implementations need not be
 /// `Sync` — the engine constructs a backend inside the worker thread that
 /// runs the request.

@@ -1,0 +1,286 @@
+//! Sequence-hash result cache: identical requests short-circuit to a
+//! stored result instead of re-folding (ParaFold's observation that
+//! production batches are full of repeated proteins).
+//!
+//! The index key is an FNV-1a hash of the request's *content string*
+//! (every field except the caller-visible id — preset, modeled length,
+//! priority, kernel variant, input seed, pinned backend), and every
+//! entry stores that full content string: a lookup verifies exact
+//! content equality, so two distinct requests that collide in the hash
+//! can never serve each other's bits — a collision is just a miss.
+//!
+//! Eviction is LRU under a byte budget. Entries are priced by the
+//! caller (the daemon prices them at the modeled output size of the
+//! request shape; the executed path prices real tensor bytes), and an
+//! insert evicts least-recently-used entries until the new entry fits.
+//! An entry larger than the whole budget is not admitted at all.
+//!
+//! Entries carry a `ready_at` virtual time: a result inserted by a
+//! request that *finishes* at t=100 is not servable to a duplicate
+//! dispatched at t=50 — on the daemon's virtual clock the bits do not
+//! exist yet, so that lookup is a miss and the duplicate recomputes.
+
+use std::collections::BTreeMap;
+
+/// Aggregate cache counters for reports and the `BENCH_serve.json`
+/// ledger.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Lookups answered from a stored, ready entry.
+    pub hits: u64,
+    /// Lookups that found nothing servable (absent, colliding, or not
+    /// ready at the lookup's virtual time).
+    pub misses: u64,
+    /// Entries evicted by the byte budget.
+    pub evictions: u64,
+    /// Entries admitted into the cache.
+    pub insertions: u64,
+    /// Bytes currently held.
+    pub used_bytes: usize,
+    /// High-water mark of held bytes over the cache's lifetime.
+    pub peak_bytes: usize,
+    /// Entries currently held.
+    pub entries: usize,
+}
+
+struct Entry<V> {
+    key: String,
+    value: V,
+    bytes: usize,
+    ready_at: f64,
+    tick: u64,
+}
+
+/// LRU result cache with a byte budget and exact-content verification.
+/// `V` is whatever the caller wants to memoize — the modeled daemon
+/// stores the source request's trace index; the executed path stores
+/// the output tensors (Arc-backed, so a clone is O(1)).
+pub struct ResultCache<V> {
+    budget: usize,
+    used: usize,
+    peak: usize,
+    tick: u64,
+    entries: BTreeMap<u64, Entry<V>>,
+    /// recency index: monotonic tick -> entry hash (lowest tick = LRU).
+    recency: BTreeMap<u64, u64>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    insertions: u64,
+}
+
+/// FNV-1a over the content string — the "sequence hash" of the cache's
+/// name. 64-bit, deterministic, dependency-free.
+pub fn content_hash(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in key.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl<V> ResultCache<V> {
+    /// An empty cache holding at most `budget_bytes` (0 disables every
+    /// insert, so all lookups miss).
+    pub fn new(budget_bytes: usize) -> Self {
+        ResultCache {
+            budget: budget_bytes,
+            used: 0,
+            peak: 0,
+            tick: 0,
+            entries: BTreeMap::new(),
+            recency: BTreeMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            insertions: 0,
+        }
+    }
+
+    /// The configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Bytes currently held (always <= the budget).
+    pub fn used_bytes(&self) -> usize {
+        self.used
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Counter snapshot for reports.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            insertions: self.insertions,
+            used_bytes: self.used,
+            peak_bytes: self.peak,
+            entries: self.entries.len(),
+        }
+    }
+
+    /// Look up `key` at virtual time `now`. A hit requires an entry
+    /// whose stored content string equals `key` exactly (hash collisions
+    /// are misses) and whose `ready_at` is not in the future. Hits
+    /// refresh the entry's recency.
+    pub fn lookup(&mut self, key: &str, now: f64) -> Option<V>
+    where
+        V: Clone,
+    {
+        let hash = content_hash(key);
+        let servable = match self.entries.get(&hash) {
+            Some(e) => e.key == key && e.ready_at <= now,
+            None => false,
+        };
+        if !servable {
+            self.misses += 1;
+            return None;
+        }
+        self.hits += 1;
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.entries.get_mut(&hash).expect("checked above");
+        self.recency.remove(&e.tick);
+        e.tick = tick;
+        self.recency.insert(tick, hash);
+        Some(e.value.clone())
+    }
+
+    /// Insert a result that becomes servable at `ready_at`. Evicts LRU
+    /// entries until `bytes` fits the budget; an entry that alone
+    /// exceeds the budget is not admitted. Re-inserting an existing
+    /// content key replaces the entry; a hash-colliding *different* key
+    /// leaves the resident entry in place (first wins — verification
+    /// keeps lookups correct either way).
+    pub fn insert(&mut self, key: &str, value: V, bytes: usize, ready_at: f64) {
+        self.insert_hashed(content_hash(key), key, value, bytes, ready_at);
+    }
+
+    fn insert_hashed(&mut self, hash: u64, key: &str, value: V, bytes: usize, ready_at: f64) {
+        if bytes > self.budget {
+            return;
+        }
+        if let Some(e) = self.entries.get(&hash) {
+            if e.key != key {
+                return; // colliding foreign entry stays resident
+            }
+            let old = self.entries.remove(&hash).expect("present");
+            self.recency.remove(&old.tick);
+            self.used -= old.bytes;
+        }
+        while self.used + bytes > self.budget {
+            let (&lru_tick, &lru_hash) =
+                self.recency.iter().next().expect("used > 0 implies entries");
+            self.recency.remove(&lru_tick);
+            let victim = self.entries.remove(&lru_hash).expect("indexed");
+            self.used -= victim.bytes;
+            self.evictions += 1;
+        }
+        self.tick += 1;
+        self.recency.insert(self.tick, hash);
+        self.entries.insert(
+            hash,
+            Entry { key: key.to_string(), value, bytes, ready_at, tick: self.tick },
+        );
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        self.insertions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_requires_exact_key_and_readiness() {
+        let mut c: ResultCache<u32> = ResultCache::new(1000);
+        assert_eq!(c.lookup("a", 0.0), None);
+        c.insert("a", 7, 10, 5.0);
+        // not ready yet at t=4.9 — the producing request finishes at 5.0
+        assert_eq!(c.lookup("a", 4.9), None);
+        assert_eq!(c.lookup("a", 5.0), Some(7));
+        assert_eq!(c.lookup("a", 100.0), Some(7));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (2, 2, 1));
+    }
+
+    #[test]
+    fn eviction_respects_byte_budget_exactly() {
+        let mut c: ResultCache<u32> = ResultCache::new(100);
+        c.insert("a", 1, 40, 0.0);
+        c.insert("b", 2, 40, 0.0);
+        assert_eq!(c.used_bytes(), 80);
+        // 30 more bytes exceed 100 → evict exactly one LRU entry ("a")
+        c.insert("c", 3, 30, 0.0);
+        assert_eq!(c.used_bytes(), 70);
+        assert_eq!(c.lookup("a", 0.0), None, "LRU evicted");
+        assert_eq!(c.lookup("b", 0.0), Some(2));
+        assert_eq!(c.lookup("c", 0.0), Some(3));
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.stats().peak_bytes <= 100, "never over budget");
+        // a 90-byte insert needs both residents gone (70 + 90 > 100):
+        // "b" (older recency after the lookups above) goes first, then "c"
+        c.insert("d", 4, 90, 0.0);
+        assert_eq!(c.lookup("d", 0.0), Some(4));
+        assert_eq!(c.used_bytes(), 90);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn oversize_entry_not_admitted() {
+        let mut c: ResultCache<u32> = ResultCache::new(50);
+        c.insert("big", 1, 51, 0.0);
+        assert!(c.is_empty());
+        assert_eq!(c.lookup("big", 0.0), None);
+        // zero-budget cache admits nothing
+        let mut z: ResultCache<u32> = ResultCache::new(0);
+        z.insert("a", 1, 1, 0.0);
+        assert!(z.is_empty());
+    }
+
+    #[test]
+    fn hash_collision_is_a_miss_not_a_wrong_answer() {
+        let mut c: ResultCache<u32> = ResultCache::new(1000);
+        // force two different content strings onto one hash bucket
+        c.insert_hashed(42, "protein-A", 1, 10, 0.0);
+        c.insert_hashed(42, "protein-B", 2, 10, 0.0);
+        // resident entry untouched; the collider was not admitted
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), 10);
+        // a lookup that hashes to the bucket but differs in content
+        // must miss — verified against the stored content string
+        let e = c.entries.get(&42).expect("resident");
+        assert_eq!(e.key, "protein-A");
+        assert_eq!(e.value, 1);
+    }
+
+    #[test]
+    fn reinsert_same_key_replaces() {
+        let mut c: ResultCache<u32> = ResultCache::new(100);
+        c.insert("a", 1, 60, 10.0);
+        c.insert("a", 2, 30, 5.0);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), 30);
+        assert_eq!(c.lookup("a", 5.0), Some(2));
+    }
+
+    #[test]
+    fn content_hash_is_stable_and_spreads() {
+        assert_eq!(content_hash(""), 0xcbf29ce484222325);
+        assert_ne!(content_hash("tiny|512"), content_hash("tiny|513"));
+        assert_eq!(content_hash("x"), content_hash("x"));
+    }
+}

@@ -1,0 +1,824 @@
+//! Continuous-batching serve daemon: the engine's one-shot batch drain
+//! becomes a long-running service loop over *modeled time*.
+//!
+//! Requests arrive from a [`TraceEvent`] stream (JSONL with arrival
+//! timestamps, priority class, deadline, and optional cancellation),
+//! and the existing planner/scheduler runs continuously instead of
+//! draining once: a discrete-event loop on a virtual clock ingests
+//! arrivals, applies admission control ([`MemoPlanner`] — one
+//! pricing per distinct shape), sheds load when the wait queue
+//! saturates (`queue_cap` backpressure), expires requests whose
+//! deadline passes before dispatch, honors cancellations, and picks
+//! the next dispatch with [`pick_next`] — the incremental
+//! form of the batch policy, starvation guard included. A
+//! [`ResultCache`] keyed on the request content hash
+//! short-circuits identical proteins to a cached result (ParaFold's
+//! redundancy observation), with virtual-time readiness so a duplicate
+//! dispatched before its producer finishes still recomputes.
+//!
+//! The whole lifecycle is simulated single-threaded and deterministic
+//! ([`simulate`]); the executed path ([`Engine::serve_trace`]) replays
+//! the simulation's dispatch decisions through the real backends with
+//! the slot-indexed pull loop, so outputs are bit-for-bit identical at
+//! any `--threads` budget — and cancelled/expired/shed requests never
+//! construct a backend at all.
+
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
+use crate::json::Json;
+use crate::metrics::{fmt_secs, ServeRecord, ServeStats};
+use crate::tensor::HostTensor;
+use crate::train::DataGen;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::cache::{CacheStats, ResultCache};
+use super::planner::{MemoPlanner, Placement, PlacementPlanner};
+use super::scheduler::{pick_next, SchedEntry, SchedPolicy};
+use super::{BackendFactory, Engine, InferRequest};
+
+/// Modeled lane occupancy of a cache hit (seconds): a hit still
+/// transits the daemon (lookup, result copy-out), it just skips the
+/// fold.
+pub const CACHE_HIT_LATENCY: f64 = 0.05;
+
+/// One timed request in a serve trace: the request itself plus its
+/// arrival-process metadata.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// The request (everything `fastfold serve` accepts).
+    pub req: InferRequest,
+    /// Virtual arrival second (trace files are sorted on this).
+    pub arrival: f64,
+    /// Deadline in seconds *after arrival*; a request still queued at
+    /// its deadline expires undispatched, one finishing late completes
+    /// with `deadline_missed`.
+    pub deadline: Option<f64>,
+    /// Absolute virtual second the caller cancels at; a request still
+    /// queued then is withdrawn and never reaches a backend.
+    pub cancel_at: Option<f64>,
+}
+
+impl TraceEvent {
+    /// An event with no deadline or cancellation.
+    pub fn at(arrival: f64, req: InferRequest) -> Self {
+        TraceEvent { req, arrival, deadline: None, cancel_at: None }
+    }
+
+    /// Parse one trace object: the request keys of
+    /// [`InferRequest::from_json`] plus `arrival` (default 0 — a plain
+    /// request file is a valid all-at-once trace), `deadline`,
+    /// `cancel_at`. Unknown keys stay loud errors.
+    pub fn from_json(j: &Json, index: usize) -> Result<Self> {
+        let mut rest = j.as_obj()?.clone();
+        let arrival = match rest.remove("arrival") {
+            Some(v) => v.as_f64()?,
+            None => 0.0,
+        };
+        let deadline = match rest.remove("deadline") {
+            Some(v) => Some(v.as_f64()?),
+            None => None,
+        };
+        let cancel_at = match rest.remove("cancel_at") {
+            Some(v) => Some(v.as_f64()?),
+            None => None,
+        };
+        if !arrival.is_finite() || arrival < 0.0 {
+            return Err(Error::Config(format!(
+                "trace event {index}: arrival must be a finite second >= 0, got {arrival}"
+            )));
+        }
+        if deadline.is_some_and(|d| !d.is_finite() || d <= 0.0) {
+            return Err(Error::Config(format!(
+                "trace event {index}: deadline must be a finite second > 0"
+            )));
+        }
+        if cancel_at.is_some_and(|c| !c.is_finite() || c < 0.0) {
+            return Err(Error::Config(format!(
+                "trace event {index}: cancel_at must be a finite second >= 0"
+            )));
+        }
+        let req = InferRequest::from_json(&Json::Obj(rest), index)?;
+        Ok(TraceEvent { req, arrival, deadline, cancel_at })
+    }
+
+    /// The event as one JSONL object (inverse of [`TraceEvent::from_json`];
+    /// request fields at their defaults are omitted).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), Json::Str(self.req.id.clone()));
+        m.insert("preset".to_string(), Json::Str(self.req.preset.clone()));
+        m.insert("arrival".to_string(), Json::Num(self.arrival));
+        if let Some(len) = self.req.model_len {
+            m.insert("len".to_string(), Json::Num(len as f64));
+        }
+        if self.req.priority != 0 {
+            m.insert("priority".to_string(), Json::Num(f64::from(self.req.priority)));
+        }
+        if self.req.naive {
+            m.insert("naive".to_string(), Json::Bool(true));
+        }
+        if self.req.seed != super::DEFAULT_SEED {
+            m.insert("seed".to_string(), Json::Num(self.req.seed as f64));
+        }
+        if let Some(force) = &self.req.force {
+            m.insert("backend".to_string(), Json::Str(force.name()));
+        }
+        if let Some(d) = self.deadline {
+            m.insert("deadline".to_string(), Json::Num(d));
+        }
+        if let Some(c) = self.cancel_at {
+            m.insert("cancel_at".to_string(), Json::Num(c));
+        }
+        Json::Obj(m)
+    }
+
+    /// Parse a JSONL trace (one object per non-blank, non-`#` line) and
+    /// stable-sort it by arrival — ties keep file order, which is the
+    /// tiebreak seniority the scheduler sees.
+    pub fn parse_jsonl(src: &str) -> Result<Vec<TraceEvent>> {
+        let mut events = Vec::new();
+        for line in src.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let j = Json::parse(line)?;
+            events.push(TraceEvent::from_json(&j, events.len())?);
+        }
+        sort_by_arrival(&mut events);
+        Ok(events)
+    }
+
+    /// Render a trace as JSONL, one event per line.
+    pub fn to_jsonl(trace: &[TraceEvent]) -> String {
+        let mut out = String::new();
+        for ev in trace {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Stable-sort a trace by arrival time (ties keep their order).
+pub fn sort_by_arrival(trace: &mut [TraceEvent]) {
+    trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+}
+
+/// The same trace re-timed `dt` seconds later: arrivals and (absolute)
+/// cancellations shift, relative deadlines don't. This is how a warm
+/// replay follows a cold one on a shared virtual clock — the cache's
+/// `ready_at` stamps from the first pass stay in the past.
+pub fn shift_trace(trace: &[TraceEvent], dt: f64) -> Vec<TraceEvent> {
+    trace
+        .iter()
+        .map(|ev| TraceEvent {
+            req: ev.req.clone(),
+            arrival: ev.arrival + dt,
+            deadline: ev.deadline,
+            cancel_at: ev.cancel_at.map(|c| c + dt),
+        })
+        .collect()
+}
+
+/// Daemon service parameters (the `[serve]` config plus the modeled
+/// lane count).
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Queue discipline (both policies run starvation-guarded here).
+    pub policy: SchedPolicy,
+    /// Starvation bound: no queued request is bypassed by more than
+    /// this many younger dispatches.
+    pub max_bypass: usize,
+    /// Modeled worker-lane count the virtual clock packs onto.
+    pub lanes: usize,
+    /// Backpressure bound: arrivals finding this many requests already
+    /// waiting are shed (0 = unbounded).
+    pub queue_cap: usize,
+    /// Result-cache byte budget (0 disables the cache).
+    pub cache_bytes: usize,
+    /// Modeled lane occupancy of a cache hit (seconds).
+    pub cache_hit_latency: f64,
+}
+
+impl DaemonConfig {
+    /// Build from a launcher config (`[serve]`) with `lanes` modeled
+    /// lanes.
+    pub fn from_run_config(cfg: &RunConfig, lanes: usize) -> Self {
+        DaemonConfig {
+            policy: cfg.serve.policy,
+            max_bypass: cfg.serve.max_bypass,
+            lanes: lanes.max(1),
+            queue_cap: cfg.serve.queue_cap,
+            cache_bytes: (cfg.serve.cache_gb * 1e9).round() as usize,
+            cache_hit_latency: CACHE_HIT_LATENCY,
+        }
+    }
+}
+
+/// How one traced request left the daemon.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Disposition {
+    /// Dispatched and finished (possibly from cache, possibly past its
+    /// deadline — both recorded).
+    Completed {
+        /// Served from the result cache instead of a backend.
+        cached: bool,
+        /// Finished after its absolute deadline.
+        deadline_missed: bool,
+    },
+    /// Refused at admission (sim-OOM, unknown preset, fleet bound).
+    Rejected,
+    /// Shed by queue backpressure on arrival.
+    Shed,
+    /// Deadline passed while still queued; never dispatched.
+    Expired,
+    /// Cancelled while still queued (or before admission).
+    Cancelled,
+}
+
+impl Disposition {
+    /// Stable display name (`completed`, `rejected`, `shed`, `expired`,
+    /// `cancelled`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Disposition::Completed { .. } => "completed",
+            Disposition::Rejected => "rejected",
+            Disposition::Shed => "shed",
+            Disposition::Expired => "expired",
+            Disposition::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// One traced request's simulated lifecycle.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    /// Index into the (arrival-sorted) trace.
+    pub trace_idx: usize,
+    /// Request id.
+    pub id: String,
+    /// Virtual arrival second.
+    pub arrival: f64,
+    /// Absolute deadline second, if the event carried one.
+    pub deadline: Option<f64>,
+    /// Final lifecycle state.
+    pub disposition: Disposition,
+    /// Virtual dispatch second (None if never dispatched).
+    pub dispatch: Option<f64>,
+    /// Virtual completion second (None if never dispatched).
+    pub finish: Option<f64>,
+    /// Younger dispatches that overtook this request while it waited.
+    pub bypassed: usize,
+    /// Rejection/shed detail, if any.
+    pub error: Option<String>,
+    /// The placement (shared via the planner memo); None when the
+    /// request was rejected or cancelled before admission.
+    pub placement: Option<Arc<Placement>>,
+    /// For cache hits: trace index of the request whose result served
+    /// this one.
+    pub cache_source: Option<usize>,
+}
+
+impl SimOutcome {
+    /// Modeled sojourn (arrival → finish) for completed requests.
+    pub fn sojourn(&self) -> Option<f64> {
+        self.finish.map(|f| f - self.arrival)
+    }
+
+    fn terminal(
+        trace_idx: usize,
+        ev: &TraceEvent,
+        disposition: Disposition,
+        error: Option<String>,
+        placement: Option<Arc<Placement>>,
+    ) -> Self {
+        SimOutcome {
+            trace_idx,
+            id: ev.req.id.clone(),
+            arrival: ev.arrival,
+            deadline: ev.deadline.map(|d| ev.arrival + d),
+            disposition,
+            dispatch: None,
+            finish: None,
+            bypassed: 0,
+            error,
+            placement,
+            cache_source: None,
+        }
+    }
+}
+
+/// The simulated service run: per-request lifecycles plus the daemon's
+/// aggregate view.
+#[derive(Debug)]
+pub struct DaemonReport {
+    /// One outcome per trace event, trace order.
+    pub outcomes: Vec<SimOutcome>,
+    /// Trace indices in dispatch order (completed requests only,
+    /// cache hits included) — the schedule the executed path replays.
+    pub dispatch_order: Vec<usize>,
+    /// Virtual second the last dispatch finished.
+    pub makespan: f64,
+    /// Result-cache counters at end of run.
+    pub cache: CacheStats,
+    /// Largest wait-queue depth observed.
+    pub peak_queue: usize,
+}
+
+impl DaemonReport {
+    fn count(&self, f: impl Fn(&Disposition) -> bool) -> usize {
+        self.outcomes.iter().filter(|o| f(&o.disposition)).count()
+    }
+
+    /// Requests that finished (cache hits included).
+    pub fn completed(&self) -> usize {
+        self.count(|d| matches!(d, Disposition::Completed { .. }))
+    }
+
+    /// Completed requests served from the cache.
+    pub fn cache_hits(&self) -> usize {
+        self.count(|d| matches!(d, Disposition::Completed { cached: true, .. }))
+    }
+
+    /// Requests refused at admission.
+    pub fn rejected(&self) -> usize {
+        self.count(|d| *d == Disposition::Rejected)
+    }
+
+    /// Requests shed by queue backpressure.
+    pub fn shed(&self) -> usize {
+        self.count(|d| *d == Disposition::Shed)
+    }
+
+    /// Requests whose deadline expired before dispatch.
+    pub fn expired(&self) -> usize {
+        self.count(|d| *d == Disposition::Expired)
+    }
+
+    /// Requests cancelled before dispatch.
+    pub fn cancelled(&self) -> usize {
+        self.count(|d| *d == Disposition::Cancelled)
+    }
+
+    /// Completed requests that finished past their deadline.
+    pub fn completed_late(&self) -> usize {
+        self.count(|d| matches!(d, Disposition::Completed { deadline_missed: true, .. }))
+    }
+
+    /// Deadline misses overall: expired in queue plus completed late,
+    /// over requests that carried a deadline and were not cancelled,
+    /// shed, or rejected (those never contracted a deadline the daemon
+    /// could miss). NaN-free: returns 0 when no request qualifies.
+    pub fn deadline_miss_rate(&self) -> f64 {
+        let eligible = self
+            .outcomes
+            .iter()
+            .filter(|o| {
+                o.deadline.is_some()
+                    && matches!(
+                        o.disposition,
+                        Disposition::Completed { .. } | Disposition::Expired
+                    )
+            })
+            .count();
+        if eligible == 0 {
+            return 0.0;
+        }
+        (self.expired() + self.completed_late()) as f64 / eligible as f64
+    }
+
+    /// Modeled sojourn times (arrival → finish) of completed requests.
+    pub fn sojourns(&self) -> Vec<f64> {
+        self.outcomes.iter().filter_map(SimOutcome::sojourn).collect()
+    }
+
+    /// Metrics ledger for the simulated run. Completed requests carry
+    /// their placement's modeled figures (cache hits flagged so the
+    /// FLOP numerator excludes them); terminal lifecycles carry zeros —
+    /// they did no compute.
+    pub fn stats(&self) -> ServeStats {
+        let mut stats = ServeStats::default();
+        for o in &self.outcomes {
+            let completed = matches!(o.disposition, Disposition::Completed { .. });
+            let backend = match (&o.disposition, &o.placement) {
+                (Disposition::Completed { .. }, Some(p)) => p.backend.name(),
+                (d, _) => d.name().to_string(),
+            };
+            let (lat, flops) = match (&o.placement, completed) {
+                (Some(p), true) => (p.modeled_latency, p.modeled_flops),
+                _ => (0.0, 0.0),
+            };
+            stats.push(ServeRecord {
+                id: o.id.clone(),
+                backend,
+                modeled_latency: lat,
+                modeled_flops: flops,
+                wall_seconds: 0.0,
+                ok: completed,
+                cached: matches!(o.disposition, Disposition::Completed { cached: true, .. }),
+            });
+        }
+        stats
+    }
+
+    /// One-line aggregate summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "daemon: {} events -> {} completed ({} cached, {} late), \
+             {} rejected, {} shed, {} expired, {} cancelled; makespan {}; \
+             peak queue {}; miss rate {:.3}",
+            self.outcomes.len(),
+            self.completed(),
+            self.cache_hits(),
+            self.completed_late(),
+            self.rejected(),
+            self.shed(),
+            self.expired(),
+            self.cancelled(),
+            fmt_secs(self.makespan),
+            self.peak_queue,
+            self.deadline_miss_rate(),
+        )
+    }
+}
+
+/// One waiting request inside the event loop.
+struct QueueItem {
+    trace_idx: usize,
+    /// Seniority: position in the arrival-sorted trace.
+    seq: usize,
+    arrival: f64,
+    deadline_abs: Option<f64>,
+    cancel_at: Option<f64>,
+    priority: u32,
+    latency: f64,
+    key: String,
+    bytes: usize,
+    overtaken: usize,
+    placement: Arc<Placement>,
+}
+
+/// Modeled byte size of a request's result (the cache's price for an
+/// entry): the two output tensors at the *modeled* shape, f32.
+fn modeled_result_bytes(planner: &PlacementPlanner, req: &InferRequest) -> usize {
+    match planner.plan_cfg(req) {
+        Ok(cfg) => {
+            4 * (cfg.n_seq * cfg.n_res * cfg.msa_vocab + cfg.n_res * cfg.n_res * cfg.n_dist_bins)
+        }
+        Err(_) => 0,
+    }
+}
+
+/// Simulate the daemon over `trace` with a fresh cache sized by
+/// `cfg.cache_bytes`.
+pub fn simulate(
+    planner: &PlacementPlanner,
+    cfg: &DaemonConfig,
+    trace: &[TraceEvent],
+) -> DaemonReport {
+    let mut cache = ResultCache::new(cfg.cache_bytes);
+    simulate_with_cache(planner, cfg, trace, &mut cache)
+}
+
+/// Simulate the daemon over `trace`, reusing `cache` across calls (a
+/// warm replay hands back the cold run's cache together with a
+/// [`shift_trace`]-retimed trace, so readiness stamps stay coherent).
+///
+/// The loop is a pure single-threaded discrete-event simulation — no
+/// wall clock, no thread timing — so the outcome is a deterministic
+/// function of (planner, cfg, trace, cache state). Each iteration:
+///
+/// 1. pick the earliest-free lane (ties → lowest index, matching
+///    [`super::simulate_lanes`]) and advance `now` to when that lane
+///    and at least one request are both present;
+/// 2. ingest every arrival up to `now` — pre-arrival cancellations,
+///    admission rejections, and backpressure shedding resolve here;
+/// 3. purge waiting requests whose cancellation or deadline has passed
+///    (they never reach a backend);
+/// 4. dispatch one request chosen by [`pick_next`] among those already
+///    arrived, consulting the result cache first.
+pub fn simulate_with_cache(
+    planner: &PlacementPlanner,
+    cfg: &DaemonConfig,
+    trace: &[TraceEvent],
+    cache: &mut ResultCache<usize>,
+) -> DaemonReport {
+    let n = trace.len();
+    let lanes = cfg.lanes.max(1);
+    let mut memo = MemoPlanner::new(planner);
+    // process in arrival order whatever order the caller handed us
+    let mut sorted: Vec<usize> = (0..n).collect();
+    sorted.sort_by(|&a, &b| trace[a].arrival.total_cmp(&trace[b].arrival));
+
+    let mut outcomes: Vec<Option<SimOutcome>> = (0..n).map(|_| None).collect();
+    let mut dispatch_order = Vec::new();
+    let mut free = vec![0.0f64; lanes];
+    let mut queue: Vec<QueueItem> = Vec::new();
+    let mut next = 0usize; // cursor into `sorted`
+    let mut makespan = 0.0f64;
+    let mut peak_queue = 0usize;
+
+    while next < n || !queue.is_empty() {
+        // 1. earliest-free lane, ties to the lowest index
+        let mut lane = 0usize;
+        for k in 1..lanes {
+            if free[k] < free[lane] {
+                lane = k;
+            }
+        }
+        let earliest_present = queue.iter().map(|q| q.arrival).fold(
+            if next < n { trace[sorted[next]].arrival } else { f64::INFINITY },
+            f64::min,
+        );
+        let now = free[lane].max(earliest_present);
+
+        // 2. ingest arrivals up to `now`
+        while next < n && trace[sorted[next]].arrival <= now {
+            let idx = sorted[next];
+            let seq = next;
+            next += 1;
+            let ev = &trace[idx];
+            if ev.cancel_at.is_some_and(|c| c <= ev.arrival) {
+                outcomes[idx] =
+                    Some(SimOutcome::terminal(idx, ev, Disposition::Cancelled, None, None));
+                continue;
+            }
+            match memo.place(&ev.req) {
+                Err(e) => {
+                    outcomes[idx] = Some(SimOutcome::terminal(
+                        idx,
+                        ev,
+                        Disposition::Rejected,
+                        Some(e.to_string()),
+                        None,
+                    ));
+                }
+                Ok(placement) => {
+                    if cfg.queue_cap > 0 && queue.len() >= cfg.queue_cap {
+                        outcomes[idx] = Some(SimOutcome::terminal(
+                            idx,
+                            ev,
+                            Disposition::Shed,
+                            Some(format!(
+                                "queue full ({} waiting, cap {})",
+                                queue.len(),
+                                cfg.queue_cap
+                            )),
+                            Some(placement),
+                        ));
+                        continue;
+                    }
+                    queue.push(QueueItem {
+                        trace_idx: idx,
+                        seq,
+                        arrival: ev.arrival,
+                        deadline_abs: ev.deadline.map(|d| ev.arrival + d),
+                        cancel_at: ev.cancel_at,
+                        priority: ev.req.priority,
+                        latency: placement.modeled_latency,
+                        key: ev.req.content_key(),
+                        bytes: modeled_result_bytes(planner, &ev.req),
+                        overtaken: 0,
+                        placement,
+                    });
+                    peak_queue = peak_queue.max(queue.len());
+                }
+            }
+        }
+
+        // 3. purge cancelled/expired waiters — they never dispatch
+        let mut k = 0usize;
+        while k < queue.len() {
+            let cancelled = queue[k].cancel_at.is_some_and(|c| c <= now);
+            let expired = !cancelled && queue[k].deadline_abs.is_some_and(|d| d <= now);
+            if !(cancelled || expired) {
+                k += 1;
+                continue;
+            }
+            let item = queue.remove(k);
+            let ev = &trace[item.trace_idx];
+            let disposition =
+                if cancelled { Disposition::Cancelled } else { Disposition::Expired };
+            let mut out =
+                SimOutcome::terminal(item.trace_idx, ev, disposition, None, Some(item.placement));
+            out.bypassed = item.overtaken;
+            outcomes[item.trace_idx] = Some(out);
+        }
+
+        // 4. dispatch one request among those already arrived
+        let eligible: Vec<usize> =
+            (0..queue.len()).filter(|&i| queue[i].arrival <= now).collect();
+        if eligible.is_empty() {
+            continue; // progress came from ingestion/purging above
+        }
+        let view: Vec<(SchedEntry, usize)> = eligible
+            .iter()
+            .map(|&i| {
+                let q = &queue[i];
+                (
+                    SchedEntry {
+                        arrival: q.seq,
+                        priority: q.priority,
+                        modeled_latency: q.latency,
+                    },
+                    q.overtaken,
+                )
+            })
+            .collect();
+        let pick = pick_next(cfg.policy, &view, cfg.max_bypass).expect("eligible is non-empty");
+        let item = queue.remove(eligible[pick]);
+        for q in &mut queue {
+            if q.seq < item.seq {
+                q.overtaken += 1;
+            }
+        }
+
+        let (finish, cached, cache_source) = if cfg.cache_bytes > 0 {
+            match cache.lookup(&item.key, now) {
+                Some(src) => (now + cfg.cache_hit_latency.max(0.0), true, Some(src)),
+                None => {
+                    let f = now + item.latency.max(0.0);
+                    cache.insert(&item.key, item.trace_idx, item.bytes, f);
+                    (f, false, None)
+                }
+            }
+        } else {
+            (now + item.latency.max(0.0), false, None)
+        };
+        free[lane] = finish;
+        makespan = makespan.max(finish);
+        let deadline_missed = item.deadline_abs.is_some_and(|d| finish > d);
+        outcomes[item.trace_idx] = Some(SimOutcome {
+            trace_idx: item.trace_idx,
+            id: trace[item.trace_idx].req.id.clone(),
+            arrival: item.arrival,
+            deadline: item.deadline_abs,
+            disposition: Disposition::Completed { cached, deadline_missed },
+            dispatch: Some(now),
+            finish: Some(finish),
+            bypassed: item.overtaken,
+            error: None,
+            placement: Some(item.placement),
+            cache_source,
+        });
+        dispatch_order.push(item.trace_idx);
+    }
+
+    DaemonReport {
+        outcomes: outcomes
+            .into_iter()
+            .map(|o| o.expect("every trace event reaches a terminal state"))
+            .collect(),
+        dispatch_order,
+        makespan,
+        cache: cache.stats(),
+        peak_queue,
+    }
+}
+
+/// The executed daemon run: the simulation's decisions plus real
+/// backend outputs.
+#[derive(Debug)]
+pub struct TraceServeReport {
+    /// The deterministic lifecycle simulation the execution replayed.
+    pub sim: DaemonReport,
+    /// Per-trace-event output (trace order): `None` for requests that
+    /// never dispatched; cache hits carry a bit-identical clone of
+    /// their source's output.
+    pub outputs: Vec<Option<Result<(HostTensor, HostTensor)>>>,
+    /// Backend execution notes, aligned with `outputs`.
+    pub notes: Vec<Option<String>>,
+    /// Worker lanes the execution used.
+    pub threads: usize,
+    /// Measured wall seconds for the whole replay.
+    pub wall_seconds: f64,
+    /// Metrics ledger (wall times measured, cache hits flagged).
+    pub stats: ServeStats,
+}
+
+impl Engine<'_> {
+    /// Execute a trace through the daemon with the production backends.
+    pub fn serve_trace(
+        &self,
+        cfg: &DaemonConfig,
+        trace: &[TraceEvent],
+    ) -> Result<TraceServeReport> {
+        self.serve_trace_with(cfg, trace, self)
+    }
+
+    /// Execute a trace through the daemon with an injected backend
+    /// factory (the test seam). The lifecycle — admission, shedding,
+    /// expiry, cancellation, dispatch order, cache hits — comes from
+    /// the single-threaded [`simulate`]; only completed non-cached
+    /// requests are executed, pulled work-conservingly in dispatch
+    /// order with slot-indexed results, so outputs are bit-for-bit
+    /// identical at any thread budget and cancelled/expired/shed
+    /// requests never construct a backend.
+    pub fn serve_trace_with(
+        &self,
+        cfg: &DaemonConfig,
+        trace: &[TraceEvent],
+        factory: &dyn BackendFactory,
+    ) -> Result<TraceServeReport> {
+        let t0 = Instant::now();
+        let sim = simulate(&self.planner, cfg, trace);
+
+        let to_execute: Vec<usize> = sim
+            .dispatch_order
+            .iter()
+            .copied()
+            .filter(|&i| {
+                matches!(
+                    sim.outcomes[i].disposition,
+                    Disposition::Completed { cached: false, .. }
+                )
+            })
+            .collect();
+        let concurrent = to_execute.len().clamp(1, self.threads.max(1));
+        let rank_threads = (self.threads / concurrent).max(1);
+        let executed: Vec<(Result<super::InferOutput>, f64)> =
+            super::pull_map(self.threads, to_execute.len(), |slot| {
+                let i = to_execute[slot];
+                let req = &trace[i].req;
+                let placement = sim.outcomes[i]
+                    .placement
+                    .as_ref()
+                    .expect("dispatched request must be placed");
+                let t = Instant::now();
+                let out = (|| {
+                    let be = factory.make(req, placement, rank_threads)?;
+                    let exec_cfg = crate::config::ModelConfig::preset(&req.preset)?;
+                    let mut gen = DataGen::new(exec_cfg, req.seed);
+                    be.infer(&gen.next_batch().msa_tokens)
+                })();
+                (out, t.elapsed().as_secs_f64())
+            });
+
+        let mut outputs: Vec<Option<Result<(HostTensor, HostTensor)>>> =
+            (0..trace.len()).map(|_| None).collect();
+        let mut notes: Vec<Option<String>> = vec![None; trace.len()];
+        let mut walls = vec![0.0f64; trace.len()];
+        for (slot, (out, wall)) in executed.into_iter().enumerate() {
+            let i = to_execute[slot];
+            walls[i] = wall;
+            match out {
+                Ok(super::InferOutput { msa_logits, dist_logits, note }) => {
+                    outputs[i] = Some(Ok((msa_logits, dist_logits)));
+                    notes[i] = note;
+                }
+                Err(e) => outputs[i] = Some(Err(e)),
+            }
+        }
+        // cache hits clone their source's bits (the cache stores the
+        // producing request's output; Error is not Clone, so a failed
+        // producer propagates as a message-preserving error)
+        for o in &sim.outcomes {
+            if let (Disposition::Completed { cached: true, .. }, Some(src)) =
+                (&o.disposition, o.cache_source)
+            {
+                let cloned = match &outputs[src] {
+                    Some(Ok((m, z))) => Ok((m.clone(), z.clone())),
+                    Some(Err(e)) => Err(Error::msg(e.to_string())),
+                    None => Err(Error::msg("cache source was not executed")),
+                };
+                outputs[o.trace_idx] = Some(cloned);
+                notes[o.trace_idx] = Some(format!("cache hit (source {})", trace[src].req.id));
+            }
+        }
+
+        let mut stats = ServeStats::default();
+        for (i, o) in sim.outcomes.iter().enumerate() {
+            let completed = matches!(o.disposition, Disposition::Completed { .. });
+            let cached = matches!(o.disposition, Disposition::Completed { cached: true, .. });
+            let backend = match (&o.disposition, &o.placement) {
+                (Disposition::Completed { .. }, Some(p)) => p.backend.name(),
+                (d, _) => d.name().to_string(),
+            };
+            let (lat, flops) = match (&o.placement, completed) {
+                (Some(p), true) => (p.modeled_latency, p.modeled_flops),
+                _ => (0.0, 0.0),
+            };
+            stats.push(ServeRecord {
+                id: o.id.clone(),
+                backend,
+                modeled_latency: lat,
+                modeled_flops: flops,
+                wall_seconds: walls[i],
+                ok: matches!(outputs[i], Some(Ok(_))),
+                cached,
+            });
+        }
+
+        Ok(TraceServeReport {
+            sim,
+            outputs,
+            notes,
+            threads: self.threads,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            stats,
+        })
+    }
+}

@@ -1,0 +1,414 @@
+//! Deterministic load generator + replay harness for the serve daemon.
+//!
+//! `fastfold loadgen` synthesizes a large request trace from a seeded
+//! distribution (shape mix skewed short, Poisson-like arrivals scaled
+//! to a target lane utilization, recency-biased duplicates for the
+//! result cache, per-request deadlines and cancellations), replays it
+//! through [`daemon::simulate`], and writes the service-quality ledger
+//! — p50/p99 modeled latency, throughput, deadline-miss rate, and the
+//! cache-hit curve — into `BENCH_serve.json`.
+//!
+//! Everything downstream of the seed is pure arithmetic on the virtual
+//! clock: the same seed produces a byte-identical trace file and a
+//! byte-identical ledger at any `--threads` budget, which is what lets
+//! CI gate on the numbers instead of eyeballing them.
+
+use crate::bench::{num, obj};
+use crate::json::Json;
+use crate::metrics::percentile;
+use crate::rng::Rng;
+
+use super::daemon::{self, DaemonConfig, DaemonReport, Disposition, TraceEvent};
+use super::planner::{MemoPlanner, PlacementPlanner};
+use super::InferRequest;
+
+/// Trace-synthesis parameters. Every field feeds the seeded generator,
+/// so two equal specs produce byte-identical traces.
+#[derive(Clone, Debug)]
+pub struct LoadgenSpec {
+    /// Number of requests to synthesize.
+    pub requests: usize,
+    /// Generator seed.
+    pub seed: u64,
+    /// Modeled worker lanes the arrival rate is scaled against.
+    pub lanes: usize,
+    /// Target lane utilization the arrival rate aims for (0, 1).
+    pub util: f64,
+    /// Fraction of requests that duplicate a recent request's content
+    /// (the cache's workload).
+    pub dup_frac: f64,
+    /// Fraction of requests that carry a deadline.
+    pub deadline_frac: f64,
+    /// Fraction of requests that carry a cancellation time.
+    pub cancel_frac: f64,
+    /// Trailing window duplicates draw their source from.
+    pub window: usize,
+}
+
+impl LoadgenSpec {
+    /// A spec with the default workload shape at `requests` requests.
+    pub fn new(requests: usize, seed: u64) -> Self {
+        LoadgenSpec {
+            requests,
+            seed,
+            lanes: 4,
+            util: 0.7,
+            dup_frac: 0.35,
+            deadline_frac: 0.5,
+            cancel_frac: 0.05,
+            window: 256,
+        }
+    }
+
+    /// The tier-1 quick trace: 100k requests (the CI serve-smoke and
+    /// the full-trace integration test both replay this in seconds).
+    pub fn quick(seed: u64) -> Self {
+        LoadgenSpec::new(100_000, seed)
+    }
+}
+
+impl Default for LoadgenSpec {
+    /// The headline workload: a million-request trace.
+    fn default() -> Self {
+        LoadgenSpec::new(1_000_000, 17)
+    }
+}
+
+/// The shape mix the generator draws from: `(modeled len, weight)`,
+/// skewed short the way folding queues are, with a thin tail of
+/// fleet-rejected 8k monsters to exercise admission control.
+/// `None` is the executable tiny-preset shape.
+const SHAPE_MIX: [(Option<usize>, f64); 8] = [
+    (None, 0.25),
+    (Some(256), 0.15),
+    (Some(512), 0.20),
+    (Some(1024), 0.15),
+    (Some(2048), 0.12),
+    (Some(3072), 0.07),
+    (Some(4096), 0.05),
+    (Some(8192), 0.01),
+];
+
+/// Round a virtual second to whole microseconds — keeps trace files
+/// human-readable without losing round-trip fidelity.
+fn round_us(t: f64) -> f64 {
+    (t * 1e6).round() / 1e6
+}
+
+/// Synthesize a deterministic trace: shape mix per [`SHAPE_MIX`],
+/// exponential arrival gaps scaled so the admitted work targets
+/// `util` across `lanes`, duplicates drawn recency-biased from the
+/// trailing `window`, deadlines proportional to the request's own
+/// modeled latency, cancellations shortly after arrival. The returned
+/// trace is arrival-sorted.
+pub fn synthesize(planner: &PlacementPlanner, spec: &LoadgenSpec) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(spec.seed);
+    let mut memo = MemoPlanner::new(planner);
+
+    // price each distinct shape once: latency feeds both the arrival
+    // scale and the deadline draw (0 for admission-rejected shapes)
+    let shape_latency: Vec<f64> = SHAPE_MIX
+        .iter()
+        .map(|(len, _)| {
+            let mut probe = InferRequest::new("probe", "tiny");
+            probe.model_len = *len;
+            memo.place(&probe).map(|p| p.modeled_latency).unwrap_or(0.0)
+        })
+        .collect();
+    let mean_latency: f64 = SHAPE_MIX
+        .iter()
+        .zip(shape_latency.iter())
+        .map(|((_, w), lat)| w * lat)
+        .sum();
+    // offered load = mean_latency / (gap * lanes) => gap for target util
+    let mean_gap = mean_latency / (spec.lanes.max(1) as f64 * spec.util.clamp(0.05, 0.99));
+
+    let mut trace: Vec<TraceEvent> = Vec::with_capacity(spec.requests);
+    let mut latencies: Vec<f64> = Vec::with_capacity(spec.requests);
+    let mut clock = 0.0f64;
+    for i in 0..spec.requests {
+        clock += -(1.0 - rng.uniform()).ln() * mean_gap;
+        let arrival = round_us(clock);
+
+        let (req, lat) = if !trace.is_empty() && rng.bernoulli(spec.dup_frac) {
+            // duplicate a recent request's full content (new id) — the
+            // cache keys on content, so this is a prospective hit
+            let span = trace.len().min(spec.window.max(1));
+            let src = trace.len() - 1 - rng.below(span);
+            let mut req = trace[src].req.clone();
+            req.id = format!("r{i}");
+            (req, latencies[src])
+        } else {
+            let mut acc = 0.0;
+            let draw = rng.uniform();
+            let mut shape = 0usize;
+            for (k, (_, w)) in SHAPE_MIX.iter().enumerate() {
+                acc += w;
+                if draw < acc {
+                    shape = k;
+                    break;
+                }
+            }
+            let mut req = InferRequest::new(&format!("r{i}"), "tiny");
+            req.model_len = SHAPE_MIX[shape].0;
+            req.seed = rng.below(1_000_000) as u64;
+            let p = rng.uniform();
+            req.priority = if p < 0.7 {
+                0
+            } else if p < 0.9 {
+                1
+            } else {
+                2
+            };
+            (req, shape_latency[shape])
+        };
+
+        let deadline = if lat > 0.0 && rng.bernoulli(spec.deadline_frac) {
+            // 1.5x–8x the request's own service time: tight enough to
+            // miss under queueing, loose enough that most make it
+            Some(round_us(lat * (1.5 + 6.5 * rng.uniform())))
+        } else {
+            None
+        };
+        let cancel_at = if rng.bernoulli(spec.cancel_frac) {
+            // within ~2 service times of arrival: some fire while the
+            // request still queues (cancelled), the rest after it
+            // finished (no-ops)
+            Some(round_us(arrival + 2.0 * lat.max(0.1) * rng.uniform()))
+        } else {
+            None
+        };
+
+        latencies.push(lat);
+        trace.push(TraceEvent { req, arrival, deadline, cancel_at });
+    }
+    trace
+}
+
+/// Per-decile cache-hit fraction over the trace (completed requests
+/// only): decile `d` covers trace indices `[d*n/10, (d+1)*n/10)`. The
+/// curve climbs as the cache warms — flat zero means the cache never
+/// engaged.
+pub fn hit_curve(report: &DaemonReport) -> Vec<f64> {
+    let n = report.outcomes.len();
+    let mut curve = Vec::with_capacity(10);
+    for d in 0..10usize {
+        let (lo, hi) = (d * n / 10, (d + 1) * n / 10);
+        let mut completed = 0usize;
+        let mut hits = 0usize;
+        for o in &report.outcomes[lo..hi] {
+            if let Disposition::Completed { cached, .. } = o.disposition {
+                completed += 1;
+                hits += usize::from(cached);
+            }
+        }
+        curve.push(if completed > 0 { hits as f64 / completed as f64 } else { 0.0 });
+    }
+    curve
+}
+
+fn pct_or_zero(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        percentile(xs.to_vec(), p)
+    }
+}
+
+/// The `BENCH_serve.json` ledger for one replay: daemon config echo,
+/// lifecycle counts, the p50/p90/p99 modeled-sojourn ledger,
+/// throughput, deadline-miss rate, and the cache section with its
+/// per-decile hit curve. Pure arithmetic on the report — byte-identical
+/// across runs and thread counts for the same trace. (`fastfold
+/// daemon` replaying a foreign trace emits this directly; `fastfold
+/// loadgen` adds its spec echo via [`bench_doc`].)
+pub fn report_doc(cfg: &DaemonConfig, report: &DaemonReport) -> Json {
+    let sojourns = report.sojourns();
+    let mean = if sojourns.is_empty() {
+        0.0
+    } else {
+        sojourns.iter().sum::<f64>() / sojourns.len() as f64
+    };
+    let max = sojourns.iter().fold(0.0f64, |a, &b| a.max(b));
+    let completed = report.completed();
+    let throughput = if report.makespan > 0.0 {
+        completed as f64 / report.makespan
+    } else {
+        0.0
+    };
+    let hit_rate = if completed > 0 {
+        report.cache_hits() as f64 / completed as f64
+    } else {
+        0.0
+    };
+    obj(vec![
+        ("kind", Json::Str("serve".into())),
+        (
+            "daemon",
+            obj(vec![
+                ("policy", Json::Str(cfg.policy.name().into())),
+                ("max_bypass", num(cfg.max_bypass as f64)),
+                ("lanes", num(cfg.lanes as f64)),
+                ("queue_cap", num(cfg.queue_cap as f64)),
+                ("cache_bytes", num(cfg.cache_bytes as f64)),
+                ("cache_hit_latency_s", num(cfg.cache_hit_latency)),
+            ]),
+        ),
+        (
+            "outcomes",
+            obj(vec![
+                ("events", num(report.outcomes.len() as f64)),
+                ("completed", num(completed as f64)),
+                ("cache_hits", num(report.cache_hits() as f64)),
+                ("completed_late", num(report.completed_late() as f64)),
+                ("rejected", num(report.rejected() as f64)),
+                ("shed", num(report.shed() as f64)),
+                ("expired", num(report.expired() as f64)),
+                ("cancelled", num(report.cancelled() as f64)),
+                ("peak_queue", num(report.peak_queue as f64)),
+            ]),
+        ),
+        (
+            "latency",
+            obj(vec![
+                ("p50_s", num(pct_or_zero(&sojourns, 50.0))),
+                ("p90_s", num(pct_or_zero(&sojourns, 90.0))),
+                ("p99_s", num(pct_or_zero(&sojourns, 99.0))),
+                ("mean_s", num(mean)),
+                ("max_s", num(max)),
+            ]),
+        ),
+        ("throughput_rps", num(throughput)),
+        ("deadline_miss_rate", num(report.deadline_miss_rate())),
+        (
+            "cache",
+            obj(vec![
+                ("hit_rate", num(hit_rate)),
+                ("evictions", num(report.cache.evictions as f64)),
+                ("insertions", num(report.cache.insertions as f64)),
+                ("peak_bytes", num(report.cache.peak_bytes as f64)),
+                ("used_bytes", num(report.cache.used_bytes as f64)),
+                ("hit_curve", Json::Arr(hit_curve(report).into_iter().map(num).collect())),
+            ]),
+        ),
+        ("makespan_s", num(report.makespan)),
+        ("aggregate_pflops", num(report.stats().aggregate_pflops(report.makespan))),
+    ])
+}
+
+/// [`report_doc`] plus the loadgen spec echo — the full
+/// `BENCH_serve.json` written by `fastfold loadgen`.
+pub fn bench_doc(spec: &LoadgenSpec, cfg: &DaemonConfig, report: &DaemonReport) -> Json {
+    let mut doc = report_doc(cfg, report);
+    if let Json::Obj(map) = &mut doc {
+        map.insert(
+            "spec".into(),
+            obj(vec![
+                ("requests", num(spec.requests as f64)),
+                ("seed", num(spec.seed as f64)),
+                ("lanes", num(spec.lanes as f64)),
+                ("util", num(spec.util)),
+                ("dup_frac", num(spec.dup_frac)),
+                ("deadline_frac", num(spec.deadline_frac)),
+                ("cancel_frac", num(spec.cancel_frac)),
+                ("window", num(spec.window as f64)),
+            ]),
+        );
+    }
+    doc
+}
+
+/// Synthesize `spec`'s trace and replay it through the daemon: the one
+/// call behind `fastfold loadgen` and the CI serve-smoke.
+pub fn generate_and_replay(
+    planner: &PlacementPlanner,
+    spec: &LoadgenSpec,
+    cfg: &DaemonConfig,
+) -> (Vec<TraceEvent>, DaemonReport) {
+    let trace = synthesize(planner, spec);
+    let report = daemon::simulate(planner, cfg, &trace);
+    (trace, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    fn planner() -> PlacementPlanner {
+        PlacementPlanner::from_run_config(&RunConfig::default()).expect("default planner")
+    }
+
+    fn small_spec() -> LoadgenSpec {
+        let mut spec = LoadgenSpec::new(400, 5);
+        spec.window = 64;
+        spec
+    }
+
+    #[test]
+    fn synthesis_is_deterministic_and_sorted() {
+        let p = planner();
+        let a = synthesize(&p, &small_spec());
+        let b = synthesize(&p, &small_spec());
+        assert_eq!(TraceEvent::to_jsonl(&a), TraceEvent::to_jsonl(&b));
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival), "arrival-sorted");
+        // a different seed moves the workload
+        let mut other = small_spec();
+        other.seed = 6;
+        let c = synthesize(&p, &other);
+        assert_ne!(TraceEvent::to_jsonl(&a), TraceEvent::to_jsonl(&c));
+    }
+
+    #[test]
+    fn trace_roundtrips_through_jsonl() {
+        let p = planner();
+        let a = synthesize(&p, &small_spec());
+        let parsed = TraceEvent::parse_jsonl(&TraceEvent::to_jsonl(&a)).unwrap();
+        assert_eq!(TraceEvent::to_jsonl(&parsed), TraceEvent::to_jsonl(&a));
+    }
+
+    #[test]
+    fn replay_ledger_is_deterministic_and_complete() {
+        let p = planner();
+        let spec = small_spec();
+        let cfg = DaemonConfig::from_run_config(&RunConfig::default(), spec.lanes);
+        let (trace, report) = generate_and_replay(&p, &spec, &cfg);
+        assert_eq!(report.outcomes.len(), trace.len());
+        // every request reaches exactly one terminal state
+        let accounted = report.completed()
+            + report.rejected()
+            + report.shed()
+            + report.expired()
+            + report.cancelled();
+        assert_eq!(accounted, trace.len());
+        assert!(report.cache_hits() > 0, "dup_frac must produce hits");
+        let doc_a = bench_doc(&spec, &cfg, &report).to_string();
+        let (_, report_b) = generate_and_replay(&p, &spec, &cfg);
+        let doc_b = bench_doc(&spec, &cfg, &report_b).to_string();
+        assert_eq!(doc_a, doc_b, "ledger must be byte-identical across runs");
+        for key in [
+            "\"p50_s\"",
+            "\"p99_s\"",
+            "\"throughput_rps\"",
+            "\"deadline_miss_rate\"",
+            "\"hit_curve\"",
+        ] {
+            assert!(doc_a.contains(key), "missing {key} in {doc_a}");
+        }
+    }
+
+    #[test]
+    fn hit_curve_warms_up() {
+        let p = planner();
+        let spec = small_spec();
+        let cfg = DaemonConfig::from_run_config(&RunConfig::default(), spec.lanes);
+        let (_, report) = generate_and_replay(&p, &spec, &cfg);
+        let curve = hit_curve(&report);
+        assert_eq!(curve.len(), 10);
+        assert!(curve.iter().all(|&h| (0.0..=1.0).contains(&h)));
+        // the tail of the trace should hit at least as often as the
+        // cold first decile (the cache warms)
+        let tail: f64 = curve[5..].iter().sum();
+        assert!(tail >= curve[0], "curve should not decay below cold start");
+    }
+}

@@ -25,12 +25,21 @@
 //! `fastfold infer` is now a one-request special case of the same path.
 
 pub mod backend;
+pub mod cache;
+pub mod daemon;
+pub mod loadgen;
 pub mod planner;
 pub mod scheduler;
 
 pub use backend::{BackendFactory, DapBackend, InferBackend, InferOutput, TrunkBackend};
-pub use planner::{BackendKind, Placement, PlacementPlanner};
-pub use scheduler::{schedule_order, simulate_lanes, SchedEntry, SchedPolicy};
+pub use cache::{CacheStats, ResultCache};
+pub use daemon::{
+    simulate, simulate_with_cache, DaemonConfig, DaemonReport, Disposition, SimOutcome,
+    TraceEvent, TraceServeReport,
+};
+pub use loadgen::LoadgenSpec;
+pub use planner::{BackendKind, MemoPlanner, Placement, PlacementPlanner};
+pub use scheduler::{pick_next, schedule_order, simulate_lanes, SchedEntry, SchedPolicy};
 
 use crate::config::{ModelConfig, RunConfig};
 use crate::error::{Error, Result};
@@ -136,6 +145,25 @@ impl InferRequest {
             }
         }
         Ok(req)
+    }
+
+    /// The request's content identity for the result cache: every field
+    /// except the caller-visible `id`. Two requests with equal keys are
+    /// guaranteed to produce bit-identical outputs (same preset
+    /// artifacts, same modeled shape, same input seed, same kernel
+    /// variant, same pinned backend — and conservatively the priority
+    /// class, which costs duplicate hits nothing in practice since
+    /// duplicates copy the full request).
+    pub fn content_key(&self) -> String {
+        format!(
+            "{}|{}|p{}|n{}|s{}|{}",
+            self.preset,
+            self.model_len.map_or_else(|| "-".into(), |l| l.to_string()),
+            self.priority,
+            u8::from(self.naive),
+            self.seed,
+            self.force.as_ref().map_or_else(|| "-".into(), BackendKind::name),
+        )
     }
 
     /// Parse a JSONL request file (one JSON object per non-blank line).
@@ -255,6 +283,7 @@ impl BatchPlan {
                     modeled_flops: p.modeled_flops,
                     wall_seconds: 0.0,
                     ok: true,
+                    cached: false,
                 },
                 Err(_) => ServeRecord {
                     id: req.id.clone(),
@@ -263,6 +292,7 @@ impl BatchPlan {
                     modeled_flops: 0.0,
                     wall_seconds: 0.0,
                     ok: false,
+                    cached: false,
                 },
             });
         }
@@ -589,6 +619,7 @@ impl<'rt> Engine<'rt> {
                 modeled_flops: o.placement.as_ref().map(|p| p.modeled_flops).unwrap_or(0.0),
                 wall_seconds: o.wall_seconds,
                 ok: o.output.is_ok(),
+                cached: false,
             });
         }
 
@@ -675,6 +706,26 @@ mod tests {
     fn dap_one_is_not_a_forced_backend() {
         let reqs = InferRequest::parse_jsonl(r#"{"dap": 1}"#).unwrap();
         assert_eq!(reqs[0].force, None);
+    }
+
+    #[test]
+    fn content_key_ignores_id_only() {
+        let a = InferRequest::new("a", "tiny");
+        let b = InferRequest::new("b", "tiny");
+        assert_eq!(a.content_key(), b.content_key());
+        let tweaks: [fn(&mut InferRequest); 6] = [
+            |r| r.preset = "small".into(),
+            |r| r.model_len = Some(512),
+            |r| r.priority = 1,
+            |r| r.naive = true,
+            |r| r.seed = 99,
+            |r| r.force = Some(BackendKind::Chunked),
+        ];
+        for tweak in tweaks {
+            let mut t = InferRequest::new("a", "tiny");
+            tweak(&mut t);
+            assert_ne!(a.content_key(), t.content_key(), "{}", t.content_key());
+        }
     }
 
     #[test]

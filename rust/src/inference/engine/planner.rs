@@ -265,6 +265,91 @@ impl PlacementPlanner {
     }
 }
 
+/// A memoized planner verdict: placements are shared via `Arc`;
+/// rejections are stored in a reconstructable form because [`Error`]
+/// is not `Clone` ([`Error::SimOom`] keeps its fields so admission
+/// rejections replay with their exact verdict, anything else replays
+/// as a message-preserving [`Error::Msg`]).
+enum MemoVerdict {
+    Placed(std::sync::Arc<Placement>),
+    SimOom {
+        need_gb: f64,
+        cap_gb: f64,
+    },
+    Rejected(String),
+}
+
+impl MemoVerdict {
+    fn to_result(&self) -> Result<std::sync::Arc<Placement>> {
+        match self {
+            MemoVerdict::Placed(p) => Ok(std::sync::Arc::clone(p)),
+            MemoVerdict::SimOom { need_gb, cap_gb } => {
+                Err(Error::SimOom { need_gb: *need_gb, cap_gb: *cap_gb })
+            }
+            MemoVerdict::Rejected(msg) => Err(Error::msg(msg.clone())),
+        }
+    }
+}
+
+/// Memoizing view over a [`PlacementPlanner`] for the daemon's event
+/// loop: placement depends only on the request's modeled shape
+/// (`preset`, `len`) and pinned backend, so a million-request trace with
+/// a handful of distinct shapes prices each shape once. Rejections are
+/// memoized too — admission control must not get cheaper on repeat
+/// offenders.
+pub struct MemoPlanner<'p> {
+    planner: &'p PlacementPlanner,
+    memo: std::collections::BTreeMap<String, MemoVerdict>,
+    hits: u64,
+    misses: u64,
+}
+
+impl<'p> MemoPlanner<'p> {
+    /// A fresh memo over `planner`.
+    pub fn new(planner: &'p PlacementPlanner) -> Self {
+        MemoPlanner { planner, memo: std::collections::BTreeMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// The fields [`PlacementPlanner::place`] actually reads.
+    fn memo_key(req: &InferRequest) -> String {
+        format!(
+            "{}|{}|{}",
+            req.preset,
+            req.model_len.map_or_else(|| "-".into(), |l| l.to_string()),
+            req.force.as_ref().map_or_else(|| "-".into(), BackendKind::name),
+        )
+    }
+
+    /// Place `req`, consulting the memo first. Cached placements come
+    /// back as clones of one shared `Arc`.
+    pub fn place(&mut self, req: &InferRequest) -> Result<std::sync::Arc<Placement>> {
+        let key = Self::memo_key(req);
+        if let Some(v) = self.memo.get(&key) {
+            self.hits += 1;
+            return v.to_result();
+        }
+        self.misses += 1;
+        let verdict = match self.planner.place(req) {
+            Ok(p) => MemoVerdict::Placed(std::sync::Arc::new(p)),
+            Err(Error::SimOom { need_gb, cap_gb }) => MemoVerdict::SimOom { need_gb, cap_gb },
+            Err(e) => MemoVerdict::Rejected(e.to_string()),
+        };
+        let out = verdict.to_result();
+        self.memo.insert(key, verdict);
+        out
+    }
+
+    /// Memo hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Memo misses (distinct shapes priced) so far.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -383,5 +468,35 @@ mod tests {
         let p = planner();
         let r = InferRequest { model_len: Some(512), ..InferRequest::new("r", "nope") };
         assert!(p.place(&r).is_err());
+    }
+
+    #[test]
+    fn memo_planner_shares_placements_and_replays_verdicts() {
+        let p = planner();
+        let mut memo = MemoPlanner::new(&p);
+        let a = memo.place(&req(2048)).unwrap();
+        // different id/priority/seed, same shape → same shared placement
+        let mut dup = req(2048);
+        dup.id = "other".into();
+        dup.priority = 3;
+        let b = memo.place(&dup).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        assert_eq!((memo.hits(), memo.misses()), (1, 1));
+        assert_eq!(a.backend, p.place(&req(2048)).unwrap().backend);
+
+        // admission rejections replay with their SimOom verdict intact
+        let mut bounded = p.clone();
+        bounded.max_dap = 4;
+        let mut memo = MemoPlanner::new(&bounded);
+        let first = memo.place(&req(4096)).unwrap_err();
+        let again = memo.place(&req(4096)).unwrap_err();
+        match (first, again) {
+            (
+                Error::SimOom { need_gb: n1, cap_gb: c1 },
+                Error::SimOom { need_gb: n2, cap_gb: c2 },
+            ) => assert_eq!((n1, c1), (n2, c2)),
+            other => panic!("expected SimOom twice, got {other:?}"),
+        }
+        assert_eq!(memo.hits(), 1);
     }
 }

@@ -112,6 +112,46 @@ pub fn schedule_order(
     }
 }
 
+/// Incremental form of [`schedule_order`] for the daemon's event loop:
+/// pick the next entry to dispatch from a live `queue` of
+/// `(entry, overtaken_count)` pairs. Returns an index into `queue`, or
+/// `None` when the queue is empty.
+///
+/// The starvation guard applies to *both* policies here (the one-shot
+/// batch FIFO never needs it — it always picks the oldest — but a live
+/// FIFO queue with priority classes can starve a low-priority request,
+/// so the daemon ages it the same way): any entry overtaken by
+/// `max_bypass` or more younger dispatches runs next, oldest first.
+/// Otherwise FIFO picks min `(priority, arrival)` and SJF picks min
+/// `(priority, modeled_latency, arrival)` — exactly the batch keys, so
+/// an all-arrived-at-once daemon replays the batch order bit-for-bit.
+/// The caller owns the bookkeeping: after a dispatch, bump `overtaken`
+/// on every remaining entry with an older `arrival`.
+pub fn pick_next(
+    policy: SchedPolicy,
+    queue: &[(SchedEntry, usize)],
+    max_bypass: usize,
+) -> Option<usize> {
+    if queue.is_empty() {
+        return None;
+    }
+    let starved = (0..queue.len())
+        .filter(|&i| queue[i].1 >= max_bypass)
+        .min_by_key(|&i| queue[i].0.arrival);
+    if let Some(i) = starved {
+        return Some(i);
+    }
+    (0..queue.len()).min_by(|&a, &b| {
+        let (ea, eb) = (&queue[a].0, &queue[b].0);
+        let by_class = ea.priority.cmp(&eb.priority);
+        let by_len = match policy {
+            SchedPolicy::Fifo => std::cmp::Ordering::Equal,
+            SchedPolicy::Sjf => ea.modeled_latency.total_cmp(&eb.modeled_latency),
+        };
+        by_class.then(by_len).then(ea.arrival.cmp(&eb.arrival))
+    })
+}
+
 /// Greedy lane assignment of latencies in schedule order: each job starts
 /// on the earliest-free of `lanes` lanes (ties → lowest lane index).
 /// Returns the modeled start time per scheduled slot and the makespan —
@@ -205,6 +245,69 @@ mod tests {
         assert!((serial - 6.0).abs() < 1e-12);
         let (s, m) = simulate_lanes(&[], 4);
         assert!(s.is_empty() && m == 0.0);
+    }
+
+    /// Drain a queue through `pick_next` with the documented overtaken
+    /// bookkeeping and return the dispatch order as entry indices.
+    fn drain_incremental(
+        policy: SchedPolicy,
+        es: &[SchedEntry],
+        max_bypass: usize,
+    ) -> Vec<usize> {
+        let mut queue: Vec<(usize, SchedEntry, usize)> =
+            es.iter().enumerate().map(|(i, &e)| (i, e, 0)).collect();
+        let mut order = Vec::with_capacity(es.len());
+        while !queue.is_empty() {
+            let view: Vec<(SchedEntry, usize)> =
+                queue.iter().map(|&(_, e, o)| (e, o)).collect();
+            let k = pick_next(policy, &view, max_bypass).expect("non-empty");
+            let (idx, picked, _) = queue.remove(k);
+            for item in &mut queue {
+                if item.1.arrival < picked.arrival {
+                    item.2 += 1;
+                }
+            }
+            order.push(idx);
+        }
+        order
+    }
+
+    #[test]
+    fn pick_next_matches_batch_sjf() {
+        let mut es = entries(&[100.0, 1.0, 3.0, 1.0, 8.0, 2.0, 50.0, 4.0]);
+        es[4].priority = 2;
+        es[1].priority = 1;
+        for max_bypass in [0, 1, 3, 100] {
+            assert_eq!(
+                drain_incremental(SchedPolicy::Sjf, &es, max_bypass),
+                schedule_order(SchedPolicy::Sjf, &es, max_bypass),
+                "max_bypass={max_bypass}"
+            );
+        }
+    }
+
+    #[test]
+    fn pick_next_matches_batch_fifo_uniform_priority() {
+        // with one priority class FIFO always dispatches the oldest, so
+        // the guard never fires and incremental == batch at any bound
+        let es = entries(&[5.0, 1.0, 3.0, 9.0, 2.0]);
+        for max_bypass in [1, 4, 100] {
+            assert_eq!(
+                drain_incremental(SchedPolicy::Fifo, &es, max_bypass),
+                schedule_order(SchedPolicy::Fifo, &es, max_bypass),
+            );
+        }
+    }
+
+    #[test]
+    fn pick_next_ages_starved_fifo_priorities() {
+        // live FIFO: priority-1 oldest entry is bypassed by younger
+        // priority-0 arrivals until the guard promotes it
+        let mut es = entries(&[5.0, 1.0, 1.0, 1.0, 1.0]);
+        es[0].priority = 1;
+        let order = drain_incremental(SchedPolicy::Fifo, &es, 2);
+        assert_eq!(order.iter().position(|&i| i == 0), Some(2));
+        assert_eq!(pick_next(SchedPolicy::Fifo, &[], 2), None);
     }
 
     #[test]

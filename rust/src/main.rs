@@ -9,6 +9,12 @@
 //!                    [--naive] [--gpu a100_40g] [--no-guard] [--config f.toml]
 //! fastfold serve     --requests reqs.jsonl [--policy fifo|sjf] [--threads N]
 //!                    [--gpu a100_40g] [--max-dap N] [--dry-run] [--config f.toml]
+//! fastfold daemon    --trace trace.jsonl [--modeled] [--lanes N] [--queue-cap N]
+//!                    [--cache-gb F] [--policy fifo|sjf] [--threads N]
+//!                    [--bench-out FILE] [--config f.toml]
+//! fastfold loadgen   [--requests N] [--seed S] [--quick] [--lanes N]
+//!                    [--out trace.jsonl] [--no-replay] [--queue-cap N]
+//!                    [--cache-gb F] [--bench-out BENCH_serve.json] [--json]
 //! fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu a100_40g]
 //!                    [--headroom F] [--json] [--config f.toml]
 //! fastfold bench     [--json] [--out BENCH_host.json] [--quick]
@@ -24,7 +30,8 @@ use fastfold::config::{ModelConfig, RunConfig};
 use fastfold::dap::DapCoordinator;
 use fastfold::error::Result;
 use fastfold::inference::engine::{
-    plan_batch, BackendKind, Engine, InferRequest, PlacementPlanner, SchedPolicy,
+    daemon, loadgen, plan_batch, BackendKind, DaemonConfig, Engine, InferRequest, LoadgenSpec,
+    PlacementPlanner, SchedPolicy, TraceEvent,
 };
 use fastfold::inference::{autochunk, chunking};
 use fastfold::metrics::{fmt_bytes, fmt_secs, Table};
@@ -73,6 +80,8 @@ fn run(args: &[String]) -> Result<()> {
         "scale" => cmd_scale(&flags),
         "infer" => cmd_infer(&flags),
         "serve" => cmd_serve(&flags),
+        "daemon" => cmd_daemon(&flags),
+        "loadgen" => cmd_loadgen(&flags),
         "autochunk" => cmd_autochunk(&flags),
         "bench" => cmd_bench(&flags),
         "report" => cmd_report(&pos, &flags),
@@ -88,6 +97,12 @@ fn run(args: &[String]) -> Result<()> {
                  [--gpu G] [--no-guard] [--config f.toml]\n  \
                  fastfold serve  --requests reqs.jsonl [--policy fifo|sjf] [--threads N] \
                  [--gpu G] [--max-dap N] [--dry-run] [--config f.toml]\n  \
+                 fastfold daemon --trace trace.jsonl [--modeled] [--lanes N] \
+                 [--queue-cap N] [--cache-gb F]\n                  [--policy fifo|sjf] \
+                 [--threads N] [--bench-out FILE] [--config f.toml]\n  \
+                 fastfold loadgen [--requests N] [--seed S] [--quick] [--lanes N] \
+                 [--out trace.jsonl]\n                  [--no-replay] [--queue-cap N] \
+                 [--cache-gb F] [--bench-out BENCH_serve.json] [--json]\n  \
                  fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu G] \
                  [--headroom F] [--json] [--config f.toml]\n  \
                  fastfold bench  [--json] [--out BENCH_host.json] [--quick]\n  \
@@ -526,6 +541,170 @@ fn serve_dry_run(run_cfg: &RunConfig, requests: &[InferRequest]) -> Result<()> {
         stats.aggregate_pflops(plan.modeled_makespan),
         stats.backend_mix(),
     );
+    Ok(())
+}
+
+// ------------------------------------------------------ daemon / loadgen
+
+/// Shared daemon-knob parsing for `daemon`/`loadgen`: `--queue-cap`
+/// and `--cache-gb` override the `[serve]` config before it is folded
+/// into a [`DaemonConfig`].
+fn apply_daemon_flags(run_cfg: &mut RunConfig, flags: &BTreeMap<String, String>) -> Result<()> {
+    run_cfg.serve.queue_cap = num_flag(flags, "queue-cap", run_cfg.serve.queue_cap)?;
+    run_cfg.serve.cache_gb = num_flag(flags, "cache-gb", run_cfg.serve.cache_gb)?;
+    if !(0.0..=1024.0).contains(&run_cfg.serve.cache_gb) {
+        return Err(fastfold::Error::Config(format!(
+            "--cache-gb: must be in [0, 1024], got {}",
+            run_cfg.serve.cache_gb
+        )));
+    }
+    Ok(())
+}
+
+/// `fastfold daemon --trace <jsonl>` — replay an arrival-timed trace
+/// through the continuous-batching daemon: admission, backpressure
+/// shedding, deadline expiry, cancellation, starvation-guarded
+/// scheduling, and the content-hash result cache all run on the virtual
+/// clock. `--modeled` simulates without artifacts; otherwise completed
+/// non-cached requests execute on real backends. `--lanes` sets the
+/// modeled lane count (default 4, independent of `--threads` so the
+/// ledger is thread-invariant); `--bench-out` writes the serve ledger.
+fn cmd_daemon(flags: &BTreeMap<String, String>) -> Result<()> {
+    let mut run_cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_toml_file(path)?,
+        None => RunConfig::default(),
+    };
+    apply_engine_flags(&mut run_cfg, flags)?;
+    apply_daemon_flags(&mut run_cfg, flags)?;
+    let path = flags.get("trace").ok_or_else(|| {
+        fastfold::Error::Config("daemon: --trace <file.jsonl> is required".into())
+    })?;
+    let src = std::fs::read_to_string(path).map_err(|e| {
+        fastfold::Error::Config(format!("daemon: cannot read trace file '{path}': {e}"))
+    })?;
+    let trace = TraceEvent::parse_jsonl(&src)?;
+    if trace.is_empty() {
+        return Err(fastfold::Error::Config(format!("daemon: no events in '{path}'")));
+    }
+    let lanes: usize = num_flag(flags, "lanes", 4)?;
+    let dcfg = DaemonConfig::from_run_config(&run_cfg, lanes);
+
+    if flags.contains_key("modeled") {
+        let planner = PlacementPlanner::from_run_config(&run_cfg)?;
+        println!(
+            "[fastfold] daemon (modeled): {} events (policy={}, lanes={}, queue_cap={}, \
+             cache={})",
+            trace.len(),
+            dcfg.policy.name(),
+            dcfg.lanes,
+            dcfg.queue_cap,
+            fmt_bytes(dcfg.cache_bytes),
+        );
+        let report = daemon::simulate(&planner, &dcfg, &trace);
+        println!("[fastfold] {}", report.summary());
+        write_serve_ledger(flags, &dcfg, &report, None)?;
+        return Ok(());
+    }
+
+    let rt = Runtime::new(&artifacts_dir(flags))?;
+    let engine = Engine::new(&rt, &run_cfg)?;
+    println!(
+        "[fastfold] daemon: {} events (policy={}, lanes={}, threads={}, queue_cap={}, \
+         cache={})",
+        trace.len(),
+        dcfg.policy.name(),
+        dcfg.lanes,
+        engine.threads,
+        dcfg.queue_cap,
+        fmt_bytes(dcfg.cache_bytes),
+    );
+    let report = engine.serve_trace(&dcfg, &trace)?;
+    for (i, out) in report.outputs.iter().enumerate() {
+        if let Some(Err(e)) = out {
+            println!("  {}: {e}", report.sim.outcomes[i].id);
+        }
+    }
+    println!("[fastfold] {}", report.sim.summary());
+    println!(
+        "[fastfold] executed in {} on {} worker threads",
+        fmt_secs(report.wall_seconds),
+        report.threads
+    );
+    write_serve_ledger(flags, &dcfg, &report.sim, None)?;
+    Ok(())
+}
+
+/// `fastfold loadgen` — synthesize a seeded request trace (1M requests
+/// by default, 100k with `--quick`), optionally dump it (`--out`), and
+/// replay it through the modeled daemon into `BENCH_serve.json`. The
+/// whole path is pure virtual-clock arithmetic: the same seed yields a
+/// byte-identical trace and ledger at any `--threads` budget.
+fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
+    let mut run_cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_toml_file(path)?,
+        None => RunConfig::default(),
+    };
+    apply_engine_flags(&mut run_cfg, flags)?;
+    apply_daemon_flags(&mut run_cfg, flags)?;
+    let seed: u64 = num_flag(flags, "seed", 17)?;
+    let mut spec = if flags.contains_key("quick") {
+        LoadgenSpec::quick(seed)
+    } else {
+        LoadgenSpec::new(num_flag(flags, "requests", 1_000_000)?, seed)
+    };
+    spec.lanes = num_flag(flags, "lanes", spec.lanes)?;
+    // the replay packs onto the spec's modeled lanes, NOT --threads:
+    // that keeps the ledger a pure function of (config, spec)
+    let dcfg = DaemonConfig::from_run_config(&run_cfg, spec.lanes);
+    let planner = PlacementPlanner::from_run_config(&run_cfg)?;
+
+    println!(
+        "[fastfold] loadgen: synthesizing {} requests (seed {}, lanes {}, policy {}, \
+         queue_cap {}, cache {})",
+        spec.requests,
+        spec.seed,
+        spec.lanes,
+        dcfg.policy.name(),
+        dcfg.queue_cap,
+        fmt_bytes(dcfg.cache_bytes),
+    );
+    let trace = loadgen::synthesize(&planner, &spec);
+    if let Some(out) = flags.get("out") {
+        std::fs::write(out, TraceEvent::to_jsonl(&trace))?;
+        eprintln!("[fastfold] wrote {out} ({} events)", trace.len());
+    }
+    if flags.contains_key("no-replay") {
+        return Ok(());
+    }
+    let report = daemon::simulate(&planner, &dcfg, &trace);
+    println!("[fastfold] {}", report.summary());
+    write_serve_ledger(flags, &dcfg, &report, Some(&spec))?;
+    Ok(())
+}
+
+/// Write the serve ledger (`--bench-out`, default `BENCH_serve.json`
+/// for loadgen; opt-in for daemon) and echo it with `--json`.
+fn write_serve_ledger(
+    flags: &BTreeMap<String, String>,
+    dcfg: &DaemonConfig,
+    report: &daemon::DaemonReport,
+    spec: Option<&LoadgenSpec>,
+) -> Result<()> {
+    let out = match (flags.get("bench-out"), spec) {
+        (Some(path), _) => path.clone(),
+        // loadgen always writes its ledger; daemon only on request
+        (None, Some(_)) => "BENCH_serve.json".to_string(),
+        (None, None) => return Ok(()),
+    };
+    let doc = match spec {
+        Some(spec) => loadgen::bench_doc(spec, dcfg, report),
+        None => loadgen::report_doc(dcfg, report),
+    };
+    std::fs::write(&out, format!("{doc}\n"))?;
+    if flags.contains_key("json") {
+        println!("{doc}");
+    }
+    eprintln!("[fastfold] wrote {out}");
     Ok(())
 }
 

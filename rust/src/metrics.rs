@@ -46,6 +46,20 @@ pub fn median(mut xs: Vec<f64>) -> f64 {
     }
 }
 
+/// Nearest-rank percentile of a sample (consumes and sorts): `p` in
+/// [0, 100]. `percentile(xs, 50)` is the lower-median convention the
+/// serve-latency ledger uses (p50/p90/p99 of modeled sojourn times).
+pub fn percentile(mut xs: Vec<f64>, p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = p.clamp(0.0, 100.0);
+    // nearest-rank: ceil(p/100 * n), 1-indexed
+    let rank = ((p / 100.0) * xs.len() as f64).ceil() as usize;
+    xs[rank.max(1) - 1]
+}
+
 /// Fixed-width table printer (console reproduction of the paper's tables).
 pub struct Table {
     pub headers: Vec<String>,
@@ -113,6 +127,10 @@ pub struct ServeRecord {
     pub wall_seconds: f64,
     /// Whether the request produced output.
     pub ok: bool,
+    /// Whether the output came from the result cache instead of a
+    /// backend execution (cached results do no compute, so they are
+    /// excluded from the aggregate-FLOP numerator).
+    pub cached: bool,
 }
 
 /// Aggregate serving metrics over a drained request batch.
@@ -133,10 +151,20 @@ impl ServeStats {
         self.records.iter().filter(|r| r.ok).count()
     }
 
-    /// Total modeled FLOPs across admitted requests (rejected records
-    /// carry 0).
+    /// Total modeled FLOPs of *executed* requests (rejected records
+    /// carry 0; cache hits served stored bits, so their modeled FLOPs
+    /// are excluded — counting them would overstate throughput).
     pub fn total_modeled_flops(&self) -> f64 {
-        self.records.iter().map(|r| r.modeled_flops).sum()
+        self.records
+            .iter()
+            .filter(|r| !r.cached)
+            .map(|r| r.modeled_flops)
+            .sum()
+    }
+
+    /// Requests answered from the result cache.
+    pub fn cache_hits(&self) -> usize {
+        self.records.iter().filter(|r| r.cached).count()
     }
 
     /// Aggregate modeled throughput: total modeled FLOPs over a modeled
@@ -257,6 +285,7 @@ mod tests {
             modeled_flops: flops,
             wall_seconds: 0.5,
             ok,
+            cached: false,
         };
         s.push(rec("a", "single", 2e15, true));
         s.push(rec("b", "dap4", 6e15, true));
@@ -270,6 +299,43 @@ mod tests {
         let mix = s.backend_mix();
         assert!(mix.contains("single x1") && mix.contains("dap4 x1"), "{mix}");
         assert_eq!(ServeStats::default().backend_mix(), "none");
+    }
+
+    #[test]
+    fn cache_hits_excluded_from_flop_numerator() {
+        // regression: a cache hit carries the modeled FLOPs of the work
+        // it *avoided* — counting it would inflate aggregate PFLOP/s
+        let mut s = ServeStats::default();
+        let rec = |id: &str, cached: bool| ServeRecord {
+            id: id.into(),
+            backend: "single".into(),
+            modeled_latency: 1.0,
+            modeled_flops: 4e15,
+            wall_seconds: 0.0,
+            ok: true,
+            cached,
+        };
+        s.push(rec("miss", false));
+        s.push(rec("hit", true));
+        assert_eq!(s.completed(), 2, "a hit still completes");
+        assert_eq!(s.cache_hits(), 1);
+        // only the executed request's 4e15 FLOPs count
+        assert!((s.total_modeled_flops() - 4e15).abs() < 1.0);
+        assert!((s.aggregate_pflops(2.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(xs.clone(), 50.0), 50.0);
+        assert_eq!(percentile(xs.clone(), 99.0), 99.0);
+        assert_eq!(percentile(xs.clone(), 100.0), 100.0);
+        assert_eq!(percentile(xs.clone(), 0.0), 1.0);
+        assert_eq!(percentile(vec![7.0], 99.0), 7.0);
+        assert!(percentile(vec![], 50.0).is_nan());
+        // p50 <= p99 on any sample
+        let sample = vec![3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        assert!(percentile(sample.clone(), 50.0) <= percentile(sample, 99.0));
     }
 
     #[test]

@@ -1,0 +1,512 @@
+//! Serve-daemon suite: lifecycle, cache, and determinism properties.
+//!
+//! The daemon's contract is that everything interesting — admission,
+//! backpressure shedding, deadline expiry, cancellation, scheduling,
+//! cache hits — is decided by a pure single-threaded simulation on the
+//! virtual clock, and the threaded executor merely replays those
+//! decisions. These tests pin the contract down:
+//!
+//! - outputs are bit-for-bit identical to the single-threaded run at
+//!   any thread budget and any trace-file arrival order;
+//! - no request is starved past `max_bypass`, at any `max_bypass`;
+//! - cancelled, expired, shed, and rejected requests never construct a
+//!   backend (counted at the factory seam);
+//! - a cache hit is bit-identical to recomputing, distinct requests
+//!   with equal shapes never collide, the byte budget holds exactly
+//!   under load, and a warm replay hits more than a cold one;
+//! - `fastfold loadgen` writes a byte-identical trace and ledger across
+//!   runs and thread counts, and the 100k quick trace replays to a
+//!   complete ledger in tier-1.
+
+use fastfold::config::{ParallelConfig, RunConfig, ServeConfig};
+use fastfold::inference::engine::daemon::{
+    self, DaemonConfig, Disposition, TraceEvent, CACHE_HIT_LATENCY,
+};
+use fastfold::inference::engine::loadgen::{self, LoadgenSpec};
+use fastfold::inference::engine::{
+    plan_batch, BackendFactory, Engine, InferBackend, InferOutput, InferRequest, Placement,
+    PlacementPlanner, ResultCache, SchedPolicy,
+};
+use fastfold::metrics::percentile;
+use fastfold::runtime::Runtime;
+use fastfold::{HostTensor, IntTensor, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+// ---------------------------------------------------------------- helpers
+
+/// A Runtime over a minimal (artifact-free) manifest: enough for the
+/// daemon's planning/simulation machinery, which never executes HLO.
+fn stub_runtime(tag: &str) -> (Runtime, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(format!(
+        "fastfold_daemon_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"artifacts":{},"params":{},"dap_schedule":[],"configs":{}}"#,
+    )
+    .unwrap();
+    let rt = Runtime::new(dir.to_str().unwrap()).unwrap();
+    (rt, dir)
+}
+
+/// Deterministic pure-host backend (same shape as the serve_engine
+/// fake): output derives only from request identity, chosen backend,
+/// and the token stream — never from thread timing.
+struct FakeBackend {
+    name: String,
+    seed: u64,
+    priority: u32,
+}
+
+impl InferBackend for FakeBackend {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn infer(&self, tokens: &IntTensor) -> Result<InferOutput> {
+        let a = self.seed as f32;
+        let b: f32 = tokens.data.iter().map(|&t| t as f32).sum();
+        let c = self.name.bytes().map(|x| x as u32).sum::<u32>() as f32;
+        let m = HostTensor::new(vec![2, 2], vec![a, b, c, self.priority as f32])?;
+        let z = HostTensor::new(vec![2], vec![a + b, c * 0.5])?;
+        Ok(InferOutput {
+            msa_logits: m,
+            dist_logits: z,
+            note: Some(format!("fake:{}", self.name)),
+        })
+    }
+}
+
+/// [`FakeBackend`] factory that counts constructions: the proof that
+/// cancelled/expired/shed/rejected/cached requests never reach a
+/// backend is `made() == |Completed non-cached|`.
+struct CountingFactory {
+    made: AtomicUsize,
+}
+
+impl CountingFactory {
+    fn new() -> Self {
+        CountingFactory { made: AtomicUsize::new(0) }
+    }
+
+    fn made(&self) -> usize {
+        self.made.load(Ordering::SeqCst)
+    }
+}
+
+impl BackendFactory for CountingFactory {
+    fn make<'a>(
+        &'a self,
+        req: &InferRequest,
+        placement: &Placement,
+        _rank_threads: usize,
+    ) -> Result<Box<dyn InferBackend + 'a>> {
+        self.made.fetch_add(1, Ordering::SeqCst);
+        Ok(Box::new(FakeBackend {
+            name: placement.backend.name(),
+            seed: req.seed,
+            priority: req.priority,
+        }))
+    }
+}
+
+fn engine_with(rt: &Runtime, policy: SchedPolicy, threads: usize) -> Engine<'_> {
+    let cfg = RunConfig {
+        serve: ServeConfig { policy, ..Default::default() },
+        parallel: ParallelConfig { threads, ..Default::default() },
+        ..Default::default()
+    };
+    Engine::new(rt, &cfg).expect("engine")
+}
+
+fn default_planner() -> PlacementPlanner {
+    PlacementPlanner::from_run_config(&RunConfig::default()).expect("default planner")
+}
+
+fn dcfg(policy: SchedPolicy, max_bypass: usize, lanes: usize, cache_bytes: usize) -> DaemonConfig {
+    DaemonConfig {
+        policy,
+        max_bypass,
+        lanes,
+        queue_cap: 0,
+        cache_bytes,
+        cache_hit_latency: CACHE_HIT_LATENCY,
+    }
+}
+
+/// A tiny-preset request with a chosen seed (the fake backend bakes the
+/// seed into its output bits, so equal seeds ⇒ equal content ⇒ cache
+/// hit, distinct seeds ⇒ distinct bits).
+fn req(id: &str, seed: u64) -> InferRequest {
+    let mut r = InferRequest::new(id, "tiny");
+    r.seed = seed;
+    r
+}
+
+fn small_trace(requests: usize, seed: u64) -> Vec<TraceEvent> {
+    let mut spec = LoadgenSpec::new(requests, seed);
+    spec.window = 64;
+    loadgen::synthesize(&default_planner(), &spec)
+}
+
+// ------------------------------------------------------------ simulation
+
+#[test]
+fn modeled_replay_is_arrival_order_invariant() {
+    // a trace file shuffled on disk must replay identically: the
+    // simulation re-sorts by arrival before anything else looks at it
+    let planner = default_planner();
+    let cfg = dcfg(SchedPolicy::Sjf, 4, 4, 1 << 40);
+    let mut trace = small_trace(300, 5);
+    // drop µs-rounded arrival ties: with ties the *file order* is the
+    // tiebreak (stable sort), so a reversed file legitimately differs
+    trace.dedup_by(|next, prev| next.arrival == prev.arrival);
+    let mut reversed = trace.clone();
+    reversed.reverse();
+
+    let a = daemon::simulate(&planner, &cfg, &trace);
+    let b = daemon::simulate(&planner, &cfg, &reversed);
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.cache.hits, b.cache.hits);
+    let dispatched_ids = |r: &daemon::DaemonReport, t: &[TraceEvent]| -> Vec<String> {
+        r.dispatch_order.iter().map(|&i| t[i].req.id.clone()).collect()
+    };
+    assert_eq!(dispatched_ids(&a, &trace), dispatched_ids(&b, &reversed));
+    // per-id lifecycle identical
+    let by_id = |r: &daemon::DaemonReport| -> std::collections::BTreeMap<String, String> {
+        r.outcomes
+            .iter()
+            .map(|o| (o.id.clone(), format!("{:?}@{:?}->{:?}", o.disposition, o.dispatch, o.finish)))
+            .collect()
+    };
+    assert_eq!(by_id(&a), by_id(&b));
+}
+
+#[test]
+fn daemon_dispatch_matches_batch_plan_at_zero_arrivals() {
+    // with everything arriving at t=0, uniform priority, and the cache
+    // off, the continuous daemon must degenerate to the one-shot batch
+    // engine: same dispatch order under both policies at any bypass
+    let planner = default_planner();
+    let mut reqs = vec![
+        req("preset-a", 3),
+        req("preset-b", 5),
+        req("long-2048", 7),
+        req("dist-4096", 11),
+        req("dist-3072", 13),
+        req("too-big-8192", 17),
+    ];
+    reqs[2].model_len = Some(2048);
+    reqs[3].model_len = Some(4096);
+    reqs[4].model_len = Some(3072);
+    reqs[5].model_len = Some(8192);
+    let trace: Vec<TraceEvent> =
+        reqs.iter().map(|r| TraceEvent::at(0.0, r.clone())).collect();
+    for policy in [SchedPolicy::Fifo, SchedPolicy::Sjf] {
+        for max_bypass in [0usize, 2, 100] {
+            let plan = plan_batch(&planner, policy, max_bypass, 2, &reqs);
+            let cfg = dcfg(policy, max_bypass, 2, 0);
+            let report = daemon::simulate(&planner, &cfg, &trace);
+            assert_eq!(
+                report.dispatch_order, plan.order,
+                "policy={} max_bypass={max_bypass}",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn starvation_bound_holds_at_any_max_bypass() {
+    // satellite property: no request — completed, expired, or cancelled
+    // after admission — is overtaken by more than max_bypass younger
+    // dispatches, across a priority-mixed SJF workload
+    let planner = default_planner();
+    let trace = small_trace(400, 5);
+    for max_bypass in [0usize, 1, 3] {
+        let cfg = dcfg(SchedPolicy::Sjf, max_bypass, 4, 1 << 40);
+        let report = daemon::simulate(&planner, &cfg, &trace);
+        for o in &report.outcomes {
+            assert!(
+                o.bypassed <= max_bypass,
+                "'{}' bypassed {} times at max_bypass={max_bypass}",
+                o.id,
+                o.bypassed
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------- lifecycle
+
+/// The hand-built lifecycle trace (one lane, queue cap 3, FIFO):
+/// e0 executes, e1 duplicates e0's content (cache hit), e2 is cancelled
+/// before arrival takes effect, e3 expires queued behind e0, e4 is shed
+/// by backpressure.
+fn lifecycle_trace() -> Vec<TraceEvent> {
+    let mut e2 = TraceEvent::at(0.0, req("pre-cancelled", 5));
+    e2.cancel_at = Some(0.0);
+    let mut e3 = TraceEvent::at(0.0, req("expires", 7));
+    e3.deadline = Some(1e-9);
+    vec![
+        TraceEvent::at(0.0, req("producer", 3)),
+        TraceEvent::at(0.0, req("dup", 3)),
+        e2,
+        e3,
+        TraceEvent::at(0.0, req("shed-me", 11)),
+    ]
+}
+
+fn lifecycle_cfg(cache_bytes: usize) -> DaemonConfig {
+    DaemonConfig {
+        policy: SchedPolicy::Fifo,
+        max_bypass: 4,
+        lanes: 1,
+        queue_cap: 3,
+        cache_bytes,
+        cache_hit_latency: CACHE_HIT_LATENCY,
+    }
+}
+
+#[test]
+fn terminal_requests_never_reach_a_backend() {
+    let (rt, dir) = stub_runtime("lifecycle");
+    let engine = engine_with(&rt, SchedPolicy::Fifo, 2);
+    let factory = CountingFactory::new();
+    let report = engine
+        .serve_trace_with(&lifecycle_cfg(1 << 40), &lifecycle_trace(), &factory)
+        .unwrap();
+
+    let disp = |i: usize| &report.sim.outcomes[i].disposition;
+    assert_eq!(*disp(0), Disposition::Completed { cached: false, deadline_missed: false });
+    assert_eq!(*disp(1), Disposition::Completed { cached: true, deadline_missed: false });
+    assert_eq!(*disp(2), Disposition::Cancelled);
+    assert_eq!(*disp(3), Disposition::Expired);
+    assert_eq!(*disp(4), Disposition::Shed);
+
+    // exactly one backend was ever constructed: the producer
+    assert_eq!(factory.made(), 1);
+    assert!(report.outputs[2].is_none());
+    assert!(report.outputs[3].is_none());
+    assert!(report.outputs[4].is_none());
+
+    // the hit occupies its lane for the modeled hit latency, not the
+    // request's service time
+    let produced = report.sim.outcomes[0].finish.unwrap();
+    let hit = report.sim.outcomes[1].finish.unwrap();
+    assert!((hit - (produced + CACHE_HIT_LATENCY)).abs() < 1e-12);
+
+    // the only deadline-carrying request expired -> miss rate 1.0
+    assert!((report.sim.deadline_miss_rate() - 1.0).abs() < 1e-12);
+
+    // ServeStats FLOP exclusion at the daemon level: the aggregate
+    // numerator counts the producer once, never the cache hit
+    let producer_flops = report.sim.outcomes[0].placement.as_ref().unwrap().modeled_flops;
+    assert!((report.stats.total_modeled_flops() - producer_flops).abs() < 1e-3);
+    assert_eq!(report.stats.cache_hits(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ----------------------------------------------------------------- cache
+
+#[test]
+fn cache_hit_is_bit_identical_to_recompute() {
+    let (rt, dir) = stub_runtime("hit_bits");
+    let engine = engine_with(&rt, SchedPolicy::Fifo, 2);
+    let trace = lifecycle_trace();
+
+    let cached_factory = CountingFactory::new();
+    let cached = engine
+        .serve_trace_with(&lifecycle_cfg(1 << 40), &trace, &cached_factory)
+        .unwrap();
+    let uncached_factory = CountingFactory::new();
+    let uncached = engine
+        .serve_trace_with(&lifecycle_cfg(0), &trace, &uncached_factory)
+        .unwrap();
+    assert_eq!(cached_factory.made(), 1);
+    assert_eq!(uncached_factory.made(), 2, "cache off -> the dup recomputes");
+
+    let bits = |r: &daemon::TraceServeReport, i: usize| -> (Vec<f32>, Vec<f32>) {
+        let (m, z) = r.outputs[i].as_ref().unwrap().as_ref().unwrap();
+        (m.data().to_vec(), z.data().to_vec())
+    };
+    // the served hit is bit-for-bit the recomputed answer
+    assert_eq!(bits(&cached, 1), bits(&uncached, 1));
+    // and bit-for-bit its producer's answer
+    assert_eq!(bits(&cached, 1), bits(&cached, 0));
+    assert!(cached.notes[1].as_ref().unwrap().contains("cache hit"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn equal_shapes_distinct_content_never_collide() {
+    // two requests with identical modeled shape but different content
+    // (seed) must both execute and produce different bits
+    let (rt, dir) = stub_runtime("no_collide");
+    let engine = engine_with(&rt, SchedPolicy::Fifo, 1);
+    let trace =
+        vec![TraceEvent::at(0.0, req("a", 3)), TraceEvent::at(0.0, req("b", 4))];
+    let factory = CountingFactory::new();
+    let report = engine
+        .serve_trace_with(&lifecycle_cfg(1 << 40), &trace, &factory)
+        .unwrap();
+    assert_eq!(factory.made(), 2);
+    assert_eq!(report.sim.cache_hits(), 0);
+    let m = |i: usize| -> Vec<f32> {
+        report.outputs[i].as_ref().unwrap().as_ref().unwrap().0.data().to_vec()
+    };
+    assert_ne!(m(0), m(1));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cache_respects_byte_budget_under_load() {
+    // 64 MB is a few mid-size results: the replay must evict, and the
+    // resident set must never exceed the budget
+    let planner = default_planner();
+    let budget = 64_000_000usize;
+    let cfg = dcfg(SchedPolicy::Sjf, 4, 4, budget);
+    let report = daemon::simulate(&planner, &cfg, &small_trace(400, 5));
+    assert!(report.cache.insertions > 0);
+    assert!(report.cache.evictions > 0, "budget should force eviction");
+    assert!(
+        report.cache.peak_bytes <= budget,
+        "peak {} over budget {budget}",
+        report.cache.peak_bytes
+    );
+    assert!(report.cache.used_bytes <= report.cache.peak_bytes);
+}
+
+#[test]
+fn warm_replay_hits_more_than_cold() {
+    // satellite: cold-vs-warm replay reports the expected hit curve —
+    // the warm pass reuses the cold cache and must hit strictly more
+    let planner = default_planner();
+    let cfg = dcfg(SchedPolicy::Sjf, 4, 4, 1 << 40);
+    let trace = small_trace(400, 5);
+    let mut cache = ResultCache::new(cfg.cache_bytes);
+    let cold = daemon::simulate_with_cache(&planner, &cfg, &trace, &mut cache);
+    let warm_trace = daemon::shift_trace(&trace, cold.makespan);
+    let warm = daemon::simulate_with_cache(&planner, &cfg, &warm_trace, &mut cache);
+
+    assert!(cold.cache_hits() > 0, "dup_frac must produce cold hits");
+    assert!(warm.cache_hits() > cold.cache_hits());
+    let rate = |r: &daemon::DaemonReport| r.cache_hits() as f64 / r.completed() as f64;
+    assert!(rate(&warm) > rate(&cold));
+    // the warm curve starts hot; the cold curve has to climb
+    let (cold_curve, warm_curve) = (loadgen::hit_curve(&cold), loadgen::hit_curve(&warm));
+    assert!(warm_curve[0] >= cold_curve[0]);
+    assert!(warm_curve[0] > 0.5, "warm first decile should be mostly hits");
+}
+
+// ----------------------------------------------------------- determinism
+
+#[test]
+fn executed_trace_is_thread_invariant() {
+    // tentpole acceptance: bit-for-bit identical outputs at any thread
+    // budget over a generated trace with every disposition in play
+    let (rt, dir) = stub_runtime("threads");
+    let trace = small_trace(120, 11);
+    let cfg = dcfg(SchedPolicy::Sjf, 4, 4, 1 << 40);
+    let reference = engine_with(&rt, SchedPolicy::Sjf, 1)
+        .serve_trace_with(&cfg, &trace, &CountingFactory::new())
+        .unwrap();
+    for threads in [2usize, 5] {
+        let run = engine_with(&rt, SchedPolicy::Sjf, threads)
+            .serve_trace_with(&cfg, &trace, &CountingFactory::new())
+            .unwrap();
+        assert_eq!(run.sim.dispatch_order, reference.sim.dispatch_order);
+        for (a, b) in run.sim.outcomes.iter().zip(reference.sim.outcomes.iter()) {
+            assert_eq!(a.disposition, b.disposition, "'{}' @ threads={threads}", a.id);
+        }
+        for (i, (a, b)) in run.outputs.iter().zip(reference.outputs.iter()).enumerate() {
+            match (a, b) {
+                (None, None) => {}
+                (Some(Ok((am, az))), Some(Ok((bm, bz)))) => {
+                    assert_eq!(am.data(), bm.data(), "event {i} @ threads={threads}");
+                    assert_eq!(az.data(), bz.data(), "event {i} @ threads={threads}");
+                }
+                (Some(Err(ae)), Some(Err(be))) => {
+                    assert_eq!(ae.to_string(), be.to_string());
+                }
+                _ => panic!("disposition of event {i} changed with threads"),
+            }
+        }
+        assert_eq!(run.notes, reference.notes);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn loadgen_cli_is_byte_deterministic_across_threads() {
+    // satellite acceptance: same seed => byte-identical trace file and
+    // byte-identical BENCH_serve.json across runs and thread counts
+    let dir = std::env::temp_dir().join(format!(
+        "fastfold_loadgen_cli_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |tag: &str, threads: &str| -> (Vec<u8>, Vec<u8>) {
+        let trace = dir.join(format!("trace_{tag}.jsonl"));
+        let bench = dir.join(format!("bench_{tag}.json"));
+        let status = std::process::Command::new(env!("CARGO_BIN_EXE_fastfold"))
+            .args([
+                "loadgen",
+                "--requests",
+                "1500",
+                "--seed",
+                "9",
+                "--threads",
+                threads,
+                "--out",
+                trace.to_str().unwrap(),
+                "--bench-out",
+                bench.to_str().unwrap(),
+            ])
+            .status()
+            .expect("spawn fastfold loadgen");
+        assert!(status.success(), "loadgen ({tag}) failed");
+        (std::fs::read(&trace).unwrap(), std::fs::read(&bench).unwrap())
+    };
+    let (trace_a, bench_a) = run("a", "1");
+    let (trace_b, bench_b) = run("b", "6");
+    assert!(!trace_a.is_empty() && !bench_a.is_empty());
+    assert_eq!(trace_a, trace_b, "trace bytes drift with --threads");
+    assert_eq!(bench_a, bench_b, "ledger bytes drift with --threads");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn quick_100k_trace_replays_to_a_complete_ledger() {
+    // tentpole acceptance: the >=100k-request modeled trace replays in
+    // tier-1 and every request reaches exactly one terminal state
+    let planner = default_planner();
+    let spec = LoadgenSpec::quick(17);
+    let cfg = DaemonConfig::from_run_config(&RunConfig::default(), spec.lanes);
+    let (trace, report) = loadgen::generate_and_replay(&planner, &spec, &cfg);
+    assert_eq!(trace.len(), 100_000);
+    assert_eq!(report.outcomes.len(), 100_000);
+    let accounted = report.completed()
+        + report.rejected()
+        + report.shed()
+        + report.expired()
+        + report.cancelled();
+    assert_eq!(accounted, 100_000);
+    assert!(report.cache_hits() > 0);
+    let miss = report.deadline_miss_rate();
+    assert!((0.0..=1.0).contains(&miss), "miss rate {miss}");
+    let sojourns = report.sojourns();
+    assert!(!sojourns.is_empty());
+    let (p50, p99) =
+        (percentile(sojourns.clone(), 50.0), percentile(sojourns, 99.0));
+    assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+    // the ledger carries every gated figure
+    let doc = loadgen::bench_doc(&spec, &cfg, &report).to_string();
+    for key in
+        ["\"p50_s\"", "\"p99_s\"", "\"throughput_rps\"", "\"deadline_miss_rate\"", "\"hit_curve\""]
+    {
+        assert!(doc.contains(key), "missing {key}");
+    }
+}
