@@ -1,0 +1,436 @@
+//! The verifier's intermediate representation: each [`ScheduleOp`] is
+//! lifted into a [`Step`] that names only its *effects* — which slots it
+//! reads at issue time, which it synchronously overwrites, which async
+//! collective it triggers or joins, and the collective geometry needed for
+//! shard-shape checks. The abstract interpreter ([`super::verifier`])
+//! never looks at tensors; everything it proves, it proves from this IR.
+//!
+//! The canonical per-block DAP program (`python/compile/dap.py`'s
+//! `SCHEDULE`, exported verbatim into `manifest.json`) is transcribed
+//! here as [`canonical_schedule`] so admission gates and `fastfold
+//! verify` can analyze it without artifacts on disk.
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::manifest::ScheduleOp;
+use std::collections::BTreeMap;
+
+/// Geometry of a collective, for shard-shape divisibility checks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommKind {
+    /// `all_gather` along `axis`: shard dim grows ×n.
+    Gather {
+        /// concatenation axis
+        axis: usize,
+    },
+    /// `reduce_scatter` along `axis`: shard dim must divide by n.
+    Scatter {
+        /// split axis
+        axis: usize,
+    },
+    /// `all_to_all`: `split` dim must divide by n, `concat` dim grows ×n.
+    AllToAll {
+        /// axis each shard is split along before exchange
+        split: usize,
+        /// axis the exchanged pieces are concatenated along
+        concat: usize,
+    },
+}
+
+impl CommKind {
+    /// Display name matching the schedule-op vocabulary.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommKind::Gather { .. } => "gather",
+            CommKind::Scatter { .. } => "scatter",
+            CommKind::AllToAll { .. } => "all_to_all",
+        }
+    }
+
+    /// Abstract shape transfer over one per-rank shard: the output shard
+    /// shape, or a human-readable reason the collective cannot execute
+    /// (axis out of bounds, non-divisible split dim).
+    pub fn transfer(&self, shape: &[usize], n: usize) -> std::result::Result<Vec<usize>, String> {
+        let check_axis = |axis: usize| -> std::result::Result<(), String> {
+            if axis >= shape.len() {
+                return Err(format!(
+                    "axis {axis} out of bounds for rank-{} shard {shape:?}",
+                    shape.len()
+                ));
+            }
+            Ok(())
+        };
+        let mut out = shape.to_vec();
+        match self {
+            CommKind::Gather { axis } => {
+                check_axis(*axis)?;
+                out[*axis] *= n;
+            }
+            CommKind::Scatter { axis } => {
+                check_axis(*axis)?;
+                if out[*axis] % n != 0 {
+                    return Err(format!(
+                        "scatter axis {axis} has dim {} not divisible by n={n}",
+                        out[*axis]
+                    ));
+                }
+                out[*axis] /= n;
+            }
+            CommKind::AllToAll { split, concat } => {
+                check_axis(*split)?;
+                check_axis(*concat)?;
+                if out[*split] % n != 0 {
+                    return Err(format!(
+                        "all_to_all split axis {split} has dim {} not divisible by n={n}",
+                        out[*split]
+                    ));
+                }
+                out[*split] /= n;
+                out[*concat] *= n;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// An async-collective trigger: the result lands in `dest` when `id` is
+/// joined by a later `Wait`.
+#[derive(Clone, Debug)]
+pub struct Trigger {
+    /// Duality-Async collective id.
+    pub id: String,
+    /// Slot the joined result will overwrite.
+    pub dest: String,
+}
+
+/// One lifted schedule step (the IR the abstract interpreter walks).
+#[derive(Clone, Debug)]
+pub struct Step {
+    /// Index into the source schedule.
+    pub index: usize,
+    /// Human-readable actor for diagnostics (`segment 'msa_row_core'`,
+    /// `gather -> 't_bias_f'`, `wait 'ag_bias'`).
+    pub label: String,
+    /// Slots whose *current* value this step consumes at issue time.
+    /// Async collectives snapshot their input here — a later overwrite of
+    /// the input slot is legal (the runtime clones shards into the comm
+    /// job at the trigger).
+    pub reads: Vec<String>,
+    /// Slots this step synchronously overwrites at issue time.
+    pub writes: Vec<String>,
+    /// Async collective launched here, if any.
+    pub trigger: Option<Trigger>,
+    /// Async collective id joined here, if any.
+    pub join: Option<String>,
+    /// Collective geometry (set for sync and async collectives alike).
+    pub comm: Option<CommKind>,
+    /// Segment name for `Exec` steps (keys [`Program::exec_shapes`]).
+    pub seg: Option<String>,
+}
+
+/// A whole lifted schedule: the unit the verifier proves hazard-free.
+#[derive(Clone, Debug)]
+pub struct Program {
+    /// Display name (`canonical`, `manifest`, a test label).
+    pub name: String,
+    /// DAP degree the program runs at (shapes are per-rank shards).
+    pub n: usize,
+    /// Slots defined before step 0, with per-rank shard shapes where
+    /// statically known (`None` = defined, shape unknown).
+    pub entry: BTreeMap<String, Option<Vec<usize>>>,
+    /// Per-segment output shard shapes, where known (`Exec` outputs
+    /// without an entry here get unknown shapes and shape checks on
+    /// them are skipped). Populated from a manifest's artifact specs
+    /// when one is available.
+    pub exec_shapes: BTreeMap<String, Vec<Vec<usize>>>,
+    /// The lifted steps, in schedule order.
+    pub steps: Vec<Step>,
+}
+
+impl Program {
+    /// Lift a schedule into the effect IR. `entry` names the slots (and,
+    /// where known, per-rank shard shapes) defined before the first step
+    /// — the DAP block contract is `m` (s-sharded) and `z` (i-sharded).
+    pub fn from_schedule(
+        name: &str,
+        schedule: &[ScheduleOp],
+        n: usize,
+        entry: &[(&str, Option<Vec<usize>>)],
+    ) -> Program {
+        let steps = schedule
+            .iter()
+            .enumerate()
+            .map(|(index, op)| lift_op(index, op))
+            .collect();
+        Program {
+            name: name.to_string(),
+            n: n.max(1),
+            entry: entry
+                .iter()
+                .map(|(s, sh)| (s.to_string(), sh.clone()))
+                .collect(),
+            exec_shapes: BTreeMap::new(),
+            steps,
+        }
+    }
+}
+
+fn lift_op(index: usize, op: &ScheduleOp) -> Step {
+    match op {
+        ScheduleOp::Exec { seg, inputs, outputs } => Step {
+            index,
+            label: format!("segment '{seg}'"),
+            reads: inputs.clone(),
+            writes: outputs.clone(),
+            trigger: None,
+            join: None,
+            comm: None,
+            seg: Some(seg.clone()),
+        },
+        ScheduleOp::Gather { input, output, axis, id } => {
+            lift_comm(index, input, output, id, CommKind::Gather { axis: *axis })
+        }
+        ScheduleOp::Scatter { input, output, axis, id } => {
+            lift_comm(index, input, output, id, CommKind::Scatter { axis: *axis })
+        }
+        ScheduleOp::AllToAll { input, output, split, concat, id } => lift_comm(
+            index,
+            input,
+            output,
+            id,
+            CommKind::AllToAll { split: *split, concat: *concat },
+        ),
+        ScheduleOp::Wait { id } => Step {
+            index,
+            label: format!("wait '{id}'"),
+            reads: Vec::new(),
+            writes: Vec::new(),
+            trigger: None,
+            join: Some(id.clone()),
+            comm: None,
+            seg: None,
+        },
+    }
+}
+
+fn lift_comm(
+    index: usize,
+    input: &str,
+    output: &str,
+    id: &Option<String>,
+    kind: CommKind,
+) -> Step {
+    match id {
+        Some(id) => Step {
+            index,
+            label: format!("{} '{id}' -> '{output}'", kind.name()),
+            reads: vec![input.to_string()],
+            writes: Vec::new(),
+            trigger: Some(Trigger { id: id.clone(), dest: output.to_string() }),
+            join: None,
+            comm: Some(kind),
+            seg: None,
+        },
+        None => Step {
+            index,
+            label: format!("{} -> '{output}'", kind.name()),
+            reads: vec![input.to_string()],
+            writes: vec![output.to_string()],
+            trigger: None,
+            join: None,
+            comm: Some(kind),
+            seg: None,
+        },
+    }
+}
+
+/// Block-entry slots for the canonical DAP program: `m` s-sharded and `z`
+/// i-sharded at degree `n` (errors when `n` does not divide the preset's
+/// axial dims — the same geometry rule `ParallelPlan::validate` and the
+/// coordinator enforce).
+pub fn canonical_entry(
+    cfg: &ModelConfig,
+    n: usize,
+) -> Result<Vec<(&'static str, Option<Vec<usize>>)>> {
+    let n = n.max(1);
+    if cfg.n_seq % n != 0 || cfg.n_res % n != 0 {
+        return Err(Error::Schedule(format!(
+            "dap_size {n} does not divide (n_seq={}, n_res={})",
+            cfg.n_seq, cfg.n_res
+        )));
+    }
+    Ok(vec![
+        ("m", Some(vec![cfg.n_seq / n, cfg.n_res, cfg.d_msa])),
+        ("z", Some(vec![cfg.n_res / n, cfg.n_res, cfg.d_pair])),
+    ])
+}
+
+/// The canonical per-block DAP schedule — a verbatim transcription of
+/// `python/compile/dap.py::SCHEDULE` (the op list `make artifacts` exports
+/// into `manifest.json`). Kept in lockstep with the python source so the
+/// planner and trainer admission gates can verify the program that will
+/// actually run without needing artifacts on disk; the op-census test
+/// below pins the counts the python module documents.
+pub fn canonical_schedule() -> Vec<ScheduleOp> {
+    fn exec(seg: &str, inputs: &[&str], outputs: &[&str]) -> ScheduleOp {
+        ScheduleOp::Exec {
+            seg: seg.into(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+    fn gather(input: &str, output: &str, axis: usize, id: &str) -> ScheduleOp {
+        ScheduleOp::Gather {
+            input: input.into(),
+            output: output.into(),
+            axis,
+            id: Some(id.into()),
+        }
+    }
+    fn scatter(input: &str, output: &str, axis: usize, id: &str) -> ScheduleOp {
+        ScheduleOp::Scatter {
+            input: input.into(),
+            output: output.into(),
+            axis,
+            id: Some(id.into()),
+        }
+    }
+    fn a2a(input: &str, output: &str, split: usize, concat: usize) -> ScheduleOp {
+        ScheduleOp::AllToAll {
+            input: input.into(),
+            output: output.into(),
+            split,
+            concat,
+            id: None,
+        }
+    }
+    fn a2a_async(
+        input: &str,
+        output: &str,
+        split: usize,
+        concat: usize,
+        id: &str,
+    ) -> ScheduleOp {
+        ScheduleOp::AllToAll {
+            input: input.into(),
+            output: output.into(),
+            split,
+            concat,
+            id: Some(id.into()),
+        }
+    }
+    fn wait(id: &str) -> ScheduleOp {
+        ScheduleOp::Wait { id: id.into() }
+    }
+
+    vec![
+        exec("row_bias", &["z"], &["t_bias"]),
+        gather("t_bias", "t_bias_f", 0, "ag_bias"),
+        exec("msa_row_proj", &["m"], &["t_qkvg"]),
+        wait("ag_bias"),
+        exec("msa_row_core", &["m", "t_qkvg", "t_bias_f"], &["m"]),
+        a2a("m", "m", 1, 0),
+        exec("msa_col", &["m"], &["m"]),
+        exec("msa_trans", &["m"], &["m"]),
+        exec("opm_pre", &["m"], &["t_a", "t_b"]),
+        gather("t_b", "t_b_f", 1, "ag_opm"),
+        // m returns to s-shard for the NEXT block; overlaps the whole
+        // pair stack (joined by the final wait)
+        a2a_async("m", "m", 0, 1, "a2a_m"),
+        wait("ag_opm"),
+        exec("opm_post", &["z", "t_a", "t_b_f"], &["z"]),
+        exec("tri_out_pre", &["z"], &["t_act", "t_ta", "t_tb"]),
+        gather("t_tb", "t_tb_f", 0, "ag_tri"),
+        wait("ag_tri"),
+        exec("tri_out_post", &["z", "t_act", "t_ta", "t_tb_f"], &["z"]),
+        exec("tri_in_pre", &["z"], &["t_act2", "t_part"]),
+        scatter("t_part", "t_part_l", 0, "rs_tri"),
+        wait("rs_tri"),
+        exec("tri_in_post", &["z", "t_act2", "t_part_l"], &["z"]),
+        exec("tri_start_bias", &["z"], &["t_sb"]),
+        gather("t_sb", "t_sb_f", 0, "ag_sb"),
+        exec("tri_start_proj", &["z"], &["t_sq"]),
+        wait("ag_sb"),
+        exec("tri_start_core", &["z", "t_sq", "t_sb_f"], &["z"]),
+        a2a("z", "z", 1, 0),
+        exec("tri_end_bias", &["z"], &["t_eb"]),
+        gather("t_eb", "t_eb_f", 0, "ag_eb"),
+        exec("tri_end_proj", &["z"], &["t_eq"]),
+        wait("ag_eb"),
+        exec("tri_end_core", &["z", "t_eq", "t_eb_f"], &["z"]),
+        a2a("z", "z", 0, 1),
+        exec("pair_trans", &["z"], &["z"]),
+        wait("a2a_m"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_schedule_matches_python_counts() {
+        // python/compile/dap.py documents 5 gather + 1 scatter + 4 a2a
+        // per block forward; 18 segment executions; 6 waits (5 async
+        // gathers/scatters + the overlapped a2a_m).
+        let s = canonical_schedule();
+        let count = |f: &dyn Fn(&ScheduleOp) -> bool| s.iter().filter(|op| f(op)).count();
+        assert_eq!(count(&|op| matches!(op, ScheduleOp::Exec { .. })), 18);
+        assert_eq!(count(&|op| matches!(op, ScheduleOp::Gather { .. })), 5);
+        assert_eq!(count(&|op| matches!(op, ScheduleOp::Scatter { .. })), 1);
+        assert_eq!(count(&|op| matches!(op, ScheduleOp::AllToAll { .. })), 4);
+        assert_eq!(count(&|op| matches!(op, ScheduleOp::Wait { .. })), 6);
+        assert_eq!(s.len(), 35);
+    }
+
+    #[test]
+    fn shape_transfer_rules() {
+        let n = 4;
+        assert_eq!(
+            CommKind::Gather { axis: 0 }.transfer(&[2, 8], n).unwrap(),
+            vec![8, 8]
+        );
+        assert_eq!(
+            CommKind::Scatter { axis: 1 }.transfer(&[2, 8], n).unwrap(),
+            vec![2, 2]
+        );
+        assert_eq!(
+            CommKind::AllToAll { split: 1, concat: 0 }.transfer(&[2, 8], n).unwrap(),
+            vec![8, 2]
+        );
+        // non-divisible split dim and out-of-bounds axis both refuse
+        assert!(CommKind::Scatter { axis: 0 }.transfer(&[2, 8], n).is_err());
+        assert!(CommKind::Gather { axis: 2 }.transfer(&[2, 8], n).is_err());
+    }
+
+    #[test]
+    fn canonical_entry_requires_divisibility() {
+        let cfg = ModelConfig::tiny(); // n_seq=8, n_res=16
+        let entry = canonical_entry(&cfg, 2).unwrap();
+        assert_eq!(entry[0].1.as_ref().unwrap()[0], 4);
+        assert_eq!(entry[1].1.as_ref().unwrap()[0], 8);
+        assert!(canonical_entry(&cfg, 3).is_err());
+    }
+
+    #[test]
+    fn lifting_separates_sync_and_async_effects() {
+        let s = canonical_schedule();
+        let p = Program::from_schedule("canonical", &s, 2, &[("m", None), ("z", None)]);
+        assert_eq!(p.steps.len(), 35);
+        // async gather: read at issue, no sync write, a trigger
+        let ag = &p.steps[1];
+        assert_eq!(ag.reads, vec!["t_bias".to_string()]);
+        assert!(ag.writes.is_empty());
+        assert_eq!(ag.trigger.as_ref().unwrap().id, "ag_bias");
+        assert_eq!(ag.trigger.as_ref().unwrap().dest, "t_bias_f");
+        // sync a2a: read + immediate write
+        let a2a = &p.steps[5];
+        assert_eq!(a2a.reads, vec!["m".to_string()]);
+        assert_eq!(a2a.writes, vec!["m".to_string()]);
+        assert!(a2a.trigger.is_none());
+        // wait: pure join
+        let w = &p.steps[3];
+        assert_eq!(w.join.as_deref(), Some("ag_bias"));
+        assert!(w.reads.is_empty() && w.writes.is_empty());
+    }
+}

@@ -1,0 +1,185 @@
+//! Determinism lint: a self-contained scan of the repo's Rust source for
+//! banned nondeterminism patterns on output paths.
+//!
+//! Two rules, mirroring the conventions the codebase is built on:
+//!
+//! * **unordered-container** — `HashMap`/`HashSet` anywhere in the
+//!   source. Every map that can feed serialized output (JSON ledgers,
+//!   manifests, comm logs, reports) is a `BTreeMap`/`BTreeSet` in this
+//!   repo so iteration order is part of the contract; an unordered
+//!   container is one refactor away from a nondeterministic ledger.
+//!   Per-line escape: a `lint:allow(unordered)` comment on the same line.
+//! * **wallclock** — `Instant::now()` / `SystemTime` reads outside an
+//!   annotated measurement plane. Real-clock reads are legitimate only
+//!   where wall time *is* the measurement (the `MeasuredComm` ledger,
+//!   bench harnesses, the verifier's own cost line); those files carry a
+//!   file-level `lint:allow(wallclock)` marker next to their
+//!   `use std::time` import, with a justification. A wall-clock read in
+//!   an unannotated file is flagged — that is how time leaks into
+//!   schedules, seeds, and serialized output.
+//!
+//! The patterns below are assembled with `concat!` so this file never
+//! matches its own rules.
+
+use crate::error::{Error, Result};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Patterns whose presence on a line flags the unordered-container rule.
+const UNORDERED: [&str; 2] = [concat!("Hash", "Map"), concat!("Hash", "Set")];
+/// Patterns whose presence on a line flags the wallclock rule.
+const WALLCLOCK: [&str; 2] =
+    [concat!("Instant", "::now("), concat!("System", "Time")];
+/// Same-line escape marker for the unordered-container rule.
+const ALLOW_UNORDERED: &str = concat!("lint:allow(", "unordered)");
+/// File-level escape marker declaring an annotated measurement plane.
+const ALLOW_WALLCLOCK: &str = concat!("lint:allow(", "wallclock)");
+
+/// One banned-pattern hit: where, which rule, and the offending line.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Path of the flagged file (as given to the scan).
+    pub file: String,
+    /// 1-indexed line number.
+    pub line: usize,
+    /// Rule name: `unordered-container` or `wallclock`.
+    pub rule: &'static str,
+    /// The flagged source line, trimmed.
+    pub excerpt: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.excerpt
+        )
+    }
+}
+
+/// Lint one file's source text. `name` is used in diagnostics.
+pub fn lint_source(name: &str, src: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    // the file-level marker declares the whole file a measurement plane
+    let wallclock_allowed = src.contains(ALLOW_WALLCLOCK);
+    for (i, line) in src.lines().enumerate() {
+        if UNORDERED.iter().any(|p| line.contains(p))
+            && !line.contains(ALLOW_UNORDERED)
+        {
+            out.push(Violation {
+                file: name.to_string(),
+                line: i + 1,
+                rule: "unordered-container",
+                excerpt: line.trim().to_string(),
+            });
+        }
+        if !wallclock_allowed && WALLCLOCK.iter().any(|p| line.contains(p)) {
+            out.push(Violation {
+                file: name.to_string(),
+                line: i + 1,
+                rule: "wallclock",
+                excerpt: line.trim().to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Recursively lint every `.rs` file under `root`, in sorted path order
+/// (the report itself must be deterministic).
+pub fn lint_dir(root: &Path) -> Result<Vec<Violation>> {
+    if !root.is_dir() {
+        return Err(Error::Config(format!(
+            "lint: '{}' is not a directory",
+            root.display()
+        )));
+    }
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        let src = std::fs::read_to_string(&path)?;
+        out.extend(lint_source(&path.display().to_string(), &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unordered_containers_are_flagged_with_line_escape() {
+        let bad = format!("use std::collections::{};\n", UNORDERED[0]);
+        let v = lint_source("x.rs", &bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!((v[0].rule, v[0].line), ("unordered-container", 1));
+
+        let ok = format!(
+            "use std::collections::{}; // {} — counts only, never iterated\n",
+            UNORDERED[1],
+            ALLOW_UNORDERED
+        );
+        assert!(lint_source("x.rs", &ok).is_empty());
+    }
+
+    #[test]
+    fn wallclock_needs_a_file_level_marker() {
+        let pat = WALLCLOCK[0];
+        let bad = format!("let t0 = {});\n", pat);
+        let v = lint_source("x.rs", &bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "wallclock");
+
+        let ok = format!(
+            "use std::time::Instant; // {} — bench plane\nlet t0 = {});\n",
+            ALLOW_WALLCLOCK, pat
+        );
+        assert!(lint_source("x.rs", &ok).is_empty());
+    }
+
+    #[test]
+    fn clean_source_passes() {
+        assert!(lint_source(
+            "x.rs",
+            "use std::collections::BTreeMap;\nfn main() {}\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn repo_source_tree_is_lint_clean() {
+        // the satellite guarantee: the shipped tree has zero violations
+        // (every legitimate wall-clock site carries its marker)
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let violations = lint_dir(&src).unwrap();
+        assert!(
+            violations.is_empty(),
+            "lint violations in src/:\n{}",
+            violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    #[test]
+    fn missing_dir_is_a_config_error() {
+        assert!(lint_dir(Path::new("/no/such/dir/fastfold")).is_err());
+    }
+}

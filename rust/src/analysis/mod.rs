@@ -1,0 +1,98 @@
+//! Static analysis over DAP/comm programs — the admission plane.
+//!
+//! Two planes live here:
+//!
+//! * **Schedule verification** ([`ir`], [`verifier`]): every schedule step
+//!   is lifted into an effect IR and a per-rank abstract interpreter
+//!   proves (or refutes, with structured diagnostics) the absence of the
+//!   hazard classes the PR 2 runtime detectors catch mid-run — stale
+//!   reads past an async trigger, write-after-write on in-flight landing
+//!   slots, unknown/double waits, id reuse, unjoined collectives at
+//!   schedule end — plus shard-shape soundness and backward liveness.
+//!   The planner ([`crate::inference::engine::PlacementPlanner`]), the
+//!   trainer ([`crate::train::ParallelPlan::admit_schedule`]) and the
+//!   daemon request path all call [`admit`] before any rank executes;
+//!   `fastfold verify` exposes the same pass on the CLI.
+//! * **Determinism lint** ([`lint`]): a repo-source scan for banned
+//!   nondeterminism patterns (unordered-container iteration feeding
+//!   serialized output, wall-clock reads outside annotated measurement
+//!   planes), surfaced as `fastfold lint` and run in CI.
+
+pub mod ir;
+pub mod lint;
+pub mod verifier;
+
+pub use ir::{canonical_entry, canonical_schedule, Program};
+pub use verifier::{verify, verify_backward, Diagnostic, Hazard, VerifyReport};
+
+use crate::config::ModelConfig;
+use crate::error::Result;
+
+/// Verify the canonical per-block DAP program (forward and backward) for
+/// `cfg` at degree `n`, returning both reports without gating. Entry
+/// shard shapes are used when `n` divides the preset's axial dims;
+/// otherwise the analysis runs shape-agnostic (geometry divisibility
+/// stays the coordinator's launch-time check, exactly as before).
+pub fn verify_canonical(
+    name: &str,
+    cfg: &ModelConfig,
+    n: usize,
+) -> (VerifyReport, VerifyReport) {
+    let schedule = ir::canonical_schedule();
+    let entry = ir::canonical_entry(cfg, n)
+        .unwrap_or_else(|_| vec![("m", None), ("z", None)]);
+    let program = ir::Program::from_schedule(name, &schedule, n, &entry);
+    let forward = verifier::verify(&program);
+    let backward = verifier::verify_backward(name, &schedule, n);
+    (forward, backward)
+}
+
+/// The mandatory admission gate: statically prove the canonical DAP
+/// program hazard-free (forward + backward) at degree `n` before any
+/// rank executes. Returns the verifier's own cost in microseconds on
+/// success; refuses admission ([`crate::Error::Schedule`], carrying the
+/// leading diagnostics) on any hazard. Degree ≤ 1 runs no DAP schedule
+/// and admits for free. The `--unsafe-skip-verify` escape hatch is the
+/// caller's: skip calling this at all.
+pub fn admit(origin: &str, cfg: &ModelConfig, n: usize) -> Result<u128> {
+    if n <= 1 {
+        return Ok(0);
+    }
+    let name = format!("{origin}:{}", cfg.name);
+    let (forward, backward) = verify_canonical(&name, cfg, n);
+    forward.gate()?;
+    backward.gate()?;
+    Ok(forward.elapsed_micros + backward.elapsed_micros)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_accepts_all_shipping_geometries() {
+        for preset in ["tiny", "small", "initial_training", "finetune"] {
+            let cfg = ModelConfig::preset(preset).unwrap();
+            for n in [1usize, 2, 4, 8] {
+                admit("test", &cfg, n).unwrap_or_else(|e| {
+                    panic!("{preset} at dap={n} must admit: {e}")
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn admission_is_shape_agnostic_on_nondividing_geometry() {
+        // dap=3 does not divide tiny's (8, 16): the gate still verifies
+        // the hazard classes and admits — geometry divisibility stays
+        // the coordinator's launch-time rejection, as before this gate.
+        let cfg = ModelConfig::tiny();
+        assert!(admit("test", &cfg, 3).is_ok());
+    }
+
+    #[test]
+    fn degree_one_admits_for_free() {
+        let cfg = ModelConfig::tiny();
+        assert_eq!(admit("test", &cfg, 1).unwrap(), 0);
+    }
+}

@@ -1,0 +1,787 @@
+//! Per-rank abstract interpretation over the lifted schedule IR.
+//!
+//! The interpreter replays each rank's view of a [`Program`] against an
+//! abstract state — which slots are defined (and at what shard shape),
+//! which async collectives are in flight, which have been joined — and
+//! mirrors the runtime detector order in `dap::executor` exactly: reads
+//! are checked stale-then-unset, writes are checked against in-flight
+//! landings, triggers check the landing slot before the id, waits are
+//! authoritative about the pending set. Anything the PR 2 runtime
+//! detectors would trip on mid-run is refuted here before any rank
+//! executes; schedules the runtime would accept are accepted (the fuzz
+//! suite in `rust/tests/schedule_verifier.rs` property-tests that
+//! equivalence against the live executor).
+//!
+//! One deliberate asymmetry, shared with the runtime: async collectives
+//! *snapshot* their input at the trigger (the executor clones shards into
+//! the comm job), so overwriting an in-flight collective's input slot is
+//! legal and is not flagged — only its *destination* slot is protected.
+//!
+//! Backward programs are checked by [`verify_backward`]: the forward
+//! schedule is lowered to its tape (trigger-order, waits elided — the
+//! same lowering `dap::tape` performs), versions are assigned with the
+//! identical algorithm, and a reverse liveness walk proves every VJP
+//! finds its cotangent and both `d_m` and `d_z` reach version 0. The walk
+//! presumes the forward program verified hazard-free — tape-order
+//! versioning only matches runtime write timing when no step reads a slot
+//! between an async trigger landing there and its wait.
+
+use super::ir::{CommKind, Program, Step};
+use crate::error::{Error, Result};
+use crate::json::Json;
+use crate::manifest::ScheduleOp;
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant; // lint:allow(wallclock) — verifier self-cost only
+
+/// The hazard taxonomy: everything the static pass can refute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Hazard {
+    /// A step reads a slot that an in-flight async collective will
+    /// overwrite — the read observes stale shards.
+    StaleRead,
+    /// A step writes a slot that an in-flight async collective will
+    /// overwrite — the later join would clobber the newer value.
+    WriteAfterWrite,
+    /// `Wait` on an id that was never triggered (or was mistyped).
+    UnknownWait,
+    /// `Wait` on an id that was already joined earlier.
+    DoubleWait,
+    /// An async collective id re-triggered while still in flight.
+    IdReuse,
+    /// Async collectives still in flight when the schedule ends — the
+    /// `Timeline::elapsed` class of bug, and leaked comm jobs.
+    UnjoinedAtEnd,
+    /// A step reads a slot nothing has defined.
+    UnsetSlot,
+    /// A collective whose shard geometry cannot execute (axis out of
+    /// bounds, split dim not divisible by the dap degree).
+    ShardShape,
+    /// The backward pass cannot produce a required cotangent (seed slot
+    /// never written, `d_m`/`d_z` unreachable, or an empty tape).
+    BackwardLiveness,
+}
+
+impl Hazard {
+    /// Stable kebab-case name used in reports and JSON artifacts.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Hazard::StaleRead => "stale-read",
+            Hazard::WriteAfterWrite => "write-after-write",
+            Hazard::UnknownWait => "unknown-wait",
+            Hazard::DoubleWait => "double-wait",
+            Hazard::IdReuse => "id-reuse",
+            Hazard::UnjoinedAtEnd => "unjoined-at-end",
+            Hazard::UnsetSlot => "unset-slot",
+            Hazard::ShardShape => "shard-shape",
+            Hazard::BackwardLiveness => "backward-liveness",
+        }
+    }
+}
+
+/// One refutation: where, who, what, and how to fix it.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Schedule step index the hazard manifests at.
+    pub step: usize,
+    /// First rank the hazard was observed on (schedules are SPMD, so
+    /// hazards identical across ranks are reported once).
+    pub rank: usize,
+    /// Hazard class.
+    pub hazard: Hazard,
+    /// Buffer slot or collective id at the center of the hazard.
+    pub buffer: String,
+    /// Human-readable account of what goes wrong.
+    pub detail: String,
+    /// Suggested schedule edit that removes the hazard.
+    pub fix: String,
+}
+
+impl Diagnostic {
+    fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("step".to_string(), Json::Num(self.step as f64));
+        obj.insert("rank".to_string(), Json::Num(self.rank as f64));
+        obj.insert("hazard".to_string(), Json::Str(self.hazard.name().to_string()));
+        obj.insert("buffer".to_string(), Json::Str(self.buffer.clone()));
+        obj.insert("detail".to_string(), Json::Str(self.detail.clone()));
+        obj.insert("fix".to_string(), Json::Str(self.fix.clone()));
+        Json::Obj(obj)
+    }
+}
+
+/// Verdict for one program: hazard-free, or a list of refutations.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    /// Program display name.
+    pub program: String,
+    /// DAP degree verified at.
+    pub n: usize,
+    /// Number of schedule steps analyzed.
+    pub steps: usize,
+    /// Refutations, in schedule order (empty = proven hazard-free).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Wall-clock cost of the verification itself, in microseconds.
+    pub elapsed_micros: u128,
+}
+
+impl VerifyReport {
+    /// True when the abstract interpretation found no hazards.
+    pub fn is_hazard_free(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Turn the report into a hard admission verdict: `Err` carrying the
+    /// leading diagnostics when any hazard was refuted.
+    pub fn gate(&self) -> Result<()> {
+        if self.is_hazard_free() {
+            return Ok(());
+        }
+        let mut lines: Vec<String> = self
+            .diagnostics
+            .iter()
+            .take(4)
+            .map(|d| {
+                format!(
+                    "[step {} {}] {} — fix: {}",
+                    d.step,
+                    d.hazard.name(),
+                    d.detail,
+                    d.fix
+                )
+            })
+            .collect();
+        if self.diagnostics.len() > lines.len() {
+            lines.push(format!(
+                "... and {} more (run `fastfold verify` for the full report)",
+                self.diagnostics.len() - lines.len()
+            ));
+        }
+        Err(Error::Schedule(format!(
+            "schedule '{}' refused admission at dap={}: {} hazard(s): {}",
+            self.program,
+            self.n,
+            self.diagnostics.len(),
+            lines.join("; ")
+        )))
+    }
+
+    /// Structured report for `fastfold verify --json` and CI artifacts.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("program".to_string(), Json::Str(self.program.clone()));
+        obj.insert("dap".to_string(), Json::Num(self.n as f64));
+        obj.insert("steps".to_string(), Json::Num(self.steps as f64));
+        obj.insert("hazard_free".to_string(), Json::Bool(self.is_hazard_free()));
+        obj.insert(
+            "verify_micros".to_string(),
+            Json::Num(self.elapsed_micros as f64),
+        );
+        obj.insert(
+            "diagnostics".to_string(),
+            Json::Arr(self.diagnostics.iter().map(|d| d.to_json()).collect()),
+        );
+        Json::Obj(obj)
+    }
+}
+
+struct Inflight {
+    dest: String,
+    shape: Option<Vec<usize>>,
+    trigger_step: usize,
+}
+
+/// Statically verify a forward program: per-rank abstract interpretation
+/// proving the absence of every runtime-detector hazard class plus shard
+/// geometry soundness.
+pub fn verify(program: &Program) -> VerifyReport {
+    let start = Instant::now();
+    let mut diagnostics: Vec<Diagnostic> = Vec::new();
+    let mut seen: BTreeSet<(usize, Hazard, String)> = BTreeSet::new();
+    for rank in 0..program.n {
+        for d in interpret_rank(program, rank) {
+            if seen.insert((d.step, d.hazard, d.buffer.clone())) {
+                diagnostics.push(d);
+            }
+        }
+    }
+    diagnostics.sort_by_key(|d| (d.step, d.hazard, d.buffer.clone()));
+    VerifyReport {
+        program: program.name.clone(),
+        n: program.n,
+        steps: program.steps.len(),
+        diagnostics,
+        elapsed_micros: start.elapsed().as_micros(),
+    }
+}
+
+fn interpret_rank(program: &Program, rank: usize) -> Vec<Diagnostic> {
+    let n = program.n;
+    let mut out: Vec<Diagnostic> = Vec::new();
+    // abstract state: slot -> shard shape where statically known
+    let mut defined: BTreeMap<String, Option<Vec<usize>>> = program.entry.clone();
+    let mut inflight: BTreeMap<String, Inflight> = BTreeMap::new();
+    let mut joined: BTreeMap<String, usize> = BTreeMap::new(); // id -> join step
+
+    for step in &program.steps {
+        // 1. reads: stale-read first, then unset — the runtime order.
+        for slot in &step.reads {
+            if let Some((id, info)) =
+                inflight.iter().find(|(_, v)| &v.dest == slot)
+            {
+                out.push(Diagnostic {
+                    step: step.index,
+                    rank,
+                    hazard: Hazard::StaleRead,
+                    buffer: slot.clone(),
+                    detail: format!(
+                        "{} reads slot '{slot}' while async collective '{id}' \
+                         (triggered at step {}) has an in-flight write to it — \
+                         the read observes stale shards",
+                        step.label, info.trigger_step
+                    ),
+                    fix: format!("insert `wait '{id}'` before step {}", step.index),
+                });
+            }
+            if !defined.contains_key(slot) {
+                out.push(Diagnostic {
+                    step: step.index,
+                    rank,
+                    hazard: Hazard::UnsetSlot,
+                    buffer: slot.clone(),
+                    detail: format!("{} reads slot '{slot}' which nothing has written", step.label),
+                    fix: format!(
+                        "add a step writing '{slot}' before step {}, or declare it a block entry",
+                        step.index
+                    ),
+                });
+                // recover: treat as defined with unknown shape so one
+                // missing slot doesn't cascade into noise
+                defined.insert(slot.clone(), None);
+            }
+        }
+
+        // 2. collective shape transfer on the (single) read shard.
+        let mut comm_shape: Option<Vec<usize>> = None;
+        if let Some(kind) = &step.comm {
+            let input_shape = step
+                .reads
+                .first()
+                .and_then(|s| defined.get(s).cloned().flatten());
+            if let Some(shape) = input_shape {
+                match kind.transfer(&shape, n) {
+                    Ok(s) => comm_shape = Some(s),
+                    Err(why) => out.push(Diagnostic {
+                        step: step.index,
+                        rank,
+                        hazard: Hazard::ShardShape,
+                        buffer: step.reads.first().cloned().unwrap_or_default(),
+                        detail: format!("{}: {}", step.label, why),
+                        fix: "adjust the collective axes or the dap degree so shard \
+                              dims divide evenly"
+                            .to_string(),
+                    }),
+                }
+            }
+        }
+
+        // 3. synchronous writes: write-after-write against in-flight
+        //    landings, then define.
+        for (wi, slot) in step.writes.iter().enumerate() {
+            if let Some((id, info)) =
+                inflight.iter().find(|(_, v)| &v.dest == slot)
+            {
+                out.push(Diagnostic {
+                    step: step.index,
+                    rank,
+                    hazard: Hazard::WriteAfterWrite,
+                    buffer: slot.clone(),
+                    detail: format!(
+                        "{} writes slot '{slot}' while async collective '{id}' \
+                         (triggered at step {}) has an in-flight write to it — \
+                         joining '{id}' would clobber the newer value",
+                        step.label, info.trigger_step
+                    ),
+                    fix: format!("insert `wait '{id}'` before step {}", step.index),
+                });
+            }
+            let shape = if step.comm.is_some() {
+                comm_shape.clone()
+            } else {
+                step.seg
+                    .as_ref()
+                    .and_then(|seg| program.exec_shapes.get(seg))
+                    .and_then(|shapes| shapes.get(wi).cloned())
+            };
+            defined.insert(slot.clone(), shape);
+        }
+
+        // 4. trigger: landing-slot WAW first, then id reuse — the order
+        //    the runtime's `land()` checks in.
+        if let Some(t) = &step.trigger {
+            if let Some((id, info)) =
+                inflight.iter().find(|(_, v)| v.dest == t.dest)
+            {
+                // triggering with dest == the in-flight id's own dest is
+                // exactly the runtime WAW at land(); dest == own input is
+                // legal (snapshot semantics) and never reaches here
+                // because triggers don't write at issue time.
+                out.push(Diagnostic {
+                    step: step.index,
+                    rank,
+                    hazard: Hazard::WriteAfterWrite,
+                    buffer: t.dest.clone(),
+                    detail: format!(
+                        "{} will land in slot '{}' while async collective '{id}' \
+                         (triggered at step {}) is already in flight to it",
+                        step.label, t.dest, info.trigger_step
+                    ),
+                    fix: format!("insert `wait '{id}'` before step {}", step.index),
+                });
+            }
+            if inflight.contains_key(&t.id) {
+                out.push(Diagnostic {
+                    step: step.index,
+                    rank,
+                    hazard: Hazard::IdReuse,
+                    buffer: t.id.clone(),
+                    detail: format!(
+                        "{} reuses async collective id '{}' while it is still in flight",
+                        step.label, t.id
+                    ),
+                    fix: format!(
+                        "insert `wait '{}'` before step {}, or use a distinct id",
+                        t.id, step.index
+                    ),
+                });
+            }
+            // re-triggering an id after it was joined is legal; the id
+            // simply becomes waitable again
+            joined.remove(&t.id);
+            inflight.insert(
+                t.id.clone(),
+                Inflight {
+                    dest: t.dest.clone(),
+                    shape: comm_shape.clone(),
+                    trigger_step: step.index,
+                },
+            );
+        }
+
+        // 5. join: the landing write happens here.
+        if let Some(id) = &step.join {
+            match inflight.remove(id) {
+                Some(info) => {
+                    joined.insert(id.clone(), step.index);
+                    defined.insert(info.dest, info.shape);
+                }
+                None => {
+                    let (hazard, detail, fix) = match joined.get(id) {
+                        Some(j) => (
+                            Hazard::DoubleWait,
+                            format!(
+                                "wait on async collective id '{id}' which was already \
+                                 joined at step {j}"
+                            ),
+                            format!("delete the duplicate wait at step {}", step.index),
+                        ),
+                        None => (
+                            Hazard::UnknownWait,
+                            format!(
+                                "wait on async collective id '{id}' that was never \
+                                 triggered (typo, or the trigger was removed)"
+                            ),
+                            format!(
+                                "trigger a collective with id '{id}' before step {}, \
+                                 or delete the wait",
+                                step.index
+                            ),
+                        ),
+                    };
+                    out.push(Diagnostic {
+                        step: step.index,
+                        rank,
+                        hazard,
+                        buffer: id.clone(),
+                        detail,
+                        fix,
+                    });
+                }
+            }
+        }
+    }
+
+    // 6. schedule end: every collective must have been joined.
+    let last = program.steps.len().saturating_sub(1);
+    for (id, info) in &inflight {
+        out.push(Diagnostic {
+            step: info.trigger_step,
+            rank,
+            hazard: Hazard::UnjoinedAtEnd,
+            buffer: id.clone(),
+            detail: format!(
+                "async collective '{id}' (triggered at step {}, landing in '{}') \
+                 is still in flight when the schedule ends",
+                info.trigger_step, info.dest
+            ),
+            fix: format!("append `wait '{id}'` at or before step {last}"),
+        });
+    }
+    out
+}
+
+type Key = (String, usize);
+
+/// Statically verify the backward program derived from `schedule`: lower
+/// to the tape (trigger order, waits elided), assign versions with the
+/// same algorithm as `dap::tape::assign_versions`, and prove by reverse
+/// liveness that `run_backward` would produce both `d_m` and `d_z`.
+/// Presumes the forward program already verified hazard-free.
+pub fn verify_backward(name: &str, schedule: &[ScheduleOp], n: usize) -> VerifyReport {
+    let start = Instant::now();
+    let mut diagnostics: Vec<Diagnostic> = Vec::new();
+
+    // Tape lowering: ops are recorded at trigger time, waits are not
+    // recorded — filtering waits from schedule order reproduces it.
+    struct TapeOp {
+        label: String,
+        reads: Vec<String>,
+        writes: Vec<String>,
+        is_exec: bool,
+    }
+    let mut tape: Vec<TapeOp> = Vec::new();
+    for op in schedule {
+        match op {
+            ScheduleOp::Exec { seg, inputs, outputs } => tape.push(TapeOp {
+                label: format!("segment '{seg}'"),
+                reads: inputs.clone(),
+                writes: outputs.clone(),
+                is_exec: true,
+            }),
+            ScheduleOp::Gather { input, output, .. }
+            | ScheduleOp::Scatter { input, output, .. }
+            | ScheduleOp::AllToAll { input, output, .. } => tape.push(TapeOp {
+                label: format!(
+                    "{} -> '{output}'",
+                    comm_kind_name(op)
+                ),
+                reads: vec![input.clone()],
+                writes: vec![output.clone()],
+                is_exec: false,
+            }),
+            ScheduleOp::Wait { .. } => {}
+        }
+    }
+
+    if !tape.iter().any(|op| op.is_exec) {
+        diagnostics.push(Diagnostic {
+            step: 0,
+            rank: 0,
+            hazard: Hazard::BackwardLiveness,
+            buffer: String::new(),
+            detail: "empty tape: the schedule records no segment executions, so \
+                     run_backward has nothing to differentiate"
+                .to_string(),
+            fix: "add at least one exec step, or skip backward for this schedule"
+                .to_string(),
+        });
+    }
+
+    // Version assignment — the dap::tape::assign_versions algorithm:
+    // reads see the current version, writes bump it.
+    let mut cur: BTreeMap<String, usize> = BTreeMap::new();
+    let mut versioned: Vec<(Vec<Key>, Vec<Key>)> = Vec::new();
+    for op in &tape {
+        let in_keys: Vec<Key> = op
+            .reads
+            .iter()
+            .map(|s| (s.clone(), *cur.get(s).unwrap_or(&0)))
+            .collect();
+        let out_keys: Vec<Key> = op
+            .writes
+            .iter()
+            .map(|s| {
+                let v = cur.get(s).copied().unwrap_or(0) + 1;
+                cur.insert(s.clone(), v);
+                (s.clone(), v)
+            })
+            .collect();
+        versioned.push((in_keys, out_keys));
+    }
+
+    // Seeds: run_backward starts cotangents at the final versions of the
+    // block outputs — a slot the tape never wrote cannot be seeded.
+    let mut live: BTreeSet<Key> = BTreeSet::new();
+    for slot in ["m", "z"] {
+        match cur.get(slot) {
+            Some(&v) => {
+                live.insert((slot.to_string(), v));
+            }
+            None => diagnostics.push(Diagnostic {
+                step: schedule.len().saturating_sub(1),
+                rank: 0,
+                hazard: Hazard::BackwardLiveness,
+                buffer: slot.to_string(),
+                detail: format!(
+                    "tape never wrote '{slot}', so the backward seed d_{slot} has \
+                     no version to attach to"
+                ),
+                fix: format!("the block must write '{slot}' at least once"),
+            }),
+        }
+    }
+
+    // Reverse liveness walk. Exec VJPs always run (missing cotangents
+    // become zeros) and produce cotangents for every input; comm adjoints
+    // run only when their output cotangent is live.
+    for (op, (in_keys, out_keys)) in tape.iter().zip(versioned.iter()).rev() {
+        if op.is_exec {
+            for k in out_keys {
+                live.remove(k);
+            }
+            for k in in_keys {
+                live.insert(k.clone());
+            }
+        } else {
+            let out_live = out_keys.iter().any(|k| live.contains(k));
+            if out_live {
+                for k in out_keys {
+                    live.remove(k);
+                }
+                for k in in_keys {
+                    live.insert(k.clone());
+                }
+            } else {
+                // the adjoint collective is skipped: nothing downstream
+                // consumed its output. Benign for pure comm plumbing,
+                // but if its input cotangent is never produced by
+                // another path, the entry liveness check below fires.
+                let _ = &op.label;
+            }
+        }
+    }
+
+    for slot in ["m", "z"] {
+        if cur.contains_key(slot) && !live.contains(&(slot.to_string(), 0)) {
+            diagnostics.push(Diagnostic {
+                step: 0,
+                rank: 0,
+                hazard: Hazard::BackwardLiveness,
+                buffer: slot.to_string(),
+                detail: format!(
+                    "no cotangent path reaches '{slot}' at entry (version 0): \
+                     run_backward would error `backward produced no d_{slot}`"
+                ),
+                fix: format!(
+                    "ensure the dataflow from the entry '{slot}' to the block \
+                     outputs is connected through differentiable steps"
+                ),
+            });
+        }
+    }
+
+    VerifyReport {
+        program: format!("{name}/backward"),
+        n: n.max(1),
+        steps: tape.len(),
+        diagnostics,
+        elapsed_micros: start.elapsed().as_micros(),
+    }
+}
+
+fn comm_kind_name(op: &ScheduleOp) -> &'static str {
+    match op {
+        ScheduleOp::Gather { .. } => "gather",
+        ScheduleOp::Scatter { .. } => "scatter",
+        ScheduleOp::AllToAll { .. } => "all_to_all",
+        _ => "",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ir::{canonical_schedule, Program};
+    use super::*;
+
+    fn entry() -> Vec<(&'static str, Option<Vec<usize>>)> {
+        vec![("m", None), ("z", None)]
+    }
+
+    fn verify_ops(ops: &[ScheduleOp], n: usize) -> VerifyReport {
+        verify(&Program::from_schedule("test", ops, n, &entry()))
+    }
+
+    fn exec(seg: &str, inputs: &[&str], outputs: &[&str]) -> ScheduleOp {
+        ScheduleOp::Exec {
+            seg: seg.into(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    fn gather(input: &str, output: &str, id: &str) -> ScheduleOp {
+        ScheduleOp::Gather {
+            input: input.into(),
+            output: output.into(),
+            axis: 0,
+            id: Some(id.into()),
+        }
+    }
+
+    fn wait(id: &str) -> ScheduleOp {
+        ScheduleOp::Wait { id: id.into() }
+    }
+
+    #[test]
+    fn canonical_forward_is_hazard_free() {
+        for n in [1, 2, 4, 8] {
+            let p = Program::from_schedule("canonical", &canonical_schedule(), n, &entry());
+            let report = verify(&p);
+            assert!(
+                report.is_hazard_free(),
+                "dap={n}: {:?}",
+                report.diagnostics
+            );
+        }
+    }
+
+    #[test]
+    fn canonical_backward_is_live() {
+        for n in [1, 2, 4, 8] {
+            let report = verify_backward("canonical", &canonical_schedule(), n);
+            assert!(
+                report.is_hazard_free(),
+                "dap={n}: {:?}",
+                report.diagnostics
+            );
+        }
+    }
+
+    #[test]
+    fn stale_read_is_refuted() {
+        // PR 2's stale-read shape: read the landing slot before the wait
+        let ops = vec![
+            gather("m", "g", "ag"),
+            exec("use", &["g"], &["out"]),
+            wait("ag"),
+        ];
+        let report = verify_ops(&ops, 2);
+        let d = &report.diagnostics[0];
+        assert_eq!(d.hazard, Hazard::StaleRead);
+        assert_eq!(d.step, 1);
+        assert_eq!(d.buffer, "g");
+        assert!(d.fix.contains("wait 'ag'"), "{}", d.fix);
+        assert!(report.gate().is_err());
+    }
+
+    #[test]
+    fn waw_on_landing_slot_is_refuted() {
+        let ops = vec![
+            gather("m", "g", "ag"),
+            exec("clobber", &["m"], &["g"]),
+            wait("ag"),
+        ];
+        let report = verify_ops(&ops, 2);
+        assert_eq!(report.diagnostics[0].hazard, Hazard::WriteAfterWrite);
+        assert_eq!(report.diagnostics[0].buffer, "g");
+    }
+
+    #[test]
+    fn input_overwrite_after_trigger_is_legal() {
+        // snapshot semantics: the collective read 'm' at the trigger
+        let ops = vec![
+            gather("m", "g", "ag"),
+            exec("bump", &["m"], &["m"]),
+            wait("ag"),
+        ];
+        assert!(verify_ops(&ops, 2).is_hazard_free());
+    }
+
+    #[test]
+    fn unknown_and_double_wait_are_distinguished() {
+        let report = verify_ops(&[wait("nope")], 2);
+        assert_eq!(report.diagnostics[0].hazard, Hazard::UnknownWait);
+
+        let ops = vec![gather("m", "g", "ag"), wait("ag"), wait("ag")];
+        let report = verify_ops(&ops, 2);
+        assert_eq!(report.diagnostics.len(), 1);
+        assert_eq!(report.diagnostics[0].hazard, Hazard::DoubleWait);
+        assert_eq!(report.diagnostics[0].step, 2);
+    }
+
+    #[test]
+    fn inflight_id_reuse_is_refuted_and_rearm_is_legal() {
+        let ops = vec![gather("m", "g", "ag"), gather("z", "h", "ag"), wait("ag")];
+        let report = verify_ops(&ops, 2);
+        assert!(report.diagnostics.iter().any(|d| d.hazard == Hazard::IdReuse));
+
+        // trigger -> wait -> trigger -> wait with the same id is legal
+        let ops = vec![
+            gather("m", "g", "ag"),
+            wait("ag"),
+            gather("z", "h", "ag"),
+            wait("ag"),
+        ];
+        assert!(verify_ops(&ops, 2).is_hazard_free());
+    }
+
+    #[test]
+    fn unjoined_at_end_is_refuted() {
+        let report = verify_ops(&[gather("m", "g", "ag")], 2);
+        assert_eq!(report.diagnostics[0].hazard, Hazard::UnjoinedAtEnd);
+        assert_eq!(report.diagnostics[0].buffer, "ag");
+    }
+
+    #[test]
+    fn unset_slot_is_refuted_once() {
+        let ops = vec![exec("a", &["ghost"], &["x"]), exec("b", &["ghost"], &["y"])];
+        let report = verify_ops(&ops, 2);
+        // recovery defines the slot: one diagnostic, not a cascade
+        assert_eq!(report.diagnostics.len(), 1);
+        assert_eq!(report.diagnostics[0].hazard, Hazard::UnsetSlot);
+    }
+
+    #[test]
+    fn shard_shape_divisibility_is_checked() {
+        let p = Program::from_schedule(
+            "shape",
+            &[ScheduleOp::Scatter {
+                input: "m".into(),
+                output: "s".into(),
+                axis: 0,
+                id: None,
+            }],
+            4,
+            &[("m", Some(vec![6, 8]))], // 6 % 4 != 0
+        );
+        let report = verify(&p);
+        assert_eq!(report.diagnostics[0].hazard, Hazard::ShardShape);
+    }
+
+    #[test]
+    fn backward_refutes_disconnected_entry() {
+        // z is never part of the dataflow: d_z at version 0 unreachable
+        let ops = vec![exec("only_m", &["m"], &["m"]), exec("z_new", &[], &["z"])];
+        let report = verify_backward("disconnected", &ops, 2);
+        assert!(report
+            .diagnostics
+            .iter()
+            .any(|d| d.hazard == Hazard::BackwardLiveness && d.buffer == "z"));
+    }
+
+    #[test]
+    fn backward_refutes_empty_tape() {
+        let report = verify_backward("empty", &[wait("x")], 2);
+        assert!(report
+            .diagnostics
+            .iter()
+            .any(|d| d.hazard == Hazard::BackwardLiveness));
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let report = verify_ops(&[gather("m", "g", "ag")], 2);
+        let doc = report.to_json().to_string();
+        assert!(doc.contains("\"hazard_free\": false") || doc.contains("\"hazard_free\":false"));
+        assert!(doc.contains("unjoined-at-end"));
+    }
+}

@@ -35,7 +35,7 @@ use crate::tensor::HostTensor;
 use crate::train::{ParallelPlan, SyntheticBackend, TrainBackend, Trainer};
 use std::collections::BTreeMap;
 use std::hint::black_box;
-use std::time::Instant;
+use std::time::Instant; // lint:allow(wallclock) — the bench harness measures wall time by definition
 
 /// Harness knobs.
 #[derive(Clone, Copy, Debug, Default)]

@@ -16,7 +16,7 @@ use crate::error::{Error, Result};
 use crate::tensor::HostTensor;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::Instant; // lint:allow(wallclock) — real-clock comm-job measurement (MeasuredComm)
 
 /// One deferred collective: the op kind plus the input shards captured at
 /// the schedule's trigger point (issue-time snapshot semantics).

@@ -38,7 +38,7 @@ use crate::manifest::ScheduleOp;
 use crate::tensor::HostTensor;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::Instant; // lint:allow(wallclock) — measured wall/comm overlap ledger (MeasuredComm)
 
 /// Per-slot, per-rank tensor state threaded through the schedule.
 pub type State = BTreeMap<String, Vec<HostTensor>>;

@@ -31,7 +31,7 @@ use crate::tensor::HostTensor;
 use crate::train::DataGen;
 use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Instant; // lint:allow(wallclock) — executed-replay wall clock, never in the ledger
 
 use super::cache::{CacheStats, ResultCache};
 use super::planner::{MemoPlanner, Placement, PlacementPlanner};

@@ -50,7 +50,7 @@ use crate::tensor::HostTensor;
 use crate::train::DataGen;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::Instant; // lint:allow(wallclock) — per-request wall-latency measurement
 
 /// Default input-stream seed — matches the legacy `fastfold infer` data
 /// stream, so engine outputs are bit-for-bit comparable to the old path.

@@ -125,6 +125,11 @@ pub struct PlacementPlanner {
     pub scaling: ScalingModel,
     /// Kernel-quality profile requests execute with.
     pub profile: ImplProfile,
+    /// Mandatory admission verification: every DAP placement first proves
+    /// its schedule hazard-free ([`crate::analysis::admit`]). `false` is
+    /// the `--unsafe-skip-verify` escape hatch for benchmarking the
+    /// verifier's own cost.
+    pub verify: bool,
 }
 
 impl PlacementPlanner {
@@ -138,6 +143,7 @@ impl PlacementPlanner {
             max_dap: cfg.serve.max_dap,
             scaling: ScalingModel::default(),
             profile: ImplProfile::fastfold(),
+            verify: true,
         })
     }
 
@@ -167,8 +173,21 @@ impl PlacementPlanner {
     }
 
     /// Place one request, or reject it ([`Error::SimOom`]) when no fleet
-    /// strategy up to `max_dap` can hold it.
+    /// strategy up to `max_dap` can hold it. A DAP placement is admitted
+    /// only after the static schedule verifier proves its program
+    /// hazard-free — "crashes mid-run" becomes "rejected at admission".
     pub fn place(&self, req: &InferRequest) -> Result<Placement> {
+        let placement = self.place_unverified(req)?;
+        if self.verify {
+            if let BackendKind::Dap(n) = placement.backend {
+                let cfg = self.plan_cfg(req)?;
+                crate::analysis::admit("engine", &cfg, n)?;
+            }
+        }
+        Ok(placement)
+    }
+
+    fn place_unverified(&self, req: &InferRequest) -> Result<Placement> {
         let cfg = self.plan_cfg(req)?;
         let flops = model_flops(&cfg) * INFER_RECYCLES;
 
@@ -363,6 +382,7 @@ mod tests {
             max_dap: 8,
             scaling: ScalingModel::default(),
             profile: ImplProfile::fastfold(),
+            verify: true,
         }
     }
 
@@ -384,6 +404,20 @@ mod tests {
         let dist = p.place(&req(4096)).unwrap();
         assert_eq!(dist.backend, BackendKind::Dap(8));
         assert!(dist.modeled_peak_gb <= p.gpu.memory / 1e9);
+    }
+
+    #[test]
+    fn dap_admission_gate_is_transparent_for_hazard_free_schedules() {
+        // the shipping schedule proves hazard-free, so the mandatory
+        // static-verify step must not change any placement verdict —
+        // and the --unsafe-skip-verify hatch must agree with it
+        let mut p = planner();
+        let r = req(4096);
+        let verified = p.place(&r).unwrap();
+        assert_eq!(verified.backend, BackendKind::Dap(8));
+        p.verify = false;
+        let skipped = p.place(&r).unwrap();
+        assert_eq!(verified.backend, skipped.backend);
     }
 
     #[test]

@@ -36,6 +36,7 @@
 
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod bench;
 pub mod comm;
 pub mod config;

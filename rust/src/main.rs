@@ -18,9 +18,16 @@
 //! fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu a100_40g]
 //!                    [--headroom F] [--json] [--config f.toml]
 //! fastfold bench     [--json] [--out BENCH_host.json] [--quick]
+//! fastfold verify    [--preset P] [--dap N] [--all] [--json FILE]
+//! fastfold lint      [--src DIR]
 //! fastfold report    <table2|table3|table4|table5|fig10|fig11|fig13|validate>
 //! fastfold info
 //! ```
+//!
+//! `verify` runs the static schedule verifier (the same pass the planner,
+//! trainer, and daemon run as a mandatory admission gate; skip it at your
+//! own risk with `--unsafe-skip-verify` on those commands); `lint` scans
+//! the source tree for banned nondeterminism patterns.
 //!
 //! The `report` subcommands print console reproductions of every paper
 //! table/figure that is model-driven; the executed benches live under
@@ -84,6 +91,8 @@ fn run(args: &[String]) -> Result<()> {
         "loadgen" => cmd_loadgen(&flags),
         "autochunk" => cmd_autochunk(&flags),
         "bench" => cmd_bench(&flags),
+        "verify" => cmd_verify(&flags),
+        "lint" => cmd_lint(&flags),
         "report" => cmd_report(&pos, &flags),
         "info" => cmd_info(&flags),
         _ => {
@@ -106,6 +115,8 @@ fn run(args: &[String]) -> Result<()> {
                  fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu G] \
                  [--headroom F] [--json] [--config f.toml]\n  \
                  fastfold bench  [--json] [--out BENCH_host.json] [--quick]\n  \
+                 fastfold verify [--preset P] [--dap N] [--all] [--json FILE]\n  \
+                 fastfold lint   [--src DIR]\n  \
                  fastfold report <table2|table3|table4|table5|fig10|fig11|fig13|validate>\n  \
                  fastfold info   [--artifacts DIR]"
             );
@@ -149,6 +160,23 @@ fn cmd_train(_pos: &[String], flags: &BTreeMap<String, String>) -> Result<()> {
     let plan = ParallelPlan::from_config(&run_cfg.parallel);
     let model_cfg = ModelConfig::preset(&run_cfg.preset)?;
     plan.validate(&model_cfg)?;
+    // mandatory admission: prove the DAP program (fwd + bwd) hazard-free
+    // before any executable is loaded
+    if flags.contains_key("unsafe-skip-verify") {
+        eprintln!(
+            "[fastfold] warning: --unsafe-skip-verify: static schedule \
+             admission skipped"
+        );
+    } else {
+        let us = plan.admit_schedule(&model_cfg)?;
+        if plan.dap > 1 {
+            println!(
+                "[fastfold] schedule admission: canonical DAP program \
+                 (fwd+bwd) proven hazard-free at dap={} in {us} us",
+                plan.dap
+            );
+        }
+    }
     // modeled memory-fit advisory against the configured device (the host
     // testbed executes regardless — the verdict is what a fleet would hit)
     let gpu = GpuSpec::by_name(&run_cfg.autochunk.gpu)?;
@@ -394,6 +422,22 @@ fn apply_engine_flags(
     Ok(())
 }
 
+/// The `--unsafe-skip-verify` escape hatch (for benchmarking the
+/// verifier's own cost): disable the mandatory static schedule admission
+/// the planner runs before every DAP placement.
+fn apply_verify_flag(
+    planner: &mut PlacementPlanner,
+    flags: &BTreeMap<String, String>,
+) {
+    if flags.contains_key("unsafe-skip-verify") {
+        eprintln!(
+            "[fastfold] warning: --unsafe-skip-verify: static schedule \
+             admission disabled"
+        );
+        planner.verify = false;
+    }
+}
+
 /// `fastfold infer` — a one-request special case of the serving engine:
 /// the placement planner picks (or `--dap N` pins) the backend, the
 /// engine executes it, and the legacy advisory/overlap notes print from
@@ -423,7 +467,8 @@ fn cmd_infer(flags: &BTreeMap<String, String>) -> Result<()> {
     }
 
     let rt = Runtime::new(&artifacts_dir(flags))?;
-    let engine = Engine::new(&rt, &run_cfg)?;
+    let mut engine = Engine::new(&rt, &run_cfg)?;
+    apply_verify_flag(&mut engine.planner, flags);
     let report = engine.serve(std::slice::from_ref(&req))?;
     let outcome = report
         .outcomes
@@ -476,11 +521,12 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     }
 
     if flags.contains_key("dry-run") {
-        return serve_dry_run(&run_cfg, &requests);
+        return serve_dry_run(&run_cfg, &requests, flags);
     }
 
     let rt = Runtime::new(&artifacts_dir(flags))?;
-    let engine = Engine::new(&rt, &run_cfg)?;
+    let mut engine = Engine::new(&rt, &run_cfg)?;
+    apply_verify_flag(&mut engine.planner, flags);
     println!(
         "[fastfold] serving {} requests (policy={}, threads={}, gpu={}, max_dap={})\n",
         requests.len(),
@@ -508,8 +554,13 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
 /// order, modeled makespan, aggregate modeled PFLOP/s. Runs the same
 /// `plan_batch` pipeline as `Engine::serve`, so the preview cannot drift
 /// from the executed schedule.
-fn serve_dry_run(run_cfg: &RunConfig, requests: &[InferRequest]) -> Result<()> {
-    let planner = PlacementPlanner::from_run_config(run_cfg)?;
+fn serve_dry_run(
+    run_cfg: &RunConfig,
+    requests: &[InferRequest],
+    flags: &BTreeMap<String, String>,
+) -> Result<()> {
+    let mut planner = PlacementPlanner::from_run_config(run_cfg)?;
+    apply_verify_flag(&mut planner, flags);
     let threads = run_cfg.parallel.resolve_threads();
     println!(
         "[fastfold] serve dry-run: {} requests (policy={}, lanes={}, gpu={}, max_dap={})\n",
@@ -590,7 +641,8 @@ fn cmd_daemon(flags: &BTreeMap<String, String>) -> Result<()> {
     let dcfg = DaemonConfig::from_run_config(&run_cfg, lanes);
 
     if flags.contains_key("modeled") {
-        let planner = PlacementPlanner::from_run_config(&run_cfg)?;
+        let mut planner = PlacementPlanner::from_run_config(&run_cfg)?;
+        apply_verify_flag(&mut planner, flags);
         println!(
             "[fastfold] daemon (modeled): {} events (policy={}, lanes={}, queue_cap={}, \
              cache={})",
@@ -607,7 +659,8 @@ fn cmd_daemon(flags: &BTreeMap<String, String>) -> Result<()> {
     }
 
     let rt = Runtime::new(&artifacts_dir(flags))?;
-    let engine = Engine::new(&rt, &run_cfg)?;
+    let mut engine = Engine::new(&rt, &run_cfg)?;
+    apply_verify_flag(&mut engine.planner, flags);
     println!(
         "[fastfold] daemon: {} events (policy={}, lanes={}, threads={}, queue_cap={}, \
          cache={})",
@@ -656,7 +709,8 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
     // the replay packs onto the spec's modeled lanes, NOT --threads:
     // that keeps the ledger a pure function of (config, spec)
     let dcfg = DaemonConfig::from_run_config(&run_cfg, spec.lanes);
-    let planner = PlacementPlanner::from_run_config(&run_cfg)?;
+    let mut planner = PlacementPlanner::from_run_config(&run_cfg)?;
+    apply_verify_flag(&mut planner, flags);
 
     println!(
         "[fastfold] loadgen: synthesizing {} requests (seed {}, lanes {}, policy {}, \
@@ -853,6 +907,129 @@ fn cmd_bench(flags: &BTreeMap<String, String>) -> Result<()> {
         println!("\n(use --json to emit the BENCH_host.json ledger)");
     }
     Ok(())
+}
+
+// ------------------------------------------------------- verify / lint
+
+/// `fastfold verify` — the static schedule verifier on the CLI: lift the
+/// canonical DAP program into the effect IR and prove (or refute, with
+/// structured diagnostics) every hazard class, forward and backward.
+/// `--all` sweeps every preset × dap ∈ {1,2,4,8} geometry the benches and
+/// smoke jobs use; `--json FILE` writes the diagnostics artifact CI
+/// uploads. Exits nonzero on any hazard — the same verdict the planner,
+/// trainer, and daemon admission gates enforce.
+fn cmd_verify(flags: &BTreeMap<String, String>) -> Result<()> {
+    use fastfold::analysis;
+    let all = flags.contains_key("all");
+    let presets: Vec<String> = if all {
+        ["tiny", "small", "initial_training", "finetune"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    } else {
+        vec![flags.get("preset").cloned().unwrap_or_else(|| "tiny".into())]
+    };
+    let daps: Vec<usize> = if all || !flags.contains_key("dap") {
+        vec![1, 2, 4, 8]
+    } else {
+        vec![num_flag(flags, "dap", 2)?]
+    };
+
+    let mut reports = Vec::new();
+    let mut t = Table::new(&["program", "dap", "steps", "hazards", "verify (us)"]);
+    for preset in &presets {
+        let cfg = ModelConfig::preset(preset)?;
+        for &n in &daps {
+            if cfg.n_seq % n != 0 || cfg.n_res % n != 0 {
+                println!(
+                    "[fastfold] skipping {preset} at dap={n}: does not divide \
+                     (n_seq={}, n_res={})",
+                    cfg.n_seq, cfg.n_res
+                );
+                continue;
+            }
+            let (fwd, bwd) = analysis::verify_canonical(preset, &cfg, n);
+            for r in [fwd, bwd] {
+                t.row(&[
+                    r.program.clone(),
+                    r.n.to_string(),
+                    r.steps.to_string(),
+                    r.diagnostics.len().to_string(),
+                    r.elapsed_micros.to_string(),
+                ]);
+                reports.push(r);
+            }
+        }
+    }
+    t.print();
+    for r in &reports {
+        for d in &r.diagnostics {
+            println!(
+                "  {} [step {} rank {} {}] '{}': {} — fix: {}",
+                r.program,
+                d.step,
+                d.rank,
+                d.hazard.name(),
+                d.buffer,
+                d.detail,
+                d.fix
+            );
+        }
+    }
+
+    if let Some(path) = flags.get("json") {
+        // bare `--json` (no value) falls back to the default artifact name
+        let path =
+            if path == "true" { "VERIFY_report.json" } else { path.as_str() };
+        let doc = fastfold::json::Json::Arr(
+            reports.iter().map(|r| r.to_json()).collect(),
+        );
+        std::fs::write(path, format!("{doc}\n"))?;
+        eprintln!("[fastfold] wrote {path}");
+    }
+
+    let hazards: usize = reports.iter().map(|r| r.diagnostics.len()).sum();
+    let total_us: u128 = reports.iter().map(|r| r.elapsed_micros).sum();
+    println!(
+        "\n[fastfold] verified {} programs in {total_us} us total: {}",
+        reports.len(),
+        if hazards == 0 {
+            "all hazard-free".to_string()
+        } else {
+            format!("{hazards} hazard(s) refuted")
+        }
+    );
+    if hazards > 0 {
+        return Err(fastfold::Error::Schedule(format!(
+            "verify: {hazards} hazard(s) refuted (see diagnostics above)"
+        )));
+    }
+    Ok(())
+}
+
+/// `fastfold lint` — determinism lint over the Rust source tree: flag
+/// unordered hash containers (iteration order one refactor away from a
+/// nondeterministic ledger) and wall-clock reads outside files annotated
+/// as measurement planes. Exits nonzero on any violation.
+fn cmd_lint(flags: &BTreeMap<String, String>) -> Result<()> {
+    use std::path::Path;
+    let default = if Path::new("rust/src").is_dir() { "rust/src" } else { "src" };
+    let root = flags.get("src").cloned().unwrap_or_else(|| default.to_string());
+    let violations = fastfold::analysis::lint::lint_dir(Path::new(&root))?;
+    if violations.is_empty() {
+        println!(
+            "[fastfold] lint: {root}: clean (rules: unordered-container, \
+             wallclock)"
+        );
+        return Ok(());
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    Err(fastfold::Error::msg(format!(
+        "lint: {} violation(s) in {root}",
+        violations.len()
+    )))
 }
 
 // ---------------------------------------------------------------- info

@@ -4,7 +4,7 @@
 //! `report`/`serve` subcommands and the bench harnesses.
 
 use std::collections::BTreeMap;
-use std::time::Instant;
+use std::time::Instant; // lint:allow(wallclock) — Stopwatch wall measurement
 
 /// Measure a closure's wall time over `iters` runs after `warmup` runs;
 /// returns (mean, min, max) seconds.

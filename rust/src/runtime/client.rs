@@ -7,7 +7,7 @@ use crate::error::{Error, Result};
 use crate::manifest::Manifest;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::Instant; // lint:allow(wallclock) — PJRT load-time measurement
 
 pub struct Runtime {
     client: xla::PjRtClient,

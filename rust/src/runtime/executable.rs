@@ -6,7 +6,7 @@ use crate::error::{Error, Result};
 use crate::manifest::{ArtifactSpec, DType, TensorSpec};
 use crate::tensor::{HostTensor, IntTensor};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::time::Instant;
+use std::time::Instant; // lint:allow(wallclock) — executable run-time measurement
 
 /// An input value: f32 tensor, i32 tensor, or f32 scalar.
 #[derive(Clone, Debug)]

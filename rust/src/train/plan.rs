@@ -108,6 +108,16 @@ impl ParallelPlan {
         Ok(())
     }
 
+    /// Static schedule admission for this plan's DAP degree: prove the
+    /// canonical per-block program (forward **and** backward — training
+    /// runs both) hazard-free before any executable is loaded. Returns
+    /// the verifier's own cost in microseconds; `Err` refuses the run
+    /// with the leading diagnostics. `fastfold train` calls this right
+    /// after [`Self::validate`] unless `--unsafe-skip-verify` is given.
+    pub fn admit_schedule(&self, cfg: &ModelConfig) -> Result<u128> {
+        crate::analysis::admit("train", cfg, self.dap)
+    }
+
     /// Per-device training memory this plan needs (bytes): framework
     /// overhead + [`TRAIN_ACT_MULT`] × the DAP-sharded activation working
     /// set + the optimizer state (params, grads, Adam m/v — replicated on
@@ -179,6 +189,14 @@ mod tests {
         assert!(ParallelPlan::new(1, 1, 0).validate(&cfg).is_err());
         assert!(ParallelPlan::new(1, 3, 1).validate(&cfg).is_err());
         assert!(ParallelPlan::new(2, 4, 2).validate(&cfg).is_ok());
+    }
+
+    #[test]
+    fn schedule_admission_accepts_shipping_plans() {
+        let cfg = ModelConfig::tiny();
+        for dap in [1usize, 2, 4, 8] {
+            ParallelPlan::new(2, dap, 1).admit_schedule(&cfg).unwrap();
+        }
     }
 
     #[test]

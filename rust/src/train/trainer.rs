@@ -37,7 +37,7 @@ use crate::dap::executor::default_threads;
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
 use crate::tensor::HostTensor;
-use std::time::Instant;
+use std::time::Instant; // lint:allow(wallclock) — steps/s wall measurement
 
 /// The training coordinator: owns parameters, optimizer state, the data
 /// generators, and a [`TrainBackend`].

@@ -1,0 +1,372 @@
+//! Static-verifier property suite: the abstract interpreter in
+//! `fastfold::analysis` must agree with the runtime hazard detectors in
+//! `fastfold::dap::executor` on every schedule — valid or mutated.
+//!
+//! Three layers:
+//!
+//! 1. **Regression** — the exact stale-read repro the runtime detectors
+//!    were built around is now rejected *statically*, before anything
+//!    runs, with an actionable diagnostic.
+//! 2. **Fuzz (valid)** — randomized hazard-free schedules at
+//!    dap ∈ {2,4,8}: the verifier proves them clean AND the threaded
+//!    executor runs them to completion.
+//! 3. **Fuzz (mutated)** — each hazard class injected into valid
+//!    schedules: the verifier refutes them AND the runtime detectors
+//!    error. Static verdict ⇔ dynamic outcome, schedule by schedule.
+
+use fastfold::analysis::{self, Hazard, Program, VerifyReport};
+use fastfold::comm::Collectives;
+use fastfold::dap::executor::{run_schedule, MeasuredComm, State};
+use fastfold::dap::{CommCost, SegmentRunner, Timeline};
+use fastfold::manifest::ScheduleOp;
+use fastfold::rng::Rng;
+use fastfold::tensor::HostTensor;
+use fastfold::Result;
+use std::sync::Mutex;
+
+/// Deterministic pure-host segment runner (no PJRT): `scale` is
+/// 0.5x + 1 elementwise.
+struct FakeRunner;
+
+impl SegmentRunner for FakeRunner {
+    fn run_segment(
+        &self,
+        seg: &str,
+        _rank: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        match seg {
+            "scale" => Ok(vec![HostTensor::new(
+                inputs[0].shape.clone(),
+                inputs[0].data().iter().map(|&x| 0.5 * x + 1.0).collect(),
+            )?]),
+            other => {
+                Err(fastfold::Error::Schedule(format!("fake: no segment '{other}'")))
+            }
+        }
+    }
+}
+
+/// Block-entry state: m (16×4) and z (16×8), each split along axis 0.
+fn entry_state(rng: &mut Rng, n: usize) -> State {
+    let m = HostTensor::new(vec![16, 4], rng.normal_vec(64, 1.0)).unwrap();
+    let z = HostTensor::new(vec![16, 8], rng.normal_vec(128, 1.0)).unwrap();
+    let mut state = State::new();
+    state.insert("m".into(), m.split_axis(0, n).unwrap());
+    state.insert("z".into(), z.split_axis(0, n).unwrap());
+    state
+}
+
+/// Run a schedule on the real threaded executor (the dynamic oracle).
+fn run_dynamic(sched: &[ScheduleOp], n: usize, seed: u64) -> Result<()> {
+    let mut rng = Rng::new(seed);
+    let mut state = entry_state(&mut rng, n);
+    let comm = Collectives::new(n);
+    let timeline = Mutex::new(Timeline::new(n, CommCost::cpu_calibrated(), true));
+    let measured = Mutex::new(MeasuredComm::default());
+    run_schedule(
+        sched, n, 2, &FakeRunner, &comm, &timeline, &measured, None, &mut state,
+        None,
+    )
+}
+
+/// Lift a schedule into the effect IR with the harness entry shapes and
+/// run the static verifier.
+fn run_static(sched: &[ScheduleOp], n: usize) -> VerifyReport {
+    let entry = [
+        ("m", Some(vec![16 / n, 4])),
+        ("z", Some(vec![16 / n, 8])),
+    ];
+    analysis::verify(&Program::from_schedule("fuzz", sched, n, &entry))
+}
+
+fn has(report: &VerifyReport, hazard: Hazard) -> bool {
+    report.diagnostics.iter().any(|d| d.hazard == hazard)
+}
+
+// ------------------------------------------------------------ generator
+
+/// One async collective inside a generated schedule, with the indices the
+/// mutation suite needs to corrupt it.
+struct AsyncSite {
+    trigger_idx: usize,
+    wait_idx: usize,
+    id: String,
+    dest: String,
+}
+
+fn exec(input: &str, output: &str) -> ScheduleOp {
+    ScheduleOp::Exec {
+        seg: "scale".into(),
+        inputs: vec![input.into()],
+        outputs: vec![output.into()],
+    }
+}
+
+fn gather(input: &str, output: &str, id: &str) -> ScheduleOp {
+    ScheduleOp::Gather {
+        input: input.into(),
+        output: output.into(),
+        axis: 0,
+        id: Some(id.into()),
+    }
+}
+
+/// Generate a random hazard-free schedule: async gathers to fresh slots,
+/// execs over joined slots, every collective joined before the end.
+/// Invariant maintained: no op ever reads or writes an in-flight
+/// destination, and only `m`/`z`/joined/exec-written slots are read.
+fn fuzz_valid(rng: &mut Rng, len: usize) -> (Vec<ScheduleOp>, Vec<AsyncSite>) {
+    let mut sched: Vec<ScheduleOp> = Vec::new();
+    let mut sites: Vec<AsyncSite> = Vec::new();
+    let mut safe: Vec<String> = vec!["m".into(), "z".into()];
+    // (id, dest, trigger_idx) for collectives triggered but not yet joined
+    let mut inflight: Vec<(String, String, usize)> = Vec::new();
+    let mut next = 0usize;
+
+    for _ in 0..len {
+        let choice = rng.below(3);
+        if choice == 0 && inflight.len() < 3 {
+            // trigger an async gather into a fresh slot
+            let src = safe[rng.below(safe.len())].clone();
+            let id = format!("h{next}");
+            let dest = format!("g{next}");
+            next += 1;
+            inflight.push((id.clone(), dest.clone(), sched.len()));
+            sched.push(gather(&src, &dest, &id));
+        } else if choice == 1 && !inflight.is_empty() {
+            // join the oldest in-flight collective; its dest becomes safe
+            let (id, dest, trigger_idx) = inflight.remove(0);
+            sites.push(AsyncSite {
+                trigger_idx,
+                wait_idx: sched.len(),
+                id: id.clone(),
+                dest: dest.clone(),
+            });
+            sched.push(ScheduleOp::Wait { id });
+            safe.push(dest);
+        } else {
+            // exec a safe slot into a fresh one (never an in-flight dest)
+            let src = safe[rng.below(safe.len())].clone();
+            let dest = format!("e{next}");
+            next += 1;
+            sched.push(exec(&src, &dest));
+            safe.push(dest);
+        }
+    }
+    // drain: join everything still in flight
+    for (id, dest, trigger_idx) in inflight {
+        sites.push(AsyncSite {
+            trigger_idx,
+            wait_idx: sched.len(),
+            id: id.clone(),
+            dest,
+        });
+        sched.push(ScheduleOp::Wait { id });
+    }
+    (sched, sites)
+}
+
+// ----------------------------------------------------------- regression
+
+#[test]
+fn pr2_stale_read_repro_is_rejected_statically_before_it_runs() {
+    // the exact schedule the runtime detectors were built around: an Exec
+    // consuming `m` while an async gather is still writing it
+    let sched = vec![gather("m", "m", "h1"), exec("m", "m"), ScheduleOp::Wait {
+        id: "h1".into(),
+    }];
+    let n = 2;
+
+    let report = run_static(&sched, n);
+    assert!(has(&report, Hazard::StaleRead), "{:?}", report.diagnostics);
+    let d = report
+        .diagnostics
+        .iter()
+        .find(|d| d.hazard == Hazard::StaleRead)
+        .unwrap();
+    assert_eq!(d.buffer, "m");
+    assert_eq!(d.step, 1, "hazard manifests at the Exec step");
+    assert!(!d.fix.is_empty(), "diagnostic must suggest a schedule edit");
+    let gate = report.gate().unwrap_err().to_string();
+    assert!(gate.contains("stale-read"), "{gate}");
+
+    // the dynamic oracle agrees — but only after actually running
+    let err = run_dynamic(&sched, n, 9).unwrap_err().to_string();
+    assert!(err.contains("stale read"), "{err}");
+}
+
+#[test]
+fn canonical_program_is_proven_hazard_free_fwd_and_bwd() {
+    let cfg = fastfold::config::ModelConfig::tiny();
+    for n in [1usize, 2, 4, 8] {
+        let (fwd, bwd) = analysis::verify_canonical("tiny", &cfg, n);
+        assert!(
+            fwd.is_hazard_free(),
+            "forward dap={n}: {:?}",
+            fwd.diagnostics
+        );
+        assert!(
+            bwd.is_hazard_free(),
+            "backward dap={n}: {:?}",
+            bwd.diagnostics
+        );
+        assert!(fwd.steps > 0 && bwd.steps > 0);
+        let json = fwd.to_json().to_string();
+        assert!(json.contains("\"hazard_free\":true"), "{json}");
+    }
+}
+
+// ---------------------------------------------------------- fuzz: valid
+
+#[test]
+fn fuzz_valid_schedules_verify_clean_and_run_clean() {
+    for n in [2usize, 4, 8] {
+        for case in 0..20u64 {
+            let mut rng = Rng::new(4000 + case);
+            let len = 8 + rng.below(8);
+            let (sched, _) = fuzz_valid(&mut rng, len);
+            let report = run_static(&sched, n);
+            assert!(
+                report.is_hazard_free(),
+                "n={n} case={case}: static refutation of a valid schedule: \
+                 {:?}\nschedule: {sched:?}",
+                report.diagnostics
+            );
+            let ran = run_dynamic(&sched, n, 5000 + case);
+            assert!(
+                ran.is_ok(),
+                "n={n} case={case}: runtime rejected a statically-clean \
+                 schedule: {:?}",
+                ran.err()
+            );
+        }
+    }
+}
+
+// -------------------------------------------------------- fuzz: mutated
+
+/// The injectable hazard classes, one mutation each.
+#[derive(Clone, Copy, Debug)]
+enum Mutation {
+    ReadDestBeforeWait,
+    WriteDestBeforeWait,
+    DropWait,
+    DuplicateWait,
+    UnknownWait,
+    RetriggerInflightId,
+}
+
+const MUTATIONS: [Mutation; 6] = [
+    Mutation::ReadDestBeforeWait,
+    Mutation::WriteDestBeforeWait,
+    Mutation::DropWait,
+    Mutation::DuplicateWait,
+    Mutation::UnknownWait,
+    Mutation::RetriggerInflightId,
+];
+
+/// Corrupt a valid schedule at one async site. Returns the mutated
+/// schedule and the hazard class the verifier must report.
+fn mutate(
+    sched: &[ScheduleOp],
+    site: &AsyncSite,
+    m: Mutation,
+) -> (Vec<ScheduleOp>, Hazard) {
+    let mut out = sched.to_vec();
+    match m {
+        Mutation::ReadDestBeforeWait => {
+            out.insert(site.wait_idx, exec(&site.dest, "mut_out"));
+            (out, Hazard::StaleRead)
+        }
+        Mutation::WriteDestBeforeWait => {
+            out.insert(site.wait_idx, exec("m", &site.dest));
+            (out, Hazard::WriteAfterWrite)
+        }
+        Mutation::DropWait => {
+            out.remove(site.wait_idx);
+            (out, Hazard::UnjoinedAtEnd)
+        }
+        Mutation::DuplicateWait => {
+            out.insert(site.wait_idx + 1, ScheduleOp::Wait { id: site.id.clone() });
+            (out, Hazard::DoubleWait)
+        }
+        Mutation::UnknownWait => {
+            out.push(ScheduleOp::Wait { id: "never-triggered".into() });
+            (out, Hazard::UnknownWait)
+        }
+        Mutation::RetriggerInflightId => {
+            out.insert(site.wait_idx, gather("z", "mut_dup", &site.id));
+            (out, Hazard::IdReuse)
+        }
+    }
+}
+
+#[test]
+fn fuzz_mutated_schedules_are_refuted_statically_and_dynamically() {
+    for n in [2usize, 4] {
+        for case in 0..10u64 {
+            let mut rng = Rng::new(7000 + case);
+            let (sched, sites) = fuzz_valid(&mut rng, 10);
+            if sites.is_empty() {
+                continue; // no async site to corrupt in this draw
+            }
+            for m in MUTATIONS {
+                let site = &sites[rng.below(sites.len())];
+                assert!(
+                    site.trigger_idx < site.wait_idx,
+                    "generator invariant: trigger precedes join"
+                );
+                let (bad, want) = mutate(&sched, site, m);
+
+                let report = run_static(&bad, n);
+                assert!(
+                    has(&report, want),
+                    "n={n} case={case} {m:?}: verifier missed {want:?}: \
+                     {:?}\nschedule: {bad:?}",
+                    report.diagnostics
+                );
+                // every diagnostic is actionable: step, buffer, fix
+                for d in &report.diagnostics {
+                    assert!(d.step < bad.len() + 1);
+                    assert!(!d.buffer.is_empty() && !d.fix.is_empty());
+                }
+
+                let ran = run_dynamic(&bad, n, 8000 + case);
+                assert!(
+                    ran.is_err(),
+                    "n={n} case={case} {m:?}: runtime accepted a schedule \
+                     the verifier refuted\nschedule: {bad:?}"
+                );
+            }
+        }
+    }
+}
+
+/// The headline equivalence property, stated directly: over every
+/// schedule this suite generates — valid and mutated — the static
+/// verdict and the dynamic outcome are the same boolean.
+#[test]
+fn static_verdict_matches_dynamic_outcome() {
+    let n = 4;
+    let mut schedules: Vec<Vec<ScheduleOp>> = Vec::new();
+    for case in 0..10u64 {
+        let mut rng = Rng::new(9000 + case);
+        let (sched, sites) = fuzz_valid(&mut rng, 10);
+        if let Some(site) = sites.first() {
+            for m in MUTATIONS {
+                schedules.push(mutate(&sched, site, m).0);
+            }
+        }
+        schedules.push(sched);
+    }
+    for (i, sched) in schedules.iter().enumerate() {
+        let statically_clean = run_static(sched, n).is_hazard_free();
+        let dynamically_clean = run_dynamic(sched, n, 100 + i as u64).is_ok();
+        assert_eq!(
+            statically_clean, dynamically_clean,
+            "verdict split on schedule {i}: static={statically_clean} \
+             dynamic={dynamically_clean}\nschedule: {sched:?}"
+        );
+    }
+}
