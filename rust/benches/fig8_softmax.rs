@@ -25,7 +25,7 @@ const ITERS: usize = 30;
 
 fn native_mode() {
     let mut rng = Rng::new(8);
-    let mut pool = ScratchPool::new();
+    let pool = ScratchPool::new();
     println!("\nFig 8 — Fused Softmax, native host kernels (paper band: 1.77–3.32x)\n");
     let mut t = Table::new(&[
         "size (rows x cols)", "naive (µs)", "fused (µs)", "host ratio",
@@ -40,7 +40,7 @@ fn native_mode() {
             std::hint::black_box(out[0]);
         });
         let naive = bench_med(3, ITERS, || {
-            softmax::softmax_rows_naive(&x, cols, scale, &mut pool, &mut out);
+            softmax::softmax_rows_naive(&x, cols, scale, &pool, &mut out);
             std::hint::black_box(out[0]);
         });
         // bandwidth-bound model: the unfused chain makes ~8 read+write

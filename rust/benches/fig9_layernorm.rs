@@ -25,7 +25,7 @@ const EPS: f32 = 1e-5;
 
 fn native_mode() {
     let mut rng = Rng::new(9);
-    let mut pool = ScratchPool::new();
+    let pool = ScratchPool::new();
     println!(
         "\nFig 9 — Fused LayerNorm, native host kernels (paper: 5.53–8.65x vs \
          native, 1.20–1.62x vs Apex)\n"
@@ -48,7 +48,7 @@ fn native_mode() {
             std::hint::black_box(out[0]);
         });
         let naive = bench_med(3, ITERS, || {
-            layernorm::layernorm_rows_naive(&x, cols, &g, &b, EPS, &mut pool, &mut out);
+            layernorm::layernorm_rows_naive(&x, cols, &g, &b, EPS, &pool, &mut out);
             std::hint::black_box(out[0]);
         });
         t.row(&[

@@ -1,15 +1,17 @@
-//! Determinism lint: a self-contained scan of the repo's Rust source for
-//! banned nondeterminism patterns on output paths.
+//! Source lint: a self-contained scan of the repo's Rust source for
+//! banned patterns — nondeterminism on output paths, and kernel calls
+//! that bypass the device-backend dispatch plane.
 //!
-//! Two rules, mirroring the conventions the codebase is built on:
+//! Three rules, mirroring the conventions the codebase is built on:
 //!
-//! * **unordered-container** — `HashMap`/`HashSet` anywhere in the
-//!   source. Every map that can feed serialized output (JSON ledgers,
+//! * **unordered-container** — hash-keyed maps/sets (the two
+//!   `std::collections` unordered containers) anywhere in the source.
+//!   Every map that can feed serialized output (JSON ledgers,
 //!   manifests, comm logs, reports) is a `BTreeMap`/`BTreeSet` in this
 //!   repo so iteration order is part of the contract; an unordered
 //!   container is one refactor away from a nondeterministic ledger.
 //!   Per-line escape: a `lint:allow(unordered)` comment on the same line.
-//! * **wallclock** — `Instant::now()` / `SystemTime` reads outside an
+//! * **wallclock** — `Instant` / system-time reads outside an
 //!   annotated measurement plane. Real-clock reads are legitimate only
 //!   where wall time *is* the measurement (the `MeasuredComm` ledger,
 //!   bench harnesses, the verifier's own cost line); those files carry a
@@ -17,6 +19,16 @@
 //!   `use std::time` import, with a justification. A wall-clock read in
 //!   an unannotated file is flagged — that is how time leaks into
 //!   schedules, seeds, and serialized output.
+//! * **backend-bypass** — direct kernel-plane paths or raw mutable
+//!   tensor-view math outside the device plane. All kernel dispatch
+//!   goes through `crate::device` (`DeviceBackend`), so planner,
+//!   engine, daemon, and trainer never name a concrete backend; a
+//!   direct call silently pins the scalar path and dodges the
+//!   simd/thread configuration. Only the *code* part of a line is
+//!   matched (anything before the first `//` — rustdoc prose is
+//!   exempt), and the escape marker `lint:allow(backend)` is honored on
+//!   the flagged line or the line immediately above, for the sanctioned
+//!   sites: the device plane itself, the oracle, and bench baselines.
 //!
 //! The patterns below are assembled with `concat!` so this file never
 //! matches its own rules.
@@ -30,10 +42,19 @@ const UNORDERED: [&str; 2] = [concat!("Hash", "Map"), concat!("Hash", "Set")];
 /// Patterns whose presence on a line flags the wallclock rule.
 const WALLCLOCK: [&str; 2] =
     [concat!("Instant", "::now("), concat!("System", "Time")];
+/// Patterns whose presence in the code part of a line (before any `//`)
+/// flags the backend-bypass rule: kernel-plane paths and raw mutable
+/// tensor views are only legal inside the device plane.
+const BACKEND_BYPASS: [&str; 2] =
+    [concat!("kernels", "::"), concat!(".data_mut", "(")];
 /// Same-line escape marker for the unordered-container rule.
 const ALLOW_UNORDERED: &str = concat!("lint:allow(", "unordered)");
 /// File-level escape marker declaring an annotated measurement plane.
 const ALLOW_WALLCLOCK: &str = concat!("lint:allow(", "wallclock)");
+/// Escape marker for the backend-bypass rule, honored on the flagged
+/// line or the line immediately above (so a justification comment can
+/// sit over a `use` or call without widening the line).
+const ALLOW_BACKEND: &str = concat!("lint:allow(", "backend)");
 
 /// One banned-pattern hit: where, which rule, and the offending line.
 #[derive(Clone, Debug)]
@@ -42,7 +63,8 @@ pub struct Violation {
     pub file: String,
     /// 1-indexed line number.
     pub line: usize,
-    /// Rule name: `unordered-container` or `wallclock`.
+    /// Rule name: `unordered-container`, `wallclock`, or
+    /// `backend-bypass`.
     pub rule: &'static str,
     /// The flagged source line, trimmed.
     pub excerpt: String,
@@ -63,7 +85,8 @@ pub fn lint_source(name: &str, src: &str) -> Vec<Violation> {
     let mut out = Vec::new();
     // the file-level marker declares the whole file a measurement plane
     let wallclock_allowed = src.contains(ALLOW_WALLCLOCK);
-    for (i, line) in src.lines().enumerate() {
+    let lines: Vec<&str> = src.lines().collect();
+    for (i, &line) in lines.iter().enumerate() {
         if UNORDERED.iter().any(|p| line.contains(p))
             && !line.contains(ALLOW_UNORDERED)
         {
@@ -79,6 +102,19 @@ pub fn lint_source(name: &str, src: &str) -> Vec<Violation> {
                 file: name.to_string(),
                 line: i + 1,
                 rule: "wallclock",
+                excerpt: line.trim().to_string(),
+            });
+        }
+        // backend-bypass matches only code, not comment text: rustdoc
+        // that *documents* the kernel plane must not trip the rule
+        let code = line.split("//").next().unwrap_or("");
+        let allowed = line.contains(ALLOW_BACKEND)
+            || (i > 0 && lines[i - 1].contains(ALLOW_BACKEND));
+        if BACKEND_BYPASS.iter().any(|p| code.contains(p)) && !allowed {
+            out.push(Violation {
+                file: name.to_string(),
+                line: i + 1,
+                rule: "backend-bypass",
                 excerpt: line.trim().to_string(),
             });
         }
@@ -150,6 +186,35 @@ mod tests {
             ALLOW_WALLCLOCK, pat
         );
         assert!(lint_source("x.rs", &ok).is_empty());
+    }
+
+    #[test]
+    fn backend_bypass_flags_code_but_not_docs() {
+        let pat = BACKEND_BYPASS[0];
+        let bad = format!("use crate::{}softmax;\n", pat);
+        let v = lint_source("x.rs", &bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!((v[0].rule, v[0].line), ("backend-bypass", 1));
+        // rustdoc prose documenting the kernel plane is exempt
+        let doc = format!("/// see {}softmax for the scalar path\n", pat);
+        assert!(lint_source("x.rs", &doc).is_empty());
+        // raw mutable tensor views are the other half of the rule
+        let bad2 = format!("let d = t{});\n", BACKEND_BYPASS[1]);
+        assert_eq!(lint_source("x.rs", &bad2).len(), 1);
+    }
+
+    #[test]
+    fn backend_bypass_marker_same_line_or_line_above() {
+        let pat = BACKEND_BYPASS[0];
+        let same =
+            format!("use crate::{}softmax; // {} — oracle\n", pat, ALLOW_BACKEND);
+        assert!(lint_source("x.rs", &same).is_empty());
+        let above =
+            format!("// {} — oracle\nuse crate::{}softmax;\n", ALLOW_BACKEND, pat);
+        assert!(lint_source("x.rs", &above).is_empty());
+        // the marker must not leak further than one line down
+        let far = format!("// {}\n\nuse crate::{}softmax;\n", ALLOW_BACKEND, pat);
+        assert_eq!(lint_source("x.rs", &far).len(), 1);
     }
 
     #[test]

@@ -13,7 +13,13 @@
 //! * **ring_all_reduce** — the DP gradient reduction's host GB/s with
 //!   its per-step snapshots in the reused scratch buffer.
 //! * **fused_softmax / fused_layernorm / fused_adam** — the paper's
-//!   Fig 8/9 fused-vs-naive deltas, on host ([`crate::kernels`]).
+//!   Fig 8/9 fused-vs-naive deltas, on host ([`crate::kernels`]), plus
+//!   the per-backend `scalar_us` / `simd_us` / `simd_speedup` ratio
+//!   (ScalarHost oracle vs the f32x8 SimdHost pinned to one thread, so
+//!   the ratio isolates lanes from threading).
+//! * **thread_scaling** — SimdHost within-op scaling curves for softmax
+//!   and LayerNorm at 1/2/4/8 worker threads on large-row shapes
+//!   (`scaling_1_to_N` = t1/tN; ≈1.0 on a 1-core box, gated in CI).
 //! * **synthetic_train** — artifact-free hybrid trainer steps/s (the CI
 //!   train smoke's layout: dp=2 × dap=2 on the synthetic backend).
 //! * **serve_makespan** — the serving planner's modeled makespan and
@@ -25,9 +31,11 @@
 
 use crate::comm::ring::ring_all_reduce;
 use crate::config::{ModelConfig, RunConfig, TrainConfig};
+use crate::device::{simd_backend_with_threads, DeviceBackend, ScalarHost};
 use crate::error::Result;
 use crate::inference::engine::{plan_batch, InferRequest, PlacementPlanner, SchedPolicy};
 use crate::json::Json;
+// lint:allow(backend) — the bench times raw kernels as the baseline side
 use crate::kernels::{adam, layernorm, softmax, ScratchPool};
 use crate::metrics::{median, Table};
 use crate::rng::Rng;
@@ -147,13 +155,24 @@ fn bench_softmax(o: &BenchOptions, rng: &mut Rng) -> Json {
     let x = rng.normal_vec(rows * cols, 2.0);
     let scale = 1.0 / (cols as f32).sqrt();
     let mut out = vec![0.0f32; x.len()];
-    let mut pool = ScratchPool::new();
+    let pool = ScratchPool::new();
     let fused = bench_med(3, iters, || {
         softmax::softmax_rows(&x, cols, scale, &mut out);
         black_box(out[0]);
     });
     let naive = bench_med(3, iters, || {
-        softmax::softmax_rows_naive(&x, cols, scale, &mut pool, &mut out);
+        softmax::softmax_rows_naive(&x, cols, scale, &pool, &mut out);
+        black_box(out[0]);
+    });
+    // backend ratio: scalar oracle vs single-threaded f32x8 lanes, so
+    // the speedup isolates vectorization from within-op threading
+    let simd1 = simd_backend_with_threads(1);
+    let scalar = bench_med(3, iters, || {
+        ScalarHost.softmax_rows(&x, cols, scale, &mut out);
+        black_box(out[0]);
+    });
+    let simd = bench_med(3, iters, || {
+        simd1.softmax_rows(&x, cols, scale, &mut out);
         black_box(out[0]);
     });
     obj(vec![
@@ -162,6 +181,9 @@ fn bench_softmax(o: &BenchOptions, rng: &mut Rng) -> Json {
         ("naive_us", num(naive * 1e6)),
         ("fused_us", num(fused * 1e6)),
         ("speedup", num(naive / fused.max(1e-9))),
+        ("scalar_us", num(scalar * 1e6)),
+        ("simd_us", num(simd * 1e6)),
+        ("simd_speedup", num(scalar / simd.max(1e-9))),
     ])
 }
 
@@ -172,7 +194,7 @@ fn bench_layernorm(o: &BenchOptions, rng: &mut Rng) -> Json {
     let g = rng.normal_vec(cols, 1.0);
     let b = rng.normal_vec(cols, 1.0);
     let mut out = vec![0.0f32; x.len()];
-    let mut pool = ScratchPool::new();
+    let pool = ScratchPool::new();
     let fused = bench_med(3, iters, || {
         layernorm::layernorm_rows(&x, cols, &g, &b, 1e-5, &mut out);
         black_box(out[0]);
@@ -182,7 +204,16 @@ fn bench_layernorm(o: &BenchOptions, rng: &mut Rng) -> Json {
         black_box(out[0]);
     });
     let naive = bench_med(3, iters, || {
-        layernorm::layernorm_rows_naive(&x, cols, &g, &b, 1e-5, &mut pool, &mut out);
+        layernorm::layernorm_rows_naive(&x, cols, &g, &b, 1e-5, &pool, &mut out);
+        black_box(out[0]);
+    });
+    let simd1 = simd_backend_with_threads(1);
+    let scalar = bench_med(3, iters, || {
+        ScalarHost.layernorm_rows(&x, cols, &g, &b, 1e-5, &mut out);
+        black_box(out[0]);
+    });
+    let simd = bench_med(3, iters, || {
+        simd1.layernorm_rows(&x, cols, &g, &b, 1e-5, &mut out);
         black_box(out[0]);
     });
     obj(vec![
@@ -193,6 +224,9 @@ fn bench_layernorm(o: &BenchOptions, rng: &mut Rng) -> Json {
         ("fused_us", num(fused * 1e6)),
         ("speedup", num(naive / fused.max(1e-9))),
         ("speedup_vs_apex", num(apex / fused.max(1e-9))),
+        ("scalar_us", num(scalar * 1e6)),
+        ("simd_us", num(simd * 1e6)),
+        ("simd_speedup", num(scalar / simd.max(1e-9))),
     ])
 }
 
@@ -203,17 +237,17 @@ fn bench_adam(o: &BenchOptions, rng: &mut Rng) -> Json {
     let g = rng.normal_vec(n, 0.5);
     let m0 = rng.normal_vec(n, 0.1);
     let v0: Vec<f32> = rng.normal_vec(n, 0.1).iter().map(|x| x * x).collect();
-    let mut pool = ScratchPool::new();
+    let pool = ScratchPool::new();
     // state clones happen OUTSIDE the timed region: only the update
     // traversal itself is measured, so the ratio isolates pass count
     // instead of being diluted by identical memcpy costs on both sides
-    let mut timed = |naive: bool| -> f64 {
+    let timed = |naive: bool| -> f64 {
         let mut times = Vec::with_capacity(iters);
         for it in 0..iters + 2 {
             let (mut p, mut m, mut v) = (p0.clone(), m0.clone(), v0.clone());
             let t0 = Instant::now();
             if naive {
-                adam::adam_step_naive(3, 1e-3, &mut p, &g, &mut m, &mut v, &mut pool);
+                adam::adam_step_naive(3, 1e-3, &mut p, &g, &mut m, &mut v, &pool);
             } else {
                 adam::adam_step(3, 1e-3, &mut p, &g, &mut m, &mut v);
             }
@@ -227,11 +261,79 @@ fn bench_adam(o: &BenchOptions, rng: &mut Rng) -> Json {
     };
     let fused = timed(false);
     let naive = timed(true);
+    let timed_backend = |be: &dyn DeviceBackend| -> f64 {
+        let mut times = Vec::with_capacity(iters);
+        for it in 0..iters + 2 {
+            let (mut p, mut m, mut v) = (p0.clone(), m0.clone(), v0.clone());
+            let t0 = Instant::now();
+            be.adam_step(3, 1e-3, &mut p, &g, &mut m, &mut v);
+            let dt = t0.elapsed().as_secs_f64();
+            black_box(p[0]);
+            if it >= 2 {
+                times.push(dt);
+            }
+        }
+        median(times)
+    };
+    let simd1 = simd_backend_with_threads(1);
+    let scalar = timed_backend(&ScalarHost);
+    let simd = timed_backend(simd1.as_ref());
     obj(vec![
         ("elems", num(n as f64)),
         ("naive_us", num(naive * 1e6)),
         ("fused_us", num(fused * 1e6)),
         ("speedup", num(naive / fused.max(1e-9))),
+        ("scalar_us", num(scalar * 1e6)),
+        ("simd_us", num(simd * 1e6)),
+        ("simd_speedup", num(scalar / simd.max(1e-9))),
+    ])
+}
+
+fn bench_thread_scaling(o: &BenchOptions, rng: &mut Rng) -> Json {
+    // large-row shapes so the within-op banding has enough rows per
+    // worker to engage at every thread count (8 workers need >=512 rows
+    // at the 64-row admission floor)
+    let (rows, cols) = if o.quick { (2048usize, 128usize) } else { (8192, 256) };
+    let iters = if o.quick { 8 } else { 16 };
+    let x = rng.normal_vec(rows * cols, 2.0);
+    let scale = 1.0 / (cols as f32).sqrt();
+    let g = rng.normal_vec(cols, 1.0);
+    let b = rng.normal_vec(cols, 1.0);
+    let mut out = vec![0.0f32; x.len()];
+    let threads = [1usize, 2, 4, 8];
+    let mut run_kernel = |which: &str| -> Json {
+        let us: Vec<f64> = threads
+            .iter()
+            .map(|&t| {
+                let be = simd_backend_with_threads(t);
+                let med = bench_med(2, iters, || {
+                    if which == "softmax" {
+                        be.softmax_rows(&x, cols, scale, &mut out);
+                    } else {
+                        be.layernorm_rows(&x, cols, &g, &b, 1e-5, &mut out);
+                    }
+                    black_box(out[0]);
+                });
+                med * 1e6
+            })
+            .collect();
+        obj(vec![
+            ("rows", num(rows as f64)),
+            ("cols", num(cols as f64)),
+            ("t1_us", num(us[0])),
+            ("t2_us", num(us[1])),
+            ("t4_us", num(us[2])),
+            ("t8_us", num(us[3])),
+            ("scaling_1_to_2", num(us[0] / us[1].max(1e-3))),
+            ("scaling_1_to_4", num(us[0] / us[2].max(1e-3))),
+            ("scaling_1_to_8", num(us[0] / us[3].max(1e-3))),
+        ])
+    };
+    let softmax_curve = run_kernel("softmax");
+    let layernorm_curve = run_kernel("layernorm");
+    obj(vec![
+        ("softmax", softmax_curve),
+        ("layernorm", layernorm_curve),
     ])
 }
 
@@ -294,13 +396,19 @@ pub fn run_host_bench(opts: BenchOptions) -> Result<Json> {
     let mut rng = Rng::new(2024);
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("host".into()));
-    top.insert("version".to_string(), Json::Num(1.0));
+    // version 2.0: per-backend simd_speedup ratios + thread_scaling curves
+    top.insert("version".to_string(), Json::Num(2.0));
     top.insert("quick".to_string(), Json::Bool(opts.quick));
+    top.insert(
+        "device_backend".to_string(),
+        Json::Str(crate::device::current().name().into()),
+    );
     top.insert("shard_move".to_string(), bench_shard_move(&opts, &mut rng));
     top.insert("ring_all_reduce".to_string(), bench_ring(&opts, &mut rng));
     top.insert("fused_softmax".to_string(), bench_softmax(&opts, &mut rng));
     top.insert("fused_layernorm".to_string(), bench_layernorm(&opts, &mut rng));
     top.insert("fused_adam".to_string(), bench_adam(&opts, &mut rng));
+    top.insert("thread_scaling".to_string(), bench_thread_scaling(&opts, &mut rng));
     top.insert("synthetic_train".to_string(), bench_synthetic_train(&opts)?);
     top.insert("serve_makespan".to_string(), bench_serve_makespan()?);
     Ok(Json::Obj(top))
@@ -340,6 +448,24 @@ pub fn render_table(doc: &Json) -> Table {
                 format!("{:.1} µs fused", f(s, "fused_us")),
                 format!("{:.2}x", f(s, "speedup")),
             ]);
+            t.row(&[
+                format!("simd {label} (1 thread)"),
+                format!("{:.1} µs scalar", f(s, "scalar_us")),
+                format!("{:.1} µs simd", f(s, "simd_us")),
+                format!("{:.2}x", f(s, "simd_speedup")),
+            ]);
+        }
+    }
+    if let Ok(ts) = doc.get("thread_scaling") {
+        for (key, label) in [("softmax", "softmax"), ("layernorm", "layernorm")] {
+            if let Ok(s) = ts.get(key) {
+                t.row(&[
+                    format!("simd {label} threads 1→4"),
+                    format!("{:.1} µs t1", f(s, "t1_us")),
+                    format!("{:.1} µs t4", f(s, "t4_us")),
+                    format!("{:.2}x", f(s, "scaling_1_to_4")),
+                ]);
+            }
         }
     }
     if let Ok(s) = doc.get("synthetic_train") {

@@ -63,9 +63,10 @@ pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, Vec<u
             let c = (r + n - s) % n;
             let (lo, hi) = bounds[c];
             let sent = &scratch[r * max_chunk..r * max_chunk + (hi - lo)];
-            for (d, &v) in ranks[dst][lo..hi].iter_mut().zip(sent) {
-                *d += v;
-            }
+            // the accumulate is the collective's kernel entry point:
+            // dispatch through the device plane (bit-for-bit on every
+            // backend — elementwise add)
+            crate::device::current().add_assign(&mut ranks[dst][lo..hi], sent);
             wire[r] += (hi - lo) * 4;
         }
     }

@@ -279,6 +279,25 @@ impl Default for ServeConfig {
     }
 }
 
+/// Host device-backend settings (`[device]` section): which
+/// [`crate::device::DeviceBackend`] implementation the kernel plane
+/// dispatches through. The CLI resolves the final choice with
+/// `--device-backend` / `FASTFOLD_BACKEND` taking precedence over this
+/// field (see [`crate::device::resolve_kind`]) and writes the canonical
+/// name back here so downstream consumers (planner, perf model) price
+/// the backend that actually runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceConfig {
+    /// Backend name: `"scalar"`, `"simd"`, or `"xla-stub"`.
+    pub backend: String,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig { backend: "simd".into() }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub preset: String,
@@ -287,6 +306,7 @@ pub struct RunConfig {
     pub train: TrainConfig,
     pub autochunk: AutoChunkConfig,
     pub serve: ServeConfig,
+    pub device: DeviceConfig,
 }
 
 impl Default for RunConfig {
@@ -298,6 +318,7 @@ impl Default for RunConfig {
             train: TrainConfig::default(),
             autochunk: AutoChunkConfig::default(),
             serve: ServeConfig::default(),
+            device: DeviceConfig::default(),
         }
     }
 }
@@ -519,6 +540,15 @@ impl RunConfig {
                 cfg.serve.cache_gb = g;
             }
         }
+        if let Some(d) = doc.get("device") {
+            if let Some(v) = d.get("backend") {
+                let name = v.as_str()?;
+                // validate eagerly so a typo fails at config load, not at
+                // first dispatch; store the canonical spelling
+                let kind = crate::device::DeviceKind::parse(name)?;
+                cfg.device.backend = kind.name().to_string();
+            }
+        }
         Ok(cfg)
     }
 }
@@ -620,6 +650,21 @@ headroom = 0.25
         assert!(RunConfig::from_toml("[serve]\nmax_dap = 0").is_err());
         assert!(RunConfig::from_toml("[serve]\ncache_gb = -1.0").is_err());
         assert!(RunConfig::from_toml("[serve]\ncache_gb = 99999").is_err());
+    }
+
+    #[test]
+    fn device_section_parses_and_validates() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.device, DeviceConfig::default());
+        assert_eq!(cfg.device.backend, "simd");
+        let cfg =
+            RunConfig::from_toml("[device]\nbackend = \"scalar\"").unwrap();
+        assert_eq!(cfg.device.backend, "scalar");
+        let cfg =
+            RunConfig::from_toml("[device]\nbackend = \"xla-stub\"").unwrap();
+        assert_eq!(cfg.device.backend, "xla-stub");
+        assert!(RunConfig::from_toml("[device]\nbackend = \"cuda\"").is_err());
+        assert!(RunConfig::from_toml("[device]\nbackend = 3").is_err());
     }
 
     #[test]

@@ -1,0 +1,59 @@
+//! [`ScalarHost`]: the bit-exact oracle backend.
+//!
+//! Delegates every op, unchanged, to the PR 5 fused host kernels —
+//! strictly sequential, one element at a time. Every other backend is
+//! validated against this one (`tests/kernel_backends.rs`), so its
+//! numerics are frozen: bit-for-bit with the fused kernel plane by
+//! construction.
+
+use super::DeviceBackend;
+// lint:allow(backend) — ScalarHost is the sanctioned oracle over the kernel plane
+use crate::kernels::{adam, layernorm, softmax};
+// lint:allow(backend) — elementwise helpers live at the kernel-plane root
+use crate::kernels::{add_assign as add_assign_slices, scale as scale_slices};
+
+/// The scalar oracle (backend name `"scalar"`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalarHost;
+
+impl DeviceBackend for ScalarHost {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn softmax_rows(&self, x: &[f32], cols: usize, scale: f32, out: &mut [f32]) {
+        softmax::softmax_rows(x, cols, scale, out);
+    }
+
+    fn layernorm_rows(
+        &self,
+        x: &[f32],
+        cols: usize,
+        gamma: &[f32],
+        beta: &[f32],
+        eps: f32,
+        out: &mut [f32],
+    ) {
+        layernorm::layernorm_rows(x, cols, gamma, beta, eps, out);
+    }
+
+    fn adam_step(
+        &self,
+        step: usize,
+        lr: f32,
+        p: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+    ) {
+        adam::adam_step(step, lr, p, g, m, v);
+    }
+
+    fn add_assign(&self, dst: &mut [f32], src: &[f32]) {
+        add_assign_slices(dst, src);
+    }
+
+    fn scale(&self, dst: &mut [f32], s: f32) {
+        scale_slices(dst, s);
+    }
+}

@@ -1,0 +1,506 @@
+//! [`SimdHost`]: explicit f32x8 lanes + within-op row threading.
+//!
+//! The fast path of the device plane. Each kernel is restructured into
+//! lane-parallel passes over [`F32x8`] — a plain `[f32; 8]` wrapper
+//! whose ops are fixed 8-wide unrolled loops that LLVM lowers to vector
+//! instructions on any SSE2+ target (portable SIMD on stable Rust, no
+//! intrinsics) — with a scalar tail for the last `len % 8` elements,
+//! and banded across rows over scoped worker threads up to the
+//! rank-executor budget installed by [`super::configure`].
+//!
+//! Equivalence vs the scalar oracle ([`super::ScalarHost`]), pinned by
+//! `tests/kernel_backends.rs` at every thread count:
+//!
+//! * **softmax — bit-for-bit.** Both backends exponentiate through the
+//!   shared polynomial [`exp32`]; the lane max-reduction can differ
+//!   from the sequential fold only in the sign of a ±0 maximum, which
+//!   provably never changes an output bit; the row sum is folded in
+//!   scalar element order over the stored numerators; the divide is
+//!   elementwise. Rows are independent, so banding is invariant too.
+//! * **Adam / add_assign / scale — bit-for-bit.** Purely elementwise
+//!   (IEEE mul/add/div/sqrt are exact per element, vectorized or not),
+//!   so lane width and band boundaries cannot show up in the bits.
+//! * **LayerNorm — tolerance.** Eight Welford lanes instead of the
+//!   oracle's four change the summation order; validated to tolerance
+//!   like every other Welford-order change in the kernel plane.
+
+use super::DeviceBackend;
+// lint:allow(backend) — the lane path shares the oracle's Adam constants
+use crate::kernels::adam::{BETA1, BETA2, EPS};
+// lint:allow(backend) — shared polynomial exp keeps scalar/simd bit-identical
+use crate::kernels::math::exp32;
+use std::ops::{Add, AddAssign, Div, Mul, Sub};
+
+/// Lane width of [`F32x8`].
+pub const F32X8_LANES: usize = 8;
+const LANES: usize = F32X8_LANES;
+
+/// Below this many rows per candidate worker, row-banded kernels stay
+/// sequential (thread spawn latency would dominate the pass).
+const MIN_ROWS_PER_WORKER: usize = 64;
+/// Below this many elements per candidate worker, elementwise kernels
+/// stay sequential.
+const MIN_ELEMS_PER_WORKER: usize = 1 << 16;
+
+/// Eight f32 lanes as a plain array wrapper. Every op is a fixed
+/// 8-iteration `array::from_fn`, which the loop/SLP vectorizers turn
+/// into vector instructions; semantics are exactly the per-lane scalar
+/// op, so lane code is bit-comparable to scalar code by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct F32x8([f32; 8]);
+
+impl F32x8 {
+    /// All lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        Self([v; 8])
+    }
+
+    /// Load lanes from the first 8 elements of `s`.
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> Self {
+        Self(std::array::from_fn(|i| s[i]))
+    }
+
+    /// Store lanes into the first 8 elements of `out`.
+    #[inline(always)]
+    pub fn store(self, out: &mut [f32]) {
+        out[..8].copy_from_slice(&self.0);
+    }
+
+    /// Per-lane greater-of select with `f32::max`'s NaN behavior for a
+    /// non-NaN accumulator: a NaN in `rhs` keeps the `self` lane.
+    #[inline(always)]
+    pub fn max(self, rhs: Self) -> Self {
+        Self(std::array::from_fn(|i| {
+            if rhs.0[i] > self.0[i] {
+                rhs.0[i]
+            } else {
+                self.0[i]
+            }
+        }))
+    }
+
+    /// Per-lane square root (IEEE-exact, identical scalar or vector).
+    #[inline(always)]
+    pub fn sqrt(self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i].sqrt()))
+    }
+
+    /// Per-lane [`exp32`] — literally the scalar polynomial per lane,
+    /// so lane and scalar exponentials are the same bits.
+    #[inline(always)]
+    pub fn exp32(self) -> Self {
+        Self(std::array::from_fn(|i| exp32(self.0[i])))
+    }
+
+    /// Greater-of fold across the lanes (lane 0 first; same ±0/NaN
+    /// semantics as [`F32x8::max`]).
+    #[inline(always)]
+    pub fn reduce_max(self) -> f32 {
+        let mut mx = self.0[0];
+        for &v in &self.0[1..] {
+            if v > mx {
+                mx = v;
+            }
+        }
+        mx
+    }
+
+    /// The lanes as a plain array (Welford lane merges).
+    #[inline(always)]
+    pub fn to_array(self) -> [f32; 8] {
+        self.0
+    }
+}
+
+impl Add for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, rhs: Self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i] + rhs.0[i]))
+    }
+}
+
+impl Sub for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, rhs: Self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i] - rhs.0[i]))
+    }
+}
+
+impl Mul for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, rhs: Self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i] * rhs.0[i]))
+    }
+}
+
+impl Div for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn div(self, rhs: Self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i] / rhs.0[i]))
+    }
+}
+
+impl AddAssign for F32x8 {
+    #[inline(always)]
+    fn add_assign(&mut self, rhs: Self) {
+        *self = *self + rhs;
+    }
+}
+
+/// The f32x8 fast path (backend name `"simd"`).
+///
+/// `threads: None` — the form the global dispatch uses — reads the
+/// process-wide budget installed by [`super::configure`] at each call;
+/// [`SimdHost::with_threads`] pins an exact worker count (bench ratio
+/// and scaling probes, property tests).
+#[derive(Clone, Copy, Debug)]
+pub struct SimdHost {
+    threads: Option<usize>,
+}
+
+impl SimdHost {
+    /// Budget follows [`super::configure`] (the static instance behind
+    /// [`super::current`]).
+    pub const fn auto() -> Self {
+        SimdHost { threads: None }
+    }
+
+    /// Budget pinned to exactly `threads` within-op workers.
+    pub const fn with_threads(threads: usize) -> Self {
+        SimdHost { threads: Some(threads) }
+    }
+
+    fn budget(&self) -> usize {
+        match self.threads {
+            Some(t) => t.max(1),
+            None => super::active_threads(),
+        }
+    }
+}
+
+/// Workers actually worth spawning: the budget, capped so each worker
+/// keeps at least `min_units` of `units` (and never zero workers).
+fn worker_count(budget: usize, units: usize, min_units: usize) -> usize {
+    budget.min((units / min_units).max(1))
+}
+
+impl DeviceBackend for SimdHost {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn softmax_rows(&self, x: &[f32], cols: usize, scale: f32, out: &mut [f32]) {
+        assert!(cols > 0, "softmax over 0 columns");
+        assert_eq!(x.len() % cols, 0, "input not a whole number of rows");
+        assert_eq!(out.len(), x.len(), "output length mismatch");
+        let rows = x.len() / cols;
+        let workers = worker_count(self.budget(), rows, MIN_ROWS_PER_WORKER);
+        if workers <= 1 {
+            softmax_band(x, cols, scale, out);
+            return;
+        }
+        // whole rows per band — rows are independent, so banding cannot
+        // change any output bit
+        let band = ((rows + workers - 1) / workers) * cols;
+        std::thread::scope(|s| {
+            for (xc, oc) in x.chunks(band).zip(out.chunks_mut(band)) {
+                s.spawn(move || softmax_band(xc, cols, scale, oc));
+            }
+        });
+    }
+
+    fn layernorm_rows(
+        &self,
+        x: &[f32],
+        cols: usize,
+        gamma: &[f32],
+        beta: &[f32],
+        eps: f32,
+        out: &mut [f32],
+    ) {
+        assert!(cols > 0, "layernorm over 0 columns");
+        assert_eq!(x.len() % cols, 0, "input not a whole number of rows");
+        assert_eq!(gamma.len(), cols, "gamma length mismatch");
+        assert_eq!(beta.len(), cols, "beta length mismatch");
+        assert_eq!(out.len(), x.len(), "output length mismatch");
+        let rows = x.len() / cols;
+        let workers = worker_count(self.budget(), rows, MIN_ROWS_PER_WORKER);
+        if workers <= 1 {
+            layernorm_band(x, cols, gamma, beta, eps, out);
+            return;
+        }
+        let band = ((rows + workers - 1) / workers) * cols;
+        std::thread::scope(|s| {
+            for (xc, oc) in x.chunks(band).zip(out.chunks_mut(band)) {
+                s.spawn(move || layernorm_band(xc, cols, gamma, beta, eps, oc));
+            }
+        });
+    }
+
+    fn adam_step(
+        &self,
+        step: usize,
+        lr: f32,
+        p: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+    ) {
+        assert!(
+            p.len() == g.len() && p.len() == m.len() && p.len() == v.len(),
+            "adam: length mismatch (p={}, g={}, m={}, v={})",
+            p.len(),
+            g.len(),
+            m.len(),
+            v.len()
+        );
+        let n = p.len();
+        let workers = worker_count(self.budget(), n, MIN_ELEMS_PER_WORKER);
+        if workers <= 1 {
+            adam_band(step, lr, p, g, m, v);
+            return;
+        }
+        // purely elementwise: any banding is bit-invariant
+        let band = (n + workers - 1) / workers;
+        std::thread::scope(|s| {
+            let bands = p
+                .chunks_mut(band)
+                .zip(g.chunks(band))
+                .zip(m.chunks_mut(band))
+                .zip(v.chunks_mut(band));
+            for (((pc, gc), mc), vc) in bands {
+                s.spawn(move || adam_band(step, lr, pc, gc, mc, vc));
+            }
+        });
+    }
+
+    fn add_assign(&self, dst: &mut [f32], src: &[f32]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let workers = worker_count(self.budget(), dst.len(), MIN_ELEMS_PER_WORKER);
+        if workers <= 1 {
+            add_band(dst, src);
+            return;
+        }
+        let band = (dst.len() + workers - 1) / workers;
+        std::thread::scope(|s| {
+            for (dc, sc) in dst.chunks_mut(band).zip(src.chunks(band)) {
+                s.spawn(move || add_band(dc, sc));
+            }
+        });
+    }
+
+    fn scale(&self, dst: &mut [f32], s: f32) {
+        let workers = worker_count(self.budget(), dst.len(), MIN_ELEMS_PER_WORKER);
+        if workers <= 1 {
+            scale_band(dst, s);
+            return;
+        }
+        let band = (dst.len() + workers - 1) / workers;
+        std::thread::scope(|sc| {
+            for dc in dst.chunks_mut(band) {
+                sc.spawn(move || scale_band(dc, s));
+            }
+        });
+    }
+}
+
+/// Lane softmax over one band of whole rows. Pass structure (vs the
+/// oracle's fused exp+sum loop): lane max → lane exp store → **scalar
+/// element-order sum over the stored numerators** (the same fold the
+/// oracle runs, so the sum bits match) → lane divide.
+fn softmax_band(x: &[f32], cols: usize, scale: f32, out: &mut [f32]) {
+    let head = cols - cols % LANES;
+    let scale8 = F32x8::splat(scale);
+    for (orow, xrow) in out.chunks_exact_mut(cols).zip(x.chunks_exact(cols)) {
+        let mut mx = f32::NEG_INFINITY;
+        if head > 0 {
+            let mut mx8 = F32x8::splat(f32::NEG_INFINITY);
+            for c in xrow[..head].chunks_exact(LANES) {
+                mx8 = mx8.max(F32x8::load(c) * scale8);
+            }
+            mx = mx8.reduce_max();
+        }
+        for &xv in &xrow[head..] {
+            let sv = xv * scale;
+            if sv > mx {
+                mx = sv;
+            }
+        }
+        let mx8 = F32x8::splat(mx);
+        for (oc, xc) in orow[..head]
+            .chunks_exact_mut(LANES)
+            .zip(xrow[..head].chunks_exact(LANES))
+        {
+            let e = (F32x8::load(xc) * scale8 - mx8).exp32();
+            e.store(oc);
+        }
+        for (o, &xv) in orow[head..].iter_mut().zip(&xrow[head..]) {
+            *o = exp32(xv * scale - mx);
+        }
+        let sum: f32 = orow.iter().sum();
+        let sum8 = F32x8::splat(sum);
+        for oc in orow[..head].chunks_exact_mut(LANES) {
+            let q = F32x8::load(oc) / sum8;
+            q.store(oc);
+        }
+        for o in orow[head..].iter_mut() {
+            *o /= sum;
+        }
+    }
+}
+
+/// Lane LayerNorm over one band of whole rows: 8 interleaved Welford
+/// lanes (the oracle uses 4) + a scalar-Welford tail, merged with the
+/// parallel-Welford combine, then a lane normalize+affine pass.
+fn layernorm_band(x: &[f32], cols: usize, gamma: &[f32], beta: &[f32], eps: f32, out: &mut [f32]) {
+    let head = cols - cols % LANES;
+    let chunks = head / LANES;
+    // running-mean reciprocals 1/(k+1), shared by every row and lane
+    let recip: Vec<f32> = (0..chunks).map(|k| 1.0 / (k as f32 + 1.0)).collect();
+    for (orow, xrow) in out.chunks_exact_mut(cols).zip(x.chunks_exact(cols)) {
+        let mut mean_acc = 0.0f32;
+        let mut m2_acc = 0.0f32;
+        let mut n_acc = 0.0f32;
+        if head > 0 {
+            let mut mean8 = F32x8::splat(0.0);
+            let mut m28 = F32x8::splat(0.0);
+            for (k, c) in xrow[..head].chunks_exact(LANES).enumerate() {
+                let xv = F32x8::load(c);
+                let delta = xv - mean8;
+                mean8 += delta * F32x8::splat(recip[k]);
+                m28 += delta * (xv - mean8);
+            }
+            let meanl = mean8.to_array();
+            let m2l = m28.to_array();
+            let per_lane = chunks as f32;
+            mean_acc = meanl[0];
+            m2_acc = m2l[0];
+            n_acc = per_lane;
+            for l in 1..LANES {
+                let delta = meanl[l] - mean_acc;
+                let n = n_acc + per_lane;
+                m2_acc += m2l[l] + delta * delta * n_acc * per_lane / n;
+                mean_acc += delta * per_lane / n;
+                n_acc = n;
+            }
+        }
+        if head < cols {
+            let mut mean_t = 0.0f32;
+            let mut m2_t = 0.0f32;
+            let mut cnt_t = 0.0f32;
+            for &xv in &xrow[head..] {
+                cnt_t += 1.0;
+                let delta = xv - mean_t;
+                mean_t += delta / cnt_t;
+                m2_t += delta * (xv - mean_t);
+            }
+            let delta = mean_t - mean_acc;
+            let n = n_acc + cnt_t;
+            m2_acc += m2_t + delta * delta * n_acc * cnt_t / n;
+            mean_acc += delta * cnt_t / n;
+        }
+        let var = m2_acc / cols as f32;
+        let rstd = 1.0 / (var + eps).sqrt();
+        let mean8 = F32x8::splat(mean_acc);
+        let rstd8 = F32x8::splat(rstd);
+        let gb = gamma[..head]
+            .chunks_exact(LANES)
+            .zip(beta[..head].chunks_exact(LANES));
+        for ((oc, xc), (gc, bc)) in orow[..head]
+            .chunks_exact_mut(LANES)
+            .zip(xrow[..head].chunks_exact(LANES))
+            .zip(gb)
+        {
+            let nv = (F32x8::load(xc) - mean8) * rstd8 * F32x8::load(gc) + F32x8::load(bc);
+            nv.store(oc);
+        }
+        for ((o, &xv), (&g, &b)) in orow[head..]
+            .iter_mut()
+            .zip(&xrow[head..])
+            .zip(gamma[head..].iter().zip(beta[head..].iter()))
+        {
+            *o = (xv - mean_acc) * rstd * g + b;
+        }
+    }
+}
+
+/// Lane Adam over one band: identical per-element op sequence as the
+/// oracle (same constant folds, same evaluation order), 8 elements at a
+/// time plus a scalar tail — bit-for-bit by construction.
+fn adam_band(step: usize, lr: f32, p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32]) {
+    let t = step as f32;
+    let bc1 = 1.0 - BETA1.powf(t);
+    let bc2 = 1.0 - BETA2.powf(t);
+    let head = p.len() - p.len() % LANES;
+    let (ph, pt) = p.split_at_mut(head);
+    let (gh, gt) = g.split_at(head);
+    let (mh, mt) = m.split_at_mut(head);
+    let (vh, vt) = v.split_at_mut(head);
+    let b1 = F32x8::splat(BETA1);
+    let ob1 = F32x8::splat(1.0 - BETA1);
+    let b2 = F32x8::splat(BETA2);
+    let ob2 = F32x8::splat(1.0 - BETA2);
+    let bc1v = F32x8::splat(bc1);
+    let bc2v = F32x8::splat(bc2);
+    let lr8 = F32x8::splat(lr);
+    let eps8 = F32x8::splat(EPS);
+    let lanes = ph
+        .chunks_exact_mut(LANES)
+        .zip(gh.chunks_exact(LANES))
+        .zip(mh.chunks_exact_mut(LANES))
+        .zip(vh.chunks_exact_mut(LANES));
+    for (((pc, gc), mc), vc) in lanes {
+        let gv = F32x8::load(gc);
+        let mv = b1 * F32x8::load(mc) + ob1 * gv;
+        let vv = b2 * F32x8::load(vc) + ob2 * gv * gv;
+        mv.store(mc);
+        vv.store(vc);
+        let mhat = mv / bc1v;
+        let vhat = vv / bc2v;
+        let upd = lr8 * mhat / (vhat.sqrt() + eps8);
+        let pv = F32x8::load(pc) - upd;
+        pv.store(pc);
+    }
+    for (((pi, &gi), mi), vi) in pt.iter_mut().zip(gt).zip(mt.iter_mut()).zip(vt.iter_mut()) {
+        *mi = BETA1 * *mi + (1.0 - BETA1) * gi;
+        *vi = BETA2 * *vi + (1.0 - BETA2) * gi * gi;
+        let mhat = *mi / bc1;
+        let vhat = *vi / bc2;
+        *pi -= lr * mhat / (vhat.sqrt() + EPS);
+    }
+}
+
+/// Lane `dst += src` over one band (elementwise — bit-invariant to
+/// banding and lane width).
+fn add_band(dst: &mut [f32], src: &[f32]) {
+    let head = dst.len() - dst.len() % LANES;
+    for (dc, sc) in dst[..head]
+        .chunks_exact_mut(LANES)
+        .zip(src[..head].chunks_exact(LANES))
+    {
+        let sv = F32x8::load(dc) + F32x8::load(sc);
+        sv.store(dc);
+    }
+    for (d, &s) in dst[head..].iter_mut().zip(&src[head..]) {
+        *d += s;
+    }
+}
+
+/// Lane `dst *= s` over one band.
+fn scale_band(dst: &mut [f32], s: f32) {
+    let head = dst.len() - dst.len() % LANES;
+    let s8 = F32x8::splat(s);
+    for dc in dst[..head].chunks_exact_mut(LANES) {
+        let sv = F32x8::load(dc) * s8;
+        sv.store(dc);
+    }
+    for d in dst[head..].iter_mut() {
+        *d *= s;
+    }
+}

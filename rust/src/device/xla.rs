@@ -1,0 +1,57 @@
+//! [`XlaStubHost`]: the device plane for the stub `xla` crate.
+//!
+//! This offline build links stub PJRT bindings (see the crate docs), so
+//! there is no real device to hand kernels to; until real bindings are
+//! linked, every kernel call lowers to the host fused path by
+//! delegating to the scalar oracle. That keeps `--device-backend
+//! xla-stub` runnable end-to-end (and bit-identical to `scalar`), while
+//! giving a real device plane a ready-made seam: implement these five
+//! methods against PJRT and the rest of the tree never changes.
+
+use super::{DeviceBackend, ScalarHost};
+
+/// The stub xla device plane (backend name `"xla-stub"`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct XlaStubHost;
+
+impl DeviceBackend for XlaStubHost {
+    fn name(&self) -> &'static str {
+        "xla-stub"
+    }
+
+    fn softmax_rows(&self, x: &[f32], cols: usize, scale: f32, out: &mut [f32]) {
+        ScalarHost.softmax_rows(x, cols, scale, out);
+    }
+
+    fn layernorm_rows(
+        &self,
+        x: &[f32],
+        cols: usize,
+        gamma: &[f32],
+        beta: &[f32],
+        eps: f32,
+        out: &mut [f32],
+    ) {
+        ScalarHost.layernorm_rows(x, cols, gamma, beta, eps, out);
+    }
+
+    fn adam_step(
+        &self,
+        step: usize,
+        lr: f32,
+        p: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+    ) {
+        ScalarHost.adam_step(step, lr, p, g, m, v);
+    }
+
+    fn add_assign(&self, dst: &mut [f32], src: &[f32]) {
+        ScalarHost.add_assign(dst, src);
+    }
+
+    fn scale(&self, dst: &mut [f32], s: f32) {
+        ScalarHost.scale(dst, s);
+    }
+}

@@ -142,7 +142,9 @@ impl PlacementPlanner {
             guard: cfg.autochunk.enabled,
             max_dap: cfg.serve.max_dap,
             scaling: ScalingModel::default(),
-            profile: ImplProfile::fastfold(),
+            // price requests at the configured device backend — the
+            // planner never names a concrete backend, the profile map does
+            profile: ImplProfile::for_device_backend(&cfg.device.backend),
             verify: true,
         })
     }
@@ -388,6 +390,16 @@ mod tests {
 
     fn req(len: usize) -> InferRequest {
         InferRequest { model_len: Some(len), ..InferRequest::new("r", "tiny") }
+    }
+
+    #[test]
+    fn run_config_backend_prices_the_profile() {
+        let mut cfg = RunConfig::default();
+        let p = PlacementPlanner::from_run_config(&cfg).unwrap();
+        assert_eq!(p.profile.name, "FastFold");
+        cfg.device.backend = "scalar".into();
+        let p = PlacementPlanner::from_run_config(&cfg).unwrap();
+        assert_eq!(p.profile.name, "ScalarHost");
     }
 
     #[test]

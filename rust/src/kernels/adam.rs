@@ -55,7 +55,7 @@ pub fn adam_step_naive(
     g: &[f32],
     m: &mut [f32],
     v: &mut [f32],
-    pool: &mut ScratchPool,
+    pool: &ScratchPool,
 ) {
     assert!(
         p.len() == g.len() && p.len() == m.len() && p.len() == v.len(),
@@ -108,7 +108,7 @@ mod tests {
     #[test]
     fn fused_equals_naive_bitwise() {
         let mut rng = Rng::new(71);
-        let mut pool = ScratchPool::new();
+        let pool = ScratchPool::new();
         for step in [1usize, 2, 10, 1000] {
             let n = 257;
             let p0 = rng.normal_vec(n, 1.0);
@@ -118,7 +118,7 @@ mod tests {
             let (mut pa, mut ma, mut va) = (p0.clone(), m0.clone(), v0.clone());
             let (mut pb, mut mb, mut vb) = (p0, m0, v0);
             adam_step(step, 1e-3, &mut pa, &g, &mut ma, &mut va);
-            adam_step_naive(step, 1e-3, &mut pb, &g, &mut mb, &mut vb, &mut pool);
+            adam_step_naive(step, 1e-3, &mut pb, &g, &mut mb, &mut vb, &pool);
             for i in 0..n {
                 assert_eq!(pa[i].to_bits(), pb[i].to_bits(), "p[{i}] step {step}");
                 assert_eq!(ma[i].to_bits(), mb[i].to_bits(), "m[{i}] step {step}");

@@ -126,7 +126,7 @@ pub fn layernorm_rows_naive(
     gamma: &[f32],
     beta: &[f32],
     eps: f32,
-    pool: &mut ScratchPool,
+    pool: &ScratchPool,
     out: &mut [f32],
 ) {
     check(x, cols, gamma, beta, out.len());
@@ -203,7 +203,7 @@ mod tests {
     #[test]
     fn fused_matches_naive_and_apex_to_tolerance() {
         let mut rng = Rng::new(91);
-        let mut pool = ScratchPool::new();
+        let pool = ScratchPool::new();
         for &(rows, cols) in &[(1usize, 4usize), (8, 32), (16, 128), (3, 65)] {
             let x = rng.normal_vec(rows * cols, 2.0);
             let g = rng.normal_vec(cols, 1.0);
@@ -213,7 +213,7 @@ mod tests {
             let mut naive = vec![0.0f32; x.len()];
             layernorm_rows(&x, cols, &g, &b, EPS, &mut fused);
             layernorm_rows_apex(&x, cols, &g, &b, EPS, &mut apex);
-            layernorm_rows_naive(&x, cols, &g, &b, EPS, &mut pool, &mut naive);
+            layernorm_rows_naive(&x, cols, &g, &b, EPS, &pool, &mut naive);
             for i in 0..x.len() {
                 assert!(
                     (fused[i] - naive[i]).abs() < 1e-4,

@@ -1,0 +1,134 @@
+//! Deterministic scalar math for the kernel plane.
+//!
+//! [`exp32`] is a Cephes-style polynomial `exp` used by **every** device
+//! backend (scalar oracle and f32x8 lane path alike). Routing both
+//! through one shared polynomial — instead of libm's `f32::exp` — is
+//! what makes the softmax backends bit-for-bit comparable: the lane path
+//! evaluates the identical branch-free op sequence per element, so
+//! vectorization changes throughput, never bits. It also removes the
+//! last libm call from the fused kernels, making their results
+//! platform-deterministic (libm `expf` is not pinned across targets).
+//!
+//! The implementation is the classic range-reduction scheme: clamp,
+//! split `x = n·ln2 + r` with a two-constant Cody–Waite reduction
+//! (round-to-nearest via the 1.5·2²³ magic-number trick — branch-free
+//! and SSE2-vectorizable, unlike `f32::floor`, which lowers to a libm
+//! call on pre-SSE4.1 targets), evaluate a degree-6 polynomial on
+//! `|r| ≤ ln2/2`, and scale by `2^n` through exponent-bit assembly.
+
+/// Saturation threshold: inputs above this clamp to it before range
+/// reduction (`exp32(88) ≈ 1.65e38` is still finite in f32, and keeps
+/// the biased exponent `n + 127` strictly below the infinity encoding).
+pub const EXP_HI: f32 = 88.0;
+
+/// Flush threshold: inputs below this return exactly `0.0`
+/// (`exp(-87) ≈ 1.6e-38` is the last comfortably normal result).
+pub const EXP_LO: f32 = -87.0;
+
+/// Polynomial `exp(x)` for f32, deterministic across platforms and
+/// identical whether evaluated one element at a time or eight lanes at
+/// a time (branch-free selects, no libm, no FMA contraction).
+///
+/// Edge behavior: `exp32(NaN)` is NaN, `exp32(-inf) == 0.0`,
+/// `exp32(+inf)` saturates to `exp32(EXP_HI)` (finite), and denormal
+/// inputs round to `1.0` like any tiny argument. Accuracy is a few ulp
+/// over the reduced range — well inside the kernel-plane tolerances.
+#[inline(always)]
+pub fn exp32(x: f32) -> f32 {
+    const LOG2E: f32 = std::f32::consts::LOG2_E;
+    // Cody–Waite split of ln2 (exact bit patterns — LN2_HI has a short
+    // mantissa so n·LN2_HI is exact for |n| ≤ 127, keeping the
+    // reduction error in LN2_LO): 0.693359375 and -2.1219444e-4.
+    const LN2_HI: f32 = f32::from_bits(0x3F31_8000);
+    const LN2_LO: f32 = f32::from_bits(0xB95E_8083);
+    // 1.5·2²³: adding then subtracting rounds to the nearest integer in
+    // f32 arithmetic (exact for |z| < 2²²) without calling `floor`.
+    const ROUND: f32 = 12_582_912.0;
+    // Cephes expf minimax coefficients, highest degree first:
+    // 1.9875691e-4, 1.3981999e-3, 8.333452e-3, 4.1665796e-2,
+    // 1.6666666e-1, 0.5 — pinned by bit pattern so the constants are
+    // exactly the intended f32 values on every host.
+    const P0: f32 = f32::from_bits(0x3950_6967);
+    const P1: f32 = f32::from_bits(0x3AB7_43CE);
+    const P2: f32 = f32::from_bits(0x3C08_8908);
+    const P3: f32 = f32::from_bits(0x3D2A_A9C1);
+    const P4: f32 = f32::from_bits(0x3E2A_AAAA);
+    const P5: f32 = f32::from_bits(0x3F00_0000);
+
+    // `x > EXP_HI` is false for NaN, so NaN flows through untouched.
+    let xc = if x > EXP_HI { EXP_HI } else { x };
+    let nf = (xc * LOG2E + ROUND) - ROUND;
+    let r = xc - nf * LN2_HI - nf * LN2_LO;
+
+    let p = P0;
+    let p = p * r + P1;
+    let p = p * r + P2;
+    let p = p * r + P3;
+    let p = p * r + P4;
+    let p = p * r + P5;
+    let y = p * r * r + r + 1.0;
+
+    // 2^n via exponent bits. `nf as i32` saturates (NaN → 0), and for
+    // out-of-range inputs the garbage scale is masked by the select
+    // below, which also pins `exp32(-inf)` to exactly 0.
+    let n = nf as i32;
+    let scale = f32::from_bits(((n + 127) << 23) as u32);
+    if x < EXP_LO {
+        0.0
+    } else {
+        y * scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_libm_to_a_few_ulp() {
+        // sweep the softmax-relevant range (arguments are ≤ 0 after
+        // max-subtraction) plus a positive band
+        let mut worst = 0.0f64;
+        let mut t = -86.5f32;
+        while t < 86.5 {
+            let got = exp32(t) as f64;
+            let want = (t as f64).exp();
+            let rel = ((got - want) / want).abs();
+            worst = worst.max(rel);
+            t += 0.037;
+        }
+        assert!(worst < 1e-6, "worst relative error {worst:e}");
+    }
+
+    #[test]
+    fn exact_anchor_points() {
+        assert_eq!(exp32(0.0), 1.0);
+        assert_eq!(exp32(-0.0), 1.0);
+        assert_eq!(exp32(f32::NEG_INFINITY), 0.0);
+        assert_eq!(exp32(-1.0e30), 0.0);
+        assert!(exp32(f32::NAN).is_nan());
+        let sat = exp32(f32::INFINITY);
+        assert!(sat.is_finite() && sat > 1.0e38);
+        assert_eq!(sat.to_bits(), exp32(EXP_HI).to_bits());
+    }
+
+    #[test]
+    fn denormals_and_flush_band() {
+        assert_eq!(exp32(1.0e-40), 1.0, "denormal argument rounds to 1");
+        assert_eq!(exp32(EXP_LO - 1.0), 0.0);
+        let lo = exp32(EXP_LO);
+        assert!(lo > 0.0 && lo.is_normal(), "flush threshold stays normal");
+    }
+
+    #[test]
+    fn monotone_on_a_grid() {
+        let mut prev = exp32(-20.0);
+        let mut t = -20.0f32 + 0.01;
+        while t < 20.0 {
+            let cur = exp32(t);
+            assert!(cur >= prev, "exp32 not monotone at {t}");
+            prev = cur;
+            t += 0.01;
+        }
+    }
+}

@@ -25,9 +25,18 @@
 //!
 //! Kernels operate on raw `&[f32]` rows so this module stays a leaf
 //! (usable from [`crate::tensor`] without cycles of responsibility).
+//! Exponentials go through the kernel-plane polynomial
+//! [`math::exp32`] — shared by the scalar oracle and the f32x8 lane
+//! backend, which is what makes the two bit-comparable.
+//!
+//! Callers outside the device plane do not invoke these functions
+//! directly: dispatch goes through [`crate::device`], which selects the
+//! scalar oracle, the SIMD fast path, or the xla stub at runtime (the
+//! `backend-bypass` lint enforces this).
 
 pub mod adam;
 pub mod layernorm;
+pub mod math;
 pub mod scratch;
 pub mod softmax;
 

@@ -6,15 +6,25 @@
 //! all-reduce's per-step snapshot) pay the allocation once and reuse it
 //! across iterations, so benches compare *memory passes*, not allocator
 //! throughput.
+//!
+//! The free-list sits behind a `Mutex`, so one pool can be shared by the
+//! within-op worker threads the SIMD backend spawns (see
+//! [`crate::device`]): `take`/`give` are checked checkouts — each worker
+//! owns its buffers outright between the two calls, and the lock is held
+//! only for the free-list push/pop, never across a kernel pass.
+
+use std::sync::Mutex;
 
 /// A LIFO free-list of `Vec<f32>` buffers. `take` hands out a zeroed
 /// buffer of the requested length, reusing the most recently returned
 /// allocation (LIFO — callers with a fixed take/give pattern, like the
 /// naive kernel chains, get their own allocations back and reallocate
-/// nothing in steady state); `give` returns a buffer for reuse.
+/// nothing in steady state); `give` returns a buffer for reuse. All
+/// methods take `&self`, so a single pool is sharable across worker
+/// threads (`Sync` via the interior lock).
 #[derive(Debug, Default)]
 pub struct ScratchPool {
-    free: Vec<Vec<f32>>,
+    free: Mutex<Vec<Vec<f32>>>,
 }
 
 impl ScratchPool {
@@ -25,22 +35,24 @@ impl ScratchPool {
 
     /// Take a buffer of exactly `len` zeros (reuses a retained allocation
     /// when one exists; its capacity is kept, so steady-state `take`s
-    /// allocate nothing once the pool is warm).
-    pub fn take(&mut self, len: usize) -> Vec<f32> {
-        let mut b = self.free.pop().unwrap_or_default();
+    /// allocate nothing once the pool is warm). The buffer is owned by
+    /// the caller until `give`n back — no lock is held while it is used.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        let popped = self.free.lock().expect("scratch pool lock poisoned").pop();
+        let mut b = popped.unwrap_or_default();
         b.clear();
         b.resize(len, 0.0);
         b
     }
 
     /// Return a buffer to the pool for reuse.
-    pub fn give(&mut self, b: Vec<f32>) {
-        self.free.push(b);
+    pub fn give(&self, b: Vec<f32>) {
+        self.free.lock().expect("scratch pool lock poisoned").push(b);
     }
 
     /// Number of buffers currently retained for reuse.
     pub fn retained(&self) -> usize {
-        self.free.len()
+        self.free.lock().expect("scratch pool lock poisoned").len()
     }
 }
 
@@ -50,7 +62,7 @@ mod tests {
 
     #[test]
     fn take_reuses_capacity() {
-        let mut pool = ScratchPool::new();
+        let pool = ScratchPool::new();
         let mut b = pool.take(128);
         assert_eq!(b.len(), 128);
         assert!(b.iter().all(|&x| x == 0.0));
@@ -69,9 +81,44 @@ mod tests {
 
     #[test]
     fn empty_pool_allocates() {
-        let mut pool = ScratchPool::new();
+        let pool = ScratchPool::new();
         assert_eq!(pool.retained(), 0);
         let b = pool.take(8);
         assert_eq!(b.len(), 8);
+    }
+
+    #[test]
+    fn shared_across_threads_checkouts_are_distinct() {
+        // 4 workers × many iterations hammer one pool concurrently; every
+        // checkout must be a distinct zeroed buffer (a worker scribbles a
+        // tag, yields, and re-checks — aliased buffers would clash), and
+        // the free-list must end bounded by the peak outstanding count.
+        let pool = ScratchPool::new();
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let pool = &pool;
+                s.spawn(move || {
+                    for i in 0..200usize {
+                        let mut a = pool.take(64);
+                        let mut b = pool.take(32);
+                        assert!(a.iter().all(|&x| x == 0.0));
+                        assert!(b.iter().all(|&x| x == 0.0));
+                        let tag = (t * 1000 + i) as f32;
+                        a[0] = tag;
+                        b[0] = -tag;
+                        std::thread::yield_now();
+                        assert_eq!(a[0], tag, "buffer aliased across threads");
+                        assert_eq!(b[0], -tag, "buffer aliased across threads");
+                        pool.give(b);
+                        pool.give(a);
+                    }
+                });
+            }
+        });
+        assert!(
+            pool.retained() <= 8,
+            "free-list exceeds peak outstanding buffers: {}",
+            pool.retained()
+        );
     }
 }

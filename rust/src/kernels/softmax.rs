@@ -10,7 +10,13 @@
 //! **bit-for-bit equal** (pinned by test); only the memory traffic
 //! differs, which is exactly the quantity the paper's 1.77–3.32× Fig 8
 //! band measures.
+//!
+//! Both paths exponentiate through the kernel-plane polynomial
+//! [`super::math::exp32`] rather than libm, which is what lets the f32x8
+//! lane backend reproduce this kernel bit-for-bit (see
+//! [`crate::device`]) and keeps the results platform-deterministic.
 
+use super::math::exp32;
 use super::scratch::ScratchPool;
 
 /// Fused row softmax: `out[r] = softmax(x[r] · scale)` for each
@@ -27,7 +33,7 @@ pub fn softmax_rows(x: &[f32], cols: usize, scale: f32, out: &mut [f32]) {
         }
         let mut sum = 0.0f32;
         for (o, &xv) in orow.iter_mut().zip(xrow) {
-            let e = (xv * scale - mx).exp();
+            let e = exp32(xv * scale - mx);
             *o = e;
             sum += e;
         }
@@ -45,7 +51,7 @@ pub fn softmax_rows_naive(
     x: &[f32],
     cols: usize,
     scale: f32,
-    pool: &mut ScratchPool,
+    pool: &ScratchPool,
     out: &mut [f32],
 ) {
     assert!(cols > 0, "softmax over 0 columns");
@@ -77,7 +83,7 @@ pub fn softmax_rows_naive(
     // op 4: exp
     let mut ex = pool.take(x.len());
     for (o, &s) in ex.iter_mut().zip(sub.iter()) {
-        *o = s.exp();
+        *o = exp32(s);
     }
     // op 5: row sum
     let mut rowsum = pool.take(rows);
@@ -109,14 +115,14 @@ mod tests {
     #[test]
     fn fused_equals_naive_bitwise() {
         let mut rng = Rng::new(81);
-        let mut pool = ScratchPool::new();
+        let pool = ScratchPool::new();
         for &(rows, cols) in &[(1usize, 1usize), (3, 7), (16, 64), (5, 33)] {
             let x = rng.normal_vec(rows * cols, 2.0);
             for &scale in &[1.0f32, 0.176_776_7] {
                 let mut fused = vec![0.0f32; x.len()];
                 let mut naive = vec![0.0f32; x.len()];
                 softmax_rows(&x, cols, scale, &mut fused);
-                softmax_rows_naive(&x, cols, scale, &mut pool, &mut naive);
+                softmax_rows_naive(&x, cols, scale, &pool, &mut naive);
                 for (a, b) in fused.iter().zip(naive.iter()) {
                     assert_eq!(a.to_bits(), b.to_bits(), "rows={rows} cols={cols}");
                 }

@@ -25,7 +25,9 @@
 //!   paper's scaling figures ([`perfmodel`]). The host data plane is
 //!   zero-copy ([`tensor`]: Arc-backed views with copy-on-write), the
 //!   paper's fused kernels run natively on host next to their naive op
-//!   chains ([`kernels`]), and `fastfold bench` ([`bench`]) emits the
+//!   chains ([`kernels`]) and dispatch through the pluggable
+//!   [`device`] backends (scalar oracle / f32x8 lanes with within-op
+//!   threading / xla stub), and `fastfold bench` ([`bench`]) emits the
 //!   `BENCH_host.json` perf ledger.
 //!
 //! Python never runs on the request path: `make artifacts` exports
@@ -41,6 +43,7 @@ pub mod bench;
 pub mod comm;
 pub mod config;
 pub mod dap;
+pub mod device;
 pub mod error;
 pub mod inference;
 pub mod json;

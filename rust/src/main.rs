@@ -100,10 +100,12 @@ fn run(args: &[String]) -> Result<()> {
                 "fastfold — FastFold reproduction (see README.md)\n\n\
                  usage:\n  fastfold train  [--preset P] [--steps N] [--dp N] [--dap N] \
                  [--accum N] [--threads N]\n                  [--backend synthetic] \
-                 [--checkpoint-dir D] [--resume] [--config f.toml]\n  \
+                 [--checkpoint-dir D] [--resume] [--config f.toml]\n                  \
+                 [--device-backend scalar|simd|xla-stub]\n  \
                  fastfold scale  [--gpus N] [--dap N] [--gpu G]\n  \
                  fastfold infer  [--preset P] [--len N] [--dap N] [--threads N] [--naive] \
-                 [--gpu G] [--no-guard] [--config f.toml]\n  \
+                 [--gpu G] [--no-guard]\n                  [--device-backend B] \
+                 [--config f.toml]\n  \
                  fastfold serve  --requests reqs.jsonl [--policy fifo|sjf] [--threads N] \
                  [--gpu G] [--max-dap N] [--dry-run] [--config f.toml]\n  \
                  fastfold daemon --trace trace.jsonl [--modeled] [--lanes N] \
@@ -114,7 +116,8 @@ fn run(args: &[String]) -> Result<()> {
                  [--cache-gb F] [--bench-out BENCH_serve.json] [--json]\n  \
                  fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu G] \
                  [--headroom F] [--json] [--config f.toml]\n  \
-                 fastfold bench  [--json] [--out BENCH_host.json] [--quick]\n  \
+                 fastfold bench  [--json] [--out BENCH_host.json] [--quick] \
+                 [--device-backend B]\n  \
                  fastfold verify [--preset P] [--dap N] [--all] [--json FILE]\n  \
                  fastfold lint   [--src DIR]\n  \
                  fastfold report <table2|table3|table4|table5|fig10|fig11|fig13|validate>\n  \
@@ -127,6 +130,25 @@ fn run(args: &[String]) -> Result<()> {
 
 fn artifacts_dir(flags: &BTreeMap<String, String>) -> String {
     flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into())
+}
+
+/// Resolve the device backend (`--device-backend` > `FASTFOLD_BACKEND`
+/// env > `[device] backend` config > default) and install it as the
+/// process-wide kernel dispatch target, with the within-op thread budget
+/// taken from the resolved `[parallel] threads`. The canonical name is
+/// written back into the config so downstream consumers (placement
+/// planner, perf model) price the backend that actually runs.
+fn apply_device_backend(
+    run_cfg: &mut RunConfig,
+    flags: &BTreeMap<String, String>,
+) -> Result<()> {
+    let kind = fastfold::device::resolve_kind(
+        flags.get("device-backend").map(|s| s.as_str()),
+        &run_cfg.device.backend,
+    )?;
+    run_cfg.device.backend = kind.name().to_string();
+    fastfold::device::configure(kind, run_cfg.parallel.resolve_threads());
+    Ok(())
 }
 
 // ---------------------------------------------------------------- train
@@ -156,6 +178,7 @@ fn cmd_train(_pos: &[String], flags: &BTreeMap<String, String>) -> Result<()> {
     }
     run_cfg.train.checkpoint_every =
         num_flag(flags, "checkpoint-every", run_cfg.train.checkpoint_every)?;
+    apply_device_backend(&mut run_cfg, flags)?;
 
     let plan = ParallelPlan::from_config(&run_cfg.parallel);
     let model_cfg = ModelConfig::preset(&run_cfg.preset)?;
@@ -419,6 +442,7 @@ fn apply_engine_flags(
         }
         run_cfg.serve.max_dap = n;
     }
+    apply_device_backend(run_cfg, flags)?;
     Ok(())
 }
 
@@ -881,12 +905,16 @@ fn cmd_autochunk(flags: &BTreeMap<String, String>) -> Result<()> {
 
 /// `fastfold bench` — the host perf harness: measures the zero-copy data
 /// plane (shard moves, ring all-reduce) and the native fused kernels
-/// (softmax / LayerNorm / Adam vs their naive op chains), plus the
+/// (softmax / LayerNorm / Adam vs their naive op chains), the
+/// scalar-vs-simd backend ratios and thread-scaling curves, plus the
 /// synthetic train steps/s and the modeled serve makespan. `--json`
-/// writes the `BENCH_host.json` ledger (`--out` overrides the path);
-/// `--quick` runs the reduced sizes the tier-1 smoke uses. No artifacts,
-/// no network, no device.
+/// writes the ledger to `BENCH_host.json` in the current directory by
+/// default (`--out` overrides the path — test runs point it at
+/// `target/` so the repo root stays clean); `--quick` runs the reduced
+/// sizes the tier-1 smoke uses. No artifacts, no network, no device.
 fn cmd_bench(flags: &BTreeMap<String, String>) -> Result<()> {
+    let mut run_cfg = RunConfig::default();
+    apply_device_backend(&mut run_cfg, flags)?;
     let opts = fastfold::bench::BenchOptions { quick: flags.contains_key("quick") };
     let doc = fastfold::bench::run_host_bench(opts)?;
     if flags.contains_key("json") || flags.contains_key("out") {
@@ -1037,6 +1065,7 @@ fn cmd_lint(flags: &BTreeMap<String, String>) -> Result<()> {
 fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
     let rt = Runtime::new(&artifacts_dir(flags))?;
     println!("platform: {}", rt.platform());
+    println!("device backend: {}", rt.device_backend());
     println!("artifacts: {}", rt.manifest.artifacts.len());
     for (preset, ps) in &rt.manifest.params {
         println!(

@@ -92,6 +92,31 @@ impl ImplProfile {
     pub fn alphafold_tpu() -> Self {
         ImplProfile { name: "AlphaFold-TPU", mxu_eff: 0.50, reduce_passes: 3.5, elem_passes: 1.5 }
     }
+
+    /// Profile for a host device-backend selection (`[device] backend`).
+    /// `"simd"` and `"xla-stub"` price as the fused [`Self::fastfold`]
+    /// profile (the stub lowers through the same fused plan); the scalar
+    /// oracle trades lanes for auditability — fewer elements per cycle
+    /// shows up as extra effective passes and lower MXU efficiency.
+    /// Unknown names price conservatively (scalar-like) rather than
+    /// erroring: the config layer already rejects typos eagerly.
+    pub fn for_device_backend(backend: &str) -> Self {
+        match backend {
+            "simd" | "xla-stub" => Self::fastfold(),
+            "scalar" => ImplProfile {
+                name: "ScalarHost",
+                mxu_eff: 0.50,
+                reduce_passes: 4.0,
+                elem_passes: 2.0,
+            },
+            _ => ImplProfile {
+                name: "UnknownHost",
+                mxu_eff: 0.50,
+                reduce_passes: 4.0,
+                elem_passes: 2.0,
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +127,22 @@ mod tests {
     fn fastfold_fewer_passes() {
         assert!(ImplProfile::fastfold().reduce_passes < ImplProfile::openfold().reduce_passes);
         assert!(ImplProfile::fastfold().elem_passes <= ImplProfile::openfold().elem_passes);
+    }
+
+    #[test]
+    fn device_backend_profiles() {
+        // the default "simd" selection must keep the modeled ledgers
+        // byte-identical to the historical fastfold profile
+        assert_eq!(ImplProfile::for_device_backend("simd").name, "FastFold");
+        assert_eq!(ImplProfile::for_device_backend("xla-stub").name, "FastFold");
+        let scalar = ImplProfile::for_device_backend("scalar");
+        assert_eq!(scalar.name, "ScalarHost");
+        assert!(scalar.reduce_passes > ImplProfile::fastfold().reduce_passes);
+        // unknown names price conservatively, not panic
+        assert!(
+            ImplProfile::for_device_backend("mystery").reduce_passes
+                >= scalar.reduce_passes
+        );
     }
 
     #[test]

@@ -34,6 +34,13 @@ impl Runtime {
         self.client.platform_name()
     }
 
+    /// Name of the host device backend the kernel plane dispatches
+    /// through ([`crate::device::current`]) — the runtime never names a
+    /// concrete backend itself, it only reports the active selection.
+    pub fn device_backend(&self) -> &'static str {
+        crate::device::current().name()
+    }
+
     /// Load (compile-once, cached) an artifact by manifest name. The
     /// returned `Arc` is sharable across rank worker threads.
     pub fn load(&self, name: &str) -> Result<Arc<Executable>> {

@@ -30,7 +30,6 @@
 //! suite and the `fastfold bench` shard-move comparison.
 
 use crate::error::{Error, Result};
-use crate::kernels;
 use std::sync::Arc;
 
 /// Row-major f32 nd-array over shared, view-based storage (see the
@@ -301,7 +300,8 @@ impl HostTensor {
     }
 
     /// Elementwise in-place add (for reductions); copy-on-write if the
-    /// storage is shared.
+    /// storage is shared. Dispatches through the active
+    /// [`crate::device`] backend.
     pub fn add_assign(&mut self, other: &Self) -> Result<()> {
         if self.shape != other.shape {
             return Err(Error::Shape(format!(
@@ -309,13 +309,14 @@ impl HostTensor {
                 self.shape, other.shape
             )));
         }
-        kernels::add_assign(self.data_mut(), other.data());
+        crate::device::add_assign_tensor(self, other);
         Ok(())
     }
 
     /// In-place scalar multiply; copy-on-write if the storage is shared.
+    /// Dispatches through the active [`crate::device`] backend.
     pub fn scale(&mut self, s: f32) {
-        kernels::scale(self.data_mut(), s);
+        crate::device::scale_tensor(self, s);
     }
 
     /// Swap the first two axes (needed by inference drivers for z^T
@@ -354,7 +355,8 @@ impl HostTensor {
     // ----------------------------------------------------------- kernels
 
     /// Fused softmax over the last axis (`exp(x·scale − rowmax)`
-    /// normalized per row) via [`crate::kernels::softmax`].
+    /// normalized per row), dispatched through the active
+    /// [`crate::device`] backend.
     pub fn softmax_last_axis(&self, scale: f32) -> Result<Self> {
         let cols = *self
             .shape
@@ -364,13 +366,13 @@ impl HostTensor {
             return Err(Error::Shape("softmax over an empty axis".into()));
         }
         let mut out = vec![0.0f32; self.len()];
-        kernels::softmax::softmax_rows(self.data(), cols, scale, &mut out);
+        crate::device::current().softmax_rows(self.data(), cols, scale, &mut out);
         HostTensor::new(self.shape.clone(), out)
     }
 
-    /// Fused (chunked-Welford) LayerNorm over the last axis via
-    /// [`crate::kernels::layernorm`]. `gamma`/`beta` must be rank-1 of
-    /// the last-axis length.
+    /// Fused (chunked-Welford) LayerNorm over the last axis, dispatched
+    /// through the active [`crate::device`] backend. `gamma`/`beta`
+    /// must be rank-1 of the last-axis length.
     pub fn layernorm_last_axis(
         &self,
         gamma: &HostTensor,
@@ -391,7 +393,7 @@ impl HostTensor {
             )));
         }
         let mut out = vec![0.0f32; self.len()];
-        kernels::layernorm::layernorm_rows(
+        crate::device::current().layernorm_rows(
             self.data(),
             cols,
             gamma.data(),
@@ -520,6 +522,7 @@ mod tests {
         let x = t(&[4, 2]);
         let mut v = x.slice_axis(0, 0, 2).unwrap();
         assert!(v.shares_storage(&x));
+        // lint:allow(backend) — pins the CoW contract itself, not kernel math
         v.data_mut()[0] = 99.0;
         assert!(!v.shares_storage(&x), "mutation must detach the view");
         assert_eq!(x.data()[0], 0.0, "parent unchanged");
@@ -527,6 +530,7 @@ mod tests {
         // a uniquely-owned full tensor mutates in place (no realloc)
         let mut u = t(&[3]);
         let before = u.data().as_ptr();
+        // lint:allow(backend) — pins the CoW contract itself, not kernel math
         u.data_mut()[1] = 5.0;
         assert_eq!(u.data().as_ptr(), before);
         assert_eq!(u.data(), &[0.0, 5.0, 2.0][..]);

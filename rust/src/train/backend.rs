@@ -403,9 +403,11 @@ impl TrainBackend for HybridDapBackend<'_> {
 
 /// Host Adam, element-for-element the formula of the exported
 /// `adam_update` executable (`python/compile/aot.py`), executed per leaf
-/// by the fused single-traversal kernel ([`crate::kernels::adam`] —
-/// bit-for-bit the old three-clone loop, one copy-on-write per state
-/// tensor instead of three eager clones plus an index loop).
+/// through the active [`crate::device`] backend's fused
+/// single-traversal kernel — bit-for-bit the old three-clone loop on
+/// every backend (the Adam update is purely elementwise), one
+/// copy-on-write per state tensor instead of three eager clones plus an
+/// index loop.
 pub fn host_adam(
     step: usize,
     lr: f32,
@@ -427,14 +429,7 @@ pub fn host_adam(
         let mut pn = p.clone();
         let mut mn = mm.clone();
         let mut vn = vv.clone();
-        crate::kernels::adam::adam_step(
-            step,
-            lr,
-            pn.data_mut(),
-            g.data(),
-            mn.data_mut(),
-            vn.data_mut(),
-        );
+        crate::device::adam_update_tensors(step, lr, &mut pn, g, &mut mn, &mut vn);
         p2.push(pn);
         m2.push(mn);
         v2.push(vn);

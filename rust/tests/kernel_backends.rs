@@ -1,0 +1,222 @@
+//! Cross-backend kernel property suite: `SimdHost` must reproduce the
+//! `ScalarHost` oracle element-for-element — bit-for-bit for softmax,
+//! Adam, and the elementwise helpers (the shared polynomial exp and an
+//! identical per-element op order make this exact), tolerance-bounded
+//! for LayerNorm (8 Welford lanes vs the oracle's 4 reorder the
+//! summation) — across odd lengths, non-multiple-of-8 tails, thread
+//! counts {1, 2, 4, 8}, and NaN/inf/denormal inputs. Backends are
+//! constructed explicitly (never via the process-global
+//! `device::configure`) so the suite is independent of environment and
+//! test order.
+#![cfg(feature = "simd")]
+
+use fastfold::device::{DeviceBackend, ScalarHost, SimdHost};
+use fastfold::rng::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+/// (rows, cols): single elements, odd columns, non-multiple-of-8 tails,
+/// and row counts that engage 2..=8 worker bands at the 64-row floor.
+const SHAPES: [(usize, usize); 7] =
+    [(1, 1), (3, 7), (16, 8), (64, 33), (130, 65), (300, 257), (520, 9)];
+
+/// Plant non-finite and denormal values at irregular strides so they
+/// land in lane bodies, scalar tails, and band boundaries alike.
+fn special_input(mut x: Vec<f32>) -> Vec<f32> {
+    for (i, v) in x.iter_mut().enumerate() {
+        match i % 97 {
+            13 => *v = f32::NAN,
+            29 => *v = f32::INFINITY,
+            43 => *v = f32::NEG_INFINITY,
+            61 => *v = 1.0e-40,
+            71 => *v = -0.0,
+            _ => {}
+        }
+    }
+    x
+}
+
+#[test]
+fn softmax_simd_matches_scalar_bit_for_bit() {
+    let oracle = ScalarHost;
+    let mut rng = Rng::new(9001);
+    for &(rows, cols) in &SHAPES {
+        for variant in 0..2 {
+            let base = rng.normal_vec(rows * cols, 2.0);
+            let x = if variant == 0 { base } else { special_input(base) };
+            let scale = 1.0 / (cols as f32).sqrt();
+            let mut want = vec![0.0f32; x.len()];
+            oracle.softmax_rows(&x, cols, scale, &mut want);
+            for &t in &THREADS {
+                let be = SimdHost::with_threads(t);
+                let mut got = vec![0.0f32; x.len()];
+                be.softmax_rows(&x, cols, scale, &mut got);
+                for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "softmax rows={rows} cols={cols} t={t} \
+                         variant={variant} i={i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn layernorm_simd_matches_scalar_to_tolerance() {
+    let oracle = ScalarHost;
+    let mut rng = Rng::new(77);
+    for &(rows, cols) in &SHAPES {
+        let x = rng.normal_vec(rows * cols, 2.0);
+        let g = rng.normal_vec(cols, 1.0);
+        let b = rng.normal_vec(cols, 1.0);
+        let mut want = vec![0.0f32; x.len()];
+        oracle.layernorm_rows(&x, cols, &g, &b, 1e-5, &mut want);
+        for &t in &THREADS {
+            let be = SimdHost::with_threads(t);
+            let mut got = vec![0.0f32; x.len()];
+            be.layernorm_rows(&x, cols, &g, &b, 1e-5, &mut got);
+            for (i, (a, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert!(
+                    (a - w).abs() <= 2e-4 * (1.0 + w.abs()),
+                    "layernorm rows={rows} cols={cols} t={t} i={i}: {a} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn layernorm_non_finite_rows_agree_on_nan_pattern() {
+    // a row containing inf/NaN collapses to all-NaN on both backends
+    // (the Welford second moment goes NaN); finite rows stay within the
+    // cross-lane tolerance
+    let oracle = ScalarHost;
+    let mut rng = Rng::new(78);
+    let (rows, cols) = (130usize, 65usize);
+    let x = special_input(rng.normal_vec(rows * cols, 2.0));
+    let g = rng.normal_vec(cols, 1.0);
+    let b = rng.normal_vec(cols, 1.0);
+    let mut want = vec![0.0f32; x.len()];
+    oracle.layernorm_rows(&x, cols, &g, &b, 1e-5, &mut want);
+    for &t in &THREADS {
+        let be = SimdHost::with_threads(t);
+        let mut got = vec![0.0f32; x.len()];
+        be.layernorm_rows(&x, cols, &g, &b, 1e-5, &mut got);
+        for (i, (a, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(a.is_nan(), w.is_nan(), "layernorm t={t} i={i}: {a} vs {w}");
+            if !w.is_nan() {
+                assert!(
+                    (a - w).abs() <= 2e-4 * (1.0 + w.abs()),
+                    "layernorm t={t} i={i}: {a} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn adam_simd_matches_scalar_bit_for_bit() {
+    let oracle = ScalarHost;
+    let mut rng = Rng::new(4242);
+    // 1 << 17 elements engage multi-worker banding at the 64k floor
+    for &n in &[1usize, 7, 33, 64, 257, 1 << 17] {
+        for variant in 0..2 {
+            let p0 = rng.normal_vec(n, 1.0);
+            let g = {
+                let g = rng.normal_vec(n, 0.5);
+                if variant == 0 {
+                    g
+                } else {
+                    special_input(g)
+                }
+            };
+            let m0 = rng.normal_vec(n, 0.1);
+            let v0: Vec<f32> =
+                rng.normal_vec(n, 0.1).iter().map(|x| x * x).collect();
+            for step in [1usize, 7] {
+                let (mut pw, mut mw, mut vw) =
+                    (p0.clone(), m0.clone(), v0.clone());
+                oracle.adam_step(step, 1e-3, &mut pw, &g, &mut mw, &mut vw);
+                for &t in &THREADS {
+                    let be = SimdHost::with_threads(t);
+                    let (mut pg, mut mg, mut vg) =
+                        (p0.clone(), m0.clone(), v0.clone());
+                    be.adam_step(step, 1e-3, &mut pg, &g, &mut mg, &mut vg);
+                    for (name, got, want) in
+                        [("p", &pg, &pw), ("m", &mg, &mw), ("v", &vg, &vw)]
+                    {
+                        for (i, (a, b)) in got.iter().zip(want.iter()).enumerate()
+                        {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "adam {name} n={n} step={step} t={t} \
+                                 variant={variant} i={i}: {a} vs {b}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn elementwise_helpers_match_bit_for_bit() {
+    let oracle = ScalarHost;
+    let mut rng = Rng::new(5);
+    for &n in &[1usize, 9, 63, 1 << 17] {
+        let d0 = special_input(rng.normal_vec(n, 1.0));
+        let s = rng.normal_vec(n, 1.0);
+        let mut want = d0.clone();
+        oracle.add_assign(&mut want, &s);
+        oracle.scale(&mut want, 0.37);
+        for &t in &THREADS {
+            let be = SimdHost::with_threads(t);
+            let mut got = d0.clone();
+            be.add_assign(&mut got, &s);
+            be.scale(&mut got, 0.37);
+            for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "elementwise n={n} t={t} i={i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_count_never_changes_simd_bits() {
+    // banding splits whole rows (or pure elementwise ranges), so every
+    // thread count must produce identical bits — including LayerNorm,
+    // whose lane order differs from the oracle but never across bands
+    let mut rng = Rng::new(31);
+    let (rows, cols) = (520usize, 33usize);
+    let x = special_input(rng.normal_vec(rows * cols, 2.0));
+    let g = rng.normal_vec(cols, 1.0);
+    let b = rng.normal_vec(cols, 1.0);
+    let base = SimdHost::with_threads(1);
+    let mut want_sm = vec![0.0f32; x.len()];
+    base.softmax_rows(&x, cols, 0.125, &mut want_sm);
+    let mut want_ln = vec![0.0f32; x.len()];
+    base.layernorm_rows(&x, cols, &g, &b, 1e-5, &mut want_ln);
+    for &t in &THREADS[1..] {
+        let be = SimdHost::with_threads(t);
+        let mut got = vec![0.0f32; x.len()];
+        be.softmax_rows(&x, cols, 0.125, &mut got);
+        assert!(
+            got.iter().zip(&want_sm).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "softmax bits changed at t={t}"
+        );
+        let mut got = vec![0.0f32; x.len()];
+        be.layernorm_rows(&x, cols, &g, &b, 1e-5, &mut got);
+        assert!(
+            got.iter().zip(&want_ln).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "layernorm bits changed at t={t}"
+        );
+    }
+}
