@@ -30,7 +30,7 @@
 //! artifacts, no network, no device.
 
 use crate::comm::ring::ring_all_reduce;
-use crate::config::{ModelConfig, RunConfig, TrainConfig};
+use crate::config::{ModelConfig, Precision, RunConfig, TrainConfig};
 use crate::device::{simd_backend_with_threads, DeviceBackend, ScalarHost};
 use crate::error::Result;
 use crate::inference::engine::{plan_batch, InferRequest, PlacementPlanner, SchedPolicy};
@@ -38,9 +38,12 @@ use crate::json::Json;
 // lint:allow(backend) — the bench times raw kernels as the baseline side
 use crate::kernels::{adam, layernorm, softmax, ScratchPool};
 use crate::metrics::{median, Table};
+use crate::perfmodel::gpu::ImplProfile;
+use crate::perfmodel::scaling::MpMethod;
+use crate::perfmodel::{DpOverlap, ScalingModel};
 use crate::rng::Rng;
 use crate::tensor::HostTensor;
-use crate::train::{ParallelPlan, SyntheticBackend, TrainBackend, Trainer};
+use crate::train::{ParallelPlan, SyntheticBackend, TrainBackend, TrainReport, Trainer};
 use std::collections::BTreeMap;
 use std::hint::black_box;
 use std::time::Instant; // lint:allow(wallclock) — the bench harness measures wall time by definition
@@ -389,6 +392,195 @@ fn bench_serve_makespan() -> Result<Json> {
     ]))
 }
 
+// ----------------------------------------------------- training overlap
+
+/// Synthetic geometry for the training bench: the same six parameter
+/// leaves the trainer always carries, but fattened until the DP gradient
+/// ring is a first-class share of the step (the regime the bucketed
+/// overlap plane exists for), over tiny activations so the suite stays
+/// in bench time. `n_seq`/`n_res` stay small — the synthetic backward
+/// cost scales with `params × n_seq`, so this keeps compute and comm the
+/// same order of magnitude.
+fn train_bench_config(quick: bool) -> ModelConfig {
+    let mut cfg = ModelConfig::tiny();
+    cfg.name = "bench_train".into();
+    cfg.n_seq = 2;
+    cfg.n_res = 8;
+    if quick {
+        cfg.d_msa = 16_384;
+        cfg.d_pair = 8_192;
+        cfg.n_heads_msa = 16;
+        cfg.d_head = 64;
+        cfg.d_opm = 2_048;
+        cfg.n_dist_bins = 16_384;
+    } else {
+        cfg.d_msa = 65_536;
+        cfg.d_pair = 32_768;
+        cfg.n_heads_msa = 64;
+        cfg.d_head = 64;
+        cfg.d_opm = 8_192;
+        cfg.n_dist_bins = 65_536;
+    }
+    cfg
+}
+
+/// One measured trainer configuration for the train bench (dp=4 ×
+/// accum=2 on the shared geometry, 4 compute threads so replicas
+/// genuinely run concurrently under the reducer).
+fn train_bench_run(
+    cfg: &ModelConfig,
+    steps: usize,
+    precision: Precision,
+    prefetch: bool,
+    bucket_mb: Option<f64>,
+) -> Result<TrainReport> {
+    let plan = ParallelPlan { dp: 4, dap: 1, accum: 2, threads: 4 };
+    let params = SyntheticBackend::init_params(cfg);
+    let backend: Box<dyn TrainBackend> = Box::new(SyntheticBackend::new(plan.dap));
+    let tcfg = TrainConfig {
+        steps,
+        log_every: usize::MAX,
+        precision,
+        prefetch,
+        bucket_mb,
+        ..TrainConfig::default()
+    };
+    let mut trainer =
+        Trainer::with_backend("bench_train", cfg.clone(), params, backend, plan, tcfg)?;
+    trainer.run()
+}
+
+fn train_report_json(r: &TrainReport) -> Json {
+    obj(vec![
+        ("precision", Json::Str(r.precision.to_string())),
+        ("steps", num(r.steps as f64)),
+        ("steps_per_sec", num(r.steps_per_sec)),
+        ("comm_us", num(r.comm_seconds * 1e6)),
+        ("exposed_comm_us", num(r.exposed_comm_seconds * 1e6)),
+        ("overlap_fraction", num(r.overlap_fraction)),
+        ("prefetch_stall_us", num(r.prefetch_stall_seconds * 1e6)),
+        ("dp_wire_bytes", num(r.wire_bytes as f64)),
+        ("skipped_steps", num(r.skipped_steps as f64)),
+        ("final_loss", num(r.final_loss as f64)),
+    ])
+}
+
+/// Run the training-overlap bench; returns the `BENCH_train.json`
+/// document. Three measured configurations on one comm-heavy geometry —
+/// the f32 synchronous baseline (monolithic post-backward all-reduce,
+/// inline data), f32 with the bucketed overlap + prefetch planes, and
+/// the full bf16 stack — next to the modeled timeline
+/// ([`ScalingModel::dp_step_overlapped`] at the paper's A100 finetune
+/// point and the ScaleFold H100 calibration), so measured overlap can
+/// be read against what the α–β model predicts.
+pub fn run_train_bench(opts: BenchOptions) -> Result<Json> {
+    let cfg = train_bench_config(opts.quick);
+    let steps = if opts.quick { 3usize } else { 6 };
+    // sized to split the six leaves into ~5 buckets (largest leaves ride
+    // alone; small ones pack) so reductions start mid-backward
+    let bucket_mb = Some(if opts.quick { 0.0625 } else { 0.25 });
+    let param_elems: usize = SyntheticBackend::init_params(&cfg)
+        .iter()
+        .map(|p| p.data().len())
+        .sum();
+
+    let f32_sync = train_bench_run(&cfg, steps, Precision::F32, false, None)?;
+    let f32_overlap = train_bench_run(&cfg, steps, Precision::F32, true, bucket_mb)?;
+    let bf16_overlap = train_bench_run(&cfg, steps, Precision::Bf16, true, bucket_mb)?;
+
+    // modeled twin: the paper-scale point the host measurement mirrors
+    let m = ScalingModel::default();
+    let ft = ModelConfig::finetune();
+    let p = ImplProfile::fastfold();
+    let mp = m.train_step(&ft, &p, MpMethod::Dap, 4, true).total();
+    let mono = m.dp_step_overlapped(&ft, mp, 128, DpOverlap::f32_monolithic());
+    let bucketed = m.dp_step_overlapped(&ft, mp, 128, DpOverlap::bf16_bucketed());
+    let (sf_init, sf_ft) = ScalingModel::scalefold_hours();
+    let modeled = obj(vec![
+        ("a100_ft_dp128_mono_exposed_ms", num(mono.exposed_secs * 1e3)),
+        ("a100_ft_dp128_bucketed_exposed_ms", num(bucketed.exposed_secs * 1e3)),
+        ("a100_ft_dp128_bucketed_overlap_fraction", num(bucketed.overlap_fraction)),
+        ("scalefold_h100_initial_hours", num(sf_init)),
+        ("scalefold_h100_finetune_hours", num(sf_ft)),
+        ("scalefold_h100_total_hours", num(sf_init + sf_ft)),
+    ]);
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("train".into()));
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("quick".to_string(), Json::Bool(opts.quick));
+    top.insert(
+        "device_backend".to_string(),
+        Json::Str(crate::device::current().name().into()),
+    );
+    top.insert(
+        "geometry".to_string(),
+        obj(vec![
+            ("dp", num(4.0)),
+            ("accum", num(2.0)),
+            ("threads", num(4.0)),
+            ("param_elems", num(param_elems as f64)),
+            ("steps", num(steps as f64)),
+            ("bucket_mb", num(bucket_mb.unwrap_or(0.0))),
+        ]),
+    );
+    top.insert("f32_sync".to_string(), train_report_json(&f32_sync));
+    top.insert("f32_overlap".to_string(), train_report_json(&f32_overlap));
+    top.insert("bf16_overlap".to_string(), train_report_json(&bf16_overlap));
+    top.insert(
+        "bf16_speedup_vs_f32_sync".to_string(),
+        num(bf16_overlap.steps_per_sec / f32_sync.steps_per_sec.max(1e-9)),
+    );
+    top.insert("modeled".to_string(), modeled);
+    Ok(Json::Obj(top))
+}
+
+/// Console rendering of a [`run_train_bench`] document.
+pub fn render_train_table(doc: &Json) -> Table {
+    let mut t = Table::new(&["config", "steps/s", "comm exposed", "overlap"]);
+    let f = |j: &Json, key: &str| -> f64 {
+        j.get(key).and_then(|v| v.as_f64()).unwrap_or(f64::NAN)
+    };
+    for key in ["f32_sync", "f32_overlap", "bf16_overlap"] {
+        if let Ok(s) = doc.get(key) {
+            t.row(&[
+                key.into(),
+                format!("{:.2}", f(s, "steps_per_sec")),
+                format!(
+                    "{:.0} / {:.0} µs",
+                    f(s, "exposed_comm_us"),
+                    f(s, "comm_us")
+                ),
+                format!("{:.1}%", 100.0 * f(s, "overlap_fraction")),
+            ]);
+        }
+    }
+    if let Ok(v) = doc.get("bf16_speedup_vs_f32_sync") {
+        t.row(&[
+            "bf16 stack vs f32 sync".into(),
+            format!("{:.2}x", v.as_f64().unwrap_or(f64::NAN)),
+            String::new(),
+            String::new(),
+        ]);
+    }
+    if let Ok(m) = doc.get("modeled") {
+        t.row(&[
+            "modeled scalefold (H100)".into(),
+            format!("{:.1} h total", f(m, "scalefold_h100_total_hours")),
+            format!(
+                "{:.1} ms mono / {:.2} ms bucketed",
+                f(m, "a100_ft_dp128_mono_exposed_ms"),
+                f(m, "a100_ft_dp128_bucketed_exposed_ms")
+            ),
+            format!(
+                "{:.1}%",
+                100.0 * f(m, "a100_ft_dp128_bucketed_overlap_fraction")
+            ),
+        ]);
+    }
+    t
+}
+
 // ---------------------------------------------------------------- driver
 
 /// Run the full host bench suite; returns the `BENCH_host.json` document.
@@ -507,5 +699,51 @@ mod tests {
         let j = bench_synthetic_train(&BenchOptions { quick: true }).unwrap();
         assert_eq!(j.get("steps").unwrap().as_f64().unwrap(), 2.0);
         assert!(j.get("steps_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn train_bench_ledger_has_gate_metrics() {
+        let doc = run_train_bench(BenchOptions { quick: true }).unwrap();
+        let f = |path: &[&str]| -> f64 {
+            let mut j = &doc;
+            for k in path {
+                j = j.get(k).unwrap();
+            }
+            j.as_f64().unwrap()
+        };
+        // every measured configuration ran and made progress
+        for key in ["f32_sync", "f32_overlap", "bf16_overlap"] {
+            assert!(f(&[key, "steps_per_sec"]) > 0.0, "{key} steps/s");
+            assert!(f(&[key, "comm_us"]) > 0.0, "{key} comm");
+            let ov = f(&[key, "overlap_fraction"]);
+            assert!((0.0..=1.0).contains(&ov), "{key} overlap {ov}");
+            assert!(
+                f(&[key, "exposed_comm_us"]) <= f(&[key, "comm_us"]) + 1e-9,
+                "{key} exposed <= comm"
+            );
+        }
+        // the synchronous baseline by construction hides nothing: its
+        // monolithic all-reduce sits entirely on the critical path
+        assert_eq!(f(&["f32_sync", "overlap_fraction"]), 0.0);
+        assert_eq!(f(&["f32_sync", "prefetch_stall_us"]), 0.0);
+        // the bf16 wire is exactly half the f32 wire: same elements,
+        // 2 B each instead of 4, and no steps were skipped
+        assert_eq!(f(&["bf16_overlap", "skipped_steps"]), 0.0);
+        assert_eq!(
+            2.0 * f(&["bf16_overlap", "dp_wire_bytes"]),
+            f(&["f32_overlap", "dp_wire_bytes"])
+        );
+        // the speedup ratio and the modeled twin are present and finite
+        assert!(f(&["bf16_speedup_vs_f32_sync"]).is_finite());
+        let sf = f(&["modeled", "scalefold_h100_total_hours"]);
+        assert!((sf - 10.3).abs() / 10.3 < 0.10, "scalefold hours {sf}");
+        assert!(
+            f(&["modeled", "a100_ft_dp128_bucketed_exposed_ms"])
+                < f(&["modeled", "a100_ft_dp128_mono_exposed_ms"])
+        );
+        // rendering never panics on a fresh ledger: three measured
+        // configs + the speedup row + the modeled twin
+        let table = render_train_table(&doc);
+        assert_eq!(table.rows.len(), 5);
     }
 }

@@ -14,40 +14,115 @@
 //! Allocation behavior: each of the 2(N−1) steps needs a snapshot of the
 //! chunks in flight (the exchange is simultaneous, so in-place
 //! accumulation without a snapshot would let rank r's update feed rank
-//! r+1 within the same step). The snapshot lives in **one reusable
-//! scratch buffer** (N × max-chunk elements) allocated once per call —
-//! the old implementation allocated N fresh `Vec`s per step, 2N(N−1)
-//! allocations per reduction, on the trainer's per-step hot path.
+//! r+1 within the same step). The snapshot lives in a [`RingScratch`]
+//! buffer (N × max-chunk elements). [`ring_all_reduce`] allocates one per
+//! call; the bucketed-overlap trainer instead owns a single `RingScratch`
+//! and calls [`ring_all_reduce_with_scratch`] so **every bucket of every
+//! step reuses one allocation** (asserted by the train bench via
+//! [`RingScratch::allocs`]).
+//!
+//! Wire precision: [`ring_all_reduce_bf16_with_scratch`] emulates a
+//! bf16-on-the-wire reduction — every chunk crosses a link as packed
+//! `u16` bf16 halves (2 B/elem, half the f32 wire), receivers accumulate
+//! into f32, and finished chunks are rounded to the bf16 grid before the
+//! all-gather phase so every rank ends bit-for-bit identical.
 
 use crate::error::{Error, Result};
 
-/// Run ring all-reduce over per-rank flat vectors (in place, returns sums).
-/// Also returns the wire bytes actually sent by each rank, so tests can
-/// verify the 2(N−1)/N volume formula the perf model assumes and callers
-/// can account the critical-path (max) rank honestly. The old truncating
-/// `total / n` average hid the per-rank skew at non-divisible lengths.
-pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
-    let n = ranks.len();
-    if n == 0 {
+/// Reusable snapshot buffers for the ring reductions.
+///
+/// Grows monotonically to the largest request and never shrinks, so a
+/// trainer that reduces many gradient buckets per step pays for at most
+/// one f32 (and, under bf16, one u16) allocation over its whole run —
+/// `allocs()` counts the grows so benches can assert exactly that.
+#[derive(Debug, Default)]
+pub struct RingScratch {
+    f32_buf: Vec<f32>,
+    u16_buf: Vec<u16>,
+    allocs: usize,
+}
+
+impl RingScratch {
+    /// Empty scratch; buffers are grown on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// How many times a buffer had to be (re)allocated. A warm scratch
+    /// sized by its largest bucket stays constant across further calls.
+    pub fn allocs(&self) -> usize {
+        self.allocs
+    }
+
+    fn f32_lanes(&mut self, elems: usize) -> &mut [f32] {
+        if self.f32_buf.len() < elems {
+            self.f32_buf = vec![0.0; elems];
+            self.allocs += 1;
+        }
+        &mut self.f32_buf[..elems]
+    }
+
+    fn u16_lanes(&mut self, elems: usize) -> &mut [u16] {
+        if self.u16_buf.len() < elems {
+            self.u16_buf = vec![0; elems];
+            self.allocs += 1;
+        }
+        &mut self.u16_buf[..elems]
+    }
+}
+
+/// Chunk boundaries for a length-`len` vector over `n` ranks (the last
+/// chunk absorbs the remainder). Returns `(bounds, max_chunk)`.
+fn chunk_bounds(len: usize, n: usize) -> (Vec<(usize, usize)>, usize) {
+    let base = len / n;
+    let bounds: Vec<(usize, usize)> = (0..n)
+        .map(|c| (c * base, if c == n - 1 { len } else { (c + 1) * base }))
+        .collect();
+    let max_chunk = bounds.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0);
+    (bounds, max_chunk)
+}
+
+fn check_ranks(ranks: &[Vec<f32>]) -> Result<usize> {
+    if ranks.is_empty() {
         return Err(Error::Comm("ring over 0 ranks".into()));
     }
     let len = ranks[0].len();
     if ranks.iter().any(|r| r.len() != len) {
         return Err(Error::Comm("ring shards differ in length".into()));
     }
+    Ok(len)
+}
+
+/// Run ring all-reduce over per-rank flat vectors (in place, returns sums).
+/// Also returns the wire bytes actually sent by each rank, so tests can
+/// verify the 2(N−1)/N volume formula the perf model assumes and callers
+/// can account the critical-path (max) rank honestly. The old truncating
+/// `total / n` average hid the per-rank skew at non-divisible lengths.
+///
+/// Allocates a fresh [`RingScratch`] per call; hot paths that reduce many
+/// buckets should hold one and call [`ring_all_reduce_with_scratch`].
+pub fn ring_all_reduce(ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
+    let mut scratch = RingScratch::new();
+    ring_all_reduce_with_scratch(ranks, &mut scratch)
+}
+
+/// [`ring_all_reduce`] against a caller-owned [`RingScratch`] — bitwise
+/// the same result and wire accounting, zero allocations once the
+/// scratch has warmed to the largest reduction it has seen.
+pub fn ring_all_reduce_with_scratch(
+    mut ranks: Vec<Vec<f32>>,
+    scratch: &mut RingScratch,
+) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
+    let n = ranks.len();
+    let len = check_ranks(&ranks)?;
     if n == 1 {
         return Ok((ranks, vec![0]));
     }
-    // chunk boundaries (last chunk absorbs the remainder)
-    let base = len / n;
-    let bounds: Vec<(usize, usize)> = (0..n)
-        .map(|c| (c * base, if c == n - 1 { len } else { (c + 1) * base }))
-        .collect();
-    let max_chunk = bounds.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0);
+    let (bounds, max_chunk) = chunk_bounds(len, n);
     let mut wire = vec![0usize; n];
     // one scratch for all 2(N−1) per-step snapshots: lane r holds the
     // chunk rank r sends this step
-    let mut scratch = vec![0.0f32; n * max_chunk];
+    let lanes = scratch.f32_lanes(n * max_chunk);
 
     // phase 1: reduce-scatter
     for s in 0..n - 1 {
@@ -55,14 +130,14 @@ pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, Vec<u
         for r in 0..n {
             let c = (r + n - s) % n;
             let (lo, hi) = bounds[c];
-            scratch[r * max_chunk..r * max_chunk + (hi - lo)]
+            lanes[r * max_chunk..r * max_chunk + (hi - lo)]
                 .copy_from_slice(&ranks[r][lo..hi]);
         }
         for r in 0..n {
             let dst = (r + 1) % n;
             let c = (r + n - s) % n;
             let (lo, hi) = bounds[c];
-            let sent = &scratch[r * max_chunk..r * max_chunk + (hi - lo)];
+            let sent = &lanes[r * max_chunk..r * max_chunk + (hi - lo)];
             // the accumulate is the collective's kernel entry point:
             // dispatch through the device plane (bit-for-bit on every
             // backend — elementwise add)
@@ -75,7 +150,7 @@ pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, Vec<u
         for r in 0..n {
             let c = (r + 1 + n - s) % n;
             let (lo, hi) = bounds[c];
-            scratch[r * max_chunk..r * max_chunk + (hi - lo)]
+            lanes[r * max_chunk..r * max_chunk + (hi - lo)]
                 .copy_from_slice(&ranks[r][lo..hi]);
         }
         for r in 0..n {
@@ -83,8 +158,88 @@ pub fn ring_all_reduce(mut ranks: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, Vec<u
             let c = (r + 1 + n - s) % n;
             let (lo, hi) = bounds[c];
             ranks[dst][lo..hi]
-                .copy_from_slice(&scratch[r * max_chunk..r * max_chunk + (hi - lo)]);
+                .copy_from_slice(&lanes[r * max_chunk..r * max_chunk + (hi - lo)]);
             wire[r] += (hi - lo) * 4;
+        }
+    }
+    Ok((ranks, wire))
+}
+
+/// Ring all-reduce with **bf16 wire emulation**: the same 2(N−1)-step
+/// schedule, but every chunk crosses a link as packed bf16 halves
+/// (2 B/elem — wire bytes are exactly half the f32 path's), receivers
+/// accumulate `f32 += unpack(bf16)` through the device plane, and each
+/// rank rounds its finished chunk to the bf16 grid before the all-gather
+/// circulates it (pack → unpack of on-grid values is exact), so all
+/// ranks end bitwise identical.
+///
+/// Like real bf16 collectives, intermediate partial sums are rounded at
+/// every hop — the result is deterministic but not the f32 sum; callers
+/// opt in via `--precision bf16` and compare losses to f32 by tolerance.
+///
+/// With a single rank the values are still rounded to the bf16 grid, so
+/// dp=1 bf16 runs see the same storage precision as dp>1.
+pub fn ring_all_reduce_bf16_with_scratch(
+    mut ranks: Vec<Vec<f32>>,
+    scratch: &mut RingScratch,
+) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
+    let n = ranks.len();
+    let len = check_ranks(&ranks)?;
+    let dev = crate::device::current();
+    if n == 1 {
+        dev.bf16_round(&mut ranks[0]);
+        return Ok((ranks, vec![0]));
+    }
+    let (bounds, max_chunk) = chunk_bounds(len, n);
+    let mut wire = vec![0usize; n];
+    // lane r holds the packed bf16 chunk rank r sends this step
+    let lanes = scratch.u16_lanes(n * max_chunk);
+
+    // phase 1: reduce-scatter over a bf16 wire, f32 accumulators
+    for s in 0..n - 1 {
+        for r in 0..n {
+            let c = (r + n - s) % n;
+            let (lo, hi) = bounds[c];
+            dev.bf16_pack(
+                &ranks[r][lo..hi],
+                &mut lanes[r * max_chunk..r * max_chunk + (hi - lo)],
+            );
+        }
+        for r in 0..n {
+            let dst = (r + 1) % n;
+            let c = (r + n - s) % n;
+            let (lo, hi) = bounds[c];
+            let sent = &lanes[r * max_chunk..r * max_chunk + (hi - lo)];
+            dev.add_assign_bf16(&mut ranks[dst][lo..hi], sent);
+            wire[r] += (hi - lo) * 2;
+        }
+    }
+    // after reduce-scatter, rank r owns the fully-reduced chunk (r+1)%n;
+    // round it to the bf16 grid so the gather below is exact and every
+    // rank lands on identical bits
+    for (r, rank) in ranks.iter_mut().enumerate() {
+        let (lo, hi) = bounds[(r + 1) % n];
+        dev.bf16_round(&mut rank[lo..hi]);
+    }
+    // phase 2: all-gather of finished (on-grid) chunks over the bf16 wire
+    for s in 0..n - 1 {
+        for r in 0..n {
+            let c = (r + 1 + n - s) % n;
+            let (lo, hi) = bounds[c];
+            dev.bf16_pack(
+                &ranks[r][lo..hi],
+                &mut lanes[r * max_chunk..r * max_chunk + (hi - lo)],
+            );
+        }
+        for r in 0..n {
+            let dst = (r + 1) % n;
+            let c = (r + 1 + n - s) % n;
+            let (lo, hi) = bounds[c];
+            dev.bf16_unpack(
+                &lanes[r * max_chunk..r * max_chunk + (hi - lo)],
+                &mut ranks[dst][lo..hi],
+            );
+            wire[r] += (hi - lo) * 2;
         }
     }
     Ok((ranks, wire))
@@ -151,6 +306,64 @@ mod tests {
         Ok((ranks, wire))
     }
 
+    /// Naive per-hop bf16 reference: same schedule as the scratch
+    /// implementation but with per-step `Vec` snapshots and explicit
+    /// pack/unpack round-trips through the device plane.
+    fn ring_all_reduce_bf16_ref(
+        mut ranks: Vec<Vec<f32>>,
+    ) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
+        let dev = crate::device::current();
+        let n = ranks.len();
+        let len = ranks[0].len();
+        if n == 1 {
+            dev.bf16_round(&mut ranks[0]);
+            return Ok((ranks, vec![0]));
+        }
+        let (bounds, _) = chunk_bounds(len, n);
+        let mut wire = vec![0usize; n];
+        for s in 0..n - 1 {
+            let sends: Vec<(usize, Vec<u16>)> = (0..n)
+                .map(|r| {
+                    let c = (r + n - s) % n;
+                    let (lo, hi) = bounds[c];
+                    let mut packed = vec![0u16; hi - lo];
+                    dev.bf16_pack(&ranks[r][lo..hi], &mut packed);
+                    (c, packed)
+                })
+                .collect();
+            for r in 0..n {
+                let dst = (r + 1) % n;
+                let (c, ref chunk) = sends[r];
+                let (lo, _hi) = bounds[c];
+                dev.add_assign_bf16(&mut ranks[dst][lo..lo + chunk.len()], chunk);
+                wire[r] += chunk.len() * 2;
+            }
+        }
+        for (r, rank) in ranks.iter_mut().enumerate() {
+            let (lo, hi) = bounds[(r + 1) % n];
+            dev.bf16_round(&mut rank[lo..hi]);
+        }
+        for s in 0..n - 1 {
+            let sends: Vec<(usize, Vec<u16>)> = (0..n)
+                .map(|r| {
+                    let c = (r + 1 + n - s) % n;
+                    let (lo, hi) = bounds[c];
+                    let mut packed = vec![0u16; hi - lo];
+                    dev.bf16_pack(&ranks[r][lo..hi], &mut packed);
+                    (c, packed)
+                })
+                .collect();
+            for r in 0..n {
+                let dst = (r + 1) % n;
+                let (c, ref chunk) = sends[r];
+                let (lo, _hi) = bounds[c];
+                dev.bf16_unpack(chunk, &mut ranks[dst][lo..lo + chunk.len()]);
+                wire[r] += chunk.len() * 2;
+            }
+        }
+        Ok((ranks, wire))
+    }
+
     #[test]
     fn matches_naive_sum() {
         let mut rng = Rng::new(5);
@@ -197,6 +410,110 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn shared_scratch_allocates_once_across_buckets() {
+        // a trainer reducing many buckets per step reuses ONE allocation:
+        // warm the scratch on the largest bucket, then every further
+        // reduction — any smaller or equal size, f32 or bf16 — is
+        // allocation-free
+        let mut rng = Rng::new(7);
+        let mut scratch = RingScratch::new();
+        let mk = |rng: &mut Rng, n: usize, len: usize| -> Vec<Vec<f32>> {
+            (0..n).map(|_| rng.normal_vec(len, 1.0)).collect()
+        };
+        ring_all_reduce_with_scratch(mk(&mut rng, 4, 256), &mut scratch).unwrap();
+        ring_all_reduce_bf16_with_scratch(mk(&mut rng, 4, 256), &mut scratch)
+            .unwrap();
+        let warm = scratch.allocs();
+        assert_eq!(warm, 2, "one f32 grow + one u16 grow");
+        for _ in 0..10 {
+            for &len in &[256usize, 100, 33, 7] {
+                ring_all_reduce_with_scratch(mk(&mut rng, 4, len), &mut scratch)
+                    .unwrap();
+                ring_all_reduce_bf16_with_scratch(mk(&mut rng, 4, len), &mut scratch)
+                    .unwrap();
+            }
+        }
+        assert_eq!(scratch.allocs(), warm, "warm scratch must not reallocate");
+    }
+
+    #[test]
+    fn bf16_ring_matches_reference_bitwise() {
+        let mut rng = Rng::new(91);
+        let mut scratch = RingScratch::new();
+        for &(n, len) in &[(2usize, 8usize), (3, 10), (4, 64), (5, 7), (8, 33)] {
+            let ranks: Vec<Vec<f32>> = (0..n)
+                .map(|_| rng.normal_vec(len, 1.0))
+                .collect();
+            let (got, wire) =
+                ring_all_reduce_bf16_with_scratch(ranks.clone(), &mut scratch)
+                    .unwrap();
+            let (want, wire_ref) = ring_all_reduce_bf16_ref(ranks).unwrap();
+            assert_eq!(wire, wire_ref, "n={n} len={len}");
+            for (a, b) in got.iter().zip(want.iter()) {
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "n={n} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_ring_all_ranks_identical_and_near_f32_sum() {
+        let mut rng = Rng::new(17);
+        let mut scratch = RingScratch::new();
+        for &(n, len) in &[(2usize, 16usize), (4, 33), (8, 64)] {
+            let ranks: Vec<Vec<f32>> = (0..n)
+                .map(|_| rng.normal_vec(len, 1.0))
+                .collect();
+            let want: Vec<f32> = (0..len)
+                .map(|i| ranks.iter().map(|r| r[i]).sum::<f32>())
+                .collect();
+            let (got, _) =
+                ring_all_reduce_bf16_with_scratch(ranks, &mut scratch).unwrap();
+            for r in &got[1..] {
+                for (x, y) in r.iter().zip(got[0].iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "ranks diverged");
+                }
+            }
+            for (a, b) in got[0].iter().zip(want.iter()) {
+                // bf16 has ~2-3 decimal digits; hop-rounded sums of O(n)
+                // unit normals stay well within a coarse tolerance
+                assert!(
+                    (a - b).abs() <= 0.05 * (n as f32) + 0.05,
+                    "n={n} len={len}: bf16 {a} vs f32 {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_wire_is_exactly_half_the_f32_wire() {
+        let mut scratch = RingScratch::new();
+        for &(n, len) in &[(2usize, 8usize), (4, 64), (8, 33)] {
+            let ranks: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0; len]).collect();
+            let (_, wire_f32) =
+                ring_all_reduce_with_scratch(ranks.clone(), &mut scratch).unwrap();
+            let (_, wire_bf16) =
+                ring_all_reduce_bf16_with_scratch(ranks, &mut scratch).unwrap();
+            for (w16, w32) in wire_bf16.iter().zip(wire_f32.iter()) {
+                assert_eq!(*w16 * 2, *w32, "n={n} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_single_rank_rounds_to_grid() {
+        // dp=1 bf16 must see the same storage precision as dp>1
+        let mut scratch = RingScratch::new();
+        let (out, wire) =
+            ring_all_reduce_bf16_with_scratch(vec![vec![1.0 + 1.0e-4, 2.5]], &mut scratch)
+                .unwrap();
+        assert_eq!(wire, vec![0]);
+        assert_eq!(out[0][0].to_bits(), 1.0f32.to_bits(), "rounded to bf16 grid");
+        assert_eq!(out[0][1], 2.5, "on-grid value untouched");
     }
 
     #[test]

@@ -186,6 +186,42 @@ impl ParallelConfig {
     }
 }
 
+/// Gradient storage/wire precision for training (the `--precision` flag /
+/// `[train] precision` key). `Bf16` emulates mixed-precision training on
+/// the host device plane: micro-gradients are rounded to the bf16 grid at
+/// emission, the DP ring all-reduce moves 2-byte bf16 halves (half the
+/// f32 wire), and a dynamic loss-scale guard skips non-finite steps —
+/// while parameters and Adam moments stay f32 **master weights**.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f32 everywhere (the default; bit-for-bit the legacy path).
+    #[default]
+    F32,
+    /// bf16 gradient storage + wire emulation over f32 master weights.
+    Bf16,
+}
+
+impl Precision {
+    /// Parse a `--precision` / `[train] precision` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "bf16" => Ok(Precision::Bf16),
+            _ => Err(Error::Config(format!(
+                "unknown precision '{s}' (expected f32 or bf16)"
+            ))),
+        }
+    }
+
+    /// Canonical name ("f32" / "bf16").
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub steps: usize,
@@ -201,6 +237,15 @@ pub struct TrainConfig {
     pub checkpoint_dir: Option<String>,
     pub seed: u64,
     pub grad_clip: Option<f32>,
+    /// gradient storage/wire precision (`--precision {f32,bf16}`)
+    pub precision: Precision,
+    /// double-buffered data prefetch: a producer thread generates step
+    /// N+1's micro-batches while step N computes (`--prefetch`)
+    pub prefetch: bool,
+    /// DP all-reduce bucket size in MiB: `Some(mb)` overlaps per-bucket
+    /// ring reductions with the remaining backward, `None` keeps the
+    /// monolithic post-backward reduce (`--bucket-mb`)
+    pub bucket_mb: Option<f64>,
 }
 
 impl Default for TrainConfig {
@@ -216,6 +261,9 @@ impl Default for TrainConfig {
             checkpoint_dir: None,
             seed: 42,
             grad_clip: Some(1.0),
+            precision: Precision::F32,
+            prefetch: false,
+            bucket_mb: None,
         }
     }
 }
@@ -498,6 +546,21 @@ impl RunConfig {
             if let Some(v) = t.get("grad_clip") {
                 cfg.train.grad_clip = Some(v.as_f32()?);
             }
+            if let Some(v) = t.get("precision") {
+                cfg.train.precision = Precision::parse(v.as_str()?)?;
+            }
+            if let Some(v) = t.get("prefetch") {
+                cfg.train.prefetch = v.as_bool()?;
+            }
+            if let Some(v) = t.get("bucket_mb") {
+                let mb = v.as_f64()?;
+                if !(mb > 0.0 && mb.is_finite()) {
+                    return Err(Error::Config(format!(
+                        "train bucket_mb must be a positive number, got {mb}"
+                    )));
+                }
+                cfg.train.bucket_mb = Some(mb);
+            }
         }
         if let Some(a) = doc.get("autochunk") {
             if let Some(v) = a.get("enabled") {
@@ -665,6 +728,26 @@ headroom = 0.25
         assert_eq!(cfg.device.backend, "xla-stub");
         assert!(RunConfig::from_toml("[device]\nbackend = \"cuda\"").is_err());
         assert!(RunConfig::from_toml("[device]\nbackend = 3").is_err());
+    }
+
+    #[test]
+    fn train_overlap_keys_parse_and_validate() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.train.precision, Precision::F32);
+        assert!(!cfg.train.prefetch);
+        assert_eq!(cfg.train.bucket_mb, None);
+        let cfg = RunConfig::from_toml(
+            "[train]\nprecision = \"bf16\"\nprefetch = true\nbucket_mb = 0.5",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.precision, Precision::Bf16);
+        assert!(cfg.train.prefetch);
+        assert_eq!(cfg.train.bucket_mb, Some(0.5));
+        assert!(RunConfig::from_toml("[train]\nprecision = \"fp8\"").is_err());
+        assert!(RunConfig::from_toml("[train]\nbucket_mb = 0").is_err());
+        assert!(RunConfig::from_toml("[train]\nbucket_mb = -1.0").is_err());
+        assert_eq!(Precision::parse("f32").unwrap().name(), "f32");
+        assert_eq!(Precision::parse("bf16").unwrap().name(), "bf16");
     }
 
     #[test]

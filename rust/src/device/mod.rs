@@ -82,6 +82,22 @@ pub trait DeviceBackend: Send + Sync {
 
     /// Elementwise `dst *= s`.
     fn scale(&self, dst: &mut [f32], s: f32);
+
+    /// Cast every element to its nearest bf16-representable value
+    /// (round-to-nearest-even), keeping f32 storage — the mixed-precision
+    /// plane's gradient cast.
+    fn bf16_round(&self, dst: &mut [f32]);
+
+    /// Pack f32s into bf16 wire halves (RNE per element) — what a bf16
+    /// collective puts on the wire at 2 bytes/element.
+    fn bf16_pack(&self, src: &[f32], dst: &mut [u16]);
+
+    /// Widen bf16 wire halves back to f32 (exact).
+    fn bf16_unpack(&self, src: &[u16], dst: &mut [f32]);
+
+    /// bf16-accumulate: `dst += widen(src)` with f32 accumulation (the
+    /// bf16 ring all-reduce's reduction primitive).
+    fn add_assign_bf16(&self, dst: &mut [f32], src: &[u16]);
 }
 
 /// Backend selector — the parsed form of the `[device] backend` config
@@ -246,6 +262,15 @@ pub fn scale_tensor(dst: &mut HostTensor, s: f32) {
     current().scale(dst.data_mut(), s);
 }
 
+/// Round every element of `dst` to the nearest bf16-representable value
+/// through the active backend (copy-on-write if storage is shared).
+/// Used by the mixed-precision trainer to emulate bf16 gradient storage
+/// without leaving the device plane.
+pub fn bf16_round_tensor(dst: &mut HostTensor) {
+    // lint:allow(backend) — device-plane plumbing owns the raw views
+    current().bf16_round(dst.data_mut());
+}
+
 /// One fused Adam update on tensor state through the active backend.
 /// Length mismatches panic with the kernel-plane message (callers own
 /// shape checks, as with the slice-level kernels).
@@ -289,6 +314,33 @@ mod tests {
         assert_eq!(backend_for(DeviceKind::XlaStub).name(), "xla-stub");
         #[cfg(feature = "simd")]
         assert_eq!(backend_for(DeviceKind::Simd).name(), "simd");
+    }
+
+    #[test]
+    fn bf16_paths_agree_across_backends() {
+        let xs: Vec<f32> = (0..300).map(|i| (i as f32 - 150.0) * 0.917).collect();
+        let oracle = &SCALAR;
+        let mut want_round = xs.clone();
+        oracle.bf16_round(&mut want_round);
+        let mut want_packed = vec![0u16; xs.len()];
+        oracle.bf16_pack(&xs, &mut want_packed);
+        for kind in [DeviceKind::Scalar, DeviceKind::Simd, DeviceKind::XlaStub] {
+            let be = backend_for(kind);
+            let mut r = xs.clone();
+            be.bf16_round(&mut r);
+            assert_eq!(r, want_round, "{}", be.name());
+            let mut p = vec![0u16; xs.len()];
+            be.bf16_pack(&xs, &mut p);
+            assert_eq!(p, want_packed, "{}", be.name());
+            let mut w = vec![0f32; xs.len()];
+            be.bf16_unpack(&p, &mut w);
+            assert_eq!(w, want_round, "{}", be.name());
+            let mut acc = vec![0.5f32; xs.len()];
+            be.add_assign_bf16(&mut acc, &p);
+            for (a, &r) in acc.iter().zip(&want_round) {
+                assert_eq!(a.to_bits(), (0.5 + r).to_bits(), "{}", be.name());
+            }
+        }
     }
 
     #[test]

@@ -11,6 +11,8 @@ use super::DeviceBackend;
 use crate::kernels::{adam, layernorm, softmax};
 // lint:allow(backend) — elementwise helpers live at the kernel-plane root
 use crate::kernels::{add_assign as add_assign_slices, scale as scale_slices};
+// lint:allow(backend) — the bf16 storage-emulation kernels are oracle-owned
+use crate::kernels::bf16;
 
 /// The scalar oracle (backend name `"scalar"`).
 #[derive(Clone, Copy, Debug, Default)]
@@ -55,5 +57,21 @@ impl DeviceBackend for ScalarHost {
 
     fn scale(&self, dst: &mut [f32], s: f32) {
         scale_slices(dst, s);
+    }
+
+    fn bf16_round(&self, dst: &mut [f32]) {
+        bf16::round_slice(dst);
+    }
+
+    fn bf16_pack(&self, src: &[f32], dst: &mut [u16]) {
+        bf16::pack_slice(src, dst);
+    }
+
+    fn bf16_unpack(&self, src: &[u16], dst: &mut [f32]) {
+        bf16::unpack_slice(src, dst);
+    }
+
+    fn add_assign_bf16(&self, dst: &mut [f32], src: &[u16]) {
+        bf16::add_assign_bf16(dst, src);
     }
 }

@@ -29,6 +29,8 @@ use super::DeviceBackend;
 use crate::kernels::adam::{BETA1, BETA2, EPS};
 // lint:allow(backend) — shared polynomial exp keeps scalar/simd bit-identical
 use crate::kernels::math::exp32;
+// lint:allow(backend) — bf16 casts share the oracle's bit-manipulation kernels
+use crate::kernels::bf16;
 use std::ops::{Add, AddAssign, Div, Mul, Sub};
 
 /// Lane width of [`F32x8`].
@@ -305,6 +307,71 @@ impl DeviceBackend for SimdHost {
         std::thread::scope(|sc| {
             for dc in dst.chunks_mut(band) {
                 sc.spawn(move || scale_band(dc, s));
+            }
+        });
+    }
+
+    // The bf16 conversions are integer bit manipulation (no f32 lane op
+    // expresses an RNE mantissa round), so each band runs the oracle's
+    // per-element kernels; the win here is the banding — conversions on
+    // the trainer's gradient leaves thread like any elementwise pass,
+    // and all four are bit-invariant to band boundaries by construction.
+
+    fn bf16_round(&self, dst: &mut [f32]) {
+        let workers = worker_count(self.budget(), dst.len(), MIN_ELEMS_PER_WORKER);
+        if workers <= 1 {
+            bf16::round_slice(dst);
+            return;
+        }
+        let band = (dst.len() + workers - 1) / workers;
+        std::thread::scope(|s| {
+            for dc in dst.chunks_mut(band) {
+                s.spawn(move || bf16::round_slice(dc));
+            }
+        });
+    }
+
+    fn bf16_pack(&self, src: &[f32], dst: &mut [u16]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let workers = worker_count(self.budget(), dst.len(), MIN_ELEMS_PER_WORKER);
+        if workers <= 1 {
+            bf16::pack_slice(src, dst);
+            return;
+        }
+        let band = (dst.len() + workers - 1) / workers;
+        std::thread::scope(|s| {
+            for (sc, dc) in src.chunks(band).zip(dst.chunks_mut(band)) {
+                s.spawn(move || bf16::pack_slice(sc, dc));
+            }
+        });
+    }
+
+    fn bf16_unpack(&self, src: &[u16], dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let workers = worker_count(self.budget(), dst.len(), MIN_ELEMS_PER_WORKER);
+        if workers <= 1 {
+            bf16::unpack_slice(src, dst);
+            return;
+        }
+        let band = (dst.len() + workers - 1) / workers;
+        std::thread::scope(|s| {
+            for (sc, dc) in src.chunks(band).zip(dst.chunks_mut(band)) {
+                s.spawn(move || bf16::unpack_slice(sc, dc));
+            }
+        });
+    }
+
+    fn add_assign_bf16(&self, dst: &mut [f32], src: &[u16]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let workers = worker_count(self.budget(), dst.len(), MIN_ELEMS_PER_WORKER);
+        if workers <= 1 {
+            bf16::add_assign_bf16(dst, src);
+            return;
+        }
+        let band = (dst.len() + workers - 1) / workers;
+        std::thread::scope(|s| {
+            for (dc, sc) in dst.chunks_mut(band).zip(src.chunks(band)) {
+                s.spawn(move || bf16::add_assign_bf16(dc, sc));
             }
         });
     }

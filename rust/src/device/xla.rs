@@ -54,4 +54,20 @@ impl DeviceBackend for XlaStubHost {
     fn scale(&self, dst: &mut [f32], s: f32) {
         ScalarHost.scale(dst, s);
     }
+
+    fn bf16_round(&self, dst: &mut [f32]) {
+        ScalarHost.bf16_round(dst);
+    }
+
+    fn bf16_pack(&self, src: &[f32], dst: &mut [u16]) {
+        ScalarHost.bf16_pack(src, dst);
+    }
+
+    fn bf16_unpack(&self, src: &[u16], dst: &mut [f32]) {
+        ScalarHost.bf16_unpack(src, dst);
+    }
+
+    fn add_assign_bf16(&self, dst: &mut [f32], src: &[u16]) {
+        ScalarHost.add_assign_bf16(dst, src);
+    }
 }

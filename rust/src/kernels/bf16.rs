@@ -1,0 +1,139 @@
+//! bf16 storage emulation for the mixed-precision training plane.
+//!
+//! The offline build has no device bf16 unit, so "bf16" here means the
+//! *storage format*: a value is bf16-representable iff its low 16
+//! mantissa bits are zero. [`pack`] rounds an f32 to the nearest
+//! bf16-representable value (round-to-nearest-even — the hardware cast
+//! semantics on every bf16-capable accelerator) and keeps the top 16
+//! bits; [`unpack`] widens back by appending a zero mantissa half,
+//! which is exact. Gradients stored/reduced in bf16 therefore lose
+//! precision exactly where real hardware would, while the f32 master
+//! weights in the fused Adam keep the optimizer trajectory stable
+//! (paper-adjacent ScaleFold recipe, arXiv:2404.11068).
+//!
+//! Like the other kernels this module is a leaf: callers dispatch
+//! through [`crate::device`], never call these directly.
+
+/// Round an f32 to bf16 (round-to-nearest-even) and keep the packed
+/// top-16-bit form. NaNs are quieted (mantissa MSB forced on) so a NaN
+/// payload can never round to infinity.
+#[inline(always)]
+pub fn pack(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE: add 0x7FFF plus the round bit that makes ties go to even
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Widen a packed bf16 half back to f32 (exact — bf16 values are a
+/// subset of f32).
+#[inline(always)]
+pub fn unpack(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// The nearest bf16-representable value of `x`, as f32 (cast
+/// round-trip: pack then widen).
+#[inline(always)]
+pub fn round_f32(x: f32) -> f32 {
+    unpack(pack(x))
+}
+
+/// In-place cast of every element to its nearest bf16-representable
+/// value (f32 storage, bf16 value grid).
+pub fn round_slice(dst: &mut [f32]) {
+    for d in dst.iter_mut() {
+        *d = round_f32(*d);
+    }
+}
+
+/// Pack f32s into bf16 wire halves (RNE per element).
+pub fn pack_slice(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = pack(s);
+    }
+}
+
+/// Unpack bf16 wire halves back into f32s (exact).
+pub fn unpack_slice(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = unpack(s);
+    }
+}
+
+/// bf16-accumulate: `dst += widen(src)` with f32 accumulation — the
+/// reduction primitive of the bf16 ring all-reduce (values travel in
+/// half the bytes; the accumulator keeps f32 precision).
+pub fn add_assign_bf16(dst: &mut [f32], src: &[u16]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += unpack(s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_exact_on_bf16_grid() {
+        for v in [0.0f32, -0.0, 1.0, -1.5, 0.25, 3.0e38, 1.0e-38] {
+            let r = round_f32(v);
+            // a second cast is a fixed point
+            assert_eq!(round_f32(r).to_bits(), r.to_bits(), "v={v}");
+        }
+        // values already on the grid pass through untouched
+        assert_eq!(round_f32(1.0).to_bits(), 1.0f32.to_bits());
+        assert_eq!(round_f32(-2.5).to_bits(), (-2.5f32).to_bits());
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1.0 + 2^-9 sits exactly between bf16 neighbours 1.0 and
+        // 1.0078125; RNE picks the even mantissa (1.0)
+        let tie = f32::from_bits(0x3F80_8000);
+        assert_eq!(round_f32(tie), 1.0);
+        // one ulp above the tie rounds up
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(round_f32(above), f32::from_bits(0x3F81_0000));
+        // and the next tie (between 1.0078125 and 1.015625) rounds to
+        // the even neighbour above
+        let tie2 = f32::from_bits(0x3F81_8000);
+        assert_eq!(round_f32(tie2), f32::from_bits(0x3F82_0000));
+    }
+
+    #[test]
+    fn nan_and_inf_preserved() {
+        assert!(round_f32(f32::NAN).is_nan());
+        assert_eq!(round_f32(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round_f32(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        // overflow to infinity at the top of the range is RNE-correct
+        assert_eq!(round_f32(f32::MAX), f32::INFINITY);
+    }
+
+    #[test]
+    fn slice_helpers_agree_with_scalar() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.0137).collect();
+        let mut packed = vec![0u16; xs.len()];
+        pack_slice(&xs, &mut packed);
+        let mut widened = vec![0f32; xs.len()];
+        unpack_slice(&packed, &mut widened);
+        let mut rounded = xs.clone();
+        round_slice(&mut rounded);
+        for ((&x, &w), &r) in xs.iter().zip(&widened).zip(&rounded) {
+            assert_eq!(w.to_bits(), round_f32(x).to_bits());
+            assert_eq!(r.to_bits(), w.to_bits());
+            assert!((w - x).abs() <= x.abs() * 0.0040, "x={x} w={w}");
+        }
+        let mut acc = vec![1.0f32; xs.len()];
+        add_assign_bf16(&mut acc, &packed);
+        for (a, &w) in acc.iter().zip(&widened) {
+            assert_eq!(a.to_bits(), (1.0 + w).to_bits());
+        }
+    }
+}

@@ -35,6 +35,7 @@
 //! `backend-bypass` lint enforces this).
 
 pub mod adam;
+pub mod bf16;
 pub mod layernorm;
 pub mod math;
 pub mod scratch;

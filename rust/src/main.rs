@@ -3,6 +3,7 @@
 //! ```text
 //! fastfold train     [--preset tiny] [--steps N] [--dp N] [--dap N]
 //!                    [--accum N] [--threads N] [--backend synthetic]
+//!                    [--precision f32|bf16] [--prefetch] [--bucket-mb F]
 //!                    [--checkpoint-dir D] [--resume] [--config f.toml]
 //! fastfold scale     [--gpus N] [--dap N] [--gpu a100_40g]
 //! fastfold infer     [--preset tiny] [--len N] [--dap N] [--threads N]
@@ -18,6 +19,7 @@
 //! fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu a100_40g]
 //!                    [--headroom F] [--json] [--config f.toml]
 //! fastfold bench     [--json] [--out BENCH_host.json] [--quick]
+//!                    [--train] [--train-out BENCH_train.json]
 //! fastfold verify    [--preset P] [--dap N] [--all] [--json FILE]
 //! fastfold lint      [--src DIR]
 //! fastfold report    <table2|table3|table4|table5|fig10|fig11|fig13|validate>
@@ -100,6 +102,7 @@ fn run(args: &[String]) -> Result<()> {
                 "fastfold — FastFold reproduction (see README.md)\n\n\
                  usage:\n  fastfold train  [--preset P] [--steps N] [--dp N] [--dap N] \
                  [--accum N] [--threads N]\n                  [--backend synthetic] \
+                 [--precision f32|bf16] [--prefetch] [--bucket-mb F]\n                  \
                  [--checkpoint-dir D] [--resume] [--config f.toml]\n                  \
                  [--device-backend scalar|simd|xla-stub]\n  \
                  fastfold scale  [--gpus N] [--dap N] [--gpu G]\n  \
@@ -117,7 +120,8 @@ fn run(args: &[String]) -> Result<()> {
                  fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu G] \
                  [--headroom F] [--json] [--config f.toml]\n  \
                  fastfold bench  [--json] [--out BENCH_host.json] [--quick] \
-                 [--device-backend B]\n  \
+                 [--device-backend B]\n                  \
+                 [--train] [--train-out BENCH_train.json]\n  \
                  fastfold verify [--preset P] [--dap N] [--all] [--json FILE]\n  \
                  fastfold lint   [--src DIR]\n  \
                  fastfold report <table2|table3|table4|table5|fig10|fig11|fig13|validate>\n  \
@@ -178,6 +182,23 @@ fn cmd_train(_pos: &[String], flags: &BTreeMap<String, String>) -> Result<()> {
     }
     run_cfg.train.checkpoint_every =
         num_flag(flags, "checkpoint-every", run_cfg.train.checkpoint_every)?;
+    if let Some(p) = flags.get("precision") {
+        run_cfg.train.precision = fastfold::config::Precision::parse(p)?;
+    }
+    if flags.contains_key("prefetch") {
+        run_cfg.train.prefetch = true;
+    }
+    if let Some(mb) = flags.get("bucket-mb") {
+        let mb: f64 = mb.parse().map_err(|_| {
+            fastfold::Error::Config(format!("--bucket-mb: invalid value '{mb}'"))
+        })?;
+        if !(mb > 0.0) {
+            return Err(fastfold::Error::Config(
+                "--bucket-mb must be > 0".into(),
+            ));
+        }
+        run_cfg.train.bucket_mb = Some(mb);
+    }
     apply_device_backend(&mut run_cfg, flags)?;
 
     let plan = ParallelPlan::from_config(&run_cfg.parallel);
@@ -278,11 +299,18 @@ fn drive_train(
         }
     }
     println!(
-        "[fastfold] training preset='{}' [{}] backend={} steps={} on {}",
+        "[fastfold] training preset='{}' [{}] backend={} steps={} \
+         precision={} prefetch={} buckets={} on {}",
         trainer.preset(),
         trainer.plan,
         trainer.backend_name(),
         run_cfg.train.steps,
+        run_cfg.train.precision.name(),
+        run_cfg.train.prefetch,
+        match run_cfg.train.bucket_mb {
+            Some(mb) => format!("{mb} MB"),
+            None => "off".into(),
+        },
         platform,
     );
     let report = trainer.run()?;
@@ -306,6 +334,18 @@ fn drive_train(
         fmt_bytes(report.wire_bytes),
         fmt_bytes(report.wire_dap_bytes),
     );
+    if report.comm_seconds > 0.0 || report.prefetch_stall_seconds > 0.0 {
+        println!(
+            "[fastfold] overlap: {:.1}% of {} DP comm hidden ({} exposed); \
+             prefetch stall {}; precision {} ({} skipped steps)",
+            100.0 * report.overlap_fraction,
+            fmt_secs(report.comm_seconds),
+            fmt_secs(report.exposed_comm_seconds),
+            fmt_secs(report.prefetch_stall_seconds),
+            report.precision,
+            report.skipped_steps,
+        );
+    }
     Ok(())
 }
 
@@ -916,6 +956,26 @@ fn cmd_bench(flags: &BTreeMap<String, String>) -> Result<()> {
     let mut run_cfg = RunConfig::default();
     apply_device_backend(&mut run_cfg, flags)?;
     let opts = fastfold::bench::BenchOptions { quick: flags.contains_key("quick") };
+    if flags.contains_key("train") {
+        let doc = fastfold::bench::run_train_bench(opts)?;
+        let out = flags
+            .get("train-out")
+            .cloned()
+            .unwrap_or_else(|| "BENCH_train.json".to_string());
+        std::fs::write(&out, format!("{doc}\n"))?;
+        if flags.contains_key("json") {
+            println!("{doc}");
+        } else {
+            println!(
+                "fastfold bench --train — DP overlap + mixed precision \
+                 (quick={})\n",
+                opts.quick
+            );
+            fastfold::bench::render_train_table(&doc).print();
+        }
+        eprintln!("[fastfold] wrote {out}");
+        return Ok(());
+    }
     let doc = fastfold::bench::run_host_bench(opts)?;
     if flags.contains_key("json") || flags.contains_key("out") {
         let out = flags

@@ -17,4 +17,4 @@ pub mod scaling;
 pub use flops::BlockFlops;
 pub use gpu::GpuSpec;
 pub use memory::MemoryModel;
-pub use scaling::{ScalingModel, StepTime};
+pub use scaling::{DpOverlap, DpStepModel, ScalingModel, StepTime};

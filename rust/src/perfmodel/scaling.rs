@@ -92,6 +92,48 @@ impl Default for ScalingModel {
     }
 }
 
+/// Knobs of the overlap-aware data-parallel reduction model — the modeled
+/// twin of the executed bucketed all-reduce (`train::bucket`): gradient
+/// wire precision, bucket count, and NIC sharing.
+#[derive(Clone, Copy, Debug)]
+pub struct DpOverlap {
+    /// wire bytes per gradient element (4 = f32, 2 = bf16)
+    pub wire_bytes: f64,
+    /// gradient buckets launched as the backward tape replay retires them
+    pub n_buckets: usize,
+    /// GPUs sharing one NIC (4 on A100 nodes; 1 on DGX-H100-class nodes
+    /// with a 400G HCA per GPU)
+    pub nic_share: f64,
+}
+
+impl DpOverlap {
+    /// The legacy layout: one post-backward f32 all-reduce, A100 NIC
+    /// sharing — nothing overlaps.
+    pub fn f32_monolithic() -> Self {
+        DpOverlap { wire_bytes: 4.0, n_buckets: 1, nic_share: 4.0 }
+    }
+
+    /// This PR's executed configuration on the A100 fleet model: bf16
+    /// wire, backward-ordered buckets.
+    pub fn bf16_bucketed() -> Self {
+        DpOverlap { wire_bytes: 2.0, n_buckets: 24, nic_share: 4.0 }
+    }
+}
+
+/// Modeled outcome of one overlapped DP reduction
+/// ([`ScalingModel::dp_step_overlapped`]).
+#[derive(Clone, Copy, Debug)]
+pub struct DpStepModel {
+    /// end-to-end step seconds (MP step + exposed reduction + straggler)
+    pub step_secs: f64,
+    /// total ring all-reduce seconds (bandwidth + per-bucket launches)
+    pub allreduce_secs: f64,
+    /// reduction seconds left exposed after hiding behind the backward
+    pub exposed_secs: f64,
+    /// 1 − exposed/allreduce — the `BENCH_train.json` gate metric
+    pub overlap_fraction: f64,
+}
+
 impl ScalingModel {
     /// Compute time of one block forward on one device given the module
     /// FLOPs it actually executes.
@@ -264,6 +306,108 @@ impl ScalingModel {
         let sigma = 0.015 * mp_step_secs;
         let straggler = if n > 1.0 { sigma * (2.0 * n.ln()).sqrt() } else { 0.0 };
         mp_step_secs + exposed + straggler
+    }
+
+    /// Overlap-aware refinement of [`ScalingModel::dp_step`]: instead of
+    /// the fixed 0.35 DDP exposure factor, model the bucketed all-reduce
+    /// this PR executes. Buckets launch as the backward tape replay
+    /// retires their leaves, so the reduction can hide behind the
+    /// remaining backward compute — backward is 2 of the
+    /// `TRAIN_RECYCLES + 2` compute passes of a step, and the first
+    /// bucket's gradients only exist after `1/B` of it. The last bucket
+    /// necessarily runs after the backward finishes, so at least
+    /// `allreduce/B` stays exposed; each bucket pays its own ring launch
+    /// latency (the α·2(n−1) term × B).
+    pub fn dp_step_overlapped(
+        &self,
+        cfg: &ModelConfig,
+        mp_step_secs: f64,
+        dp_ranks: usize,
+        ov: DpOverlap,
+    ) -> DpStepModel {
+        if dp_ranks <= 1 {
+            return DpStepModel {
+                step_secs: mp_step_secs,
+                allreduce_secs: 0.0,
+                exposed_secs: 0.0,
+                overlap_fraction: 1.0,
+            };
+        }
+        let b = ov.n_buckets.max(1) as f64;
+        let grad_bytes = cfg.param_count() as f64 * ov.wire_bytes;
+        let n = dp_ranks as f64;
+        let ring = 2.0 * (n - 1.0) / n;
+        let allreduce = grad_bytes * ring / (self.inter.beta / ov.nic_share)
+            + self.inter.alpha * 2.0 * (n - 1.0) * b;
+        let bwd = mp_step_secs * 2.0 / (TRAIN_RECYCLES + 2.0);
+        let window = bwd * (1.0 - 1.0 / b);
+        let exposed = (allreduce - window).max(allreduce / b).min(allreduce);
+        let sigma = 0.015 * mp_step_secs;
+        let straggler = sigma * (2.0 * n.ln()).sqrt();
+        DpStepModel {
+            step_secs: mp_step_secs + exposed + straggler,
+            allreduce_secs: allreduce,
+            exposed_secs: exposed,
+            overlap_fraction: 1.0 - exposed / allreduce,
+        }
+    }
+
+    /// [`ScalingModel::phase_hours`] with the overlapped DP reduction in
+    /// place of the legacy fixed-factor model.
+    pub fn phase_hours_overlapped(
+        &self,
+        cfg: &ModelConfig,
+        p: &ImplProfile,
+        dap: usize,
+        dp: usize,
+        samples: f64,
+        ov: DpOverlap,
+    ) -> f64 {
+        let mp = self.train_step(cfg, p, MpMethod::Dap, dap, true).total();
+        let d = self.dp_step_overlapped(cfg, mp, dp, ov);
+        d.step_secs * (samples / dp.max(1) as f64) / 3600.0
+    }
+
+    /// An H100 fleet (the ScaleFold platform): NVLink4 intra-node (900
+    /// GB/s nominal; ~270 GB/s effective collective busbw at Evoformer
+    /// message sizes), NDR InfiniBand inter-node with one 400G HCA per
+    /// GPU (50 GB/s each, so `nic_share = 1`). The structural
+    /// `pipeline_mult` carries over unchanged — it prices the model, not
+    /// the device.
+    pub fn h100_cluster() -> Self {
+        ScalingModel {
+            gpu: GpuSpec::h100_80g(),
+            intra: CommCost { alpha: 10e-6, beta: 270e9 },
+            inter: CommCost { alpha: 8e-6, beta: 50e9 },
+            pipeline_mult: 6.2,
+        }
+    }
+
+    /// The second calibration point next to FastFold's 67 h: ScaleFold
+    /// (arXiv:2404.11068) reports AlphaFold pretraining compressed from
+    /// 7.51 days to ~10.3 h on 2080 H100s. Modeled as the two-stage
+    /// recipe at the fixed global batch of 128 on the
+    /// [`ScalingModel::h100_cluster`]: the initial stage at dap=8 ×
+    /// dp=128 (1024 ranks), fine-tuning at dap=16 × dp=128 (2048 of the
+    /// 2080-GPU fleet), with the bf16 gradient wire and 24-bucket
+    /// overlapped all-reduce this PR executes. Returns (initial hours,
+    /// finetune hours); the sum lands within 10% of the 10.3-h headline
+    /// (tested below).
+    pub fn scalefold_hours() -> (f64, f64) {
+        let m = Self::h100_cluster();
+        let p = ImplProfile::scalefold();
+        let ov = DpOverlap { wire_bytes: 2.0, n_buckets: 24, nic_share: 1.0 };
+        let hi = m.phase_hours_overlapped(
+            &ModelConfig::initial_training(),
+            &p,
+            8,
+            128,
+            10.0e6,
+            ov,
+        );
+        let hf =
+            m.phase_hours_overlapped(&ModelConfig::finetune(), &p, 16, 128, 1.5e6, ov);
+        (hi, hf)
     }
 
     /// One hybrid DP×DAP training step at paper scale: the DAP group's
@@ -477,6 +621,75 @@ mod tests {
             hi64 > 1.8 * hi && hi64 < 2.2 * hi,
             "dp=64 initial {hi64:.1} h vs dp=128 {hi:.1} h"
         );
+    }
+
+    #[test]
+    fn bucketed_overlap_beats_fixed_ddp_factor() {
+        // the overlap-aware model must (a) reduce to full exposure for a
+        // single post-backward bucket and (b) hide more than the legacy
+        // 0.35 factor once buckets launch from the backward tape
+        let m = ScalingModel::default();
+        let cfg = ModelConfig::finetune();
+        let p = ImplProfile::fastfold();
+        let mp = m.train_step(&cfg, &p, MpMethod::Dap, 4, true).total();
+        let mono = m.dp_step_overlapped(&cfg, mp, 128, DpOverlap::f32_monolithic());
+        assert!((mono.exposed_secs - mono.allreduce_secs).abs() < 1e-12);
+        assert!(mono.overlap_fraction.abs() < 1e-12);
+        let b = m.dp_step_overlapped(
+            &cfg,
+            mp,
+            128,
+            DpOverlap { wire_bytes: 4.0, n_buckets: 24, nic_share: 4.0 },
+        );
+        assert!(b.exposed_secs < 0.35 * b.allreduce_secs, "exposed {}", b.exposed_secs);
+        assert!(b.overlap_fraction > 0.5, "overlap {}", b.overlap_fraction);
+        assert!(b.step_secs < mono.step_secs);
+        // the legacy fixed-factor step stays between the two extremes
+        let legacy = m.dp_step(&cfg, mp, 128);
+        assert!(b.step_secs < legacy && legacy < mono.step_secs);
+        // dp=1: nothing to reduce
+        let solo = m.dp_step_overlapped(&cfg, mp, 1, DpOverlap::bf16_bucketed());
+        assert_eq!(solo.step_secs, mp);
+        assert_eq!(solo.overlap_fraction, 1.0);
+    }
+
+    #[test]
+    fn bf16_wire_halves_bandwidth_term() {
+        let m = ScalingModel::default();
+        let cfg = ModelConfig::finetune();
+        let p = ImplProfile::fastfold();
+        let mp = m.train_step(&cfg, &p, MpMethod::Dap, 4, true).total();
+        let f32w = m.dp_step_overlapped(
+            &cfg,
+            mp,
+            128,
+            DpOverlap { wire_bytes: 4.0, n_buckets: 24, nic_share: 4.0 },
+        );
+        let bf16 = m.dp_step_overlapped(&cfg, mp, 128, DpOverlap::bf16_bucketed());
+        // half the wire bytes: the bandwidth term halves, launches do not
+        assert!(bf16.allreduce_secs < f32w.allreduce_secs);
+        assert!(bf16.allreduce_secs > 0.4 * f32w.allreduce_secs);
+        assert!(bf16.step_secs <= f32w.step_secs);
+    }
+
+    #[test]
+    fn scalefold_10_hours_on_h100() {
+        // second calibration target (arXiv:2404.11068): ~10.3 h on 2080
+        // H100s, from a 7.51-day baseline — modeled within 10%
+        let (hi, hf) = ScalingModel::scalefold_hours();
+        let total = hi + hf;
+        assert!(
+            (total - 10.3).abs() / 10.3 < 0.10,
+            "scalefold total {total:.2} h (target 10.3 ± 10%)"
+        );
+        assert!(hi > hf, "initial phase dominates: {hi:.1} vs {hf:.1}");
+        // and the A100 dense-replica baseline stays in the multi-day
+        // band — the modeled compression matches the paper's ~17.5x
+        let base = ScalingModel::default();
+        let (oi, of) =
+            base.two_stage_hours(&ImplProfile::openfold(), (1, 128), (1, 128));
+        let speedup = (oi + of) / total;
+        assert!(speedup > 15.0 && speedup < 30.0, "speedup {speedup:.1}x");
     }
 
     #[test]

@@ -35,6 +35,42 @@ pub type GradOut = (f32, Vec<HostTensor>);
 /// Updated (params, m, v) after one Adam step.
 pub type AdamOut = (Vec<HostTensor>, Vec<HostTensor>, Vec<HostTensor>);
 
+/// Where a streamed backward delivers results as they are produced —
+/// the seam the bucketed, overlapped DP all-reduce hangs off: each leaf
+/// gradient is handed over the moment the backward computes it, so a
+/// bucket's cross-replica reduction can launch while the rest of the
+/// reverse pass is still running. Implementations are shared across
+/// backend worker threads, so methods take `&self` and must be
+/// internally synchronized.
+pub trait GradSink: Sync {
+    /// This micro-batch's scalar loss.
+    fn emit_loss(&self, batch_idx: usize, loss: f32);
+    /// One leaf gradient for micro-batch `batch_idx`, delivered in the
+    /// backend's [`TrainBackend::backward_leaf_order`] within the batch.
+    fn emit_grad(&self, batch_idx: usize, leaf: usize, grad: HostTensor);
+}
+
+/// Emit one micro-batch's materialized gradients into `sink` following
+/// `order` (any leaf `order` misses is still delivered, at the end).
+fn emit_in_order(
+    sink: &dyn GradSink,
+    batch_idx: usize,
+    grads: Vec<HostTensor>,
+    order: &[usize],
+) {
+    let mut slots: Vec<Option<HostTensor>> = grads.into_iter().map(Some).collect();
+    for &leaf in order {
+        if let Some(g) = slots.get_mut(leaf).and_then(|s| s.take()) {
+            sink.emit_grad(batch_idx, leaf, g);
+        }
+    }
+    for (leaf, s) in slots.iter_mut().enumerate() {
+        if let Some(g) = s.take() {
+            sink.emit_grad(batch_idx, leaf, g);
+        }
+    }
+}
+
 /// Computes a replica's forward/backward and the optimizer update.
 pub trait TrainBackend {
     /// Short name for logs/reports ("dense", "dap4", "synthetic").
@@ -55,6 +91,43 @@ pub trait TrainBackend {
     ) -> Result<Vec<GradOut>> {
         let _ = threads;
         batches.iter().map(|b| self.grad(params, b)).collect()
+    }
+
+    /// Leaf indices in the order the backward pass finishes computing
+    /// them — the order a streamed backward hands gradients to a
+    /// [`GradSink`], and the order the bucketed DP all-reduce packs its
+    /// buckets so each bucket closes (and its ring reduction launches)
+    /// as early as possible. The default is plain reverse canonical
+    /// order; backends with structure (heads → blocks reversed → embed)
+    /// override with their true completion order. Must be a permutation
+    /// of `0..n_leaves`.
+    fn backward_leaf_order(&self, n_leaves: usize) -> Vec<usize> {
+        (0..n_leaves).rev().collect()
+    }
+
+    /// Stream each micro-batch's loss and per-leaf gradients into `sink`
+    /// as they become available, instead of materializing a full
+    /// `Vec<GradOut>` first. Within one micro-batch gradients arrive in
+    /// [`TrainBackend::backward_leaf_order`]; micro-batches may
+    /// interleave arbitrarily (the sink keys on `batch_idx`). The
+    /// default computes each micro-batch with [`TrainBackend::grad`] and
+    /// emits it before starting the next, so overlap-aware callers see
+    /// per-batch streaming on any backend.
+    fn grad_many_streamed(
+        &self,
+        params: &[HostTensor],
+        batches: &[Batch],
+        threads: usize,
+        sink: &dyn GradSink,
+    ) -> Result<()> {
+        let _ = threads;
+        let order = self.backward_leaf_order(params.len());
+        for (i, b) in batches.iter().enumerate() {
+            let (loss, grads) = self.grad(params, b)?;
+            sink.emit_loss(i, loss);
+            emit_in_order(sink, i, grads, &order);
+        }
+        Ok(())
     }
 
     /// One Adam update at (1-based) `step` with learning rate `lr`.
@@ -181,6 +254,25 @@ impl TrainBackend for DenseBackend {
         parallel_ranks(threads, batches.len(), |i| self.grad(params, &batches[i]))
     }
 
+    fn grad_many_streamed(
+        &self,
+        params: &[HostTensor],
+        batches: &[Batch],
+        threads: usize,
+        sink: &dyn GradSink,
+    ) -> Result<()> {
+        // same fan-out as grad_many, but each worker hands its batch to
+        // the sink the moment it finishes instead of joining first
+        let order = self.backward_leaf_order(params.len());
+        parallel_ranks(threads, batches.len(), |i| {
+            let (loss, grads) = self.grad(params, &batches[i])?;
+            sink.emit_loss(i, loss);
+            emit_in_order(sink, i, grads, &order);
+            Ok(())
+        })
+        .map(|_| ())
+    }
+
     fn adam(
         &self,
         step: usize,
@@ -267,16 +359,20 @@ impl<'rt> HybridDapBackend<'rt> {
     pub fn dap(&self) -> usize {
         self.co.n
     }
-}
 
-impl TrainBackend for HybridDapBackend<'_> {
-    fn name(&self) -> String {
-        format!("dap{}", self.co.n)
-    }
-
-    fn grad(&self, params: &[HostTensor], batch: &Batch) -> Result<GradOut> {
+    /// Shared forward/backward body: run the replica and hand each leaf
+    /// gradient to `emit` at the point the backward produces it — head
+    /// leaves right after the loss/head VJP, each block's leaves as its
+    /// reverse tape replay completes (deepest block first), embedder
+    /// leaves last. Returns the loss and how many leaves were emitted.
+    fn grad_emit(
+        &self,
+        params: &[HostTensor],
+        batch: &Batch,
+        emit: &mut dyn FnMut(usize, HostTensor),
+    ) -> Result<(f32, usize)> {
         let co = &self.co;
-        let mut grads: Vec<Option<HostTensor>> = vec![None; params.len()];
+        let mut emitted = 0usize;
 
         // embed (replicated)
         let mut args: Vec<Value> = self
@@ -318,13 +414,16 @@ impl TrainBackend for HybridDapBackend<'_> {
         let nh = self.head_idx.len();
         let loss = out[0].data()[0];
         for (k, &i) in self.head_idx.iter().enumerate() {
-            grads[i] = Some(out[1 + k].clone());
+            emit(i, out[1 + k].clone());
+            emitted += 1;
         }
         let d_m = out[1 + nh].clone();
         let d_z = out[2 + nh].clone();
 
         // reverse block replay: shard the cotangents like the activations,
-        // walk blocks backward, summing each leaf over the DAP group
+        // walk blocks backward, summing each leaf over the DAP group —
+        // each block's grads stream out the moment its replay completes
+        // (the bucketed DP all-reduce launch points)
         let mut d_state = co.shard_inputs(&d_m, &d_z)?;
         for b in (0..self.block_idx.len()).rev() {
             let bg = co.block_backward_with(
@@ -340,7 +439,8 @@ impl TrainBackend for HybridDapBackend<'_> {
                 )));
             }
             for (g, &i) in bg.into_iter().zip(self.block_idx[b].iter()) {
-                grads[i] = Some(g);
+                emit(i, g);
+                emitted += 1;
             }
         }
         let (d_m0, d_z0) = co.unshard(&d_state)?;
@@ -356,9 +456,22 @@ impl TrainBackend for HybridDapBackend<'_> {
         args.push(d_z0.into());
         let out = self.embed_bwd_exe.run(&args)?;
         for (k, &i) in self.embed_idx.iter().enumerate() {
-            grads[i] = Some(out[k].clone());
+            emit(i, out[k].clone());
+            emitted += 1;
         }
+        Ok((loss, emitted))
+    }
+}
 
+impl TrainBackend for HybridDapBackend<'_> {
+    fn name(&self) -> String {
+        format!("dap{}", self.co.n)
+    }
+
+    fn grad(&self, params: &[HostTensor], batch: &Batch) -> Result<GradOut> {
+        let mut grads: Vec<Option<HostTensor>> = vec![None; params.len()];
+        let (loss, _emitted) =
+            self.grad_emit(params, batch, &mut |i, g| grads[i] = Some(g))?;
         let grads: Vec<HostTensor> = grads
             .into_iter()
             .enumerate()
@@ -372,6 +485,43 @@ impl TrainBackend for HybridDapBackend<'_> {
             })
             .collect::<Result<_>>()?;
         Ok((loss, grads))
+    }
+
+    fn backward_leaf_order(&self, n_leaves: usize) -> Vec<usize> {
+        // the true completion order of grad_emit: heads, blocks deepest
+        // block first, embedder last
+        let mut order = Vec::with_capacity(n_leaves);
+        order.extend(self.head_idx.iter().copied());
+        for idx in self.block_idx.iter().rev() {
+            order.extend(idx.iter().copied());
+        }
+        order.extend(self.embed_idx.iter().copied());
+        order
+    }
+
+    fn grad_many_streamed(
+        &self,
+        params: &[HostTensor],
+        batches: &[Batch],
+        _threads: usize,
+        sink: &dyn GradSink,
+    ) -> Result<()> {
+        // replicas run sequentially (the coordinator owns the thread
+        // budget inside each block); gradients still stream per block,
+        // so bucket reductions overlap the remaining reverse replay
+        for (i, b) in batches.iter().enumerate() {
+            let (loss, emitted) =
+                self.grad_emit(params, b, &mut |leaf, g| sink.emit_grad(i, leaf, g))?;
+            if emitted != params.len() {
+                return Err(Error::Manifest(format!(
+                    "streamed backward emitted {emitted} leaf grads, model \
+                     has {}",
+                    params.len()
+                )));
+            }
+            sink.emit_loss(i, loss);
+        }
+        Ok(())
     }
 
     fn adam(
@@ -538,6 +688,23 @@ impl TrainBackend for SyntheticBackend {
         parallel_ranks(threads, batches.len(), |i| self.grad(params, &batches[i]))
     }
 
+    fn grad_many_streamed(
+        &self,
+        params: &[HostTensor],
+        batches: &[Batch],
+        threads: usize,
+        sink: &dyn GradSink,
+    ) -> Result<()> {
+        let order = self.backward_leaf_order(params.len());
+        parallel_ranks(threads, batches.len(), |i| {
+            let (loss, grads) = self.grad(params, &batches[i])?;
+            sink.emit_loss(i, loss);
+            emit_in_order(sink, i, grads, &order);
+            Ok(())
+        })
+        .map(|_| ())
+    }
+
     fn adam(
         &self,
         step: usize,
@@ -583,6 +750,64 @@ mod tests {
         for ((ls, gs), (lt, gt)) in seq.iter().zip(thr.iter()) {
             assert_eq!(ls.to_bits(), lt.to_bits());
             assert_eq!(gs, gt);
+        }
+    }
+
+    struct RecordSink {
+        state: std::sync::Mutex<RecordInner>,
+    }
+
+    struct RecordInner {
+        losses: Vec<Option<f32>>,
+        grads: Vec<Vec<Option<HostTensor>>>,
+        arrival: Vec<Vec<usize>>,
+    }
+
+    impl RecordSink {
+        fn new(batches: usize, leaves: usize) -> Self {
+            RecordSink {
+                state: std::sync::Mutex::new(RecordInner {
+                    losses: vec![None; batches],
+                    grads: vec![vec![None; leaves]; batches],
+                    arrival: vec![Vec::new(); batches],
+                }),
+            }
+        }
+    }
+
+    impl GradSink for RecordSink {
+        fn emit_loss(&self, batch_idx: usize, loss: f32) {
+            self.state.lock().unwrap().losses[batch_idx] = Some(loss);
+        }
+        fn emit_grad(&self, batch_idx: usize, leaf: usize, grad: HostTensor) {
+            let mut st = self.state.lock().unwrap();
+            assert!(st.grads[batch_idx][leaf].is_none(), "duplicate leaf emit");
+            st.grads[batch_idx][leaf] = Some(grad);
+            st.arrival[batch_idx].push(leaf);
+        }
+    }
+
+    #[test]
+    fn streamed_grads_match_grad_many_bitwise() {
+        let cfg = ModelConfig::tiny();
+        let params = SyntheticBackend::init_params(&cfg);
+        let mut gen = DataGen::new(cfg.clone(), 9);
+        let batches: Vec<_> = (0..4).map(|_| gen.next_batch()).collect();
+        let be = SyntheticBackend::new(2);
+        let reference = be.grad_many(&params, &batches, 1).unwrap();
+        let order = be.backward_leaf_order(params.len());
+        for threads in [1usize, 4] {
+            let sink = RecordSink::new(batches.len(), params.len());
+            be.grad_many_streamed(&params, &batches, threads, &sink).unwrap();
+            let st = sink.state.into_inner().unwrap();
+            for (i, (l, gs)) in reference.iter().enumerate() {
+                assert_eq!(st.losses[i].unwrap().to_bits(), l.to_bits());
+                for (j, g) in gs.iter().enumerate() {
+                    assert_eq!(st.grads[i][j].as_ref().unwrap(), g);
+                }
+                // within a batch, leaves arrive in backward order
+                assert_eq!(st.arrival[i], order, "threads={threads} batch {i}");
+            }
         }
     }
 

@@ -1,0 +1,735 @@
+//! Bucketed, overlapped DP gradient all-reduce (paper §V.C / Fig 11).
+//!
+//! The monolithic trainer reduces the *entire* flattened gradient once,
+//! after the whole backward finishes — every byte of DP wire sits on the
+//! critical path. FastFold (and every production DDP stack) instead
+//! packs leaves into fixed-size **buckets in backward-completion order**
+//! and launches each bucket's ring all-reduce the moment its last
+//! gradient lands, so cross-replica communication overlaps the rest of
+//! the reverse pass. This module is that machinery:
+//!
+//! * [`BucketPlan`] — greedy fixed-capacity packing of the leaves along
+//!   the backend's [`TrainBackend::backward_leaf_order`], plus
+//!   [`BucketPlan::as_schedule`]: the plan lowered to `ScheduleOp`s
+//!   (per-bucket backward segment → async gather → wait → Adam) so the
+//!   PR 7 effect-IR verifier proves the overlapped schedule hazard-free
+//!   *statically* before a step runs ([`BucketPlan::admit`]). Dropping a
+//!   `Wait` is a stale-read/unjoined refutation, not a silent corruption.
+//! * [`BucketSink`] — the [`GradSink`] the streamed backward feeds:
+//!   micro-grads fold per (replica, leaf) in micro order (bit-for-bit
+//!   the monolithic accumulation), and a bucket whose `dp × leaves`
+//!   replica sums are all in is posted to the reducer channel.
+//! * [`bucketed_step`] — drives one optimizer step's gradient phase: a
+//!   scoped reducer thread rings each ready bucket (f32 or bf16 wire,
+//!   one shared [`RingScratch`] across all buckets) while the backward
+//!   keeps producing, with a `MeasuredComm`-style wall-clock ledger of
+//!   comm busy seconds vs the part that actually blocked the step.
+//!
+//! Equivalence: the per-(replica, leaf) fold order and the ring
+//! reduction math are unchanged; on the exact (dyadic) synthetic
+//! gradient grid the bucketed step is bit-for-bit the monolithic one at
+//! any bucket size — the equivalence matrix in `tests/train_overlap.rs`
+//! pins this across (dap, dp, accum, bucket-size) products.
+
+use super::backend::{GradSink, TrainBackend};
+use super::data::Batch;
+use crate::analysis::{verify, Program, VerifyReport};
+use crate::comm::ring::{
+    ring_all_reduce_bf16_with_scratch, ring_all_reduce_with_scratch, RingScratch,
+};
+use crate::config::Precision;
+use crate::error::{Error, Result};
+use crate::manifest::ScheduleOp;
+use crate::tensor::HostTensor;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Mutex;
+use std::time::Instant; // lint:allow(wallclock) — measured comm/exposed overlap ledger
+
+/// One gradient bucket: the leaves it carries (in backward-completion
+/// order) and their total element count.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    /// Canonical leaf indices, in the order the backward finishes them.
+    pub leaves: Vec<usize>,
+    /// Total f32 elements across the bucket's leaves.
+    pub elems: usize,
+}
+
+/// Greedy fixed-capacity packing of the model's leaves into reduction
+/// buckets along the backward-completion order.
+#[derive(Clone, Debug)]
+pub struct BucketPlan {
+    buckets: Vec<Bucket>,
+    leaf_to_bucket: Vec<usize>,
+}
+
+impl BucketPlan {
+    /// Pack `leaf_sizes` (elements per canonical leaf) into buckets of at
+    /// most `bucket_bytes` (4 bytes per element — the f32 wire basis, so
+    /// the schedule is identical across `--precision` and bucketed-vs-
+    /// monolithic comparisons hold the partition fixed), walking `order`
+    /// (a permutation of the leaf indices, backward-completion order).
+    /// A single leaf larger than the capacity gets a bucket of its own.
+    pub fn new(leaf_sizes: &[usize], order: &[usize], bucket_bytes: usize) -> Result<Self> {
+        let n = leaf_sizes.len();
+        if order.len() != n {
+            return Err(Error::Config(format!(
+                "bucket order lists {} leaves, model has {n}",
+                order.len()
+            )));
+        }
+        let mut seen = vec![false; n];
+        for &leaf in order {
+            if leaf >= n || seen[leaf] {
+                return Err(Error::Config(format!(
+                    "bucket order is not a permutation of 0..{n} (leaf {leaf})"
+                )));
+            }
+            seen[leaf] = true;
+        }
+        let cap_elems = (bucket_bytes / 4).max(1);
+        let mut buckets: Vec<Bucket> = Vec::new();
+        let mut cur = Bucket { leaves: Vec::new(), elems: 0 };
+        for &leaf in order {
+            let sz = leaf_sizes[leaf];
+            if !cur.leaves.is_empty() && cur.elems + sz > cap_elems {
+                buckets.push(std::mem::replace(
+                    &mut cur,
+                    Bucket { leaves: Vec::new(), elems: 0 },
+                ));
+            }
+            cur.leaves.push(leaf);
+            cur.elems += sz;
+        }
+        if !cur.leaves.is_empty() {
+            buckets.push(cur);
+        }
+        let mut leaf_to_bucket = vec![0usize; n];
+        for (b, bucket) in buckets.iter().enumerate() {
+            for &leaf in &bucket.leaves {
+                leaf_to_bucket[leaf] = b;
+            }
+        }
+        Ok(BucketPlan { buckets, leaf_to_bucket })
+    }
+
+    /// One bucket holding every leaf — the monolithic reduction expressed
+    /// in bucket form (used when `--bucket-mb` is not set but the
+    /// overlapped path runs anyway).
+    pub fn single(leaf_sizes: &[usize], order: &[usize]) -> Result<Self> {
+        Self::new(leaf_sizes, order, usize::MAX)
+    }
+
+    /// The packed buckets, in launch order.
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Number of buckets.
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Which bucket carries `leaf`.
+    pub fn bucket_of(&self, leaf: usize) -> usize {
+        self.leaf_to_bucket[leaf]
+    }
+
+    /// Lower the overlapped step to the effect-IR schedule the PR 7
+    /// verifier checks: per bucket, a backward segment producing the
+    /// bucket's gradient, then an *async* collective on it; all buckets
+    /// joined before the Adam segment reads the reduced values. The
+    /// hazards this construction is exposed to (reading a bucket the
+    /// reduction has not joined, finishing with in-flight collectives)
+    /// are exactly the verifier's stale-read/unjoined classes.
+    pub fn as_schedule(&self) -> Vec<ScheduleOp> {
+        let nb = self.buckets.len();
+        let mut ops = Vec::with_capacity(3 * nb + 1);
+        for b in 0..nb {
+            ops.push(ScheduleOp::Exec {
+                seg: format!("bwd{b}"),
+                inputs: vec!["acts".to_string()],
+                outputs: vec![format!("grad{b}")],
+            });
+            ops.push(ScheduleOp::Gather {
+                input: format!("grad{b}"),
+                output: format!("red{b}"),
+                axis: 0,
+                id: Some(format!("ar{b}")),
+            });
+        }
+        for b in 0..nb {
+            ops.push(ScheduleOp::Wait { id: format!("ar{b}") });
+        }
+        ops.push(ScheduleOp::Exec {
+            seg: "adam".to_string(),
+            inputs: (0..nb).map(|b| format!("red{b}")).collect(),
+            outputs: vec!["params".to_string()],
+        });
+        ops
+    }
+
+    /// Statically verify the overlapped schedule and gate on hazards
+    /// (the trainer's admission path, mirroring
+    /// [`crate::train::ParallelPlan::admit_schedule`]). Verified at
+    /// `max(dp, 2)` ranks — the schedule is SPMD, and degree 1 would
+    /// let a broken schedule through unexercised.
+    pub fn admit(&self, origin: &str, dp: usize) -> Result<u128> {
+        let report = self.verify_at(origin, dp);
+        report.gate()?;
+        Ok(report.elapsed_micros)
+    }
+
+    /// The raw verifier report for the overlapped schedule (admission
+    /// uses [`BucketPlan::admit`]; this is the introspection seam).
+    pub fn verify_at(&self, origin: &str, dp: usize) -> VerifyReport {
+        let ops = self.as_schedule();
+        let program = Program::from_schedule(
+            &format!("{origin}:dp-bucket-allreduce"),
+            &ops,
+            dp.max(2),
+            &[("acts", None)],
+        );
+        verify(&program)
+    }
+}
+
+/// Everything one bucketed gradient phase produced.
+#[derive(Clone, Debug)]
+pub struct BucketOutcome {
+    /// Per micro-batch losses in global (replica-major) batch order.
+    pub losses: Vec<f32>,
+    /// Reduced gradient leaves in canonical order — the *sum* over the
+    /// effective batch (the caller applies the mean, clip, Adam).
+    pub grads: Vec<HostTensor>,
+    /// Critical-path (max over ranks) ring wire bytes, summed over
+    /// buckets.
+    pub wire_bytes: usize,
+    /// Wall seconds the reducer spent inside ring reductions (busy time,
+    /// overlapped or not).
+    pub comm_seconds: f64,
+    /// Wall seconds the compute path actually blocked waiting for the
+    /// last reductions after the backward finished — the *exposed* part
+    /// of `comm_seconds`.
+    pub exposed_seconds: f64,
+}
+
+struct SinkState {
+    /// per (replica·n_leaves + leaf): micro-grads awaiting the fold
+    micro: Vec<Vec<Option<HostTensor>>>,
+    /// arrivals per (replica, leaf)
+    filled: Vec<usize>,
+    /// folded replica sums, taken by the reducer
+    summed: Vec<Option<HostTensor>>,
+    /// per bucket: (replica, leaf) sums still outstanding
+    remaining: Vec<usize>,
+    /// per micro-batch losses
+    losses: Vec<Option<f32>>,
+    /// ready-bucket channel; dropped on close/error to stop the reducer
+    tx: Option<SyncSender<usize>>,
+    /// first failure observed inside an emit callback
+    error: Option<String>,
+}
+
+/// The [`GradSink`] the bucketed step hands to the streamed backward:
+/// folds micro-grads per (replica, leaf) in micro order and posts each
+/// bucket to the reducer the moment its last replica sum completes.
+pub struct BucketSink<'a> {
+    plan: &'a BucketPlan,
+    accum: usize,
+    n_leaves: usize,
+    state: Mutex<SinkState>,
+}
+
+impl<'a> BucketSink<'a> {
+    fn new(plan: &'a BucketPlan, dp: usize, accum: usize, n_leaves: usize) -> (Self, Receiver<usize>) {
+        let nb = plan.n_buckets();
+        // capacity = bucket count: at most one post per bucket, so the
+        // collector never blocks on a busy reducer while holding its lock
+        let (tx, rx) = sync_channel::<usize>(nb.max(1));
+        let remaining: Vec<usize> =
+            plan.buckets().iter().map(|b| dp * b.leaves.len()).collect();
+        let sink = BucketSink {
+            plan,
+            accum,
+            n_leaves,
+            state: Mutex::new(SinkState {
+                micro: vec![Vec::new(); dp * n_leaves],
+                filled: vec![0; dp * n_leaves],
+                summed: (0..dp * n_leaves).map(|_| None).collect(),
+                remaining,
+                losses: vec![None; dp * accum],
+                tx: Some(tx),
+                error: None,
+            }),
+        };
+        (sink, rx)
+    }
+
+    /// Drop the ready-bucket sender so the reducer drains and exits.
+    fn close(&self) {
+        self.state.lock().unwrap().tx = None;
+    }
+
+    fn fail(st: &mut SinkState, msg: String) {
+        if st.error.is_none() {
+            st.error = Some(msg);
+        }
+        st.tx = None;
+    }
+}
+
+impl GradSink for BucketSink<'_> {
+    fn emit_loss(&self, batch_idx: usize, loss: f32) {
+        let mut st = self.state.lock().unwrap();
+        if batch_idx >= st.losses.len() {
+            let n = st.losses.len();
+            Self::fail(&mut st, format!("loss for batch {batch_idx}, step has {n}"));
+            return;
+        }
+        st.losses[batch_idx] = Some(loss);
+    }
+
+    fn emit_grad(&self, batch_idx: usize, leaf: usize, grad: HostTensor) {
+        let mut st = self.state.lock().unwrap();
+        if st.error.is_some() {
+            return;
+        }
+        if leaf >= self.n_leaves || batch_idx >= st.losses.len() {
+            Self::fail(
+                &mut st,
+                format!("grad for batch {batch_idx} leaf {leaf} out of range"),
+            );
+            return;
+        }
+        let (r, a) = (batch_idx / self.accum, batch_idx % self.accum);
+        let slot = r * self.n_leaves + leaf;
+        if st.micro[slot].is_empty() {
+            st.micro[slot] = (0..self.accum).map(|_| None).collect();
+        }
+        if st.micro[slot][a].is_some() {
+            Self::fail(
+                &mut st,
+                format!("duplicate grad for batch {batch_idx} leaf {leaf}"),
+            );
+            return;
+        }
+        st.micro[slot][a] = Some(grad);
+        st.filled[slot] += 1;
+        if st.filled[slot] < self.accum {
+            return;
+        }
+        // all micro-grads in: fold in micro order — element-for-element
+        // the monolithic replica accumulation
+        let micro = std::mem::take(&mut st.micro[slot]);
+        let mut it = micro.into_iter();
+        let mut acc = match it.next().flatten() {
+            Some(g) => g,
+            None => {
+                Self::fail(&mut st, format!("leaf {leaf} lost its first micro-grad"));
+                return;
+            }
+        };
+        for g in it {
+            let g = match g {
+                Some(g) => g,
+                None => {
+                    Self::fail(&mut st, format!("leaf {leaf} lost a micro-grad"));
+                    return;
+                }
+            };
+            if let Err(e) = acc.add_assign(&g) {
+                Self::fail(&mut st, format!("leaf {leaf} micro fold: {e}"));
+                return;
+            }
+        }
+        st.summed[slot] = Some(acc);
+        let b = self.plan.bucket_of(leaf);
+        st.remaining[b] -= 1;
+        if st.remaining[b] == 0 {
+            if let Some(tx) = &st.tx {
+                // capacity ≥ n_buckets: this send never blocks
+                let _ = tx.send(b);
+            }
+        }
+    }
+}
+
+struct ReducerOut {
+    grads: Vec<Option<HostTensor>>,
+    wire_bytes: usize,
+    comm_seconds: f64,
+}
+
+#[allow(clippy::too_many_arguments)] // one step's full gradient phase
+fn reduce_buckets(
+    rx: Receiver<usize>,
+    sink: &BucketSink<'_>,
+    plan: &BucketPlan,
+    leaf_shapes: &[Vec<usize>],
+    dp: usize,
+    precision: Precision,
+    wire_scale: f32,
+    scratch: &mut RingScratch,
+) -> Result<ReducerOut> {
+    let n_leaves = leaf_shapes.len();
+    let mut grads: Vec<Option<HostTensor>> = (0..n_leaves).map(|_| None).collect();
+    let mut wire_bytes = 0usize;
+    let mut comm_seconds = 0.0f64;
+    for b in rx {
+        let bucket = &plan.buckets()[b];
+        // pull the bucket's replica sums out of the collector
+        let mut per_rank: Vec<Vec<f32>> = Vec::with_capacity(dp);
+        {
+            let mut st = sink.state.lock().unwrap();
+            for r in 0..dp {
+                let mut flat = Vec::with_capacity(bucket.elems);
+                for &leaf in &bucket.leaves {
+                    let g = st.summed[r * n_leaves + leaf].take().ok_or_else(|| {
+                        Error::msg(format!(
+                            "bucket {b}: replica {r} leaf {leaf} sum missing"
+                        ))
+                    })?;
+                    if g.shape != leaf_shapes[leaf] {
+                        return Err(Error::Shape(format!(
+                            "bucket {b} leaf {leaf}: grad {:?} vs param {:?}",
+                            g.shape, leaf_shapes[leaf]
+                        )));
+                    }
+                    flat.extend_from_slice(g.data());
+                }
+                if wire_scale != 1.0 {
+                    // dynamic loss scale: an exact power-of-two boost
+                    // applied before the precision-lossy wire; the
+                    // caller divides it back out after the reduction
+                    crate::device::current().scale(&mut flat, wire_scale);
+                }
+                per_rank.push(flat);
+            }
+        }
+        let t = Instant::now();
+        let (mut reduced, wire) = match precision {
+            Precision::F32 => ring_all_reduce_with_scratch(per_rank, scratch)?,
+            Precision::Bf16 => ring_all_reduce_bf16_with_scratch(per_rank, scratch)?,
+        };
+        comm_seconds += t.elapsed().as_secs_f64();
+        wire_bytes += wire.iter().copied().max().unwrap_or(0);
+        // every rank holds the identical reduced bucket; unpack rank 0
+        let flat = reduced.swap_remove(0);
+        let mut off = 0usize;
+        for &leaf in &bucket.leaves {
+            let n: usize = leaf_shapes[leaf].iter().product();
+            grads[leaf] =
+                Some(HostTensor::new(leaf_shapes[leaf].clone(), flat[off..off + n].to_vec())?);
+            off += n;
+        }
+    }
+    Ok(ReducerOut { grads, wire_bytes, comm_seconds })
+}
+
+/// One optimizer step's gradient phase, bucketed and overlapped: stream
+/// the backward into a [`BucketSink`] while a scoped reducer thread
+/// rings each bucket as it completes. Returns the per-batch losses, the
+/// effective-batch gradient *sums* (caller applies the inverse
+/// `wire_scale`, the mean, clip, Adam), the critical-path wire bytes,
+/// and the measured comm/exposed seconds. `wire_scale` (a power of two;
+/// 1.0 = off) is multiplied into each rank's bucket before the
+/// precision-lossy wire — the bf16 dynamic-loss-scale hook. `batches`
+/// is the replica-major effective batch (`dp × accum` entries); `dp = 1`
+/// degenerates gracefully (the ring is a no-op in f32, a
+/// round-to-storage in bf16 — matching the multi-rank grid semantics).
+#[allow(clippy::too_many_arguments)] // the step's full gradient-phase contract
+pub fn bucketed_step(
+    backend: &dyn TrainBackend,
+    params: &[HostTensor],
+    batches: &[Batch],
+    dp: usize,
+    accum: usize,
+    threads: usize,
+    plan: &BucketPlan,
+    precision: Precision,
+    wire_scale: f32,
+    scratch: &mut RingScratch,
+) -> Result<BucketOutcome> {
+    let n_leaves = params.len();
+    let e = dp * accum;
+    if batches.len() != e {
+        return Err(Error::msg(format!(
+            "bucketed step wants {e} micro-batches (dp {dp} × accum {accum}), got {}",
+            batches.len()
+        )));
+    }
+    let leaf_shapes: Vec<Vec<usize>> = params.iter().map(|p| p.shape.clone()).collect();
+    let (sink, rx) = BucketSink::new(plan, dp, accum, n_leaves);
+    let sink_ref = &sink;
+    let shapes_ref = &leaf_shapes;
+    let scratch_ref = &mut *scratch;
+
+    let mut reducer_out: Option<Result<ReducerOut>> = None;
+    let mut exposed_seconds = 0.0f64;
+    let stream_res = std::thread::scope(|s| {
+        let handle = s.spawn(move || {
+            reduce_buckets(
+                rx, sink_ref, plan, shapes_ref, dp, precision, wire_scale, scratch_ref,
+            )
+        });
+        let res = backend.grad_many_streamed(params, batches, threads, sink_ref);
+        // backward done (or failed): close the channel so the reducer
+        // drains and exits, then measure how long the join blocks — the
+        // exposed (non-overlapped) share of the comm time
+        sink.close();
+        let t = Instant::now();
+        reducer_out = Some(handle.join().expect("bucket reducer thread panicked"));
+        exposed_seconds = t.elapsed().as_secs_f64();
+        res
+    });
+    stream_res?;
+    if let Some(msg) = sink.state.lock().unwrap().error.take() {
+        return Err(Error::msg(format!("bucketed gradient fold: {msg}")));
+    }
+    let red = reducer_out.expect("reducer joined above")?;
+
+    let mut grads = Vec::with_capacity(n_leaves);
+    for (leaf, g) in red.grads.into_iter().enumerate() {
+        grads.push(g.ok_or_else(|| {
+            Error::msg(format!("leaf {leaf} never completed its bucket reduction"))
+        })?);
+    }
+    let mut losses = Vec::with_capacity(e);
+    for (i, l) in sink.state.lock().unwrap().losses.iter().enumerate() {
+        losses.push(l.ok_or_else(|| Error::msg(format!("batch {i} reported no loss")))?);
+    }
+    Ok(BucketOutcome {
+        losses,
+        grads,
+        wire_bytes: red.wire_bytes,
+        comm_seconds: red.comm_seconds,
+        exposed_seconds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::Hazard;
+    use crate::comm::ring::ring_all_reduce;
+    use crate::config::ModelConfig;
+    use crate::train::{DataGen, SyntheticBackend};
+
+    #[test]
+    fn plan_packs_greedily_in_backward_order() {
+        // capacity 8 elems = 32 bytes; order 2,1,0 → [2,1] then [0]
+        let plan = BucketPlan::new(&[4, 4, 4], &[2, 1, 0], 32).unwrap();
+        assert_eq!(plan.n_buckets(), 2);
+        assert_eq!(plan.buckets()[0], Bucket { leaves: vec![2, 1], elems: 8 });
+        assert_eq!(plan.buckets()[1], Bucket { leaves: vec![0], elems: 4 });
+        assert_eq!(plan.bucket_of(2), 0);
+        assert_eq!(plan.bucket_of(1), 0);
+        assert_eq!(plan.bucket_of(0), 1);
+    }
+
+    #[test]
+    fn oversized_leaf_gets_its_own_bucket() {
+        let plan = BucketPlan::new(&[100, 1, 1], &[0, 1, 2], 16).unwrap();
+        assert_eq!(plan.n_buckets(), 2);
+        assert_eq!(plan.buckets()[0].leaves, vec![0]);
+        assert_eq!(plan.buckets()[1].leaves, vec![1, 2]);
+    }
+
+    #[test]
+    fn single_puts_everything_in_one_bucket() {
+        let plan = BucketPlan::single(&[5, 7, 3], &[2, 1, 0]).unwrap();
+        assert_eq!(plan.n_buckets(), 1);
+        assert_eq!(plan.buckets()[0].leaves, vec![2, 1, 0]);
+        assert_eq!(plan.buckets()[0].elems, 15);
+    }
+
+    #[test]
+    fn non_permutation_orders_rejected() {
+        assert!(BucketPlan::new(&[4, 4], &[0], 64).is_err());
+        assert!(BucketPlan::new(&[4, 4], &[0, 0], 64).is_err());
+        assert!(BucketPlan::new(&[4, 4], &[0, 2], 64).is_err());
+    }
+
+    #[test]
+    fn overlapped_schedule_admits_at_all_dp() {
+        let plan = BucketPlan::new(&[16, 8, 8, 4], &[3, 2, 1, 0], 48).unwrap();
+        for dp in [1usize, 2, 4, 8] {
+            plan.admit("test", dp).unwrap_or_else(|e| {
+                panic!("bucketed schedule must admit at dp={dp}: {e}")
+            });
+        }
+    }
+
+    #[test]
+    fn dropping_a_wait_is_refuted_statically() {
+        let plan = BucketPlan::new(&[16, 8], &[1, 0], 16).unwrap();
+        assert!(plan.n_buckets() >= 2);
+        let mut ops = plan.as_schedule();
+        let wait_at = ops
+            .iter()
+            .position(|op| matches!(op, ScheduleOp::Wait { .. }))
+            .expect("schedule has waits");
+        ops.remove(wait_at);
+        let program =
+            Program::from_schedule("test:missing-wait", &ops, 2, &[("acts", None)]);
+        let report = verify(&program);
+        assert!(report.gate().is_err(), "missing Wait must refuse admission");
+        let hazards: Vec<Hazard> =
+            report.diagnostics.iter().map(|d| d.hazard).collect();
+        assert!(
+            hazards.iter().any(|h| matches!(
+                h,
+                Hazard::StaleRead | Hazard::UnsetSlot | Hazard::UnjoinedAtEnd
+            )),
+            "expected a stale-read/unset/unjoined refutation, got {hazards:?}"
+        );
+    }
+
+    /// The monolithic gradient phase, hand-rolled exactly as the trainer
+    /// used to run it: per-replica micro folds, one full-vector ring.
+    fn monolithic(
+        backend: &SyntheticBackend,
+        params: &[HostTensor],
+        batches: &[Batch],
+        dp: usize,
+        accum: usize,
+    ) -> (Vec<f32>, Vec<HostTensor>) {
+        let results = backend.grad_many(params, batches, 1).unwrap();
+        let losses: Vec<f32> = results.iter().map(|(l, _)| *l).collect();
+        let mut it = results.into_iter();
+        let mut per_replica: Vec<Vec<HostTensor>> = Vec::with_capacity(dp);
+        for _ in 0..dp {
+            let (_, mut acc) = it.next().unwrap();
+            for _ in 1..accum {
+                let (_, g) = it.next().unwrap();
+                for (a, b) in acc.iter_mut().zip(g.iter()) {
+                    a.add_assign(b).unwrap();
+                }
+            }
+            per_replica.push(acc);
+        }
+        if dp == 1 {
+            return (losses, per_replica.pop().unwrap());
+        }
+        let per_rank: Vec<Vec<f32>> = per_replica
+            .iter()
+            .map(|gs| gs.iter().flat_map(|g| g.data().iter().copied()).collect())
+            .collect();
+        let (reduced, _) = ring_all_reduce(per_rank).unwrap();
+        let flat = reduced.into_iter().next().unwrap();
+        let mut out = Vec::with_capacity(params.len());
+        let mut off = 0usize;
+        for p in params {
+            let n = p.data().len();
+            out.push(HostTensor::new(p.shape.clone(), flat[off..off + n].to_vec()).unwrap());
+            off += n;
+        }
+        (losses, out)
+    }
+
+    #[test]
+    fn bucketed_step_matches_monolithic_bitwise() {
+        let cfg = ModelConfig::tiny();
+        let params = SyntheticBackend::init_params(&cfg);
+        let leaf_sizes: Vec<usize> = params.iter().map(|p| p.data().len()).collect();
+        let backend = SyntheticBackend::new(1);
+        let order = backend.backward_leaf_order(params.len());
+        for (dp, accum) in [(1usize, 2usize), (2, 1), (2, 2), (4, 2)] {
+            let mut gen = DataGen::new(cfg.clone(), 17);
+            let batches: Vec<Batch> =
+                (0..dp * accum).map(|_| gen.next_batch()).collect();
+            let (ref_losses, ref_grads) =
+                monolithic(&backend, &params, &batches, dp, accum);
+            for bucket_bytes in [64usize, 1 << 20] {
+                let plan =
+                    BucketPlan::new(&leaf_sizes, &order, bucket_bytes).unwrap();
+                let mut scratch = RingScratch::new();
+                let out = bucketed_step(
+                    &backend,
+                    &params,
+                    &batches,
+                    dp,
+                    accum,
+                    2,
+                    &plan,
+                    Precision::F32,
+                    1.0,
+                    &mut scratch,
+                )
+                .unwrap();
+                assert_eq!(out.losses.len(), ref_losses.len());
+                for (a, b) in out.losses.iter().zip(ref_losses.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                assert_eq!(
+                    out.grads, ref_grads,
+                    "dp={dp} accum={accum} bytes={bucket_bytes}"
+                );
+                if dp > 1 {
+                    assert!(out.wire_bytes > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_bucketed_step_is_deterministic_and_close_to_f32() {
+        let cfg = ModelConfig::tiny();
+        let params = SyntheticBackend::init_params(&cfg);
+        let leaf_sizes: Vec<usize> = params.iter().map(|p| p.data().len()).collect();
+        let backend = SyntheticBackend::new(1);
+        let order = backend.backward_leaf_order(params.len());
+        let plan = BucketPlan::new(&leaf_sizes, &order, 256).unwrap();
+        let (dp, accum) = (2usize, 2usize);
+        let mut gen = DataGen::new(cfg.clone(), 23);
+        let batches: Vec<Batch> = (0..dp * accum).map(|_| gen.next_batch()).collect();
+        let run = |precision: Precision| {
+            let mut scratch = RingScratch::new();
+            bucketed_step(
+                &backend, &params, &batches, dp, accum, 1, &plan, precision, 1.0,
+                &mut scratch,
+            )
+            .unwrap()
+        };
+        let a = run(Precision::Bf16);
+        let b = run(Precision::Bf16);
+        for (x, y) in a.grads.iter().zip(b.grads.iter()) {
+            assert_eq!(x, y, "bf16 bucketed step must be run-to-run deterministic");
+        }
+        // a power-of-two wire scale is mantissa-preserving: dividing it
+        // back out reproduces the unscaled bf16 reduction bit-for-bit
+        let mut scratch = RingScratch::new();
+        let scaled = bucketed_step(
+            &backend,
+            &params,
+            &batches,
+            dp,
+            accum,
+            1,
+            &plan,
+            Precision::Bf16,
+            1024.0,
+            &mut scratch,
+        )
+        .unwrap();
+        for (x, y) in scaled.grads.iter().zip(a.grads.iter()) {
+            let mut x = x.clone();
+            x.scale(1.0 / 1024.0);
+            assert_eq!(&x, y, "2^k wire scale must be exactly invertible");
+        }
+
+        let f = run(Precision::F32);
+        // bf16 wire is half the f32 wire for the same schedule
+        assert_eq!(a.wire_bytes * 2, f.wire_bytes);
+        for (x, y) in a.grads.iter().zip(f.grads.iter()) {
+            for (xa, ya) in x.data().iter().zip(y.data().iter()) {
+                let tol = 0.02 * ya.abs().max(1.0);
+                assert!(
+                    (xa - ya).abs() <= tol,
+                    "bf16 grad {xa} too far from f32 {ya}"
+                );
+            }
+        }
+    }
+}

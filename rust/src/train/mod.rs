@@ -1,19 +1,25 @@
 //! Training runtime: synthetic co-evolution data, the hybrid DP×DAP
 //! trainer (micro-batch grads → accumulation → ring all-reduce →
 //! adam_update), the [`ParallelPlan`] layout, the two-stage AlphaFold
-//! recipe + full LR schedule, and resumable full-state (V2)
-//! checkpointing.
+//! recipe + full LR schedule, resumable full-state (V2) checkpointing,
+//! and the overlapped training plane: bucketed DP all-reduce launched
+//! from the streamed backward ([`bucket`]), double-buffered input
+//! prefetch ([`prefetch`]), and bf16 mixed-precision gradient wire.
 
 pub mod backend;
+pub mod bucket;
 pub mod checkpoint;
 pub mod data;
 pub mod plan;
+pub mod prefetch;
 pub mod schedule;
 pub mod trainer;
 
-pub use backend::{SyntheticBackend, TrainBackend};
+pub use backend::{GradSink, SyntheticBackend, TrainBackend};
+pub use bucket::{bucketed_step, Bucket, BucketOutcome, BucketPlan};
 pub use data::DataGen;
 pub use plan::ParallelPlan;
+pub use prefetch::{Prefetcher, StepBatches};
 pub use schedule::{LrSchedule, Stage, TrainSchedule};
 pub use trainer::{TrainReport, Trainer};
 

@@ -1,0 +1,236 @@
+//! Double-buffered data prefetch: generate step N+1's micro-batches
+//! while step N computes (paper §V.A — the input pipeline must never be
+//! the reason an accelerator idles).
+//!
+//! A producer thread owns a private copy of the per-rank [`DataGen`]s
+//! (rebuilt from the trainer's exact `(rng_state, cursor)` snapshots —
+//! the counter-keyed stream makes that a pure O(1) restore) and runs the
+//! *same* replica-major draw loop the trainer runs inline, pushing one
+//! [`StepBatches`] per optimizer step through a capacity-1 channel: one
+//! step buffered, one being generated — classic double buffering. Each
+//! payload carries the post-draw cursors and RNG states, and the trainer
+//! adopts them into its own generators on receipt, so `Trainer::state()`
+//! (the V2 checkpoint) is bit-for-bit identical with prefetch on or off,
+//! and a resume under prefetch replays the exact uninterrupted stream.
+//!
+//! The consumer side records how long each `recv` blocked — the
+//! **prefetch stall** ledger surfaced in `BENCH_train.json`: with the
+//! pipeline keeping up, stalls are ~0 and the input path is fully
+//! hidden behind compute.
+
+use super::data::{Batch, DataGen};
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+use std::time::Instant; // lint:allow(wallclock) — prefetch stall ledger
+
+/// One optimizer step's worth of input, plus the generator state after
+/// drawing it (what the trainer's checkpoint must record).
+pub struct StepBatches {
+    /// The replica-major effective batch (`dp × accum` micro-batches).
+    pub batches: Vec<Batch>,
+    /// Per-rank cursors *after* this step's draws and skips.
+    pub cursors: Vec<u64>,
+    /// Per-rank RNG states *after* this step's draws and skips.
+    pub rng_states: Vec<(u64, u64)>,
+}
+
+/// The double-buffered producer handle the trainer owns while
+/// `--prefetch` is on. Dropping it tears the producer thread down
+/// (the in-flight step is discarded; the trainer's own generators are
+/// the source of truth for where the stream is).
+pub struct Prefetcher {
+    rx: Option<Receiver<StepBatches>>,
+    handle: Option<JoinHandle<()>>,
+    stall_seconds: f64,
+    steps: usize,
+}
+
+impl Prefetcher {
+    /// Start a producer at the exact stream position of `gens`, drawing
+    /// `accum` micro-batches per rank per step (the replica-major loop,
+    /// including each rank's skip over the other ranks' slice).
+    pub fn start(cfg: &ModelConfig, gens: &[DataGen], accum: usize) -> Self {
+        let dp = gens.len().max(1);
+        let accum = accum.max(1);
+        let snaps: Vec<((u64, u64), u64)> =
+            gens.iter().map(|g| (g.rng_state(), g.cursor())).collect();
+        let cfg = cfg.clone();
+        let (tx, rx) = sync_channel::<StepBatches>(1);
+        let handle = std::thread::spawn(move || {
+            let mut gens: Vec<DataGen> = snaps
+                .into_iter()
+                .map(|(rs, c)| DataGen::from_state(cfg.clone(), rs, c))
+                .collect();
+            loop {
+                let mut batches = Vec::with_capacity(dp * accum);
+                for g in gens.iter_mut() {
+                    for _ in 0..accum {
+                        batches.push(g.next_batch());
+                    }
+                    g.fast_forward((dp - 1) * accum);
+                }
+                let step = StepBatches {
+                    batches,
+                    cursors: gens.iter().map(|g| g.cursor()).collect(),
+                    rng_states: gens.iter().map(|g| g.rng_state()).collect(),
+                };
+                // consumer gone (trainer dropped the prefetcher): exit
+                if tx.send(step).is_err() {
+                    break;
+                }
+            }
+        });
+        Prefetcher { rx: Some(rx), handle: Some(handle), stall_seconds: 0.0, steps: 0 }
+    }
+
+    /// The next step's effective batch, blocking if the producer is
+    /// behind; the blocked time lands in the stall ledger.
+    pub fn next_step(&mut self) -> Result<StepBatches> {
+        let rx = self
+            .rx
+            .as_ref()
+            .ok_or_else(|| Error::msg("prefetcher already shut down"))?;
+        let t = Instant::now();
+        let step = rx
+            .recv()
+            .map_err(|_| Error::msg("prefetch producer thread exited"))?;
+        self.stall_seconds += t.elapsed().as_secs_f64();
+        self.steps += 1;
+        Ok(step)
+    }
+
+    /// Cumulative wall seconds `next_step` spent blocked on the producer.
+    pub fn stall_seconds(&self) -> f64 {
+        self.stall_seconds
+    }
+
+    /// Drain the stall ledger (the trainer folds it into its cumulative
+    /// counter after every step, so nothing is lost when a stage switch
+    /// replaces the prefetcher).
+    pub fn take_stall_seconds(&mut self) -> f64 {
+        std::mem::replace(&mut self.stall_seconds, 0.0)
+    }
+
+    /// Steps consumed through this prefetcher.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // drop the receiver first so a producer blocked in `send` errors
+        // out instead of deadlocking the join
+        self.rx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_gens(cfg: &ModelConfig, seed: u64, dp: usize, accum: usize) -> Vec<DataGen> {
+        (0..dp)
+            .map(|r| {
+                let mut g = DataGen::new(cfg.clone(), seed);
+                g.fast_forward(r * accum);
+                g
+            })
+            .collect()
+    }
+
+    fn inline_step(gens: &mut [DataGen], accum: usize) -> Vec<Batch> {
+        let dp = gens.len();
+        let mut batches = Vec::with_capacity(dp * accum);
+        for g in gens.iter_mut() {
+            for _ in 0..accum {
+                batches.push(g.next_batch());
+            }
+            g.fast_forward((dp - 1) * accum);
+        }
+        batches
+    }
+
+    #[test]
+    fn prefetched_stream_matches_inline_bit_for_bit() {
+        let cfg = ModelConfig::tiny();
+        let (dp, accum) = (2usize, 2usize);
+        let mut inline = mk_gens(&cfg, 41, dp, accum);
+        let mut pf = Prefetcher::start(&cfg, &inline, accum);
+        for step in 0..3 {
+            let got = pf.next_step().unwrap();
+            let want = inline_step(&mut inline, accum);
+            assert_eq!(got.batches.len(), want.len());
+            for (a, b) in got.batches.iter().zip(want.iter()) {
+                assert_eq!(a.msa_tokens.data, b.msa_tokens.data, "step {step}");
+                assert_eq!(a.msa_labels.data, b.msa_labels.data);
+                assert_eq!(a.dist_bins.data, b.dist_bins.data);
+                assert_eq!(a.msa_mask, b.msa_mask);
+            }
+            let want_cursors: Vec<u64> = inline.iter().map(|g| g.cursor()).collect();
+            let want_rng: Vec<(u64, u64)> =
+                inline.iter().map(|g| g.rng_state()).collect();
+            assert_eq!(got.cursors, want_cursors, "step {step}");
+            assert_eq!(got.rng_states, want_rng, "step {step}");
+        }
+    }
+
+    #[test]
+    fn restart_from_snapshot_resumes_the_stream() {
+        let cfg = ModelConfig::tiny();
+        let (dp, accum) = (2usize, 1usize);
+        let gens = mk_gens(&cfg, 7, dp, accum);
+        let mut pf = Prefetcher::start(&cfg, &gens, accum);
+        let s1 = pf.next_step().unwrap();
+        let s2 = pf.next_step().unwrap();
+        drop(pf);
+        // restore generators at s2's recorded position (what the trainer
+        // adopts on receipt) and restart: the next step must be exactly
+        // what the uninterrupted producer would have sent third
+        let restored: Vec<DataGen> = s2
+            .rng_states
+            .iter()
+            .zip(s2.cursors.iter())
+            .map(|(rs, &c)| DataGen::from_state(cfg.clone(), *rs, c))
+            .collect();
+        let mut pf2 = Prefetcher::start(&cfg, &restored, accum);
+        let s3 = pf2.next_step().unwrap();
+
+        let mut inline = mk_gens(&cfg, 7, dp, accum);
+        let _ = inline_step(&mut inline, accum);
+        let _ = inline_step(&mut inline, accum);
+        let want = inline_step(&mut inline, accum);
+        for (a, b) in s3.batches.iter().zip(want.iter()) {
+            assert_eq!(a.msa_tokens.data, b.msa_tokens.data);
+        }
+        // and the first two steps came through unchanged
+        assert_eq!(s1.cursors.len(), dp);
+        assert!(s2.cursors.iter().zip(s1.cursors.iter()).all(|(b, a)| b > a));
+    }
+
+    #[test]
+    fn dropping_mid_stream_joins_cleanly() {
+        let cfg = ModelConfig::tiny();
+        let gens = mk_gens(&cfg, 3, 1, 1);
+        let mut pf = Prefetcher::start(&cfg, &gens, 1);
+        let _ = pf.next_step().unwrap();
+        drop(pf); // must not hang on the producer's blocked send
+    }
+
+    #[test]
+    fn stall_ledger_accumulates() {
+        let cfg = ModelConfig::tiny();
+        let gens = mk_gens(&cfg, 5, 1, 1);
+        let mut pf = Prefetcher::start(&cfg, &gens, 1);
+        assert_eq!(pf.stall_seconds(), 0.0);
+        let _ = pf.next_step().unwrap();
+        let _ = pf.next_step().unwrap();
+        assert_eq!(pf.steps(), 2);
+        assert!(pf.stall_seconds() >= 0.0);
+    }
+}

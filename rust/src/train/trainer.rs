@@ -27,17 +27,21 @@
 //! [`Trainer::restore`] resumes bit-for-bit.
 
 use super::backend::{build_backend, TrainBackend};
+use super::bucket::{bucketed_step, BucketPlan};
 use super::checkpoint;
 use super::data::{Batch, DataGen};
 use super::plan::ParallelPlan;
+use super::prefetch::Prefetcher;
 use super::schedule::{LrSchedule, Stage, TrainSchedule};
-use crate::comm::ring::ring_all_reduce;
-use crate::config::{ModelConfig, TrainConfig};
+use crate::comm::ring::{
+    ring_all_reduce_bf16_with_scratch, ring_all_reduce_with_scratch, RingScratch,
+};
+use crate::config::{ModelConfig, Precision, TrainConfig};
 use crate::dap::executor::default_threads;
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
 use crate::tensor::HostTensor;
-use std::time::Instant; // lint:allow(wallclock) — steps/s wall measurement
+use std::time::Instant; // lint:allow(wallclock) — steps/s + comm/stall wall measurement
 
 /// The training coordinator: owns parameters, optimizer state, the data
 /// generators, and a [`TrainBackend`].
@@ -75,7 +79,40 @@ pub struct Trainer<'rt> {
     pub wire_dp_bytes: usize,
     /// DAP (model-parallel) collective wire bytes, cumulative
     pub wire_dap_bytes: usize,
+    /// double-buffered input producer, live while `cfg.prefetch` is on
+    prefetcher: Option<Prefetcher>,
+    /// ring-reduce scratch shared across every bucket and step
+    ring_scratch: RingScratch,
+    /// bucket partition, built on first bucketed step (invalidated when
+    /// the backend — and hence the backward order — changes)
+    bucket_plan: Option<BucketPlan>,
+    /// dynamic loss scale applied to the gradient wire (power of two;
+    /// 1.0 in f32 mode)
+    pub loss_scale: f32,
+    /// optimizer updates skipped by the bf16 non-finite guard, cumulative
+    pub skipped_steps: usize,
+    consecutive_skips: usize,
+    scale_growth_counter: usize,
+    /// measured wall seconds spent inside DP ring reductions, cumulative
+    pub comm_seconds: f64,
+    /// the part of `comm_seconds` that blocked the compute path
+    /// (monolithic reductions are fully exposed; bucketed ones only
+    /// their post-backward tail), cumulative
+    pub exposed_comm_seconds: f64,
+    /// wall seconds the step blocked waiting on the prefetch producer,
+    /// cumulative
+    pub prefetch_stall_seconds: f64,
 }
+
+/// Initial dynamic loss scale in bf16 mode (2^15 — exact in binary FP,
+/// so scaling is mantissa-preserving and exactly invertible).
+const LOSS_SCALE_INIT: f32 = 32768.0;
+/// Dynamic loss scale ceiling (2^24).
+const LOSS_SCALE_MAX: f32 = 16_777_216.0;
+/// Clean steps between loss-scale doublings.
+const LOSS_SCALE_GROWTH_INTERVAL: usize = 2000;
+/// Consecutive guard skips before the run is declared diverged.
+const MAX_CONSECUTIVE_SKIPS: usize = 50;
 
 /// What one `run`/`run_schedule` call did.
 #[derive(Clone, Debug)]
@@ -99,6 +136,19 @@ pub struct TrainReport {
     pub threads: usize,
     /// LR applied at the last executed step
     pub final_lr: f32,
+    /// gradient-wire precision the run used ("f32" or "bf16")
+    pub precision: &'static str,
+    /// measured wall seconds inside DP ring reductions for this call
+    pub comm_seconds: f64,
+    /// the part of `comm_seconds` that blocked the compute path
+    pub exposed_comm_seconds: f64,
+    /// fraction of comm time hidden behind the backward
+    /// (`1 − exposed/comm`; 1.0 when no comm was measured)
+    pub overlap_fraction: f64,
+    /// wall seconds blocked waiting on the prefetch producer
+    pub prefetch_stall_seconds: f64,
+    /// optimizer updates skipped by the bf16 non-finite guard
+    pub skipped_steps: usize,
 }
 
 /// Same-seed generators on one global stream: rank r starts offset by
@@ -168,6 +218,7 @@ impl<'rt> Trainer<'rt> {
             params.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
         let gens = make_gens(&model_cfg, cfg.seed, plan.dp, plan.accum);
         let lr_sched = LrSchedule::from_train_config(&cfg);
+        let cfg_precision = cfg.precision;
         Trainer {
             rt,
             preset: preset.to_string(),
@@ -188,6 +239,19 @@ impl<'rt> Trainer<'rt> {
             history: Vec::new(),
             wire_dp_bytes: 0,
             wire_dap_bytes: 0,
+            prefetcher: None,
+            ring_scratch: RingScratch::new(),
+            bucket_plan: None,
+            loss_scale: match cfg_precision {
+                Precision::F32 => 1.0,
+                Precision::Bf16 => LOSS_SCALE_INIT,
+            },
+            skipped_steps: 0,
+            consecutive_skips: 0,
+            scale_growth_counter: 0,
+            comm_seconds: 0.0,
+            exposed_comm_seconds: 0.0,
+            prefetch_stall_seconds: 0.0,
         }
     }
 
@@ -215,44 +279,64 @@ impl<'rt> Trainer<'rt> {
         self.gens.iter().map(|g| g.cursor()).collect()
     }
 
-    /// One optimizer step over the effective batch (dp × accum
-    /// micro-batches). Returns the mean micro-loss.
-    pub fn train_step(&mut self) -> Result<f32> {
+    /// Draw the step's effective batch, replica-major on the global
+    /// stream — inline, or consumed from the double-buffered prefetcher
+    /// when `cfg.prefetch` is on (bit-for-bit the same stream either
+    /// way; the trainer adopts the producer's post-draw generator state
+    /// so checkpoints cannot tell the difference).
+    fn draw_step_batches(&mut self) -> Result<Vec<Batch>> {
         let (dp, accum) = (self.plan.dp, self.plan.accum);
-        let e = dp * accum;
-        let n_leaves = self.params.len();
-
-        // draw the step's effective batch, replica-major on the global
-        // stream; each rank then skips the other ranks' next-step slice.
-        // The skip regenerates (dp-1)·accum discarded batches per rank —
-        // accepted: it is what a real per-rank loader does (each rank owns
-        // an independent, individually-resumable stream, which is what the
-        // checkpoint's per-rank cursors capture), and synthetic data gen
-        // is noise next to a PJRT forward/backward at any dp this
-        // single-process simulator runs.
-        let mut batches: Vec<Batch> = Vec::with_capacity(e);
+        if self.cfg.prefetch {
+            if self.prefetcher.is_none() {
+                self.prefetcher =
+                    Some(Prefetcher::start(&self.model_cfg, &self.gens, accum));
+            }
+            let pf = self.prefetcher.as_mut().expect("started above");
+            let step = pf.next_step()?;
+            self.prefetch_stall_seconds += pf.take_stall_seconds();
+            self.gens = step
+                .rng_states
+                .iter()
+                .zip(step.cursors.iter())
+                .map(|(rs, &c)| DataGen::from_state(self.model_cfg.clone(), *rs, c))
+                .collect();
+            return Ok(step.batches);
+        }
+        // inline path: each rank skips the other ranks' next-step slice.
+        // The skip is an O(1) cursor bump on the counter-keyed stream —
+        // each rank owns an independent, individually-resumable stream,
+        // which is what the checkpoint's per-rank cursors capture.
+        let mut batches: Vec<Batch> = Vec::with_capacity(dp * accum);
         for gen in self.gens.iter_mut() {
             for _ in 0..accum {
                 batches.push(gen.next_batch());
             }
             gen.fast_forward((dp - 1) * accum);
         }
+        Ok(batches)
+    }
 
+    /// The legacy gradient phase: materialize every micro-grad, fold per
+    /// replica in micro order, then one monolithic (fully exposed) ring
+    /// all-reduce over the whole flattened gradient. Returns per-batch
+    /// losses and the effective-batch gradient *sums* (still carrying
+    /// the loss scale in bf16 mode).
+    fn monolithic_grad_phase(
+        &mut self,
+        batches: &[Batch],
+    ) -> Result<(Vec<f32>, Vec<HostTensor>)> {
+        let (dp, accum) = (self.plan.dp, self.plan.accum);
+        let e = dp * accum;
+        let n_leaves = self.params.len();
         let results =
-            self.backend.grad_many(&self.params, &batches, self.plan.threads)?;
+            self.backend.grad_many(&self.params, batches, self.plan.threads)?;
         if results.len() != e {
             return Err(Error::msg(format!(
                 "backend returned {} micro-grads for {e} micro-batches",
                 results.len()
             )));
         }
-        self.wire_dap_bytes += self.backend.take_mp_wire_bytes();
-
-        // fold losses in global micro order (replica-major = stream order)
-        let mut loss_acc = 0.0f32;
-        for (l, _) in &results {
-            loss_acc += *l;
-        }
+        let losses: Vec<f32> = results.iter().map(|(l, _)| *l).collect();
         let leaf_shapes: Vec<Vec<usize>> =
             results[0].1.iter().map(|g| g.shape.clone()).collect();
 
@@ -270,16 +354,41 @@ impl<'rt> Trainer<'rt> {
             per_replica.push(acc);
         }
 
-        // DP reduction: the host ring all-reduce (the exact algorithm the
-        // Fig 11 cost model prices), critical-path rank accounted
-        let mut grads: Vec<HostTensor> = if dp == 1 {
-            per_replica.pop().ok_or_else(|| Error::msg("no grads"))?
+        let bf16 = self.cfg.precision == Precision::Bf16;
+        let grads: Vec<HostTensor> = if dp == 1 {
+            let mut grads =
+                per_replica.pop().ok_or_else(|| Error::msg("no grads"))?;
+            if bf16 {
+                // match the dp > 1 wire semantics: scale, round to the
+                // bf16 grid (what a stored bf16 gradient would hold)
+                for g in grads.iter_mut() {
+                    g.scale(self.loss_scale);
+                    crate::device::bf16_round_tensor(g);
+                }
+            }
+            grads
         } else {
-            let per_rank_flat: Vec<Vec<f32>> = per_replica
+            // DP reduction: the host ring all-reduce (the exact algorithm
+            // the Fig 11 cost model prices), critical-path rank accounted
+            let mut per_rank_flat: Vec<Vec<f32>> = per_replica
                 .iter()
                 .map(|gs| gs.iter().flat_map(|g| g.data().iter().copied()).collect())
                 .collect();
-            let (reduced, wire) = ring_all_reduce(per_rank_flat)?;
+            if bf16 && self.loss_scale != 1.0 {
+                for f in per_rank_flat.iter_mut() {
+                    crate::device::current().scale(f, self.loss_scale);
+                }
+            }
+            let t = Instant::now();
+            let (reduced, wire) = if bf16 {
+                ring_all_reduce_bf16_with_scratch(per_rank_flat, &mut self.ring_scratch)?
+            } else {
+                ring_all_reduce_with_scratch(per_rank_flat, &mut self.ring_scratch)?
+            };
+            // the monolithic reduction sits entirely on the critical path
+            let dt = t.elapsed().as_secs_f64();
+            self.comm_seconds += dt;
+            self.exposed_comm_seconds += dt;
             self.wire_dp_bytes += wire.iter().copied().max().unwrap_or(0);
             let flat = reduced
                 .into_iter()
@@ -294,6 +403,111 @@ impl<'rt> Trainer<'rt> {
             }
             out
         };
+        Ok((losses, grads))
+    }
+
+    /// The overlapped gradient phase: stream the backward into per-block
+    /// buckets, each ring-reduced the moment it completes. The bucket
+    /// partition is verified hazard-free by the effect-IR schedule
+    /// verifier before its first use.
+    fn bucketed_grad_phase(
+        &mut self,
+        batches: &[Batch],
+    ) -> Result<(Vec<f32>, Vec<HostTensor>)> {
+        let (dp, accum) = (self.plan.dp, self.plan.accum);
+        let n_leaves = self.params.len();
+        if self.bucket_plan.is_none() {
+            let leaf_sizes: Vec<usize> =
+                self.params.iter().map(|p| p.data().len()).collect();
+            let order = self.backend.backward_leaf_order(n_leaves);
+            let mb = self.cfg.bucket_mb.expect("bucketed path gated on bucket_mb");
+            let bytes = ((mb * (1u64 << 20) as f64) as usize).max(4);
+            let plan = BucketPlan::new(&leaf_sizes, &order, bytes)?;
+            plan.admit("train", dp)?;
+            self.bucket_plan = Some(plan);
+        }
+        let plan = self.bucket_plan.as_ref().expect("built above");
+        let wire_scale = if self.cfg.precision == Precision::Bf16 {
+            self.loss_scale
+        } else {
+            1.0
+        };
+        let out = bucketed_step(
+            self.backend.as_ref(),
+            &self.params,
+            batches,
+            dp,
+            accum,
+            self.plan.threads,
+            plan,
+            self.cfg.precision,
+            wire_scale,
+            &mut self.ring_scratch,
+        )?;
+        self.wire_dp_bytes += out.wire_bytes;
+        self.comm_seconds += out.comm_seconds;
+        self.exposed_comm_seconds += out.exposed_seconds;
+        Ok((out.losses, out.grads))
+    }
+
+    /// One optimizer step over the effective batch (dp × accum
+    /// micro-batches). Returns the mean micro-loss.
+    pub fn train_step(&mut self) -> Result<f32> {
+        let (dp, accum) = (self.plan.dp, self.plan.accum);
+        let e = dp * accum;
+        let batches = self.draw_step_batches()?;
+
+        let (losses, mut grads) = if self.cfg.bucket_mb.is_some() {
+            self.bucketed_grad_phase(&batches)?
+        } else {
+            self.monolithic_grad_phase(&batches)?
+        };
+        self.wire_dap_bytes += self.backend.take_mp_wire_bytes();
+
+        // fold losses in global micro order (replica-major = stream order)
+        let mut loss_acc = 0.0f32;
+        for l in &losses {
+            loss_acc += *l;
+        }
+
+        // bf16 guard: a non-finite reduced gradient skips the update and
+        // shrinks the loss scale (data is consumed either way — standard
+        // dynamic-loss-scaling semantics); a clean step pays the scale
+        // back out (exact: the scale is a power of two) and periodically
+        // grows it
+        if self.cfg.precision == Precision::Bf16 {
+            let non_finite = grads
+                .iter()
+                .any(|g| g.data().iter().any(|x| !x.is_finite()));
+            if non_finite {
+                self.skipped_steps += 1;
+                self.consecutive_skips += 1;
+                if self.consecutive_skips > MAX_CONSECUTIVE_SKIPS {
+                    return Err(Error::msg(format!(
+                        "bf16 loss-scale guard: {} consecutive non-finite \
+                         gradient steps (loss scale now {})",
+                        self.consecutive_skips, self.loss_scale
+                    )));
+                }
+                self.loss_scale = (self.loss_scale * 0.5).max(1.0);
+                self.scale_growth_counter = 0;
+                return Ok(loss_acc / e as f32);
+            }
+            let inv = 1.0 / self.loss_scale;
+            if inv != 1.0 {
+                for g in grads.iter_mut() {
+                    g.scale(inv);
+                }
+            }
+            self.consecutive_skips = 0;
+            self.scale_growth_counter += 1;
+            if self.scale_growth_counter >= LOSS_SCALE_GROWTH_INTERVAL
+                && self.loss_scale < LOSS_SCALE_MAX
+            {
+                self.loss_scale *= 2.0;
+                self.scale_growth_counter = 0;
+            }
+        }
 
         // mean over the effective batch
         let inv = 1.0 / e as f32;
@@ -382,6 +596,9 @@ impl<'rt> Trainer<'rt> {
                 state.accum, self.plan.accum
             )));
         }
+        // the restored stream position invalidates any in-flight
+        // prefetched batches; a fresh producer restarts on demand
+        self.prefetcher = None;
         self.gens = state
             .rng_states
             .iter()
@@ -441,6 +658,11 @@ impl<'rt> Trainer<'rt> {
         self.backend = build_backend(rt, &stage.preset, &self.plan, self.overlap)?;
         self.preset = stage.preset.clone();
         self.model_cfg = model_cfg;
+        // the new backend may complete its backward in a different leaf
+        // order; the new geometry is a new data stream — rebuild both
+        // the bucket partition and the prefetch producer on demand
+        self.bucket_plan = None;
+        self.prefetcher = None;
         // a new crop geometry is a new data stream: deterministic
         // stage-derived seed, fresh replica offsets
         let seed = self.cfg.seed.wrapping_add(1_000_003u64.wrapping_mul(index as u64));
@@ -461,6 +683,10 @@ impl<'rt> Trainer<'rt> {
         let t0 = Instant::now();
         let wire_dp0 = self.wire_dp_bytes;
         let wire_dap0 = self.wire_dap_bytes;
+        let comm0 = self.comm_seconds;
+        let exposed0 = self.exposed_comm_seconds;
+        let stall0 = self.prefetch_stall_seconds;
+        let skipped0 = self.skipped_steps;
         let mut first = None;
         let mut last = 0.0;
         let mut executed = 0usize;
@@ -490,6 +716,13 @@ impl<'rt> Trainer<'rt> {
             self.steps_in_stage = 0;
         }
         let seconds = t0.elapsed().as_secs_f64();
+        let comm = self.comm_seconds - comm0;
+        let exposed = self.exposed_comm_seconds - exposed0;
+        let overlap_fraction = if comm > 0.0 {
+            (1.0 - exposed / comm).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
         Ok(TrainReport {
             steps: executed,
             final_loss: last,
@@ -500,6 +733,12 @@ impl<'rt> Trainer<'rt> {
             wire_dap_bytes: self.wire_dap_bytes - wire_dap0,
             threads: self.backend.effective_threads(self.plan.threads),
             final_lr: self.last_lr,
+            precision: self.cfg.precision.name(),
+            comm_seconds: comm,
+            exposed_comm_seconds: exposed,
+            overlap_fraction,
+            prefetch_stall_seconds: self.prefetch_stall_seconds - stall0,
+            skipped_steps: self.skipped_steps - skipped0,
         })
     }
 }
