@@ -1,8 +1,9 @@
 //! Source lint: a self-contained scan of the repo's Rust source for
-//! banned patterns — nondeterminism on output paths, and kernel calls
-//! that bypass the device-backend dispatch plane.
+//! banned patterns — nondeterminism on output paths, kernel calls that
+//! bypass the device-backend dispatch plane, and panics inside the
+//! fault-recovery planes.
 //!
-//! Three rules, mirroring the conventions the codebase is built on:
+//! Four rules, mirroring the conventions the codebase is built on:
 //!
 //! * **unordered-container** — hash-keyed maps/sets (the two
 //!   `std::collections` unordered containers) anywhere in the source.
@@ -29,6 +30,13 @@
 //!   exempt), and the escape marker `lint:allow(backend)` is honored on
 //!   the flagged line or the line immediately above, for the sanctioned
 //!   sites: the device plane itself, the oracle, and bench baselines.
+//! * **panic-in-recovery** — `unwrap`/`expect`/`panic!` in the
+//!   recovery planes (`faults/`, `train/checkpoint.rs`, the serve
+//!   daemon): code that exists to absorb failure must not introduce its
+//!   own aborts — a panic in a retry path turns an injected fault into
+//!   a real crash. Scoped to non-test code (everything before the first
+//!   `#[cfg(test)]`), matched on the code part of a line only, with a
+//!   same-line `lint:allow(panic)` escape for invariant-guarded sites.
 //!
 //! The patterns below are assembled with `concat!` so this file never
 //! matches its own rules.
@@ -55,6 +63,21 @@ const ALLOW_WALLCLOCK: &str = concat!("lint:allow(", "wallclock)");
 /// line or the line immediately above (so a justification comment can
 /// sit over a `use` or call without widening the line).
 const ALLOW_BACKEND: &str = concat!("lint:allow(", "backend)");
+/// Patterns whose presence in the code part of a line flags the
+/// panic-in-recovery rule inside the recovery planes.
+const PANIC_PATTERNS: [&str; 3] =
+    [concat!(".unwrap", "()"), concat!(".expect", "("), concat!("panic!", "(")];
+/// Same-line escape marker for the panic-in-recovery rule.
+const ALLOW_PANIC: &str = concat!("lint:allow(", "panic)");
+
+/// Whether `name` is inside a recovery plane the panic rule covers.
+fn panic_rule_scoped(name: &str) -> bool {
+    let norm = name.replace('\\', "/");
+    norm.contains("/faults/")
+        || norm.ends_with("faults.rs")
+        || norm.ends_with("train/checkpoint.rs")
+        || norm.ends_with("engine/daemon.rs")
+}
 
 /// One banned-pattern hit: where, which rule, and the offending line.
 #[derive(Clone, Debug)]
@@ -63,8 +86,8 @@ pub struct Violation {
     pub file: String,
     /// 1-indexed line number.
     pub line: usize,
-    /// Rule name: `unordered-container`, `wallclock`, or
-    /// `backend-bypass`.
+    /// Rule name: `unordered-container`, `wallclock`, `backend-bypass`,
+    /// or `panic-in-recovery`.
     pub rule: &'static str,
     /// The flagged source line, trimmed.
     pub excerpt: String,
@@ -86,6 +109,13 @@ pub fn lint_source(name: &str, src: &str) -> Vec<Violation> {
     // the file-level marker declares the whole file a measurement plane
     let wallclock_allowed = src.contains(ALLOW_WALLCLOCK);
     let lines: Vec<&str> = src.lines().collect();
+    // the panic rule stops at the first test module: tests exercise
+    // failures and unwrap freely
+    let panic_scoped = panic_rule_scoped(name);
+    let test_start = lines
+        .iter()
+        .position(|l| l.contains("#[cfg(test)]"))
+        .unwrap_or(lines.len());
     for (i, &line) in lines.iter().enumerate() {
         if UNORDERED.iter().any(|p| line.contains(p))
             && !line.contains(ALLOW_UNORDERED)
@@ -115,6 +145,18 @@ pub fn lint_source(name: &str, src: &str) -> Vec<Violation> {
                 file: name.to_string(),
                 line: i + 1,
                 rule: "backend-bypass",
+                excerpt: line.trim().to_string(),
+            });
+        }
+        if panic_scoped
+            && i < test_start
+            && PANIC_PATTERNS.iter().any(|p| code.contains(p))
+            && !line.contains(ALLOW_PANIC)
+        {
+            out.push(Violation {
+                file: name.to_string(),
+                line: i + 1,
+                rule: "panic-in-recovery",
                 excerpt: line.trim().to_string(),
             });
         }
@@ -215,6 +257,44 @@ mod tests {
         // the marker must not leak further than one line down
         let far = format!("// {}\n\nuse crate::{}softmax;\n", ALLOW_BACKEND, pat);
         assert_eq!(lint_source("x.rs", &far).len(), 1);
+    }
+
+    #[test]
+    fn panic_rule_is_scoped_to_recovery_planes() {
+        let pat = PANIC_PATTERNS[0];
+        let bad = format!("let v = x{};\n", pat);
+        // inside a recovery plane: flagged
+        let v = lint_source("rust/src/faults/mod.rs", &bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!((v[0].rule, v[0].line), ("panic-in-recovery", 1));
+        assert_eq!(
+            lint_source("rust/src/train/checkpoint.rs", &bad).len(),
+            1
+        );
+        assert_eq!(
+            lint_source("rust/src/inference/engine/daemon.rs", &bad).len(),
+            1
+        );
+        // outside the scoped planes: not this rule's business
+        assert!(lint_source("rust/src/train/trainer.rs", &bad).is_empty());
+    }
+
+    #[test]
+    fn panic_rule_escape_and_test_module_exemption() {
+        let pat = PANIC_PATTERNS[1];
+        // invariant-guarded sites escape with a same-line marker
+        let ok = format!(
+            "let v = x{}\"non-empty\"); // {} — guarded above\n",
+            pat, ALLOW_PANIC
+        );
+        assert!(lint_source("rust/src/faults/mod.rs", &ok).is_empty());
+        // everything after the first #[cfg(test)] is exempt: tests
+        // exercise failure paths and unwrap freely
+        let test_only = format!(
+            "fn run() {{}}\n#[cfg(test)]\nmod tests {{\n    fn t() {{ x{}; }}\n}}\n",
+            PANIC_PATTERNS[0]
+        );
+        assert!(lint_source("rust/src/faults/mod.rs", &test_only).is_empty());
     }
 
     #[test]

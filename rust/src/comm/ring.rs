@@ -93,6 +93,17 @@ fn check_ranks(ranks: &[Vec<f32>]) -> Result<usize> {
     Ok(len)
 }
 
+/// CRC-32 of one rank's flat wire payload (little-endian f32 bytes) —
+/// the checksum the fault-tolerant DP reduce stamps on each rank's
+/// gradient payload before it enters the ring. A receiver that computes
+/// a different CRC over what arrived discards the transfer and asks for
+/// a retransmit instead of folding corrupted bytes into every replica
+/// (see the trainer's corrupt-payload handling and
+/// [`crate::faults::FaultKind::CorruptPayload`]).
+pub fn payload_crc32(part: &[f32]) -> u32 {
+    crate::faults::crc32_f32(part)
+}
+
 /// Run ring all-reduce over per-rank flat vectors (in place, returns sums).
 /// Also returns the wire bytes actually sent by each rank, so tests can
 /// verify the 2(N−1)/N volume formula the perf model assumes and callers
@@ -549,6 +560,21 @@ mod tests {
         assert_eq!(wire.iter().sum::<usize>(), 2 * (n - 1) * len * 4);
         // the skew the old `total / n` average hid
         assert!(wire.iter().any(|&w| w != wire[0]));
+    }
+
+    #[test]
+    fn payload_crc_detects_wire_corruption() {
+        let mut rng = Rng::new(23);
+        let part: Vec<f32> = rng.normal_vec(257, 1.0);
+        let crc = payload_crc32(&part);
+        assert_eq!(crc, payload_crc32(&part), "checksum is pure");
+        // any single-bit flip anywhere in the payload is detected
+        for idx in [0usize, 128, 256] {
+            let mut hit = part.clone();
+            hit[idx] = f32::from_bits(hit[idx].to_bits() ^ 0x0001_0000);
+            assert_ne!(payload_crc32(&hit), crc, "flip at {idx} undetected");
+        }
+        assert_eq!(payload_crc32(&[]), 0);
     }
 
     #[test]

@@ -14,9 +14,30 @@
 use super::Collectives;
 use crate::error::{Error, Result};
 use crate::tensor::HostTensor;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant; // lint:allow(wallclock) — real-clock comm-job measurement (MeasuredComm)
+
+/// Default bounded-wait for joining a collective, milliseconds.
+pub const DEFAULT_WAIT_TIMEOUT_MS: u64 = 30_000;
+
+/// Process-wide join timeout (ms; 0 = wait forever). A process-wide
+/// setting, like `device::configure`: the executor spawns workers deep in
+/// the schedule path where no `RunConfig` is threaded, so the CLI applies
+/// `[comm] wait_timeout_ms` once at startup.
+static WAIT_TIMEOUT_MS: AtomicU64 = AtomicU64::new(DEFAULT_WAIT_TIMEOUT_MS);
+
+/// Set the collective join timeout (`[comm] wait_timeout_ms`; 0 disables
+/// the bound and restores the legacy block-forever join).
+pub fn set_wait_timeout_ms(ms: u64) {
+    WAIT_TIMEOUT_MS.store(ms, Ordering::Relaxed);
+}
+
+/// Current collective join timeout in milliseconds (0 = unbounded).
+pub fn wait_timeout_ms() -> u64 {
+    WAIT_TIMEOUT_MS.load(Ordering::Relaxed)
+}
 
 /// One deferred collective: the op kind plus the input shards captured at
 /// the schedule's trigger point (issue-time snapshot semantics).
@@ -51,6 +72,20 @@ pub enum CommJob {
 }
 
 impl CommJob {
+    /// Op label with group-size context (e.g. `gather[n=4]`) — what a
+    /// [`crate::Error::CommTimeout`] reports as the stalled op.
+    pub fn label(&self) -> String {
+        match self {
+            CommJob::Gather { parts, .. } => format!("gather[n={}]", parts.len()),
+            CommJob::Scatter { parts, .. } => {
+                format!("scatter[n={}]", parts.len())
+            }
+            CommJob::AllToAll { parts, .. } => {
+                format!("all_to_all[n={}]", parts.len())
+            }
+        }
+    }
+
     /// Execute the collective against `comm`.
     pub fn run(self, comm: &Collectives) -> Result<Vec<HostTensor>> {
         match self {
@@ -69,21 +104,49 @@ struct CommDone {
 }
 
 /// Handle for one in-flight collective; joining blocks until the worker
-/// has finished the job.
+/// has finished the job — but never forever: the wait is bounded by the
+/// `[comm] wait_timeout_ms` stamped at submit time.
 pub struct CommTicket {
     rx: Receiver<CommDone>,
+    op: String,
+    timeout_ms: u64,
 }
 
 impl CommTicket {
     /// Block until the collective completes; returns the per-rank results
     /// and the seconds the worker spent executing it (measured comm time,
-    /// whether or not it was exposed to the compute path).
+    /// whether or not it was exposed to the compute path). A worker that
+    /// stalls past the configured timeout surfaces a structured
+    /// [`crate::Error::CommTimeout`] with the op label instead of hanging
+    /// the schedule's `Wait` — the fault-tolerant retry path upstream
+    /// decides whether to re-issue.
     pub fn join(self) -> Result<(Vec<HostTensor>, f64)> {
-        let done = self.rx.recv().map_err(|_| {
-            Error::Comm("comm worker exited before completing a collective".into())
-        })?;
+        let done = if self.timeout_ms == 0 {
+            self.rx.recv().map_err(|_| closed_queue_error())?
+        } else {
+            match self
+                .rx
+                .recv_timeout(std::time::Duration::from_millis(self.timeout_ms))
+            {
+                Ok(done) => done,
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(Error::CommTimeout {
+                        op: self.op,
+                        rank: 0,
+                        waited_ms: self.timeout_ms,
+                    })
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(closed_queue_error())
+                }
+            }
+        };
         Ok((done.result?, done.exec_seconds))
     }
+}
+
+fn closed_queue_error() -> Error {
+    Error::Comm("comm worker exited before completing a collective".into())
 }
 
 /// The comm worker thread. Dropping it closes the job queue and joins the
@@ -115,15 +178,17 @@ impl CommWorker {
         CommWorker { tx: Some(tx), handle: Some(handle) }
     }
 
-    /// Enqueue a collective; returns immediately with its join ticket.
+    /// Enqueue a collective; returns immediately with its join ticket
+    /// (stamped with the current wait timeout and the op label).
     pub fn submit(&self, job: CommJob) -> CommTicket {
+        let op = job.label();
         let (reply_tx, reply_rx) = channel();
         self.tx
             .as_ref()
             .expect("comm worker queue open while worker alive")
             .send((job, reply_tx))
             .expect("comm worker thread alive");
-        CommTicket { rx: reply_rx }
+        CommTicket { rx: reply_rx, op, timeout_ms: wait_timeout_ms() }
     }
 }
 
@@ -165,6 +230,38 @@ mod tests {
         let parts = vec![HostTensor::full(&[2], 0.0), HostTensor::full(&[2], 0.0)];
         let ticket = worker.submit(CommJob::Scatter { parts, axis: 0 });
         assert!(ticket.join().is_err());
+    }
+
+    #[test]
+    fn stalled_join_times_out_with_op_context() {
+        // a ticket whose worker never replies must not hang the process:
+        // the bounded join surfaces CommTimeout with the op label
+        let (_tx, rx) = channel::<CommDone>();
+        let ticket =
+            CommTicket { rx, op: "gather[n=2]".into(), timeout_ms: 10 };
+        match ticket.join() {
+            Err(Error::CommTimeout { op, rank, waited_ms }) => {
+                assert_eq!(op, "gather[n=2]");
+                assert_eq!(rank, 0);
+                assert_eq!(waited_ms, 10);
+            }
+            other => panic!("expected CommTimeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn timeout_config_is_process_wide() {
+        assert!(wait_timeout_ms() > 0, "bounded by default");
+        // a healthy worker completes well inside the default bound, and
+        // tickets are stamped with the op label at submit time
+        let comm = Collectives::new(2);
+        let worker = CommWorker::spawn(comm);
+        let parts =
+            vec![HostTensor::full(&[2], 1.0), HostTensor::full(&[2], 2.0)];
+        let ticket = worker.submit(CommJob::Gather { parts, axis: 0 });
+        assert_eq!(ticket.op, "gather[n=2]");
+        assert_eq!(ticket.timeout_ms, wait_timeout_ms());
+        assert!(ticket.join().is_ok());
     }
 
     #[test]

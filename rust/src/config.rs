@@ -327,6 +327,25 @@ impl Default for ServeConfig {
     }
 }
 
+/// Collective-communication settings (`[comm]` section): the bounded
+/// wait the comm worker's join path enforces so a stalled collective
+/// surfaces a structured [`crate::Error::CommTimeout`] instead of
+/// hanging the process forever.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommConfig {
+    /// Milliseconds a schedule `Wait` blocks on an in-flight collective
+    /// before timing out (0 = unbounded, the legacy block-forever join).
+    pub wait_timeout_ms: u64,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        CommConfig {
+            wait_timeout_ms: crate::comm::worker::DEFAULT_WAIT_TIMEOUT_MS,
+        }
+    }
+}
+
 /// Host device-backend settings (`[device]` section): which
 /// [`crate::device::DeviceBackend`] implementation the kernel plane
 /// dispatches through. The CLI resolves the final choice with
@@ -354,6 +373,7 @@ pub struct RunConfig {
     pub train: TrainConfig,
     pub autochunk: AutoChunkConfig,
     pub serve: ServeConfig,
+    pub comm: CommConfig,
     pub device: DeviceConfig,
 }
 
@@ -366,6 +386,7 @@ impl Default for RunConfig {
             train: TrainConfig::default(),
             autochunk: AutoChunkConfig::default(),
             serve: ServeConfig::default(),
+            comm: CommConfig::default(),
             device: DeviceConfig::default(),
         }
     }
@@ -603,6 +624,11 @@ impl RunConfig {
                 cfg.serve.cache_gb = g;
             }
         }
+        if let Some(c) = doc.get("comm") {
+            if let Some(v) = c.get("wait_timeout_ms") {
+                cfg.comm.wait_timeout_ms = v.as_usize()? as u64;
+            }
+        }
         if let Some(d) = doc.get("device") {
             if let Some(v) = d.get("backend") {
                 let name = v.as_str()?;
@@ -748,6 +774,22 @@ headroom = 0.25
         assert!(RunConfig::from_toml("[train]\nbucket_mb = -1.0").is_err());
         assert_eq!(Precision::parse("f32").unwrap().name(), "f32");
         assert_eq!(Precision::parse("bf16").unwrap().name(), "bf16");
+    }
+
+    #[test]
+    fn comm_section_parses() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.comm, CommConfig::default());
+        assert_eq!(
+            cfg.comm.wait_timeout_ms,
+            crate::comm::worker::DEFAULT_WAIT_TIMEOUT_MS
+        );
+        let cfg =
+            RunConfig::from_toml("[comm]\nwait_timeout_ms = 250").unwrap();
+        assert_eq!(cfg.comm.wait_timeout_ms, 250);
+        let cfg = RunConfig::from_toml("[comm]\nwait_timeout_ms = 0").unwrap();
+        assert_eq!(cfg.comm.wait_timeout_ms, 0); // 0 = unbounded
+        assert!(RunConfig::from_toml("[comm]\nwait_timeout_ms = -5").is_err());
     }
 
     #[test]

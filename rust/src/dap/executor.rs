@@ -130,6 +130,30 @@ pub fn parallel_ranks<T: Send>(
     results.into_iter().map(|(_, res)| res).collect()
 }
 
+/// [`parallel_ranks`] with heartbeat-based failure detection: each rank
+/// ticks its beat on the shared [`crate::faults::Heartbeats`] plane as
+/// it takes work, and a rank already declared dead surfaces a structured
+/// [`crate::Error::RankLost`] (tagged with 1-based `step`) instead of
+/// being executed — the sweep fails fast rather than waiting on a rank
+/// that will never report. Results and error precedence are otherwise
+/// identical to [`parallel_ranks`] (first error by rank order wins), so
+/// with an all-alive plane this is bitwise the plain sweep.
+pub fn parallel_ranks_with_heartbeat<T: Send>(
+    threads: usize,
+    n: usize,
+    hb: &crate::faults::Heartbeats,
+    step: usize,
+    f: impl Fn(usize) -> Result<T> + Sync,
+) -> Result<Vec<T>> {
+    parallel_ranks(threads, n, |r| {
+        if hb.is_dead(r) {
+            return Err(Error::RankLost { rank: r, step });
+        }
+        hb.tick(r);
+        f(r)
+    })
+}
+
 /// One un-joined async collective: where its result will land, and either
 /// the already-computed value (inline mode) or the comm-worker ticket.
 enum InflightVal {

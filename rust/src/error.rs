@@ -31,6 +31,26 @@ pub enum Error {
         /// Device capacity in decimal GB.
         cap_gb: f64,
     },
+    /// A bounded collective wait expired: the comm worker (or an
+    /// injected stall) failed to deliver within the configured
+    /// `[comm] wait_timeout_ms`, so the waiter surfaces a structured
+    /// timeout instead of joining forever.
+    CommTimeout {
+        /// Collective op that stalled (e.g. `gather[n=4]`).
+        op: String,
+        /// Rank that was blocked waiting on the result.
+        rank: usize,
+        /// How long the waiter was prepared to wait, milliseconds.
+        waited_ms: u64,
+    },
+    /// A DP rank is permanently lost (heartbeat plane declared it dead);
+    /// the trainer recovers by rollback + dp-shrink re-plan.
+    RankLost {
+        /// The dead rank.
+        rank: usize,
+        /// 1-based optimizer step at which the loss was detected.
+        step: usize,
+    },
     /// Free-form error message.
     Msg(String),
 }
@@ -50,6 +70,15 @@ impl fmt::Display for Error {
                 f,
                 "out of (simulated) device memory: need {need_gb:.2} GB, \
                  capacity {cap_gb:.2} GB"
+            ),
+            Error::CommTimeout { op, rank, waited_ms } => write!(
+                f,
+                "collective timeout: rank {rank} waited {waited_ms} ms for \
+                 '{op}' with no reply"
+            ),
+            Error::RankLost { rank, step } => write!(
+                f,
+                "rank {rank} lost at step {step} (heartbeat declared dead)"
             ),
             Error::Msg(s) => write!(f, "{s}"),
         }

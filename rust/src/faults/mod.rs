@@ -1,0 +1,709 @@
+//! Seeded, deterministic fault-injection plane.
+//!
+//! At FastFold's 67-hour × hundreds-of-GPUs scale (and ScaleFold's 2080),
+//! rank crashes, comm stalls, and corrupted transfers are the expected
+//! case, not the exception. This module is the single source of injected
+//! anomalies for the whole stack: a [`FaultSchedule`] of timed events —
+//! loaded from JSONL or synthesized from a seed — consumed by the trainer
+//! (retry/rollback/elastic dp-shrink), the rank executor (heartbeat
+//! detection, `dap/executor.rs`), the DP wire (CRC detect-and-retransmit,
+//! `comm/ring.rs`), and the serve daemon (retry/fallback/circuit breaker,
+//! `inference/engine/daemon.rs`).
+//!
+//! Everything here is **virtual-clock deterministic**: events trigger on
+//! step numbers and dispatch sequence numbers, never on wall time, so a
+//! faulted run replays bit-for-bit and CI can gate recovery outcomes
+//! exactly. The plane carries its own recovery-cost bookkeeping
+//! ([`RecoveryLedger`]) and the CRC-32 the wire/checkpoint integrity
+//! checks share ([`crc32`]).
+
+use crate::error::{Error, Result};
+use crate::json::Json;
+use crate::rng::Rng;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// One CRC-32 step (IEEE 802.3 reflected polynomial `0xEDB88320`).
+fn crc32_byte(crc: u32, byte: u8) -> u32 {
+    let mut crc = crc ^ byte as u32;
+    for _ in 0..8 {
+        let mask = (crc & 1).wrapping_neg();
+        crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+    }
+    crc
+}
+
+/// CRC-32 (IEEE 802.3) of a byte payload — the integrity check the V2
+/// checkpoint header and the DP gradient wire share. Bitwise (no table),
+/// so the implementation is self-evidently deterministic; the standard
+/// check value holds: `crc32(b"123456789") == 0xCBF43926`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = crc32_byte(crc, b);
+    }
+    !crc
+}
+
+/// [`crc32`] over an `f32` payload's little-endian bytes, streamed
+/// without materializing the byte buffer — the checksum one DP rank's
+/// flattened gradient wire carries (see `comm/ring.rs::payload_crc32`).
+pub fn crc32_f32(part: &[f32]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for v in part {
+        for b in v.to_le_bytes() {
+            crc = crc32_byte(crc, b);
+        }
+    }
+    !crc
+}
+
+/// The injectable fault classes (the training-side taxonomy; serving-side
+/// backend failures are [`ServeFaultEvent`]s).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Permanent loss of one DP rank: the heartbeat plane marks it dead,
+    /// the trainer rolls back to the last valid V2 checkpoint, re-plans
+    /// with shrunk `dp` at constant effective batch, and resumes.
+    RankCrash,
+    /// A collective stalls past the bounded wait: surfaces as a
+    /// structured [`crate::Error::CommTimeout`] and is retried.
+    CommStall,
+    /// One rank's DP wire payload is corrupted in flight: the CRC check
+    /// detects the mismatch and the pristine payload is retransmitted.
+    CorruptPayload,
+    /// One rank runs slow for a step; the run proceeds and the ledger
+    /// charges the modeled straggler seconds.
+    Straggler,
+    /// A transient backend out-of-memory: the step retries with
+    /// exponential backoff until the event's budget is exhausted.
+    TransientOom,
+}
+
+impl FaultKind {
+    /// Stable serialized name (`rank_crash`, `comm_stall`, …).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::RankCrash => "rank_crash",
+            FaultKind::CommStall => "comm_stall",
+            FaultKind::CorruptPayload => "corrupt_payload",
+            FaultKind::Straggler => "straggler",
+            FaultKind::TransientOom => "transient_oom",
+        }
+    }
+
+    /// Parse a serialized kind name.
+    pub fn parse(s: &str) -> Result<FaultKind> {
+        match s {
+            "rank_crash" => Ok(FaultKind::RankCrash),
+            "comm_stall" => Ok(FaultKind::CommStall),
+            "corrupt_payload" => Ok(FaultKind::CorruptPayload),
+            "straggler" => Ok(FaultKind::Straggler),
+            "transient_oom" => Ok(FaultKind::TransientOom),
+            other => Err(Error::Config(format!(
+                "faults: unknown kind '{other}' (rank_crash|comm_stall|\
+                 corrupt_payload|straggler|transient_oom|backend_fail)"
+            ))),
+        }
+    }
+
+    /// Deterministic sort order inside one step.
+    fn order(&self) -> u8 {
+        match self {
+            FaultKind::TransientOom => 0,
+            FaultKind::CommStall => 1,
+            FaultKind::CorruptPayload => 2,
+            FaultKind::Straggler => 3,
+            FaultKind::RankCrash => 4,
+        }
+    }
+}
+
+/// One timed training-side fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// 1-based optimizer step the fault fires at.
+    pub step: usize,
+    /// What breaks.
+    pub kind: FaultKind,
+    /// DP rank the fault targets.
+    pub rank: usize,
+    /// How many injections the event is worth (a `TransientOom` with
+    /// `count: 2` fails the first two attempts of the step, then clears).
+    pub count: usize,
+}
+
+/// One serving-side fault: the daemon's dispatch attempt numbered `at`
+/// (0-based, counted across the whole replay) fails `count` consecutive
+/// times at the backend before the request succeeds or exhausts retries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeFaultEvent {
+    /// 0-based dispatch sequence number the failure run starts at.
+    pub at: usize,
+    /// Consecutive backend failures injected from `at` on.
+    pub count: usize,
+}
+
+/// A deterministic schedule of injected faults for one run — training
+/// events keyed by optimizer step, serving events keyed by dispatch
+/// sequence. Loaded from JSONL ([`FaultSchedule::from_jsonl`]) or
+/// synthesized from a seed ([`FaultSchedule::synthesize`]); validated
+/// before any run consumes it ([`FaultSchedule::validate`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultSchedule {
+    /// Seed the schedule was synthesized from (0 for hand-written files).
+    pub seed: u64,
+    /// Training-side events, sorted by (step, kind, rank).
+    pub train: Vec<FaultEvent>,
+    /// Serving-side events, sorted by dispatch sequence.
+    pub serve: Vec<ServeFaultEvent>,
+}
+
+impl FaultSchedule {
+    /// Sort events into the canonical order (stable across load paths).
+    fn normalize(&mut self) {
+        self.train
+            .sort_by_key(|e| (e.step, e.kind.order(), e.rank, e.count));
+        self.serve.sort_by_key(|e| (e.at, e.count));
+    }
+
+    /// Synthesize a seeded schedule: `transients` transient events
+    /// (cycling OOM / stall / straggler / corrupt-payload) over steps
+    /// `1..=steps`, one permanent rank crash in the late half of the run
+    /// when `dp >= 2` (a crash must leave a shrink target), and
+    /// `serve_events` backend-failure runs over an early dispatch window.
+    /// Same seed, same schedule — byte-identical JSONL.
+    pub fn synthesize(
+        seed: u64,
+        steps: usize,
+        dp: usize,
+        transients: usize,
+        serve_events: usize,
+    ) -> FaultSchedule {
+        let mut rng = Rng::new(seed ^ 0x5FA0_17C3_B9E1_D24D);
+        let kinds = [
+            FaultKind::TransientOom,
+            FaultKind::CommStall,
+            FaultKind::Straggler,
+            FaultKind::CorruptPayload,
+        ];
+        let mut train = Vec::new();
+        for i in 0..transients {
+            train.push(FaultEvent {
+                step: 1 + rng.below(steps.max(1)),
+                kind: kinds[i % kinds.len()],
+                rank: rng.below(dp.max(1)),
+                count: 1 + rng.below(2),
+            });
+        }
+        if dp >= 2 && steps >= 2 {
+            // late-half crash, never step 1: rollback needs at least one
+            // checkpointable step before the loss
+            let lo = (steps / 2).max(2);
+            train.push(FaultEvent {
+                step: lo + rng.below(steps - lo + 1),
+                kind: FaultKind::RankCrash,
+                rank: rng.below(dp),
+                count: 1,
+            });
+        }
+        let mut serve = Vec::new();
+        let span = (serve_events * 10).max(1);
+        for _ in 0..serve_events {
+            serve.push(ServeFaultEvent {
+                at: rng.below(span),
+                count: 1 + rng.below(2),
+            });
+        }
+        let mut s = FaultSchedule { seed, train, serve };
+        s.normalize();
+        s
+    }
+
+    /// Parse a JSONL schedule: one event object per non-blank line.
+    /// Training lines carry `kind` + `step` (+ optional `rank`, `count`);
+    /// serving lines are `{"kind": "backend_fail", "at": N, "count": K}`.
+    /// Unknown keys are loud errors, not silently dropped settings.
+    pub fn from_jsonl(src: &str) -> Result<FaultSchedule> {
+        let mut out = FaultSchedule::default();
+        for (lineno, line) in src.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let j = Json::parse(line)?;
+            let obj = j.as_obj()?;
+            let kind = j
+                .opt("kind")
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "faults line {}: missing 'kind'",
+                        lineno + 1
+                    ))
+                })?
+                .as_str()?
+                .to_string();
+            if kind == "backend_fail" {
+                for key in obj.keys() {
+                    if !["kind", "at", "count"].contains(&key.as_str()) {
+                        return Err(Error::Config(format!(
+                            "faults line {}: unknown key '{key}' for \
+                             backend_fail (known: kind, at, count)",
+                            lineno + 1
+                        )));
+                    }
+                }
+                let at = j
+                    .opt("at")
+                    .ok_or_else(|| {
+                        Error::Config(format!(
+                            "faults line {}: backend_fail needs 'at'",
+                            lineno + 1
+                        ))
+                    })?
+                    .as_usize()?;
+                let count =
+                    match j.opt("count") {
+                        Some(v) => v.as_usize()?,
+                        None => 1,
+                    };
+                out.serve.push(ServeFaultEvent { at, count });
+            } else {
+                for key in obj.keys() {
+                    if !["kind", "step", "rank", "count"].contains(&key.as_str())
+                    {
+                        return Err(Error::Config(format!(
+                            "faults line {}: unknown key '{key}' (known: \
+                             kind, step, rank, count)",
+                            lineno + 1
+                        )));
+                    }
+                }
+                let step = j
+                    .opt("step")
+                    .ok_or_else(|| {
+                        Error::Config(format!(
+                            "faults line {}: '{kind}' needs 'step'",
+                            lineno + 1
+                        ))
+                    })?
+                    .as_usize()?;
+                let rank = match j.opt("rank") {
+                    Some(v) => v.as_usize()?,
+                    None => 0,
+                };
+                let count = match j.opt("count") {
+                    Some(v) => v.as_usize()?,
+                    None => 1,
+                };
+                out.train.push(FaultEvent {
+                    step,
+                    kind: FaultKind::parse(&kind)?,
+                    rank,
+                    count,
+                });
+            }
+        }
+        out.normalize();
+        Ok(out)
+    }
+
+    /// Serialize to the JSONL form [`FaultSchedule::from_jsonl`] reads
+    /// (round-trips exactly; the seed is not serialized).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in &self.train {
+            let mut o = BTreeMap::new();
+            o.insert("kind".to_string(), Json::Str(e.kind.name().into()));
+            o.insert("step".to_string(), Json::Num(e.step as f64));
+            o.insert("rank".to_string(), Json::Num(e.rank as f64));
+            o.insert("count".to_string(), Json::Num(e.count as f64));
+            out.push_str(&Json::Obj(o).to_string());
+            out.push('\n');
+        }
+        for e in &self.serve {
+            let mut o = BTreeMap::new();
+            o.insert("kind".to_string(), Json::Str("backend_fail".into()));
+            o.insert("at".to_string(), Json::Num(e.at as f64));
+            o.insert("count".to_string(), Json::Num(e.count as f64));
+            out.push_str(&Json::Obj(o).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Static admission for a training run over `dp` initial DP ranks —
+    /// the fault-plane twin of `analysis::admit`: every event must target
+    /// a real rank and carry a nonzero budget, steps are 1-based, and
+    /// rank crashes must leave at least one surviving rank (each crash
+    /// shrinks the fleet, so fewer than `dp` crashes can ever recover).
+    pub fn validate(&self, dp: usize) -> Result<()> {
+        if dp == 0 {
+            return Err(Error::Config("faults: dp must be >= 1".into()));
+        }
+        let mut crashes = 0usize;
+        for e in &self.train {
+            if e.step == 0 {
+                return Err(Error::Config(format!(
+                    "faults: {} event at step 0 (steps are 1-based)",
+                    e.kind.name()
+                )));
+            }
+            if e.count == 0 {
+                return Err(Error::Config(format!(
+                    "faults: {} event at step {} has count 0",
+                    e.kind.name(),
+                    e.step
+                )));
+            }
+            if e.rank >= dp {
+                return Err(Error::Config(format!(
+                    "faults: {} event at step {} targets rank {} but the \
+                     plan has dp={dp}",
+                    e.kind.name(),
+                    e.step,
+                    e.rank
+                )));
+            }
+            if e.kind == FaultKind::RankCrash {
+                crashes += 1;
+            }
+        }
+        if crashes >= dp {
+            return Err(Error::Config(format!(
+                "faults: {crashes} rank crashes scheduled against dp={dp} — \
+                 a crash must leave at least one surviving rank"
+            )));
+        }
+        for e in &self.serve {
+            if e.count == 0 {
+                return Err(Error::Config(format!(
+                    "faults: backend_fail event at dispatch {} has count 0",
+                    e.at
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Scheduled training events firing at 1-based `step`.
+    pub fn train_events_at(
+        &self,
+        step: usize,
+    ) -> impl Iterator<Item = &FaultEvent> {
+        self.train.iter().filter(move |e| e.step == step)
+    }
+}
+
+/// Stateful consumer of one schedule's training events: each event has a
+/// `count` budget; [`Injector::take`] consumes one injection at a time so
+/// a retried step draws the event down and eventually clears it. Held by
+/// the trainer (`&mut` methods — the trainer owns all step context).
+#[derive(Clone, Debug)]
+pub struct Injector {
+    schedule: FaultSchedule,
+    spent: Vec<usize>,
+}
+
+impl Injector {
+    /// Wrap a validated schedule with fresh per-event budgets.
+    pub fn new(schedule: FaultSchedule) -> Self {
+        let spent = vec![0; schedule.train.len()];
+        Injector { schedule, spent }
+    }
+
+    /// The schedule this injector consumes.
+    pub fn schedule(&self) -> &FaultSchedule {
+        &self.schedule
+    }
+
+    /// Consume one injection of `kind` at 1-based `step`; returns the
+    /// target rank, or `None` when no matching event has budget left.
+    pub fn take(&mut self, step: usize, kind: FaultKind) -> Option<usize> {
+        for (i, e) in self.schedule.train.iter().enumerate() {
+            if e.step == step && e.kind == kind && self.spent[i] < e.count {
+                self.spent[i] += 1;
+                return Some(e.rank);
+            }
+        }
+        None
+    }
+
+    /// Remaining injection budget for `kind` at `step`.
+    pub fn remaining(&self, step: usize, kind: FaultKind) -> usize {
+        self.schedule
+            .train
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.step == step && e.kind == kind)
+            .map(|(i, e)| e.count - self.spent[i])
+            .sum()
+    }
+}
+
+/// Per-rank liveness plane for the rank executor: workers tick their
+/// beat as they take work; the fault plane (or a real detector) marks a
+/// rank dead, and the next sweep surfaces [`crate::Error::RankLost`]
+/// instead of hanging on a rank that will never report. Lock-free —
+/// shared across the scoped rank-executor worker threads.
+#[derive(Debug)]
+pub struct Heartbeats {
+    beats: Vec<AtomicU64>,
+    dead: Vec<AtomicBool>,
+}
+
+impl Heartbeats {
+    /// Fresh liveness state for `n` ranks (all alive, zero beats).
+    pub fn new(n: usize) -> Self {
+        Heartbeats {
+            beats: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
+        }
+    }
+
+    /// Ranks this plane tracks.
+    pub fn ranks(&self) -> usize {
+        self.beats.len()
+    }
+
+    /// Record one heartbeat for `rank` (out-of-range ticks are ignored).
+    pub fn tick(&self, rank: usize) {
+        if let Some(b) = self.beats.get(rank) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Beats recorded for `rank` so far.
+    pub fn beats(&self, rank: usize) -> u64 {
+        self.beats.get(rank).map_or(0, |b| b.load(Ordering::Relaxed))
+    }
+
+    /// Declare `rank` permanently lost.
+    pub fn mark_dead(&self, rank: usize) {
+        if let Some(d) = self.dead.get(rank) {
+            d.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether `rank` has been declared lost.
+    pub fn is_dead(&self, rank: usize) -> bool {
+        self.dead.get(rank).is_some_and(|d| d.load(Ordering::Relaxed))
+    }
+
+    /// Lowest-numbered dead rank, if any.
+    pub fn first_dead(&self) -> Option<usize> {
+        (0..self.dead.len()).find(|&r| self.is_dead(r))
+    }
+}
+
+/// Recovery-cost bookkeeping for one faulted run — the numbers the
+/// `TrainReport` ledgers and the MTBF model calibrates against. Seconds
+/// are *modeled* (virtual-clock), so the ledger is deterministic.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RecoveryLedger {
+    /// Grad-phase attempts retried after a transient fault.
+    pub retries: usize,
+    /// Wire payloads whose CRC mismatch forced a retransmit.
+    pub retransmits: usize,
+    /// Bounded collective waits that timed out and retried.
+    pub comm_timeouts: usize,
+    /// Straggler slowdowns absorbed without a retry.
+    pub stragglers: usize,
+    /// Permanent rank losses recovered by rollback + dp-shrink.
+    pub rank_crashes: usize,
+    /// Optimizer steps re-run because of rollback to a checkpoint.
+    pub lost_steps: usize,
+    /// Modeled seconds spent in backoff, retransmits, and rollback.
+    pub recovery_seconds: f64,
+}
+
+impl RecoveryLedger {
+    /// The cost accumulated since `earlier` was captured — what one
+    /// `run_schedule` call reports when the trainer's cumulative ledger
+    /// already carries a previous run's counts.
+    #[must_use]
+    pub fn since(&self, earlier: &RecoveryLedger) -> RecoveryLedger {
+        RecoveryLedger {
+            retries: self.retries - earlier.retries,
+            retransmits: self.retransmits - earlier.retransmits,
+            comm_timeouts: self.comm_timeouts - earlier.comm_timeouts,
+            stragglers: self.stragglers - earlier.stragglers,
+            rank_crashes: self.rank_crashes - earlier.rank_crashes,
+            lost_steps: self.lost_steps - earlier.lost_steps,
+            recovery_seconds: self.recovery_seconds - earlier.recovery_seconds,
+        }
+    }
+
+    /// Whether any fault was absorbed at all.
+    pub fn any(&self) -> bool {
+        self.retries
+            + self.retransmits
+            + self.comm_timeouts
+            + self.stragglers
+            + self.rank_crashes
+            + self.lost_steps
+            > 0
+    }
+}
+
+/// Modeled exponential backoff before retry `attempt` (1-based):
+/// `base * 2^(attempt-1)`, capped at 16 doublings.
+pub fn backoff_secs(base: f64, attempt: usize) -> f64 {
+    base * f64::from(1u32 << (attempt.clamp(1, 17) - 1).min(16))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_ieee_check_value() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // f32 streaming form agrees with the byte form
+        let part = [1.0f32, -2.5, 3.25e7];
+        let bytes: Vec<u8> =
+            part.iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(crc32_f32(&part), crc32(&bytes));
+        // and detects a single-bit flip
+        let mut flipped = part;
+        flipped[1] = f32::from_bits(flipped[1].to_bits() ^ 1);
+        assert_ne!(crc32_f32(&flipped), crc32_f32(&part));
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_exact() {
+        let src = r#"
+            {"kind": "transient_oom", "step": 2, "rank": 0, "count": 2}
+            # comment
+            {"kind": "comm_stall", "step": 3}
+            {"kind": "rank_crash", "step": 5, "rank": 1}
+            {"kind": "backend_fail", "at": 7, "count": 2}
+        "#;
+        let s = FaultSchedule::from_jsonl(src).unwrap();
+        assert_eq!(s.train.len(), 3);
+        assert_eq!(s.serve.len(), 1);
+        assert_eq!(s.train[1].kind, FaultKind::CommStall);
+        assert_eq!((s.train[1].rank, s.train[1].count), (0, 1));
+        let back = FaultSchedule::from_jsonl(&s.to_jsonl()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn jsonl_rejects_unknown_keys_and_kinds() {
+        assert!(FaultSchedule::from_jsonl(r#"{"kind": "gremlin", "step": 1}"#)
+            .is_err());
+        assert!(FaultSchedule::from_jsonl(
+            r#"{"kind": "comm_stall", "step": 1, "lane": 3}"#
+        )
+        .is_err());
+        assert!(FaultSchedule::from_jsonl(
+            r#"{"kind": "backend_fail", "step": 1}"#
+        )
+        .is_err());
+        assert!(FaultSchedule::from_jsonl(r#"{"step": 1}"#).is_err());
+    }
+
+    #[test]
+    fn validate_enforces_ranks_and_survivors() {
+        let mut s = FaultSchedule::default();
+        s.train.push(FaultEvent {
+            step: 1,
+            kind: FaultKind::CommStall,
+            rank: 2,
+            count: 1,
+        });
+        assert!(s.validate(2).is_err()); // rank out of range
+        assert!(s.validate(4).is_ok());
+        let crash = |rank| FaultEvent {
+            step: 3,
+            kind: FaultKind::RankCrash,
+            rank,
+            count: 1,
+        };
+        let one = FaultSchedule {
+            seed: 0,
+            train: vec![crash(0)],
+            serve: vec![],
+        };
+        assert!(one.validate(1).is_err()); // no survivor
+        assert!(one.validate(2).is_ok());
+        let zero_count = FaultSchedule {
+            seed: 0,
+            train: vec![FaultEvent {
+                step: 1,
+                kind: FaultKind::Straggler,
+                rank: 0,
+                count: 0,
+            }],
+            serve: vec![],
+        };
+        assert!(zero_count.validate(2).is_err());
+    }
+
+    #[test]
+    fn synthesize_is_deterministic_sorted_and_admissible() {
+        let a = FaultSchedule::synthesize(11, 8, 4, 3, 2);
+        let b = FaultSchedule::synthesize(11, 8, 4, 3, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, FaultSchedule::synthesize(12, 8, 4, 3, 2));
+        a.validate(4).unwrap();
+        assert!(a.train.windows(2).all(|w| w[0].step <= w[1].step));
+        assert_eq!(
+            a.train
+                .iter()
+                .filter(|e| e.kind == FaultKind::RankCrash)
+                .count(),
+            1
+        );
+        assert!(a.train.iter().any(|e| e.kind != FaultKind::RankCrash));
+        assert_eq!(a.serve.len(), 2);
+        // dp=1 schedules no crash (nothing to shrink to)
+        assert!(FaultSchedule::synthesize(11, 8, 1, 2, 0)
+            .train
+            .iter()
+            .all(|e| e.kind != FaultKind::RankCrash));
+    }
+
+    #[test]
+    fn injector_draws_event_budgets_down() {
+        let s = FaultSchedule::from_jsonl(
+            r#"{"kind": "transient_oom", "step": 2, "rank": 1, "count": 2}"#,
+        )
+        .unwrap();
+        let mut inj = Injector::new(s);
+        assert_eq!(inj.remaining(2, FaultKind::TransientOom), 2);
+        assert_eq!(inj.take(1, FaultKind::TransientOom), None);
+        assert_eq!(inj.take(2, FaultKind::CommStall), None);
+        assert_eq!(inj.take(2, FaultKind::TransientOom), Some(1));
+        assert_eq!(inj.take(2, FaultKind::TransientOom), Some(1));
+        assert_eq!(inj.take(2, FaultKind::TransientOom), None);
+        assert_eq!(inj.remaining(2, FaultKind::TransientOom), 0);
+    }
+
+    #[test]
+    fn heartbeats_track_ticks_and_death() {
+        let hb = Heartbeats::new(3);
+        assert_eq!(hb.ranks(), 3);
+        hb.tick(0);
+        hb.tick(0);
+        hb.tick(2);
+        hb.tick(9); // out of range: ignored
+        assert_eq!((hb.beats(0), hb.beats(1), hb.beats(2)), (2, 0, 1));
+        assert_eq!(hb.first_dead(), None);
+        hb.mark_dead(1);
+        assert!(hb.is_dead(1));
+        assert!(!hb.is_dead(0));
+        assert_eq!(hb.first_dead(), Some(1));
+    }
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        assert_eq!(backoff_secs(0.05, 1), 0.05);
+        assert_eq!(backoff_secs(0.05, 2), 0.1);
+        assert_eq!(backoff_secs(0.05, 3), 0.2);
+        // attempt 0 is treated as the first attempt; huge attempts cap
+        assert_eq!(backoff_secs(0.05, 0), 0.05);
+        assert!(backoff_secs(0.05, 1000).is_finite());
+    }
+}

@@ -145,3 +145,70 @@ impl InferBackend for DapBackend<'_> {
         Ok(InferOutput { msa_logits: m, dist_logits: z, note: Some(note) })
     }
 }
+
+/// Fault-injection seam over any [`BackendFactory`]: construction
+/// attempts are numbered in call order, and attempts named by the wrapped
+/// [`crate::faults::FaultSchedule`]'s serve events fail with a simulated
+/// device failure instead of building a backend. The executed drain path
+/// and its tests use this to exercise mid-batch backend errors without
+/// touching the production factories.
+pub struct ChaosFactory<'f> {
+    inner: &'f dyn BackendFactory,
+    schedule: crate::faults::FaultSchedule,
+    // (next attempt number, per-event consumed budget) — a Mutex because
+    // `make` takes `&self` from concurrent drain workers
+    state: std::sync::Mutex<(usize, Vec<usize>)>,
+}
+
+impl<'f> ChaosFactory<'f> {
+    /// Wrap `inner`, failing the construction attempts `schedule.serve`
+    /// names (attempt `at`, `count` consecutive failures).
+    pub fn new(
+        inner: &'f dyn BackendFactory,
+        schedule: crate::faults::FaultSchedule,
+    ) -> Self {
+        let spent = vec![0; schedule.serve.len()];
+        ChaosFactory {
+            inner,
+            schedule,
+            state: std::sync::Mutex::new((0, spent)),
+        }
+    }
+
+    /// Attempts injected as failures so far.
+    pub fn injected(&self) -> usize {
+        match self.state.lock() {
+            Ok(s) => s.1.iter().sum(),
+            Err(_) => 0,
+        }
+    }
+}
+
+impl BackendFactory for ChaosFactory<'_> {
+    fn make<'a>(
+        &'a self,
+        req: &InferRequest,
+        placement: &Placement,
+        rank_threads: usize,
+    ) -> Result<Box<dyn InferBackend + 'a>> {
+        let mut fail = None;
+        if let Ok(mut s) = self.state.lock() {
+            let seq = s.0;
+            s.0 += 1;
+            for (i, e) in self.schedule.serve.iter().enumerate() {
+                if seq >= e.at && seq < e.at + e.count && s.1[i] < e.count {
+                    s.1[i] += 1;
+                    fail = Some(seq);
+                    break;
+                }
+            }
+        }
+        if let Some(seq) = fail {
+            return Err(crate::error::Error::msg(format!(
+                "injected backend failure for '{}' (chaos attempt {seq})",
+                req.id
+            )));
+        }
+        self.inner.make(req, placement, rank_threads)
+    }
+}

@@ -34,7 +34,7 @@ use std::sync::Arc;
 use std::time::Instant; // lint:allow(wallclock) — executed-replay wall clock, never in the ledger
 
 use super::cache::{CacheStats, ResultCache};
-use super::planner::{MemoPlanner, Placement, PlacementPlanner};
+use super::planner::{BackendKind, MemoPlanner, Placement, PlacementPlanner};
 use super::scheduler::{pick_next, SchedEntry, SchedPolicy};
 use super::{BackendFactory, Engine, InferRequest};
 
@@ -42,6 +42,18 @@ use super::{BackendFactory, Engine, InferRequest};
 /// transits the daemon (lookup, result copy-out), it just skips the
 /// fold.
 pub const CACHE_HIT_LATENCY: f64 = 0.05;
+
+/// Default dispatch attempts per request before it fails permanently.
+pub const DEFAULT_MAX_RETRIES: usize = 3;
+/// Default consecutive injected failures that open the circuit breaker.
+pub const DEFAULT_BREAKER_THRESHOLD: usize = 4;
+/// Default virtual seconds the breaker sheds arrivals once tripped.
+pub const DEFAULT_BREAKER_COOLDOWN: f64 = 1.0;
+/// Default base backoff (virtual seconds) before a retry.
+pub const DEFAULT_BACKOFF_BASE: f64 = 0.1;
+/// Default modeled lane occupancy of a failed dispatch attempt — the
+/// time to *detect* the failure (seconds).
+pub const FAULT_DETECT_LATENCY: f64 = 0.05;
 
 /// One timed request in a serve trace: the request itself plus its
 /// arrival-process metadata.
@@ -201,6 +213,21 @@ pub struct DaemonConfig {
     pub cache_bytes: usize,
     /// Modeled lane occupancy of a cache hit (seconds).
     pub cache_hit_latency: f64,
+    /// Fault schedule whose serve events fail dispatch attempts
+    /// (`None` = no injection; the loop is byte-identical to pre-fault
+    /// behavior when unset).
+    pub faults: Option<crate::faults::FaultSchedule>,
+    /// Dispatch attempts per request before [`Disposition::Failed`].
+    pub max_retries: usize,
+    /// Consecutive failed attempts that open the circuit breaker.
+    pub breaker_threshold: usize,
+    /// Virtual seconds the breaker sheds arrivals once tripped.
+    pub breaker_cooldown: f64,
+    /// Base backoff (virtual seconds) before a retry; attempt `k` waits
+    /// `base · 2^(k−1)`.
+    pub backoff_base: f64,
+    /// Modeled lane occupancy of a failed attempt (detection), seconds.
+    pub fault_detect_latency: f64,
 }
 
 impl DaemonConfig {
@@ -214,6 +241,12 @@ impl DaemonConfig {
             queue_cap: cfg.serve.queue_cap,
             cache_bytes: (cfg.serve.cache_gb * 1e9).round() as usize,
             cache_hit_latency: CACHE_HIT_LATENCY,
+            faults: None,
+            max_retries: DEFAULT_MAX_RETRIES,
+            breaker_threshold: DEFAULT_BREAKER_THRESHOLD,
+            breaker_cooldown: DEFAULT_BREAKER_COOLDOWN,
+            backoff_base: DEFAULT_BACKOFF_BASE,
+            fault_detect_latency: FAULT_DETECT_LATENCY,
         }
     }
 }
@@ -237,11 +270,13 @@ pub enum Disposition {
     Expired,
     /// Cancelled while still queued (or before admission).
     Cancelled,
+    /// Exhausted its dispatch retries against failing backends.
+    Failed,
 }
 
 impl Disposition {
     /// Stable display name (`completed`, `rejected`, `shed`, `expired`,
-    /// `cancelled`).
+    /// `cancelled`, `failed`).
     pub fn name(&self) -> &'static str {
         match self {
             Disposition::Completed { .. } => "completed",
@@ -249,6 +284,7 @@ impl Disposition {
             Disposition::Shed => "shed",
             Disposition::Expired => "expired",
             Disposition::Cancelled => "cancelled",
+            Disposition::Failed => "failed",
         }
     }
 }
@@ -326,6 +362,13 @@ pub struct DaemonReport {
     pub cache: CacheStats,
     /// Largest wait-queue depth observed.
     pub peak_queue: usize,
+    /// Dispatch attempts retried after an injected backend failure.
+    pub retries: usize,
+    /// Retries that moved to a smaller placement (DAP degree shed or
+    /// chunked fallback).
+    pub fallbacks: usize,
+    /// Arrivals shed because the circuit breaker was open.
+    pub breaker_shed: usize,
 }
 
 impl DaemonReport {
@@ -363,6 +406,11 @@ impl DaemonReport {
         self.count(|d| *d == Disposition::Cancelled)
     }
 
+    /// Requests that exhausted their dispatch retries.
+    pub fn failed(&self) -> usize {
+        self.count(|d| *d == Disposition::Failed)
+    }
+
     /// Completed requests that finished past their deadline.
     pub fn completed_late(&self) -> usize {
         self.count(|d| matches!(d, Disposition::Completed { deadline_missed: true, .. }))
@@ -398,9 +446,17 @@ impl DaemonReport {
     /// Metrics ledger for the simulated run. Completed requests carry
     /// their placement's modeled figures (cache hits flagged so the
     /// FLOP numerator excludes them); terminal lifecycles carry zeros —
-    /// they did no compute.
+    /// they did no compute. Degraded-mode counters ride along.
     pub fn stats(&self) -> ServeStats {
-        let mut stats = ServeStats::default();
+        let mut stats = ServeStats {
+            degraded: crate::metrics::DegradedStats {
+                retries: self.retries,
+                fallbacks: self.fallbacks,
+                breaker_shed: self.breaker_shed,
+                failed: self.failed(),
+            },
+            ..ServeStats::default()
+        };
         for o in &self.outcomes {
             let completed = matches!(o.disposition, Disposition::Completed { .. });
             let backend = match (&o.disposition, &o.placement) {
@@ -424,9 +480,10 @@ impl DaemonReport {
         stats
     }
 
-    /// One-line aggregate summary for logs.
+    /// One-line aggregate summary for logs; degraded-mode counters
+    /// appear only when the run absorbed faults.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "daemon: {} events -> {} completed ({} cached, {} late), \
              {} rejected, {} shed, {} expired, {} cancelled; makespan {}; \
              peak queue {}; miss rate {:.3}",
@@ -441,7 +498,20 @@ impl DaemonReport {
             fmt_secs(self.makespan),
             self.peak_queue,
             self.deadline_miss_rate(),
-        )
+        );
+        let degraded =
+            self.failed() + self.retries + self.fallbacks + self.breaker_shed;
+        if degraded > 0 {
+            s.push_str(&format!(
+                "; degraded: {} failed, {} retries, {} fallbacks, \
+                 {} breaker-shed",
+                self.failed(),
+                self.retries,
+                self.fallbacks,
+                self.breaker_shed
+            ));
+        }
+        s
     }
 }
 
@@ -459,6 +529,45 @@ struct QueueItem {
     bytes: usize,
     overtaken: usize,
     placement: Arc<Placement>,
+    /// Dispatch attempts already consumed by injected failures.
+    attempts: usize,
+    /// Retry backoff: not eligible for dispatch before this second.
+    not_before: f64,
+}
+
+/// The next placement to try after a failed dispatch: DAP sheds degree
+/// (`dap n` → `dap n/2` down to 2), then falls to the chunked
+/// single-device schedule; a failed single-device attempt falls to
+/// `chunked`; `chunked` is the floor.
+fn fallback_backend(failed: &BackendKind) -> Option<BackendKind> {
+    match failed {
+        BackendKind::Dap(n) if n / 2 >= 2 => Some(BackendKind::Dap(n / 2)),
+        BackendKind::Dap(_) | BackendKind::SingleDevice => Some(BackendKind::Chunked),
+        BackendKind::Chunked => None,
+    }
+}
+
+/// Draw down one serve fault event if this construction attempt is
+/// named by the schedule. Attempts are numbered across the whole run in
+/// dispatch order (cache hits excluded — they construct no backend),
+/// mirroring [`super::backend::ChaosFactory`]'s numbering.
+fn take_serve_fault(
+    cfg: &DaemonConfig,
+    attempt_seq: &mut usize,
+    spent: &mut [usize],
+) -> bool {
+    let Some(s) = &cfg.faults else {
+        return false;
+    };
+    let seq = *attempt_seq;
+    *attempt_seq += 1;
+    for (i, e) in s.serve.iter().enumerate() {
+        if seq >= e.at && seq < e.at + e.count && spent[i] < e.count {
+            spent[i] += 1;
+            return true;
+        }
+    }
+    false
 }
 
 /// Modeled byte size of a request's result (the cache's price for an
@@ -520,6 +629,15 @@ pub fn simulate_with_cache(
     let mut next = 0usize; // cursor into `sorted`
     let mut makespan = 0.0f64;
     let mut peak_queue = 0usize;
+    // degraded-mode state (all inert when `cfg.faults` is None)
+    let mut attempt_seq = 0usize;
+    let mut fault_spent =
+        vec![0usize; cfg.faults.as_ref().map_or(0, |s| s.serve.len())];
+    let mut consecutive_failures = 0usize;
+    let mut breaker_until = f64::NEG_INFINITY;
+    let mut retries = 0usize;
+    let mut fallbacks = 0usize;
+    let mut breaker_shed = 0usize;
 
     while next < n || !queue.is_empty() {
         // 1. earliest-free lane, ties to the lowest index
@@ -529,7 +647,8 @@ pub fn simulate_with_cache(
                 lane = k;
             }
         }
-        let earliest_present = queue.iter().map(|q| q.arrival).fold(
+        // a requeued request is "present" only once its backoff expires
+        let earliest_present = queue.iter().map(|q| q.arrival.max(q.not_before)).fold(
             if next < n { trace[sorted[next]].arrival } else { f64::INFINITY },
             f64::min,
         );
@@ -557,6 +676,19 @@ pub fn simulate_with_cache(
                     ));
                 }
                 Ok(placement) => {
+                    if ev.arrival < breaker_until {
+                        breaker_shed += 1;
+                        outcomes[idx] = Some(SimOutcome::terminal(
+                            idx,
+                            ev,
+                            Disposition::Shed,
+                            Some(format!(
+                                "circuit breaker open until t={breaker_until:.3}"
+                            )),
+                            Some(placement),
+                        ));
+                        continue;
+                    }
                     if cfg.queue_cap > 0 && queue.len() >= cfg.queue_cap {
                         outcomes[idx] = Some(SimOutcome::terminal(
                             idx,
@@ -583,6 +715,8 @@ pub fn simulate_with_cache(
                         bytes: modeled_result_bytes(planner, &ev.req),
                         overtaken: 0,
                         placement,
+                        attempts: 0,
+                        not_before: 0.0,
                     });
                     peak_queue = peak_queue.max(queue.len());
                 }
@@ -608,9 +742,11 @@ pub fn simulate_with_cache(
             outcomes[item.trace_idx] = Some(out);
         }
 
-        // 4. dispatch one request among those already arrived
-        let eligible: Vec<usize> =
-            (0..queue.len()).filter(|&i| queue[i].arrival <= now).collect();
+        // 4. dispatch one request among those already arrived (and past
+        // any retry backoff)
+        let eligible: Vec<usize> = (0..queue.len())
+            .filter(|&i| queue[i].arrival.max(queue[i].not_before) <= now)
+            .collect();
         if eligible.is_empty() {
             continue; // progress came from ingestion/purging above
         }
@@ -628,26 +764,95 @@ pub fn simulate_with_cache(
                 )
             })
             .collect();
-        let pick = pick_next(cfg.policy, &view, cfg.max_bypass).expect("eligible is non-empty");
-        let item = queue.remove(eligible[pick]);
+        // invariant: `eligible` was checked non-empty above
+        let pick = pick_next(cfg.policy, &view, cfg.max_bypass)
+            .expect("eligible is non-empty"); // lint:allow(panic)
+        let mut item = queue.remove(eligible[pick]);
+
+        // cache hits never construct a backend, so they are not
+        // failure-injection attempts
+        let cache_hit =
+            if cfg.cache_bytes > 0 { cache.lookup(&item.key, now) } else { None };
+        if cache_hit.is_none()
+            && take_serve_fault(cfg, &mut attempt_seq, &mut fault_spent)
+        {
+            // injected backend failure: the lane burns the detection
+            // latency; the request retries with exponential backoff on
+            // a (possibly) smaller placement, or fails permanently
+            let detect = cfg.fault_detect_latency.max(0.0);
+            free[lane] = now + detect;
+            item.attempts += 1;
+            consecutive_failures += 1;
+            if consecutive_failures >= cfg.breaker_threshold.max(1) {
+                breaker_until = now + detect + cfg.breaker_cooldown.max(0.0);
+                consecutive_failures = 0;
+            }
+            if item.attempts > cfg.max_retries {
+                let seq = item.seq;
+                let ev = &trace[item.trace_idx];
+                let mut out = SimOutcome::terminal(
+                    item.trace_idx,
+                    ev,
+                    Disposition::Failed,
+                    Some(format!(
+                        "backend failed all {} dispatch attempts",
+                        item.attempts
+                    )),
+                    Some(item.placement),
+                );
+                out.dispatch = Some(now);
+                out.bypassed = item.overtaken;
+                outcomes[item.trace_idx] = Some(out);
+                for q in &mut queue {
+                    if q.seq < seq {
+                        q.overtaken += 1;
+                    }
+                }
+            } else {
+                retries += 1;
+                // placement fallback: a failing device sheds DAP degree,
+                // then falls to the chunked single-device schedule
+                if let Some(kind) = fallback_backend(&item.placement.backend) {
+                    let mut r2 = trace[item.trace_idx].req.clone();
+                    r2.force = Some(kind);
+                    if let Ok(p2) = memo.place(&r2) {
+                        if p2.backend != item.placement.backend {
+                            fallbacks += 1;
+                            item.latency = p2.modeled_latency;
+                            item.placement = p2;
+                        }
+                    }
+                }
+                item.not_before = now
+                    + detect
+                    + crate::faults::backoff_secs(
+                        cfg.backoff_base.max(0.0),
+                        item.attempts,
+                    );
+                queue.push(item);
+            }
+            continue;
+        }
+
+        let (finish, cached, cache_source) = match cache_hit {
+            Some(src) => (now + cfg.cache_hit_latency.max(0.0), true, Some(src)),
+            None => {
+                let f = now + item.latency.max(0.0);
+                if cfg.cache_bytes > 0 {
+                    cache.insert(&item.key, item.trace_idx, item.bytes, f);
+                }
+                (f, false, None)
+            }
+        };
+        if !cached {
+            // a completed construction closes any failure streak
+            consecutive_failures = 0;
+        }
         for q in &mut queue {
             if q.seq < item.seq {
                 q.overtaken += 1;
             }
         }
-
-        let (finish, cached, cache_source) = if cfg.cache_bytes > 0 {
-            match cache.lookup(&item.key, now) {
-                Some(src) => (now + cfg.cache_hit_latency.max(0.0), true, Some(src)),
-                None => {
-                    let f = now + item.latency.max(0.0);
-                    cache.insert(&item.key, item.trace_idx, item.bytes, f);
-                    (f, false, None)
-                }
-            }
-        } else {
-            (now + item.latency.max(0.0), false, None)
-        };
         free[lane] = finish;
         makespan = makespan.max(finish);
         let deadline_missed = item.deadline_abs.is_some_and(|d| finish > d);
@@ -670,12 +875,16 @@ pub fn simulate_with_cache(
     DaemonReport {
         outcomes: outcomes
             .into_iter()
-            .map(|o| o.expect("every trace event reaches a terminal state"))
+            // invariant: the loop above terminates every trace event
+            .map(|o| o.expect("every trace event reaches a terminal state")) // lint:allow(panic)
             .collect(),
         dispatch_order,
         makespan,
         cache: cache.stats(),
         peak_queue,
+        retries,
+        fallbacks,
+        breaker_shed,
     }
 }
 
@@ -746,7 +955,8 @@ impl Engine<'_> {
                 let placement = sim.outcomes[i]
                     .placement
                     .as_ref()
-                    .expect("dispatched request must be placed");
+                    // invariant: completed outcomes always carry one
+                    .expect("dispatched request must be placed"); // lint:allow(panic)
                 let t = Instant::now();
                 let out = (|| {
                     let be = factory.make(req, placement, rank_threads)?;
@@ -789,7 +999,15 @@ impl Engine<'_> {
             }
         }
 
-        let mut stats = ServeStats::default();
+        let mut stats = ServeStats {
+            degraded: crate::metrics::DegradedStats {
+                retries: sim.retries,
+                fallbacks: sim.fallbacks,
+                breaker_shed: sim.breaker_shed,
+                failed: sim.failed(),
+            },
+            ..ServeStats::default()
+        };
         for (i, o) in sim.outcomes.iter().enumerate() {
             let completed = matches!(o.disposition, Disposition::Completed { .. });
             let cached = matches!(o.disposition, Disposition::Completed { cached: true, .. });

@@ -265,6 +265,10 @@ pub fn report_doc(cfg: &DaemonConfig, report: &DaemonReport) -> Json {
                 ("shed", num(report.shed() as f64)),
                 ("expired", num(report.expired() as f64)),
                 ("cancelled", num(report.cancelled() as f64)),
+                ("failed", num(report.failed() as f64)),
+                ("retries", num(report.retries as f64)),
+                ("fallbacks", num(report.fallbacks as f64)),
+                ("breaker_shed", num(report.breaker_shed as f64)),
                 ("peak_queue", num(report.peak_queue as f64)),
             ]),
         ),

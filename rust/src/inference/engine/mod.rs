@@ -31,7 +31,9 @@ pub mod loadgen;
 pub mod planner;
 pub mod scheduler;
 
-pub use backend::{BackendFactory, DapBackend, InferBackend, InferOutput, TrunkBackend};
+pub use backend::{
+    BackendFactory, ChaosFactory, DapBackend, InferBackend, InferOutput, TrunkBackend,
+};
 pub use cache::{CacheStats, ResultCache};
 pub use daemon::{
     simulate, simulate_with_cache, DaemonConfig, DaemonReport, Disposition, SimOutcome,

@@ -45,6 +45,7 @@ pub mod config;
 pub mod dap;
 pub mod device;
 pub mod error;
+pub mod faults;
 pub mod inference;
 pub mod json;
 pub mod kernels;

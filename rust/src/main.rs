@@ -4,7 +4,8 @@
 //! fastfold train     [--preset tiny] [--steps N] [--dp N] [--dap N]
 //!                    [--accum N] [--threads N] [--backend synthetic]
 //!                    [--precision f32|bf16] [--prefetch] [--bucket-mb F]
-//!                    [--checkpoint-dir D] [--resume] [--config f.toml]
+//!                    [--checkpoint-dir D] [--resume] [--faults f.jsonl]
+//!                    [--config f.toml]
 //! fastfold scale     [--gpus N] [--dap N] [--gpu a100_40g]
 //! fastfold infer     [--preset tiny] [--len N] [--dap N] [--threads N]
 //!                    [--naive] [--gpu a100_40g] [--no-guard] [--config f.toml]
@@ -12,10 +13,13 @@
 //!                    [--gpu a100_40g] [--max-dap N] [--dry-run] [--config f.toml]
 //! fastfold daemon    --trace trace.jsonl [--modeled] [--lanes N] [--queue-cap N]
 //!                    [--cache-gb F] [--policy fifo|sjf] [--threads N]
-//!                    [--bench-out FILE] [--config f.toml]
+//!                    [--faults f.jsonl] [--bench-out FILE] [--config f.toml]
 //! fastfold loadgen   [--requests N] [--seed S] [--quick] [--lanes N]
 //!                    [--out trace.jsonl] [--no-replay] [--queue-cap N]
-//!                    [--cache-gb F] [--bench-out BENCH_serve.json] [--json]
+//!                    [--cache-gb F] [--faults f.jsonl]
+//!                    [--bench-out BENCH_serve.json] [--json]
+//! fastfold chaos     [--seed S] [--steps N] [--dp N] [--transients N]
+//!                    [--serve-events N] [--out faults.jsonl] [--base-hours H]
 //! fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu a100_40g]
 //!                    [--headroom F] [--json] [--config f.toml]
 //! fastfold bench     [--json] [--out BENCH_host.json] [--quick]
@@ -29,7 +33,9 @@
 //! `verify` runs the static schedule verifier (the same pass the planner,
 //! trainer, and daemon run as a mandatory admission gate; skip it at your
 //! own risk with `--unsafe-skip-verify` on those commands); `lint` scans
-//! the source tree for banned nondeterminism patterns.
+//! the source tree for banned nondeterminism patterns; `chaos` synthesizes
+//! a seeded fault schedule for `--faults` and projects the modeled
+//! wall-clock inflation of the paper's 67-hour run under a finite MTBF.
 //!
 //! The `report` subcommands print console reproductions of every paper
 //! table/figure that is model-driven; the executed benches live under
@@ -38,6 +44,7 @@
 use fastfold::config::{ModelConfig, RunConfig};
 use fastfold::dap::DapCoordinator;
 use fastfold::error::Result;
+use fastfold::faults::FaultSchedule;
 use fastfold::inference::engine::{
     daemon, loadgen, plan_batch, BackendKind, DaemonConfig, Engine, InferRequest, LoadgenSpec,
     PlacementPlanner, SchedPolicy, TraceEvent,
@@ -92,6 +99,7 @@ fn run(args: &[String]) -> Result<()> {
         "daemon" => cmd_daemon(&flags),
         "loadgen" => cmd_loadgen(&flags),
         "autochunk" => cmd_autochunk(&flags),
+        "chaos" => cmd_chaos(&flags),
         "bench" => cmd_bench(&flags),
         "verify" => cmd_verify(&flags),
         "lint" => cmd_lint(&flags),
@@ -103,7 +111,8 @@ fn run(args: &[String]) -> Result<()> {
                  usage:\n  fastfold train  [--preset P] [--steps N] [--dp N] [--dap N] \
                  [--accum N] [--threads N]\n                  [--backend synthetic] \
                  [--precision f32|bf16] [--prefetch] [--bucket-mb F]\n                  \
-                 [--checkpoint-dir D] [--resume] [--config f.toml]\n                  \
+                 [--checkpoint-dir D] [--resume] [--faults f.jsonl] \
+                 [--config f.toml]\n                  \
                  [--device-backend scalar|simd|xla-stub]\n  \
                  fastfold scale  [--gpus N] [--dap N] [--gpu G]\n  \
                  fastfold infer  [--preset P] [--len N] [--dap N] [--threads N] [--naive] \
@@ -113,10 +122,15 @@ fn run(args: &[String]) -> Result<()> {
                  [--gpu G] [--max-dap N] [--dry-run] [--config f.toml]\n  \
                  fastfold daemon --trace trace.jsonl [--modeled] [--lanes N] \
                  [--queue-cap N] [--cache-gb F]\n                  [--policy fifo|sjf] \
-                 [--threads N] [--bench-out FILE] [--config f.toml]\n  \
+                 [--threads N] [--faults f.jsonl] [--bench-out FILE] \
+                 [--config f.toml]\n  \
                  fastfold loadgen [--requests N] [--seed S] [--quick] [--lanes N] \
                  [--out trace.jsonl]\n                  [--no-replay] [--queue-cap N] \
-                 [--cache-gb F] [--bench-out BENCH_serve.json] [--json]\n  \
+                 [--cache-gb F] [--faults f.jsonl] [--bench-out BENCH_serve.json] \
+                 [--json]\n  \
+                 fastfold chaos  [--seed S] [--steps N] [--dp N] [--transients N] \
+                 [--serve-events N]\n                  [--out faults.jsonl] \
+                 [--base-hours H]\n  \
                  fastfold autochunk [--len N] [--seq N] [--dap N] [--gpu G] \
                  [--headroom F] [--json] [--config f.toml]\n  \
                  fastfold bench  [--json] [--out BENCH_host.json] [--quick] \
@@ -153,6 +167,12 @@ fn apply_device_backend(
     run_cfg.device.backend = kind.name().to_string();
     fastfold::device::configure(kind, run_cfg.parallel.resolve_threads());
     Ok(())
+}
+
+/// Install the `[comm]` bounded-wait budget as the process-wide comm
+/// worker timeout before any collective is scheduled (0 = unbounded).
+fn apply_comm_config(run_cfg: &RunConfig) {
+    fastfold::comm::worker::set_wait_timeout_ms(run_cfg.comm.wait_timeout_ms);
 }
 
 // ---------------------------------------------------------------- train
@@ -200,6 +220,7 @@ fn cmd_train(_pos: &[String], flags: &BTreeMap<String, String>) -> Result<()> {
         run_cfg.train.bucket_mb = Some(mb);
     }
     apply_device_backend(&mut run_cfg, flags)?;
+    apply_comm_config(&run_cfg);
 
     let plan = ParallelPlan::from_config(&run_cfg.parallel);
     let model_cfg = ModelConfig::preset(&run_cfg.preset)?;
@@ -298,6 +319,21 @@ fn drive_train(
             ),
         }
     }
+    if let Some(path) = flags.get("faults") {
+        let src = std::fs::read_to_string(path).map_err(|e| {
+            fastfold::Error::Config(format!(
+                "--faults: cannot read '{path}': {e}"
+            ))
+        })?;
+        let schedule = FaultSchedule::from_jsonl(&src)?;
+        println!(
+            "[fastfold] chaos armed: {} train fault event(s) from '{path}' \
+             (seed {})",
+            schedule.train.len(),
+            schedule.seed
+        );
+        trainer.with_faults(schedule)?;
+    }
     println!(
         "[fastfold] training preset='{}' [{}] backend={} steps={} \
          precision={} prefetch={} buckets={} on {}",
@@ -346,6 +382,27 @@ fn drive_train(
             report.skipped_steps,
         );
     }
+    let rec = &report.recovery;
+    if rec.any() {
+        println!(
+            "[fastfold] recovery: {} retries, {} retransmits, {} comm \
+             timeouts, {} stragglers, {} rank crash(es), {} lost steps \
+             re-run, {} absorbed",
+            rec.retries,
+            rec.retransmits,
+            rec.comm_timeouts,
+            rec.stragglers,
+            rec.rank_crashes,
+            rec.lost_steps,
+            fmt_secs(rec.recovery_seconds),
+        );
+    }
+    // the recovery acceptance line: a faulted run must converge to the
+    // same digest as its fault-free twin (CI compares these lines)
+    println!(
+        "[fastfold] final param crc32 0x{:08x}",
+        trainer.params_crc32()
+    );
     Ok(())
 }
 
@@ -483,6 +540,7 @@ fn apply_engine_flags(
         run_cfg.serve.max_dap = n;
     }
     apply_device_backend(run_cfg, flags)?;
+    apply_comm_config(run_cfg);
     Ok(())
 }
 
@@ -676,6 +734,31 @@ fn apply_daemon_flags(run_cfg: &mut RunConfig, flags: &BTreeMap<String, String>)
     Ok(())
 }
 
+/// `--faults <file.jsonl>`: arm the daemon's deterministic serve-fault
+/// schedule — injected backend failures at numbered dispatch attempts,
+/// absorbed by retry/fallback/breaker and tallied in the ledger.
+fn apply_faults_flag(
+    dcfg: &mut DaemonConfig,
+    flags: &BTreeMap<String, String>,
+) -> Result<()> {
+    if let Some(path) = flags.get("faults") {
+        let src = std::fs::read_to_string(path).map_err(|e| {
+            fastfold::Error::Config(format!(
+                "--faults: cannot read '{path}': {e}"
+            ))
+        })?;
+        let schedule = FaultSchedule::from_jsonl(&src)?;
+        println!(
+            "[fastfold] chaos armed: {} serve fault event(s) from '{path}' \
+             (seed {})",
+            schedule.serve.len(),
+            schedule.seed
+        );
+        dcfg.faults = Some(schedule);
+    }
+    Ok(())
+}
+
 /// `fastfold daemon --trace <jsonl>` — replay an arrival-timed trace
 /// through the continuous-batching daemon: admission, backpressure
 /// shedding, deadline expiry, cancellation, starvation-guarded
@@ -702,7 +785,8 @@ fn cmd_daemon(flags: &BTreeMap<String, String>) -> Result<()> {
         return Err(fastfold::Error::Config(format!("daemon: no events in '{path}'")));
     }
     let lanes: usize = num_flag(flags, "lanes", 4)?;
-    let dcfg = DaemonConfig::from_run_config(&run_cfg, lanes);
+    let mut dcfg = DaemonConfig::from_run_config(&run_cfg, lanes);
+    apply_faults_flag(&mut dcfg, flags)?;
 
     if flags.contains_key("modeled") {
         let mut planner = PlacementPlanner::from_run_config(&run_cfg)?;
@@ -772,7 +856,8 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
     spec.lanes = num_flag(flags, "lanes", spec.lanes)?;
     // the replay packs onto the spec's modeled lanes, NOT --threads:
     // that keeps the ledger a pure function of (config, spec)
-    let dcfg = DaemonConfig::from_run_config(&run_cfg, spec.lanes);
+    let mut dcfg = DaemonConfig::from_run_config(&run_cfg, spec.lanes);
+    apply_faults_flag(&mut dcfg, flags)?;
     let mut planner = PlacementPlanner::from_run_config(&run_cfg)?;
     apply_verify_flag(&mut planner, flags);
 
@@ -941,6 +1026,75 @@ fn cmd_autochunk(flags: &BTreeMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------- chaos
+
+/// `fastfold chaos` — synthesize a deterministic fault schedule from a
+/// seed (the file `train`/`daemon`/`loadgen` consume via `--faults`),
+/// print it, and project the modeled wall-clock inflation of the paper's
+/// 67-hour run across a fleet-MTBF sweep at Young's optimal checkpoint
+/// interval.
+fn cmd_chaos(flags: &BTreeMap<String, String>) -> Result<()> {
+    use fastfold::perfmodel::mtbf;
+    let seed: u64 = num_flag(flags, "seed", 17)?;
+    let steps: usize = num_flag(flags, "steps", 8)?;
+    let dp: usize = num_flag(flags, "dp", 4)?;
+    let transients: usize = num_flag(flags, "transients", 3)?;
+    let serve_events: usize = num_flag(flags, "serve-events", 2)?;
+    let schedule =
+        FaultSchedule::synthesize(seed, steps, dp, transients, serve_events);
+    schedule.validate(dp)?;
+    println!(
+        "fastfold chaos — seed {seed}: {} train event(s), {} serve \
+         event(s) (steps={steps}, dp={dp})\n",
+        schedule.train.len(),
+        schedule.serve.len()
+    );
+    let mut t = Table::new(&["plane", "at", "kind", "rank", "count"]);
+    for e in &schedule.train {
+        t.row(&[
+            "train".into(),
+            format!("step {}", e.step),
+            e.kind.name().into(),
+            e.rank.to_string(),
+            e.count.to_string(),
+        ]);
+    }
+    for e in &schedule.serve {
+        t.row(&[
+            "serve".into(),
+            format!("dispatch {}", e.at),
+            "backend_fail".into(),
+            "-".into(),
+            e.count.to_string(),
+        ]);
+    }
+    t.print();
+    if let Some(out) = flags.get("out") {
+        std::fs::write(out, schedule.to_jsonl())?;
+        eprintln!("[fastfold] wrote {out}");
+    }
+
+    // the fleet question behind the headline: what a finite MTBF does to
+    // the 67-hour two-stage run
+    let base: f64 = num_flag(flags, "base-hours", 67.0)?;
+    println!(
+        "\nmodeled wall-clock for a {base:.0} h fault-free run \
+         (Young-optimal checkpoint interval):"
+    );
+    let mut t = Table::new(&["fleet MTBF (h)", "expected wall (h)", "inflation"]);
+    for (m, wall, infl) in
+        mtbf::inflation_sweep(base, &[4.0, 8.0, 24.0, 72.0, 168.0])
+    {
+        t.row(&[
+            format!("{m:.0}"),
+            format!("{wall:.1}"),
+            format!("x{infl:.3}"),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
 // ---------------------------------------------------------------- bench
 
 /// `fastfold bench` — the host perf harness: measures the zero-copy data
@@ -1097,8 +1251,10 @@ fn cmd_verify(flags: &BTreeMap<String, String>) -> Result<()> {
 
 /// `fastfold lint` — determinism lint over the Rust source tree: flag
 /// unordered hash containers (iteration order one refactor away from a
-/// nondeterministic ledger) and wall-clock reads outside files annotated
-/// as measurement planes. Exits nonzero on any violation.
+/// nondeterministic ledger), wall-clock reads outside files annotated
+/// as measurement planes, kernel calls that bypass the device dispatch
+/// plane, and panics inside the fault-recovery planes. Exits nonzero on
+/// any violation.
 fn cmd_lint(flags: &BTreeMap<String, String>) -> Result<()> {
     use std::path::Path;
     let default = if Path::new("rust/src").is_dir() { "rust/src" } else { "src" };
@@ -1107,7 +1263,7 @@ fn cmd_lint(flags: &BTreeMap<String, String>) -> Result<()> {
     if violations.is_empty() {
         println!(
             "[fastfold] lint: {root}: clean (rules: unordered-container, \
-             wallclock)"
+             wallclock, backend-bypass, panic-in-recovery)"
         );
         return Ok(());
     }

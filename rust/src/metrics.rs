@@ -133,11 +133,34 @@ pub struct ServeRecord {
     pub cached: bool,
 }
 
+/// Degraded-mode counters the serve daemon reports alongside its
+/// per-request ledger — all zero on a fault-free run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DegradedStats {
+    /// Dispatch attempts retried after a backend failure.
+    pub retries: usize,
+    /// Retries that fell back to a smaller placement.
+    pub fallbacks: usize,
+    /// Arrivals shed by the open circuit breaker.
+    pub breaker_shed: usize,
+    /// Requests that exhausted their dispatch retries.
+    pub failed: usize,
+}
+
+impl DegradedStats {
+    /// Whether any degraded-mode event was recorded.
+    pub fn any(&self) -> bool {
+        self.retries + self.fallbacks + self.breaker_shed + self.failed > 0
+    }
+}
+
 /// Aggregate serving metrics over a drained request batch.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     /// Per-request records in submission order.
     pub records: Vec<ServeRecord>,
+    /// Fault-plane counters (zero unless faults were injected).
+    pub degraded: DegradedStats,
 }
 
 impl ServeStats {

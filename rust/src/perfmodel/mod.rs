@@ -12,9 +12,11 @@
 pub mod flops;
 pub mod gpu;
 pub mod memory;
+pub mod mtbf;
 pub mod scaling;
 
 pub use flops::BlockFlops;
 pub use gpu::GpuSpec;
 pub use memory::MemoryModel;
+pub use mtbf::MtbfModel;
 pub use scaling::{DpOverlap, DpStepModel, ScalingModel, StepTime};

@@ -1,0 +1,178 @@
+//! MTBF-driven wall-clock inflation model for faulted training runs.
+//!
+//! FastFold's headline 67-hour run assumes a perfect fleet; at hundreds
+//! of GPUs (ScaleFold: 2080) failures arrive at a measurable rate and
+//! the real wall-clock inflates by (a) work lost since the last
+//! checkpoint on each failure, (b) rollback/restart latency, and (c) the
+//! steady-state checkpointing tax. This module projects that inflation
+//! analytically: a fleet with per-run mean-time-between-failures `M`
+//! hours suffers `T/M` expected failures over a `T`-hour run, each
+//! costing half a checkpoint interval of lost work plus the recovery
+//! time, while every interval pays the checkpoint write. The optimal
+//! interval is Young's approximation `τ* = sqrt(2·M·C)`.
+//!
+//! The projection anchors on [`crate::perfmodel::ScalingModel`]'s
+//! fault-free two-stage hours, so `fastfold chaos` can print the
+//! expected 67-hour inflation as a function of fleet failure rate, and
+//! the trainer's measured [`crate::faults::RecoveryLedger`] gives the
+//! empirical counterpart at synthetic scale.
+
+/// Analytic model of expected wall-clock under a failure rate.
+#[derive(Clone, Copy, Debug)]
+pub struct MtbfModel {
+    /// Fleet-level mean time between failures, hours (whole-job MTBF:
+    /// per-device MTBF divided by device count).
+    pub mtbf_hours: f64,
+    /// Checkpoint interval, hours.
+    pub interval_hours: f64,
+    /// Wall-clock cost of writing one checkpoint, hours.
+    pub write_hours: f64,
+    /// Rollback + re-plan + restart latency per failure, hours.
+    pub restart_hours: f64,
+}
+
+impl Default for MtbfModel {
+    /// A 512-GPU-class fleet: whole-job MTBF of 24 h, 10-minute
+    /// checkpoint cadence, 30 s writes, 5-minute restart.
+    fn default() -> Self {
+        MtbfModel {
+            mtbf_hours: 24.0,
+            interval_hours: 10.0 / 60.0,
+            write_hours: 30.0 / 3600.0,
+            restart_hours: 5.0 / 60.0,
+        }
+    }
+}
+
+impl MtbfModel {
+    /// Young's optimal checkpoint interval `sqrt(2·M·C)` in hours — the
+    /// interval that balances checkpoint tax against expected rework.
+    pub fn optimal_interval_hours(&self) -> f64 {
+        (2.0 * self.mtbf_hours * self.write_hours).max(0.0).sqrt()
+    }
+
+    /// Fraction of wall-clock lost to faults and checkpointing: the
+    /// per-failure loss rate `(τ/2 + R) / M` plus the checkpoint tax
+    /// `C / τ`. Values ≥ 1 mean the run makes no forward progress.
+    pub fn overhead_fraction(&self) -> f64 {
+        let tau = self.interval_hours.max(1e-9);
+        (tau / 2.0 + self.restart_hours) / self.mtbf_hours.max(1e-9)
+            + self.write_hours / tau
+    }
+
+    /// Expected wall-clock hours for a run whose fault-free compute time
+    /// is `base_hours`: `T / (1 − overhead)`. Returns `f64::INFINITY`
+    /// when the overhead fraction reaches 1 (the fleet fails faster than
+    /// it can recover).
+    pub fn expected_wall_hours(&self, base_hours: f64) -> f64 {
+        let avail = 1.0 - self.overhead_fraction();
+        if avail <= 0.0 {
+            f64::INFINITY
+        } else {
+            base_hours / avail
+        }
+    }
+
+    /// Multiplicative inflation over the fault-free run
+    /// (`expected / base`, so 1.0 = no inflation).
+    pub fn inflation(&self, base_hours: f64) -> f64 {
+        self.expected_wall_hours(base_hours) / base_hours.max(1e-9)
+    }
+
+    /// The same model re-tuned to Young's optimal interval.
+    pub fn with_optimal_interval(mut self) -> Self {
+        self.interval_hours = self.optimal_interval_hours().max(1e-9);
+        self
+    }
+}
+
+/// Project expected wall-clock for the paper's run across a sweep of
+/// fleet MTBF values (hours). Returns `(mtbf_hours, expected_hours,
+/// inflation)` rows, using Young's optimal interval at each point — the
+/// table `fastfold chaos` prints against the 67-hour baseline.
+pub fn inflation_sweep(
+    base_hours: f64,
+    mtbf_sweep: &[f64],
+) -> Vec<(f64, f64, f64)> {
+    mtbf_sweep
+        .iter()
+        .map(|&m| {
+            let model = MtbfModel { mtbf_hours: m, ..MtbfModel::default() }
+                .with_optimal_interval();
+            let wall = model.expected_wall_hours(base_hours);
+            (m, wall, model.inflation(base_hours))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::ScalingModel;
+
+    #[test]
+    fn healthy_fleet_inflates_mildly() {
+        let m = MtbfModel::default();
+        let base = 67.0;
+        let wall = m.expected_wall_hours(base);
+        assert!(wall > base, "faults must cost something: {wall}");
+        assert!(wall < base * 1.25, "24h-MTBF overhead is small: {wall}");
+    }
+
+    #[test]
+    fn inflation_decreases_with_mtbf() {
+        let rows = inflation_sweep(67.0, &[2.0, 8.0, 24.0, 168.0]);
+        assert_eq!(rows.len(), 4);
+        for w in rows.windows(2) {
+            assert!(
+                w[0].2 > w[1].2,
+                "inflation must fall as MTBF rises: {rows:?}"
+            );
+        }
+        for (_, wall, infl) in &rows {
+            assert!(*wall > 67.0 && *infl > 1.0);
+        }
+    }
+
+    #[test]
+    fn dying_fleet_never_finishes() {
+        let m = MtbfModel {
+            mtbf_hours: 0.01,
+            interval_hours: 0.5,
+            restart_hours: 0.2,
+            ..MtbfModel::default()
+        };
+        assert!(m.expected_wall_hours(67.0).is_infinite());
+    }
+
+    #[test]
+    fn youngs_interval_beats_fixed_intervals() {
+        let base = MtbfModel { mtbf_hours: 6.0, ..MtbfModel::default() };
+        let tuned = base.with_optimal_interval();
+        let opt = tuned.overhead_fraction();
+        for tau in [0.01, 0.05, 0.5, 1.0, 2.0] {
+            let fixed = MtbfModel { interval_hours: tau, ..base };
+            assert!(
+                opt <= fixed.overhead_fraction() + 1e-12,
+                "tau* must minimize overhead (tau={tau})"
+            );
+        }
+        // Young: tau* = sqrt(2 M C)
+        let expect = (2.0 * 6.0 * base.write_hours).sqrt();
+        assert!((tuned.interval_hours - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn projects_the_67_hour_run() {
+        // anchor on the calibrated two-stage total (pinned elsewhere to
+        // the paper's 55–80h band), then project a weekly-failure fleet
+        let p = crate::perfmodel::gpu::ImplProfile::fastfold();
+        let sm = ScalingModel::default();
+        let (init, ft) = sm.two_stage_hours(&p, (2, 128), (4, 128));
+        let base = init + ft;
+        let model = MtbfModel { mtbf_hours: 168.0, ..MtbfModel::default() }
+            .with_optimal_interval();
+        let wall = model.expected_wall_hours(base);
+        assert!(wall > base && wall < base * 1.05, "weekly MTBF: {wall}");
+    }
+}

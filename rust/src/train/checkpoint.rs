@@ -9,9 +9,16 @@
 //!
 //! Layout: one raw little-endian f32 blob (`params | m | v`, canonical
 //! leaf order — the same layout as the exported `*_params.bin`, three
-//! times over) plus a JSON sidecar with `version`, shapes, and the
-//! schedule/data cursors. V1 checkpoints (no `version` key, params-only
-//! blob) remain loadable through [`load`].
+//! times over) plus a JSON sidecar with `version`, shapes, a CRC-32 of
+//! the blob, and the schedule/data cursors. V1 checkpoints (no `version`
+//! key, params-only blob) remain loadable through [`load`].
+//!
+//! Writes are **atomic** (temp file + fsync + rename), so a crash
+//! mid-checkpoint leaves either the previous file or none — never a
+//! truncated blob. Readers verify the sidecar CRC before deserializing;
+//! [`load_latest_full`] skips corrupt entries and falls back to the
+//! newest checkpoint that still verifies, which is what the trainer's
+//! elastic-recovery rollback uses.
 
 use crate::error::{Error, Result};
 use crate::json::Json;
@@ -53,6 +60,37 @@ fn stem(preset: &str, step: usize) -> String {
     format!("{preset}_step{step:06}")
 }
 
+/// Write `bytes` to `dir/name` atomically: a `.tmp` sibling is written
+/// and fsynced first, then renamed over the target, so readers only ever
+/// observe complete files.
+fn write_atomic(dir: &Path, name: &str, bytes: &[u8]) -> Result<()> {
+    let tmp = dir.join(format!("{name}.tmp"));
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, dir.join(name))?;
+    Ok(())
+}
+
+/// Verify a blob against the sidecar's `crc` key (absent on checkpoints
+/// written by older builds — those load unverified).
+fn verify_crc(stem: &str, meta: &Json, bytes: &[u8]) -> Result<()> {
+    if let Some(c) = meta.opt("crc") {
+        let want = c.as_usize()? as u32;
+        let got = crate::faults::crc32(bytes);
+        if got != want {
+            return Err(Error::msg(format!(
+                "checkpoint {stem}: blob crc32 {got:#010x} does not match \
+                 header {want:#010x} (corrupt or tampered checkpoint)"
+            )));
+        }
+    }
+    Ok(())
+}
+
 fn write_tensors(bytes: &mut Vec<u8>, ts: &[HostTensor]) {
     for t in ts {
         for v in t.data() {
@@ -85,10 +123,14 @@ pub fn save_full(dir: &str, state: &TrainState) -> Result<String> {
     write_tensors(&mut bytes, &state.params);
     write_tensors(&mut bytes, &state.m);
     write_tensors(&mut bytes, &state.v);
-    std::fs::write(&bin_path, &bytes)?;
+    write_atomic(Path::new(dir), &format!("{stem}.bin"), &bytes)?;
 
     let mut meta = BTreeMap::new();
     meta.insert("version".to_string(), Json::Num(FORMAT_VERSION as f64));
+    meta.insert(
+        "crc".to_string(),
+        Json::Num(crate::faults::crc32(&bytes) as f64),
+    );
     meta.insert("preset".to_string(), Json::Str(state.preset.clone()));
     meta.insert("step".to_string(), Json::Num(state.step as f64));
     meta.insert("stage".to_string(), Json::Num(state.stage as f64));
@@ -124,8 +166,11 @@ pub fn save_full(dir: &str, state: &TrainState) -> Result<String> {
                 .collect(),
         ),
     );
-    let meta_path = Path::new(dir).join(format!("{stem}.json"));
-    std::fs::write(&meta_path, Json::Obj(meta).to_string())?;
+    write_atomic(
+        Path::new(dir),
+        &format!("{stem}.json"),
+        Json::Obj(meta).to_string().as_bytes(),
+    )?;
     Ok(bin_path.display().to_string())
 }
 
@@ -194,6 +239,7 @@ pub fn load_full(dir: &str, preset: &str, step: usize) -> Result<TrainState> {
             3 * total * 4
         )));
     }
+    verify_crc(&stem, &meta, &bytes)?;
     let params = read_tensors(&bytes, &shapes, 0)?;
     let m = read_tensors(&bytes, &shapes, total)?;
     let v = read_tensors(&bytes, &shapes, 2 * total)?;
@@ -230,14 +276,14 @@ pub fn load_full(dir: &str, preset: &str, step: usize) -> Result<TrainState> {
     })
 }
 
-/// Highest checkpointed step for `preset` in `dir` (None when no
-/// checkpoint exists) — what `fastfold train --resume` picks up.
-pub fn latest_step(dir: &str, preset: &str) -> Result<Option<usize>> {
+/// All checkpointed steps for `preset` in `dir`, ascending (empty when
+/// the directory does not exist).
+fn scan_steps(dir: &str, preset: &str) -> Result<Vec<usize>> {
     let prefix = format!("{preset}_step");
-    let mut best: Option<usize> = None;
+    let mut steps = Vec::new();
     let entries = match std::fs::read_dir(dir) {
         Ok(e) => e,
-        Err(_) => return Ok(None),
+        Err(_) => return Ok(steps),
     };
     for entry in entries {
         let name = entry?.file_name();
@@ -245,12 +291,36 @@ pub fn latest_step(dir: &str, preset: &str) -> Result<Option<usize>> {
         if let Some(rest) = name.strip_prefix(&prefix) {
             if let Some(digits) = rest.strip_suffix(".json") {
                 if let Ok(step) = digits.parse::<usize>() {
-                    best = Some(best.map_or(step, |b| b.max(step)));
+                    steps.push(step);
                 }
             }
         }
     }
-    Ok(best)
+    steps.sort_unstable();
+    Ok(steps)
+}
+
+/// Highest checkpointed step for `preset` in `dir` (None when no
+/// checkpoint exists) — what `fastfold train --resume` picks up.
+pub fn latest_step(dir: &str, preset: &str) -> Result<Option<usize>> {
+    Ok(scan_steps(dir, preset)?.pop())
+}
+
+/// Load the newest checkpoint for `preset` that still *verifies*: scan
+/// candidate steps highest-first and skip entries whose blob is missing,
+/// truncated, or fails the header CRC. This is the rollback target the
+/// trainer's elastic recovery uses — a crash mid-write (or a corrupted
+/// file) silently falls back to the previous good checkpoint.
+pub fn load_latest_full(
+    dir: &str,
+    preset: &str,
+) -> Result<Option<(usize, TrainState)>> {
+    for &step in scan_steps(dir, preset)?.iter().rev() {
+        if let Ok(state) = load_full(dir, preset, step) {
+            return Ok(Some((step, state)));
+        }
+    }
+    Ok(None)
 }
 
 /// Save a params-only V1 checkpoint (kept for export/interop; training
@@ -261,9 +331,13 @@ pub fn save(dir: &str, preset: &str, step: usize, params: &[HostTensor]) -> Resu
     let bin_path = Path::new(dir).join(format!("{stem}.bin"));
     let mut bytes = Vec::new();
     write_tensors(&mut bytes, params);
-    std::fs::write(&bin_path, &bytes)?;
+    write_atomic(Path::new(dir), &format!("{stem}.bin"), &bytes)?;
 
     let mut meta = BTreeMap::new();
+    meta.insert(
+        "crc".to_string(),
+        Json::Num(crate::faults::crc32(&bytes) as f64),
+    );
     meta.insert("preset".to_string(), Json::Str(preset.to_string()));
     meta.insert("step".to_string(), Json::Num(step as f64));
     meta.insert(
@@ -277,8 +351,11 @@ pub fn save(dir: &str, preset: &str, step: usize, params: &[HostTensor]) -> Resu
                 .collect(),
         ),
     );
-    let meta_path = Path::new(dir).join(format!("{stem}.json"));
-    std::fs::write(&meta_path, Json::Obj(meta).to_string())?;
+    write_atomic(
+        Path::new(dir),
+        &format!("{stem}.json"),
+        Json::Obj(meta).to_string().as_bytes(),
+    )?;
     Ok(bin_path.display().to_string())
 }
 
@@ -302,6 +379,7 @@ pub fn load(dir: &str, preset: &str, step: usize) -> Result<(usize, Vec<HostTens
             bytes.len()
         )));
     }
+    verify_crc(&stem, &meta, &bytes)?;
     let params = read_tensors(&bytes, &shapes, 0)?;
     Ok((got_step, params))
 }
@@ -399,5 +477,65 @@ mod tests {
     fn missing_checkpoint_errors() {
         assert!(load("/nonexistent_dir_xyz", "tiny", 1).is_err());
         assert!(load_full("/nonexistent_dir_xyz", "tiny", 1).is_err());
+        assert_eq!(
+            load_latest_full("/nonexistent_dir_xyz", "tiny").unwrap().map(|x| x.0),
+            None
+        );
+    }
+
+    fn state_at(step: usize, seed: f32) -> TrainState {
+        TrainState {
+            preset: "tiny".into(),
+            step,
+            stage: 0,
+            steps_in_stage: step,
+            accum: 1,
+            params: leaves(seed),
+            m: leaves(0.0),
+            v: leaves(0.0),
+            cursors: vec![step as u64],
+            rng_states: vec![(1, 2)],
+        }
+    }
+
+    #[test]
+    fn partially_written_checkpoint_is_detected_and_previous_used() {
+        let dir = tmp("ff_ckpt_corrupt");
+        save_full(&dir, &state_at(2, 1.0)).unwrap();
+        save_full(&dir, &state_at(4, 9.0)).unwrap();
+        // sanity: the newest checkpoint wins while both verify
+        assert_eq!(load_latest_full(&dir, "tiny").unwrap().unwrap().0, 4);
+        // simulate a crash mid-write: truncate the step-4 blob
+        let blob = Path::new(&dir).join("tiny_step000004.bin");
+        let bytes = std::fs::read(&blob).unwrap();
+        std::fs::write(&blob, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load_full(&dir, "tiny", 4).is_err());
+        let (step, state) = load_latest_full(&dir, "tiny").unwrap().unwrap();
+        assert_eq!(step, 2);
+        assert_eq!(state.params, leaves(1.0));
+        // a same-length bit flip slips past the size check but trips CRC
+        let mut flipped = bytes.clone();
+        flipped[3] ^= 0x40;
+        std::fs::write(&blob, &flipped).unwrap();
+        let err = load_full(&dir, "tiny", 4).unwrap_err();
+        assert!(err.to_string().contains("crc32"), "{err}");
+        // restoring the pristine bytes makes step 4 the target again
+        std::fs::write(&blob, &bytes).unwrap();
+        assert_eq!(load_latest_full(&dir, "tiny").unwrap().unwrap().0, 4);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn atomic_writes_leave_no_tmp_files() {
+        let dir = tmp("ff_ckpt_atomic");
+        save_full(&dir, &state_at(3, 1.5)).unwrap();
+        save(&dir, "tiny", 8, &leaves(2.0)).unwrap();
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "stray temp files: {leftovers:?}");
+        std::fs::remove_dir_all(dir).ok();
     }
 }

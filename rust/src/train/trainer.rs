@@ -25,6 +25,18 @@
 //! ([`TrainSchedule`]); V2 checkpoints persist params + Adam moments +
 //! step + schedule position + per-rank data cursors, so
 //! [`Trainer::restore`] resumes bit-for-bit.
+//!
+//! A seeded [`FaultSchedule`] installed via [`Trainer::with_faults`]
+//! exercises the recovery planes: transient faults (simulated OOM, comm
+//! stall) retry the grad phase with exponential backoff over the *same*
+//! drawn batches; corrupted wire payloads are caught by the CRC guard
+//! and ledgered as retransmits; a permanent rank crash surfaces as
+//! [`Error::RankLost`] from the heartbeat sweep, and the schedule driver
+//! rolls back to the latest V2 checkpoint and re-plans with shrunk `dp`
+//! at constant effective batch — the stream is a pure function of the
+//! effective batch, so the recovered run converges bit-for-bit to the
+//! fault-free one. All recovery seconds are modeled (virtual clock), so
+//! the [`RecoveryLedger`] is deterministic.
 
 use super::backend::{build_backend, TrainBackend};
 use super::bucket::{bucketed_step, BucketPlan};
@@ -39,6 +51,7 @@ use crate::comm::ring::{
 use crate::config::{ModelConfig, Precision, TrainConfig};
 use crate::dap::executor::default_threads;
 use crate::error::{Error, Result};
+use crate::faults::{FaultKind, FaultSchedule, Heartbeats, Injector, RecoveryLedger};
 use crate::runtime::Runtime;
 use crate::tensor::HostTensor;
 use std::time::Instant; // lint:allow(wallclock) — steps/s + comm/stall wall measurement
@@ -102,6 +115,12 @@ pub struct Trainer<'rt> {
     /// wall seconds the step blocked waiting on the prefetch producer,
     /// cumulative
     pub prefetch_stall_seconds: f64,
+    /// fault-injection plane, installed by [`Trainer::with_faults`]
+    injector: Option<Injector>,
+    /// per-rank liveness plane (rebuilt on elastic dp-shrink)
+    heartbeats: Heartbeats,
+    /// recovery-cost ledger for faulted runs, cumulative
+    pub recovery: RecoveryLedger,
 }
 
 /// Initial dynamic loss scale in bf16 mode (2^15 — exact in binary FP,
@@ -113,6 +132,17 @@ const LOSS_SCALE_MAX: f32 = 16_777_216.0;
 const LOSS_SCALE_GROWTH_INTERVAL: usize = 2000;
 /// Consecutive guard skips before the run is declared diverged.
 const MAX_CONSECUTIVE_SKIPS: usize = 50;
+
+/// Grad-phase attempts per step before a transient fault is permanent.
+const MAX_GRAD_ATTEMPTS: usize = 4;
+/// Modeled base backoff before a grad-phase retry, seconds.
+const RETRY_BACKOFF_BASE_SECS: f64 = 0.05;
+/// Modeled cost of one straggler slowdown, seconds.
+const STRAGGLER_SECS: f64 = 0.25;
+/// Modeled cost of one corrupt-payload retransmit, seconds.
+const RETRANSMIT_SECS: f64 = 0.01;
+/// Modeled cost of one rollback + dp-shrink recovery, seconds.
+const ROLLBACK_SECS: f64 = 2.0;
 
 /// What one `run`/`run_schedule` call did.
 #[derive(Clone, Debug)]
@@ -149,6 +179,8 @@ pub struct TrainReport {
     pub prefetch_stall_seconds: f64,
     /// optimizer updates skipped by the bf16 non-finite guard
     pub skipped_steps: usize,
+    /// recovery cost absorbed by this call (all zero on clean runs)
+    pub recovery: RecoveryLedger,
 }
 
 /// Same-seed generators on one global stream: rank r starts offset by
@@ -217,6 +249,7 @@ impl<'rt> Trainer<'rt> {
         let zeros: Vec<HostTensor> =
             params.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
         let gens = make_gens(&model_cfg, cfg.seed, plan.dp, plan.accum);
+        let heartbeats = Heartbeats::new(plan.dp);
         let lr_sched = LrSchedule::from_train_config(&cfg);
         let cfg_precision = cfg.precision;
         Trainer {
@@ -252,6 +285,9 @@ impl<'rt> Trainer<'rt> {
             comm_seconds: 0.0,
             exposed_comm_seconds: 0.0,
             prefetch_stall_seconds: 0.0,
+            injector: None,
+            heartbeats,
+            recovery: RecoveryLedger::default(),
         }
     }
 
@@ -262,6 +298,18 @@ impl<'rt> Trainer<'rt> {
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.plan = self.plan.with_threads(threads);
         self
+    }
+
+    /// Install a deterministic fault schedule (validated against the
+    /// current plan) to be injected at the step seams: transients fail
+    /// grad-phase attempts, crashes flip the heartbeat plane. Resets the
+    /// recovery ledger and liveness state.
+    pub fn with_faults(&mut self, schedule: FaultSchedule) -> Result<()> {
+        schedule.validate(self.plan.dp)?;
+        self.heartbeats = Heartbeats::new(self.plan.dp);
+        self.recovery = RecoveryLedger::default();
+        self.injector = Some(Injector::new(schedule));
+        Ok(())
     }
 
     /// The preset this trainer currently runs.
@@ -277,6 +325,18 @@ impl<'rt> Trainer<'rt> {
     /// Per-rank data cursors (batches drawn incl. skips).
     pub fn cursors(&self) -> Vec<u64> {
         self.gens.iter().map(|g| g.cursor()).collect()
+    }
+
+    /// CRC-32 fingerprint of every parameter leaf's little-endian bytes
+    /// in canonical order — what the chaos CI job compares between the
+    /// faulted-and-recovered run and the fault-free control.
+    pub fn params_crc32(&self) -> u32 {
+        let flat: Vec<f32> = self
+            .params
+            .iter()
+            .flat_map(|p| p.data().iter().copied())
+            .collect();
+        crate::faults::crc32_f32(&flat)
     }
 
     /// Draw the step's effective batch, replica-major on the global
@@ -450,18 +510,136 @@ impl<'rt> Trainer<'rt> {
         Ok((out.losses, out.grads))
     }
 
+    /// Consume this step's scheduled non-retryable events: stragglers
+    /// are absorbed as modeled slowdown; a rank crash flips the target's
+    /// liveness bit for the heartbeat sweep to surface.
+    fn consume_step_faults(&mut self, step: usize) {
+        let dp = self.plan.dp;
+        let Some(inj) = self.injector.as_mut() else {
+            return;
+        };
+        while inj.take(step, FaultKind::Straggler).is_some() {
+            self.recovery.stragglers += 1;
+            self.recovery.recovery_seconds += STRAGGLER_SECS;
+        }
+        while let Some(rank) = inj.take(step, FaultKind::RankCrash) {
+            // events scheduled before a shrink may name a retired rank
+            self.heartbeats.mark_dead(rank % dp);
+        }
+    }
+
+    /// Tick live ranks and surface the lowest dead one as
+    /// [`Error::RankLost`]. Detection sits at the step boundary, before
+    /// any batch is drawn on behalf of a rank that will never compute.
+    fn sweep_heartbeats(&mut self, step: usize) -> Result<()> {
+        if self.injector.is_none() {
+            return Ok(());
+        }
+        for r in 0..self.plan.dp {
+            if !self.heartbeats.is_dead(r) {
+                self.heartbeats.tick(r);
+            }
+        }
+        match self.heartbeats.first_dead() {
+            Some(rank) => Err(Error::RankLost { rank, step }),
+            None => Ok(()),
+        }
+    }
+
+    /// Corrupt-payload events: flip a bit on a wire copy of the reduced
+    /// gradient, confirm the CRC guard catches it, and ledger the
+    /// retransmit. The pristine payload proceeds — detect-and-retransmit
+    /// leaves the reduced result bitwise unchanged.
+    fn guard_wire_payload(&mut self, step: usize, grads: &[HostTensor]) {
+        let Some(inj) = self.injector.as_mut() else {
+            return;
+        };
+        while inj.take(step, FaultKind::CorruptPayload).is_some() {
+            let Some(leaf) = grads.first() else {
+                continue;
+            };
+            let want = crate::comm::ring::payload_crc32(leaf.data());
+            let mut wire = leaf.data().to_vec();
+            if let Some(x) = wire.first_mut() {
+                *x = f32::from_bits(x.to_bits() ^ 1);
+            }
+            if crate::comm::ring::payload_crc32(&wire) != want {
+                self.recovery.retransmits += 1;
+                self.recovery.recovery_seconds += RETRANSMIT_SECS;
+            }
+        }
+    }
+
+    /// One grad-phase attempt under the fault plane: scheduled
+    /// transients for this step fail the attempt before any compute; a
+    /// clean pass then runs the wire-payload CRC guard.
+    fn faulted_grad_phase(
+        &mut self,
+        batches: &[Batch],
+        step: usize,
+    ) -> Result<(Vec<f32>, Vec<HostTensor>)> {
+        if let Some(inj) = self.injector.as_mut() {
+            if inj.take(step, FaultKind::TransientOom).is_some() {
+                return Err(Error::SimOom { need_gb: 48.0, cap_gb: 40.0 });
+            }
+            if let Some(rank) = inj.take(step, FaultKind::CommStall) {
+                return Err(Error::CommTimeout {
+                    op: "ring_all_reduce".into(),
+                    rank,
+                    waited_ms: crate::comm::worker::wait_timeout_ms(),
+                });
+            }
+        }
+        let out = if self.cfg.bucket_mb.is_some() {
+            self.bucketed_grad_phase(batches)?
+        } else {
+            self.monolithic_grad_phase(batches)?
+        };
+        self.guard_wire_payload(step, &out.1);
+        Ok(out)
+    }
+
+    /// The gradient phase with bounded retry: injected transients back
+    /// off exponentially (modeled seconds — deterministic) and re-run
+    /// over the *same* drawn batches, so a retried step is bitwise the
+    /// step a clean run would have taken.
+    fn grad_phase_with_retry(
+        &mut self,
+        batches: &[Batch],
+        step: usize,
+    ) -> Result<(Vec<f32>, Vec<HostTensor>)> {
+        let mut attempt = 0usize;
+        loop {
+            attempt += 1;
+            match self.faulted_grad_phase(batches, step) {
+                Err(e)
+                    if self.injector.is_some()
+                        && attempt < MAX_GRAD_ATTEMPTS
+                        && is_transient(&e) =>
+                {
+                    if matches!(e, Error::CommTimeout { .. }) {
+                        self.recovery.comm_timeouts += 1;
+                    }
+                    self.recovery.retries += 1;
+                    self.recovery.recovery_seconds +=
+                        crate::faults::backoff_secs(RETRY_BACKOFF_BASE_SECS, attempt);
+                }
+                other => return other,
+            }
+        }
+    }
+
     /// One optimizer step over the effective batch (dp × accum
     /// micro-batches). Returns the mean micro-loss.
     pub fn train_step(&mut self) -> Result<f32> {
         let (dp, accum) = (self.plan.dp, self.plan.accum);
         let e = dp * accum;
+        let step = self.step + 1;
+        self.consume_step_faults(step);
+        self.sweep_heartbeats(step)?;
         let batches = self.draw_step_batches()?;
 
-        let (losses, mut grads) = if self.cfg.bucket_mb.is_some() {
-            self.bucketed_grad_phase(&batches)?
-        } else {
-            self.monolithic_grad_phase(&batches)?
-        };
+        let (losses, mut grads) = self.grad_phase_with_retry(&batches, step)?;
         self.wire_dap_bytes += self.backend.take_mp_wire_bytes();
 
         // fold losses in global micro order (replica-major = stream order)
@@ -556,10 +734,10 @@ impl<'rt> Trainer<'rt> {
         }
     }
 
-    /// Restore a V2 checkpoint into this trainer: params, Adam moments,
-    /// step, schedule position, and the per-rank data generators — the
-    /// next step is bit-for-bit the one an uninterrupted run would take.
-    pub fn restore(&mut self, state: checkpoint::TrainState) -> Result<()> {
+    /// Preset + leaf-count + leaf-shape compatibility of a checkpoint
+    /// against this trainer (shared by [`Self::restore`] and the elastic
+    /// recovery path).
+    fn check_state_shapes(&self, state: &checkpoint::TrainState) -> Result<()> {
         if state.preset != self.preset {
             return Err(Error::Config(format!(
                 "checkpoint is for preset '{}', trainer runs '{}'",
@@ -581,6 +759,14 @@ impl<'rt> Trainer<'rt> {
                 )));
             }
         }
+        Ok(())
+    }
+
+    /// Restore a V2 checkpoint into this trainer: params, Adam moments,
+    /// step, schedule position, and the per-rank data generators — the
+    /// next step is bit-for-bit the one an uninterrupted run would take.
+    pub fn restore(&mut self, state: checkpoint::TrainState) -> Result<()> {
+        self.check_state_shapes(&state)?;
         if state.cursors.len() != self.plan.dp {
             return Err(Error::Config(format!(
                 "checkpoint has {} data-rank cursors, plan has dp={}",
@@ -612,6 +798,93 @@ impl<'rt> Trainer<'rt> {
         self.stage = state.stage;
         self.steps_in_stage = state.steps_in_stage;
         Ok(())
+    }
+
+    /// Restore a checkpoint into a *different* dp×accum layout with the
+    /// same effective batch. Per-rank generators are re-derived from the
+    /// checkpoint's rank-0 stream position: the stream is counter-keyed,
+    /// so new rank `r` resumes at `pos + r·accum'` — the exact draws the
+    /// old layout would have handed out.
+    fn restore_elastic(&mut self, state: checkpoint::TrainState) -> Result<()> {
+        self.check_state_shapes(&state)?;
+        let old_e = state.cursors.len() * state.accum;
+        let new_e = self.plan.dp * self.plan.accum;
+        if old_e != new_e {
+            return Err(Error::Config(format!(
+                "elastic restore changes the effective batch: checkpoint \
+                 has {old_e}, new plan has {new_e}"
+            )));
+        }
+        let (seed, pos) = match (state.rng_states.first(), state.cursors.first())
+        {
+            (Some(rs), Some(&c)) => (rs.0, c),
+            _ => {
+                return Err(Error::Config(
+                    "checkpoint carries no data-rank state".into(),
+                ))
+            }
+        };
+        self.prefetcher = None;
+        let accum = self.plan.accum as u64;
+        self.gens = (0..self.plan.dp as u64)
+            .map(|r| {
+                let c = pos + r * accum;
+                DataGen::from_state(self.model_cfg.clone(), (seed, c), c)
+            })
+            .collect();
+        self.params = state.params;
+        self.m = state.m;
+        self.v = state.v;
+        self.step = state.step;
+        self.stage = state.stage;
+        self.steps_in_stage = state.steps_in_stage;
+        Ok(())
+    }
+
+    /// Elastic recovery from a permanent rank loss: roll back to the
+    /// latest readable V2 checkpoint, re-plan with the largest surviving
+    /// `dp` that divides the effective batch (accum grows to match), and
+    /// resume. The data stream is a pure function of the effective
+    /// batch, so the recovered run converges bit-for-bit to fault-free.
+    fn recover_from_rank_loss(&mut self, rank: usize, step: usize) -> Result<()> {
+        let dir = self.cfg.checkpoint_dir.clone().ok_or_else(|| {
+            Error::Config(format!(
+                "rank {rank} lost at step {step} with no checkpoint_dir — \
+                 elastic recovery rolls back to the latest V2 checkpoint"
+            ))
+        })?;
+        let (ckpt_step, state) = checkpoint::load_latest_full(&dir, &self.preset)?
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "rank {rank} lost at step {step} before any checkpoint \
+                     was written — nothing to roll back to"
+                ))
+            })?;
+        let e = self.plan.dp * self.plan.accum;
+        let new_dp =
+            (1..self.plan.dp).rev().find(|d| e % d == 0).ok_or_else(|| {
+                Error::Config(format!(
+                    "rank {rank} lost at dp={} — no smaller layout divides \
+                     the effective batch {e}",
+                    self.plan.dp
+                ))
+            })?;
+        println!(
+            "rank {rank} lost at step {step}: rolling back to step \
+             {ckpt_step}, re-planning dp {} -> {new_dp} (accum {} -> {})",
+            self.plan.dp,
+            self.plan.accum,
+            e / new_dp
+        );
+        self.recovery.rank_crashes += 1;
+        self.recovery.lost_steps += self.step - ckpt_step;
+        self.recovery.recovery_seconds += ROLLBACK_SECS;
+        self.plan.dp = new_dp;
+        self.plan.accum = e / new_dp;
+        self.heartbeats = Heartbeats::new(new_dp);
+        // the bucket partition was admitted at the old dp; re-admit lazily
+        self.bucket_plan = None;
+        self.restore_elastic(state)
     }
 
     fn save_checkpoint(&self, dir: &str) -> Result<()> {
@@ -687,14 +960,24 @@ impl<'rt> Trainer<'rt> {
         let exposed0 = self.exposed_comm_seconds;
         let stall0 = self.prefetch_stall_seconds;
         let skipped0 = self.skipped_steps;
+        let rec0 = self.recovery;
         let mut first = None;
         let mut last = 0.0;
         let mut executed = 0usize;
-        while self.stage < sched.stages.len() {
+        'stages: while self.stage < sched.stages.len() {
             let stage = sched.stages[self.stage].clone();
             self.enter_stage(self.stage, &stage)?;
             while self.steps_in_stage < stage.steps {
-                let loss = self.train_step()?;
+                let loss = match self.train_step() {
+                    Ok(loss) => loss,
+                    Err(Error::RankLost { rank, step }) => {
+                        // rollback may land in an earlier stage — rebind
+                        // the stage from the restored schedule position
+                        self.recover_from_rank_loss(rank, step)?;
+                        continue 'stages;
+                    }
+                    Err(e) => return Err(e),
+                };
                 executed += 1;
                 if first.is_none() {
                     first = Some(loss);
@@ -739,8 +1022,16 @@ impl<'rt> Trainer<'rt> {
             overlap_fraction,
             prefetch_stall_seconds: self.prefetch_stall_seconds - stall0,
             skipped_steps: self.skipped_steps - skipped0,
+            recovery: self.recovery.since(&rec0),
         })
     }
+}
+
+/// Whether a grad-phase failure is worth retrying: transient device
+/// pressure or a timed-out collective — never a lost rank, a diverged
+/// run, or a logic bug.
+fn is_transient(e: &Error) -> bool {
+    matches!(e, Error::SimOom { .. } | Error::CommTimeout { .. } | Error::Comm(_))
 }
 
 fn clip_by_global_norm(mut grads: Vec<HostTensor>, clip: f32) -> Vec<HostTensor> {

@@ -1,0 +1,215 @@
+//! Fault-injection suite — the tentpole acceptance tests, artifact-free
+//! over the [`SyntheticBackend`]: a seeded schedule of transients and a
+//! permanent rank crash is injected into a training run, and the run
+//! must complete through retry-with-backoff, CRC retransmit, and
+//! checkpoint rollback + DP shrink — converging **bit-for-bit** to the
+//! fault-free twin at matched effective batch. The recovery ledger
+//! accounts for every absorbed event, the heartbeat executor fails fast
+//! on a dead rank, and an unrecoverable crash (no checkpoint plane)
+//! surfaces a structured config error instead of hanging or panicking.
+
+use fastfold::config::{ModelConfig, TrainConfig};
+use fastfold::faults::{FaultEvent, FaultKind, FaultSchedule, Heartbeats};
+use fastfold::train::{ParallelPlan, SyntheticBackend, TrainBackend, Trainer};
+
+fn quick_cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        steps,
+        lr: 2e-3,
+        warmup_steps: 2,
+        log_every: 10_000,
+        checkpoint_every: 10_000,
+        seed: 5,
+        ..TrainConfig::default()
+    }
+}
+
+/// A synthetic-backend trainer over the tiny preset (the
+/// `hybrid_trainer.rs` harness, reused under chaos).
+fn mk(dp: usize, dap: usize, accum: usize, cfg: TrainConfig) -> Trainer<'static> {
+    let model_cfg = ModelConfig::tiny();
+    let params = SyntheticBackend::init_params(&model_cfg);
+    let backend: Box<dyn TrainBackend> = Box::new(SyntheticBackend::new(dap));
+    Trainer::with_backend(
+        "tiny",
+        model_cfg,
+        params,
+        backend,
+        ParallelPlan::new(dp, dap, accum),
+        cfg,
+    )
+    .unwrap()
+}
+
+fn assert_same_state(a: &Trainer, b: &Trainer, what: &str) {
+    assert_eq!(a.step, b.step, "{what}: step");
+    assert_eq!(a.params.len(), b.params.len(), "{what}: leaf count");
+    for (i, (x, y)) in a.params.iter().zip(b.params.iter()).enumerate() {
+        assert_eq!(x, y, "{what}: param leaf {i}");
+    }
+    for (i, (x, y)) in a.m.iter().zip(b.m.iter()).enumerate() {
+        assert_eq!(x, y, "{what}: adam m leaf {i}");
+    }
+    for (i, (x, y)) in a.v.iter().zip(b.v.iter()).enumerate() {
+        assert_eq!(x, y, "{what}: adam v leaf {i}");
+    }
+    assert_eq!(a.params_crc32(), b.params_crc32(), "{what}: param crc");
+}
+
+fn tempdir(tag: &str) -> String {
+    let dir = std::env::temp_dir()
+        .join(format!("ff_faults_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir.to_str().unwrap().to_string()
+}
+
+#[test]
+fn faulted_run_converges_bitwise_to_fault_free() {
+    // the acceptance schedule: two transient OOMs, one comm stall, one
+    // corrupted payload, one straggler, and a permanent crash of rank 1
+    // — the run must roll back to the last V2 checkpoint, shrink dp 4->2
+    // at constant effective batch, re-run the lost step, and finish with
+    // exactly the fault-free parameters
+    let dir = tempdir("acceptance");
+    let mut cfg = quick_cfg(8);
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_dir = Some(dir.clone());
+
+    let mut clean = mk(4, 1, 1, quick_cfg(8));
+    let clean_report = clean.run().unwrap();
+    assert_eq!(clean_report.steps, 8);
+    assert!(!clean_report.recovery.any(), "clean run must ledger nothing");
+
+    let mut chaotic = mk(4, 1, 1, cfg);
+    let schedule = FaultSchedule {
+        seed: 0,
+        train: vec![
+            FaultEvent { step: 3, kind: FaultKind::TransientOom, rank: 0, count: 2 },
+            FaultEvent { step: 4, kind: FaultKind::CommStall, rank: 2, count: 1 },
+            FaultEvent { step: 5, kind: FaultKind::CorruptPayload, rank: 0, count: 1 },
+            FaultEvent { step: 5, kind: FaultKind::Straggler, rank: 3, count: 1 },
+            FaultEvent { step: 6, kind: FaultKind::RankCrash, rank: 1, count: 1 },
+        ],
+        serve: vec![],
+    };
+    chaotic.with_faults(schedule).unwrap();
+    let report = chaotic.run().unwrap();
+
+    // elastic recovery shrank the fleet but kept the effective batch
+    assert_eq!(chaotic.plan.dp, 2, "dp must shrink past the dead rank");
+    assert_eq!(chaotic.plan.accum, 2, "accum must keep E = dp * accum");
+    assert_eq!(chaotic.step, 8);
+
+    // bitwise: the interrupted-with-faults run converged to the twin
+    assert_same_state(&clean, &chaotic, "chaos vs clean");
+    assert_eq!(
+        clean_report.final_loss.to_bits(),
+        report.final_loss.to_bits(),
+        "final loss"
+    );
+
+    // the ledger accounts for every absorbed event
+    let rec = &report.recovery;
+    assert_eq!(rec.retries, 3, "2 oom + 1 stall retries");
+    assert_eq!(rec.comm_timeouts, 1);
+    assert_eq!(rec.retransmits, 1, "CRC guard must catch the flipped bit");
+    assert_eq!(rec.stragglers, 1);
+    assert_eq!(rec.rank_crashes, 1);
+    assert_eq!(rec.lost_steps, 1, "crash at step 6 rolls back to ckpt 4 from step 5");
+    assert!(rec.recovery_seconds > 0.0);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn armed_empty_schedule_is_bitwise_inert() {
+    // arming the fault plane with nothing scheduled must not perturb a
+    // single bit: the injector seam is on the path, the events are not
+    let mut plain = mk(2, 1, 2, quick_cfg(4));
+    plain.run().unwrap();
+    let mut armed = mk(2, 1, 2, quick_cfg(4));
+    armed.with_faults(FaultSchedule::default()).unwrap();
+    let report = armed.run().unwrap();
+    assert_same_state(&plain, &armed, "armed-empty vs plain");
+    assert!(!report.recovery.any());
+}
+
+#[test]
+fn crash_without_checkpoint_plane_is_a_structured_error() {
+    // a permanent rank loss with no checkpoint_dir cannot recover: the
+    // trainer must surface a config error naming the missing plane —
+    // never hang on the dead rank, never panic
+    let mut t = mk(2, 1, 1, quick_cfg(4));
+    t.with_faults(FaultSchedule {
+        seed: 0,
+        train: vec![FaultEvent {
+            step: 2,
+            kind: FaultKind::RankCrash,
+            rank: 0,
+            count: 1,
+        }],
+        serve: vec![],
+    })
+    .unwrap();
+    let err = t.run().unwrap_err();
+    assert!(
+        err.to_string().contains("checkpoint"),
+        "error must name the missing checkpoint plane: {err}"
+    );
+}
+
+#[test]
+fn synthesized_schedule_survives_end_to_end() {
+    // the CI chaos path: a seed-synthesized schedule (>=1 crash, the
+    // requested transients) drives the full recovery machinery and still
+    // converges bitwise to the fault-free twin
+    let dir = tempdir("synth");
+    let mut cfg = quick_cfg(8);
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_dir = Some(dir.clone());
+
+    let schedule = FaultSchedule::synthesize(17, 8, 4, 3, 0);
+    schedule.validate(4).unwrap();
+    assert!(
+        schedule
+            .train
+            .iter()
+            .any(|e| e.kind == FaultKind::RankCrash),
+        "synthesized schedule must carry a permanent crash"
+    );
+
+    let mut clean = mk(4, 1, 1, quick_cfg(8));
+    clean.run().unwrap();
+    let mut chaotic = mk(4, 1, 1, cfg);
+    chaotic.with_faults(schedule).unwrap();
+    let report = chaotic.run().unwrap();
+    assert_eq!(chaotic.step, 8);
+    assert!(report.recovery.rank_crashes >= 1);
+    assert_same_state(&clean, &chaotic, "synthesized chaos vs clean");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn heartbeat_executor_fails_fast_on_dead_rank() {
+    use fastfold::dap::executor::parallel_ranks_with_heartbeat;
+    // all alive: bitwise the plain sweep, and every rank ticked its beat
+    let hb = Heartbeats::new(4);
+    let out =
+        parallel_ranks_with_heartbeat(2, 4, &hb, 7, |r| Ok(r * 10)).unwrap();
+    assert_eq!(out, vec![0, 10, 20, 30]);
+    for r in 0..4 {
+        assert_eq!(hb.beats(r), 1, "rank {r} must have ticked");
+    }
+    // a dead rank surfaces RankLost instead of executing
+    hb.mark_dead(2);
+    let err = parallel_ranks_with_heartbeat(2, 4, &hb, 9, |r| Ok(r * 10))
+        .unwrap_err();
+    match err {
+        fastfold::Error::RankLost { rank, step } => {
+            assert_eq!((rank, step), (2, 9));
+        }
+        other => panic!("expected RankLost, got: {other}"),
+    }
+    // the dead rank took no work: its beat never advanced
+    assert_eq!(hb.beats(2), 1);
+}

@@ -19,13 +19,16 @@
 //!   complete ledger in tier-1.
 
 use fastfold::config::{ParallelConfig, RunConfig, ServeConfig};
+use fastfold::faults::{FaultSchedule, ServeFaultEvent};
 use fastfold::inference::engine::daemon::{
     self, DaemonConfig, Disposition, TraceEvent, CACHE_HIT_LATENCY,
+    DEFAULT_BACKOFF_BASE, DEFAULT_BREAKER_COOLDOWN, DEFAULT_BREAKER_THRESHOLD,
+    DEFAULT_MAX_RETRIES, FAULT_DETECT_LATENCY,
 };
 use fastfold::inference::engine::loadgen::{self, LoadgenSpec};
 use fastfold::inference::engine::{
-    plan_batch, BackendFactory, Engine, InferBackend, InferOutput, InferRequest, Placement,
-    PlacementPlanner, ResultCache, SchedPolicy,
+    plan_batch, BackendFactory, BackendKind, ChaosFactory, Engine, InferBackend, InferOutput,
+    InferRequest, Placement, PlacementPlanner, ResultCache, SchedPolicy,
 };
 use fastfold::metrics::percentile;
 use fastfold::runtime::Runtime;
@@ -133,6 +136,12 @@ fn dcfg(policy: SchedPolicy, max_bypass: usize, lanes: usize, cache_bytes: usize
         queue_cap: 0,
         cache_bytes,
         cache_hit_latency: CACHE_HIT_LATENCY,
+        faults: None,
+        max_retries: DEFAULT_MAX_RETRIES,
+        breaker_threshold: DEFAULT_BREAKER_THRESHOLD,
+        breaker_cooldown: DEFAULT_BREAKER_COOLDOWN,
+        backoff_base: DEFAULT_BACKOFF_BASE,
+        fault_detect_latency: FAULT_DETECT_LATENCY,
     }
 }
 
@@ -267,6 +276,12 @@ fn lifecycle_cfg(cache_bytes: usize) -> DaemonConfig {
         queue_cap: 3,
         cache_bytes,
         cache_hit_latency: CACHE_HIT_LATENCY,
+        faults: None,
+        max_retries: DEFAULT_MAX_RETRIES,
+        breaker_threshold: DEFAULT_BREAKER_THRESHOLD,
+        breaker_cooldown: DEFAULT_BREAKER_COOLDOWN,
+        backoff_base: DEFAULT_BACKOFF_BASE,
+        fault_detect_latency: FAULT_DETECT_LATENCY,
     }
 }
 
@@ -509,4 +524,183 @@ fn quick_100k_trace_replays_to_a_complete_ledger() {
     {
         assert!(doc.contains(key), "missing {key}");
     }
+}
+
+// ------------------------------------------------- faults / degraded mode
+
+/// Factory that fails construction for one request id — a deterministic
+/// mid-batch backend error, independent of worker pull order.
+struct PoisonFactory<'f> {
+    inner: &'f CountingFactory,
+    poison: &'static str,
+}
+
+impl BackendFactory for PoisonFactory<'_> {
+    fn make<'a>(
+        &'a self,
+        req: &InferRequest,
+        placement: &Placement,
+        rank_threads: usize,
+    ) -> Result<Box<dyn InferBackend + 'a>> {
+        if req.id == self.poison {
+            return Err(fastfold::Error::msg("injected: poison pill"));
+        }
+        self.inner.make(req, placement, rank_threads)
+    }
+}
+
+#[test]
+fn mid_batch_backend_error_does_not_poison_survivors() {
+    // satellite: a backend Err mid-batch must land in exactly its own
+    // slot of the drain, and the survivors stay bit-for-bit invariant
+    // across thread budgets
+    let (rt, dir) = stub_runtime("poison");
+    let ids = ["r0", "poison", "r2", "r3", "r4"];
+    let trace: Vec<TraceEvent> = ids
+        .iter()
+        .enumerate()
+        .map(|(i, id)| TraceEvent::at(0.0, req(id, 3 + i as u64)))
+        .collect();
+    let cfg = dcfg(SchedPolicy::Fifo, 4, 2, 0);
+    let run = |threads: usize| {
+        let counting = CountingFactory::new();
+        let factory = PoisonFactory { inner: &counting, poison: "poison" };
+        let report = engine_with(&rt, SchedPolicy::Fifo, threads)
+            .serve_trace_with(&cfg, &trace, &factory)
+            .unwrap();
+        (report, counting.made())
+    };
+    let (reference, made1) = run(1);
+    assert_eq!(made1, 4, "the poisoned request constructs no inner backend");
+    // the lifecycle is decided pre-execution: the sim books Completed,
+    // the failure surfaces only in the output slot and stats.ok
+    assert_eq!(reference.sim.completed(), 5);
+    for (i, out) in reference.outputs.iter().enumerate() {
+        match (trace[i].req.id.as_str(), out) {
+            ("poison", Some(Err(e))) => {
+                assert!(e.to_string().contains("poison pill"))
+            }
+            ("poison", _) => panic!("poisoned slot must carry the error"),
+            (_, Some(Ok(_))) => {}
+            (id, _) => panic!("survivor '{id}' lost its output"),
+        }
+    }
+    for threads in [2usize, 5] {
+        let (r, made) = run(threads);
+        assert_eq!(made, 4);
+        for (i, (a, b)) in
+            r.outputs.iter().zip(reference.outputs.iter()).enumerate()
+        {
+            match (a, b) {
+                (Some(Ok((am, az))), Some(Ok((bm, bz)))) => {
+                    assert_eq!(am.data(), bm.data(), "event {i}");
+                    assert_eq!(az.data(), bz.data(), "event {i}");
+                }
+                (Some(Err(ae)), Some(Err(be))) => {
+                    assert_eq!(ae.to_string(), be.to_string())
+                }
+                _ => panic!("event {i} outcome changed with threads"),
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn chaos_factory_injects_attempts_in_dispatch_order() {
+    // at one worker thread the executor constructs backends in dispatch
+    // order, so the schedule's attempt numbering pins the exact victim
+    let (rt, dir) = stub_runtime("chaos_seam");
+    let trace: Vec<TraceEvent> = (0..3)
+        .map(|i| TraceEvent::at(0.0, req(&format!("c{i}"), 20 + i as u64)))
+        .collect();
+    let cfg = dcfg(SchedPolicy::Fifo, 4, 1, 0);
+    let counting = CountingFactory::new();
+    let schedule = FaultSchedule {
+        seed: 0,
+        train: vec![],
+        serve: vec![ServeFaultEvent { at: 1, count: 1 }],
+    };
+    let chaos = ChaosFactory::new(&counting, schedule);
+    let report = engine_with(&rt, SchedPolicy::Fifo, 1)
+        .serve_trace_with(&cfg, &trace, &chaos)
+        .unwrap();
+    assert_eq!(chaos.injected(), 1);
+    assert_eq!(counting.made(), 2);
+    let victim = report.sim.dispatch_order[1];
+    for (i, out) in report.outputs.iter().enumerate() {
+        match out {
+            Some(Err(e)) => {
+                assert_eq!(i, victim, "error landed in the wrong slot");
+                assert!(e.to_string().contains("injected backend failure"));
+            }
+            Some(Ok(_)) => assert_ne!(i, victim),
+            None => panic!("event {i} was not executed"),
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sim_transient_fault_is_retried_to_completion() {
+    // one injected backend failure: the victim requeues with backoff,
+    // falls back to a cheaper placement when one exists, and completes
+    let planner = default_planner();
+    let mut cfg = dcfg(SchedPolicy::Fifo, 4, 1, 0);
+    cfg.faults = Some(FaultSchedule {
+        seed: 0,
+        train: vec![],
+        serve: vec![ServeFaultEvent { at: 0, count: 1 }],
+    });
+    let trace: Vec<TraceEvent> = (0..4)
+        .map(|i| TraceEvent::at(0.1 * i as f64, req(&format!("t{i}"), 40 + i as u64)))
+        .collect();
+    let report = daemon::simulate(&planner, &cfg, &trace);
+    assert_eq!(report.completed(), 4, "one transient must not lose requests");
+    assert_eq!(report.failed(), 0);
+    assert!(report.retries >= 1);
+    let first = planner.place(&req("t0", 40)).unwrap();
+    if first.backend != BackendKind::Chunked {
+        assert!(report.fallbacks >= 1, "retry should fall back from {:?}", first.backend);
+    }
+    // the no-fault twin reports a fully clean degraded ledger
+    let clean =
+        daemon::simulate(&planner, &dcfg(SchedPolicy::Fifo, 4, 1, 0), &trace);
+    assert_eq!(
+        (clean.retries, clean.fallbacks, clean.breaker_shed, clean.failed()),
+        (0, 0, 0, 0)
+    );
+    assert_eq!(clean.completed(), 4);
+    assert!(!clean.summary().contains("degraded"));
+}
+
+#[test]
+fn persistent_failures_trip_the_breaker_and_shed() {
+    // every construction attempt fails: retries exhaust into Failed, the
+    // breaker opens after the failure streak, and arrivals inside the
+    // cooldown window are shed at ingestion — zero hangs, full ledger
+    let planner = default_planner();
+    let mut cfg = dcfg(SchedPolicy::Fifo, 4, 1, 0);
+    cfg.faults = Some(FaultSchedule {
+        seed: 0,
+        train: vec![],
+        serve: vec![ServeFaultEvent { at: 0, count: 1000 }],
+    });
+    let trace: Vec<TraceEvent> = (0..10)
+        .map(|i| TraceEvent::at(0.1 * i as f64, req(&format!("b{i}"), 60 + i as u64)))
+        .collect();
+    let report = daemon::simulate(&planner, &cfg, &trace);
+    assert_eq!(report.completed(), 0);
+    assert!(report.failed() >= 1, "exhausted retries must fail the request");
+    assert!(report.breaker_shed >= 1, "breaker must shed during cooldown");
+    assert!(report.retries >= DEFAULT_MAX_RETRIES);
+    // every request still reaches exactly one terminal state
+    let accounted = report.completed()
+        + report.rejected()
+        + report.shed()
+        + report.expired()
+        + report.cancelled()
+        + report.failed();
+    assert_eq!(accounted, 10);
+    assert!(report.summary().contains("degraded"));
 }
